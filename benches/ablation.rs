@@ -1,0 +1,65 @@
+//! Ablations of TORTA's design choices (DESIGN.md §5):
+//! * full TORTA (PJRT policy + predictor + Sinkhorn artifacts)
+//! * TORTA-native (no RL policy, OT + exponential smoothing)
+//! * reactive (per-slot OT only: no smoothing, no prediction)
+//! * TORTA without locality term (w3 = 0)
+//! * TORTA without hardware term (w1 = 0)
+//! * TORTA with sampling-based routing noise vs quota routing is covered
+//!   by the reactive/native comparison of switching costs.
+
+use torta::config::ExperimentConfig;
+use torta::report::comparison_table;
+use torta::sim::run_experiment;
+use torta::util::bench::BenchSuite;
+
+const SLOTS: usize = 240;
+
+fn run(label: &str, mutate: impl Fn(&mut ExperimentConfig)) -> torta::metrics::RunMetrics {
+    let mut cfg = ExperimentConfig::default();
+    cfg.slots = SLOTS;
+    mutate(&mut cfg);
+    let mut m = run_experiment(&cfg).unwrap();
+    m.scheduler = label.to_string();
+    m
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("Ablations — TORTA design choices (Abilene, 240 slots)");
+    let mut runs = vec![
+        run("full", |c| c.scheduler = "torta".into()),
+        run("native", |c| c.scheduler = "torta-native".into()),
+        run("reactive", |c| c.scheduler = "reactive".into()),
+        run("no-local", |c| {
+            c.scheduler = "torta".into();
+            c.torta.w_locality = 0.0;
+            c.torta.w_load = 0.75;
+        }),
+        run("no-hw", |c| {
+            c.scheduler = "torta".into();
+            c.torta.w_hw = 0.0;
+            c.torta.w_load = 0.85;
+        }),
+        run("no-smooth", |c| {
+            c.scheduler = "torta".into();
+            c.torta.smoothing = 0.0;
+        }),
+        run("tight-eps", |c| {
+            c.scheduler = "torta".into();
+            c.torta.eps_max = 0.1;
+        }),
+    ];
+    println!("{}", comparison_table(&mut runs));
+    for m in runs.iter_mut() {
+        suite.metric(&format!("{} response", m.scheduler), m.response.mean(), "s");
+        suite.metric(&format!("{} LB", m.scheduler), m.lb_per_slot.mean(), "");
+        suite.metric(&format!("{} switching", m.scheduler), m.switching_cost_frob, "");
+        suite.metric(&format!("{} overhead", m.scheduler), m.operational_overhead, "units");
+        suite.metric(
+            &format!("{} power", m.scheduler),
+            m.power_cost_dollars / 1000.0,
+            "$K",
+        );
+    }
+    torta::report::save_runs("ablation_runs", &mut runs);
+    suite.save("ablation");
+}

@@ -1,0 +1,37 @@
+//! Fig 11: response-time component breakdown (waiting vs inference vs
+//! network) per topology/scheduler.
+//!
+//! Paper shape: TORTA waiting 0.3-1.1 s vs 1.2-2.4 s for baselines
+//! (50-75% reduction), with modestly lower inference times from
+//! hardware-compatible placement (Eq. 8).
+
+use torta::report::{run_matrix, save_runs};
+use torta::topology::TOPOLOGY_NAMES;
+use torta::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 11 — waiting/inference breakdown (480 slots)");
+    let mut runs = run_matrix(&TOPOLOGY_NAMES, &["torta", "skylb", "sdib", "rr"], 480, 42);
+
+    for topo in TOPOLOGY_NAMES {
+        let mut torta_wait = f64::NAN;
+        let mut best_base_wait = f64::INFINITY;
+        for m in runs.iter().filter(|m| m.topology == topo) {
+            suite.metric(&format!("{topo}/{} waiting", m.scheduler), m.waiting.mean(), "s");
+            suite.metric(&format!("{topo}/{} inference", m.scheduler), m.compute.mean(), "s");
+            suite.metric(&format!("{topo}/{} network", m.scheduler), m.network.mean(), "s");
+            if m.scheduler == "torta" {
+                torta_wait = m.waiting.mean();
+            } else {
+                best_base_wait = best_base_wait.min(m.waiting.mean());
+            }
+        }
+        suite.metric(
+            &format!("{topo}: waiting reduction vs best baseline"),
+            100.0 * (best_base_wait - torta_wait) / best_base_wait,
+            "% (paper 50-75%)",
+        );
+    }
+    save_runs("fig11_runs", &mut runs);
+    suite.save("fig11_breakdown");
+}

@@ -1,0 +1,92 @@
+//! Fig 12: system performance vs demand-prediction accuracy PA (Eq. 12).
+//!
+//! Paper shape: baselines are flat (no prediction); TORTA improves from
+//! ~20.5 s at PA=0.1 to ~17.5 s at PA=0.9, overtaking the best baseline
+//! around PA ~ 0.4-0.5, with graceful (not catastrophic) degradation
+//! below the threshold.
+
+use torta::config::ExperimentConfig;
+use torta::scheduler::torta::{TortaMode, TortaScheduler};
+use torta::sim::Simulation;
+use torta::util::bench::BenchSuite;
+use torta::util::pool::parallel_map;
+use torta::workload::{ArrivalProcess, DiurnalWorkload};
+
+const SLOTS: usize = 240;
+const SEEDS: [u64; 3] = [42, 43, 44];
+
+fn torta_run(pa: f64, seed: u64) -> (f64, f64, f64) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.slots = SLOTS;
+    cfg.seed = seed;
+    let mut sim = Simulation::new(cfg.clone()).unwrap();
+    let mut wl = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
+    let twin = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
+    let mut sched = TortaScheduler::new(&sim.ctx, &cfg.torta, TortaMode::Full, seed)
+        .with_oracle(pa, Box::new(move |slot| twin.expected_rate(slot)), seed);
+    let m = sim.run(&mut wl, &mut sched);
+    let realized = sched.predictor.realized_accuracy();
+    (m.response.mean(), m.compute.mean(), realized)
+}
+
+fn baseline(name: &str) -> f64 {
+    let runs: Vec<f64> = SEEDS
+        .iter()
+        .map(|&seed| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.slots = SLOTS;
+            cfg.seed = seed;
+            cfg.scheduler = name.into();
+            torta::sim::run_experiment(&cfg).unwrap().response.mean()
+        })
+        .collect();
+    runs.iter().sum::<f64>() / runs.len() as f64
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 12 — response time vs prediction accuracy");
+    let skylb = baseline("skylb");
+    let sdib = baseline("sdib");
+    let rr = baseline("rr");
+    suite.metric("skylb (flat)", skylb, "s");
+    suite.metric("sdib (flat)", sdib, "s");
+    suite.metric("rr (flat)", rr, "s");
+    let best = skylb.min(sdib).min(rr);
+
+    let accuracies = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+    let jobs: Vec<(f64, u64)> = accuracies
+        .iter()
+        .flat_map(|&pa| SEEDS.iter().map(move |&s| (pa, s)))
+        .collect();
+    let results = parallel_map(jobs.clone(), 8, |(pa, seed)| torta_run(pa, seed));
+
+    let mut crossover = None;
+    for (i, &pa) in accuracies.iter().enumerate() {
+        let slice: Vec<&(f64, f64, f64)> = jobs
+            .iter()
+            .zip(results.iter())
+            .filter(|((p, _), _)| *p == pa)
+            .map(|(_, r)| r)
+            .collect();
+        let mean_resp = slice.iter().map(|r| r.0).sum::<f64>() / slice.len() as f64;
+        let std_resp = {
+            let v = slice.iter().map(|r| (r.0 - mean_resp).powi(2)).sum::<f64>()
+                / slice.len() as f64;
+            v.sqrt()
+        };
+        let mean_inf = slice.iter().map(|r| r.1).sum::<f64>() / slice.len() as f64;
+        let realized = slice.iter().map(|r| r.2).sum::<f64>() / slice.len() as f64;
+        suite.metric(&format!("torta response @ PA={pa:.1}"), mean_resp, "s");
+        suite.metric(&format!("torta response std @ PA={pa:.1}"), std_resp, "s");
+        suite.metric(&format!("torta inference @ PA={pa:.1}"), mean_inf, "s");
+        suite.metric(&format!("realized PA @ target {pa:.1}"), realized, "");
+        if mean_resp < best && crossover.is_none() {
+            crossover = Some(accuracies[i]);
+        }
+    }
+    match crossover {
+        Some(pa) => suite.metric("crossover accuracy (paper ~0.4-0.5)", pa, ""),
+        None => suite.note("no crossover found — shape VIOLATION"),
+    }
+    suite.save("fig12_prediction");
+}

@@ -1,0 +1,74 @@
+//! Fig 3: migration / model-switch stage-cost breakdown per GPU type,
+//! plus power draw per phase — the transition cost model the simulator
+//! charges, printed in the paper's layout, with a micro-bench of the
+//! switch-charging hot path.
+
+use torta::cluster::gpu::ALL_GPUS;
+use torta::cluster::transition::{
+    migration_cost, migration_energy_j, phase_power_fraction, switch_cost, switch_energy_j,
+    Phase,
+};
+use torta::cluster::{GpuType, Server};
+use torta::config::WorkloadConfig;
+use torta::util::bench::{BenchSuite, Bencher};
+use torta::workload::{ArrivalProcess, DiurnalWorkload};
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 3 — task migration / model switch overhead");
+
+    println!("\n(a) stage breakdown, seconds (V100 row = paper reference values)");
+    println!(
+        "{:>9} | {:>9} {:>9} {:>9} {:>9} | {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "GPU", "serialize", "deserial.", "mem load", "warmup", "unload", "cleanup", "load",
+        "init", "reconf"
+    );
+    for gpu in ALL_GPUS {
+        let m = migration_cost(gpu);
+        let s = switch_cost(gpu);
+        println!(
+            "{:>9} | {:>9.1} {:>9.1} {:>9.1} {:>9.1} | {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>8.1}",
+            gpu.name(), m.serialize, m.deserialize, m.memory_load, m.engine_warmup,
+            s.unload, s.memory_cleanup, s.load, s.state_init, s.engine_reconfig
+        );
+        suite.metric(&format!("{} migration total", gpu.name()), m.total(), "s");
+        suite.metric(&format!("{} switch total", gpu.name()), s.total(), "s");
+        suite.metric(&format!("{} switch energy", gpu.name()), switch_energy_j(gpu) / 1000.0, "kJ");
+        suite.metric(
+            &format!("{} migration energy", gpu.name()),
+            migration_energy_j(gpu) / 1000.0,
+            "kJ",
+        );
+    }
+
+    println!("\n(c) power fraction of board peak per phase");
+    for (phase, label) in [
+        (Phase::SerializeOrUnload, "serialize/unload"),
+        (Phase::DeserializeOrLoad, "deserialize/load"),
+        (Phase::MemoryOps, "memory ops"),
+        (Phase::WarmupOrInit, "warmup/init"),
+        (Phase::Reconfig, "reconfig"),
+    ] {
+        suite.metric(&format!("power fraction: {label}"), phase_power_fraction(phase), "x peak");
+    }
+    // Paper datum: V100 peaks at 237 W of 250 W during load.
+    suite.metric(
+        "V100 load-phase draw (paper: 237W)",
+        phase_power_fraction(Phase::DeserializeOrLoad) * 250.0,
+        "W",
+    );
+
+    // Hot-path micro-bench: assignment with a model switch.
+    let mut wl = DiurnalWorkload::new(WorkloadConfig::default(), 1, 1);
+    let tasks = wl.slot_tasks(0, 45.0);
+    let bencher = Bencher::new(100, 1000);
+    let mut server = Server::new(0, 0, GpuType::V100, true);
+    let mut i = 0usize;
+    suite.time("server.assign (alternating models)", &bencher, || {
+        let mut t = tasks[i % tasks.len()].clone();
+        t.model = (i % 2) as u32;
+        t.arrival_secs = i as f64;
+        server.assign(&t, i as f64);
+        i += 1;
+    });
+    suite.save("fig3_switching");
+}

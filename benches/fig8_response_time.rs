@@ -1,0 +1,44 @@
+//! Fig 8: response-time distributions across the four topologies for
+//! TORTA / SkyLB / SDIB / RR.
+//!
+//! Paper shape: TORTA fastest mean everywhere (16.39-19.31 s vs
+//! 18.72-24.39 s baselines), with a thinner right tail; the gap narrows on
+//! the well-connected Polska topology.
+
+use torta::report::{comparison_table, run_matrix, save_runs};
+use torta::topology::TOPOLOGY_NAMES;
+use torta::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 8 — response-time distributions (480 slots)");
+    let mut runs = run_matrix(&TOPOLOGY_NAMES, &["torta", "skylb", "sdib", "rr"], 480, 42);
+    println!("{}", comparison_table(&mut runs));
+
+    for topo in TOPOLOGY_NAMES {
+        let mut best_baseline = f64::INFINITY;
+        let mut torta_mean = f64::NAN;
+        for m in runs.iter_mut().filter(|m| m.topology == topo) {
+            let mean = m.response.mean();
+            suite.metric(&format!("{topo}/{} mean response", m.scheduler), mean, "s");
+            suite.metric(
+                &format!("{topo}/{} p95 response", m.scheduler),
+                m.response.percentile(0.95),
+                "s",
+            );
+            if m.scheduler == "torta" {
+                torta_mean = mean;
+            } else {
+                best_baseline = best_baseline.min(mean);
+            }
+        }
+        let gain = 100.0 * (best_baseline - torta_mean) / best_baseline;
+        suite.metric(&format!("{topo}: TORTA gain vs best baseline"), gain, "%");
+        suite.note(if gain > 0.0 {
+            "shape OK: TORTA fastest"
+        } else {
+            "shape VIOLATION: TORTA not fastest"
+        });
+    }
+    save_runs("fig8_runs", &mut runs);
+    suite.save("fig8_response_time");
+}

@@ -1,0 +1,61 @@
+//! Fig 9: power cost ($K) and operational overhead per topology/scheduler.
+//!
+//! Paper shape: TORTA lowest power everywhere (7-16% below SkyLB:
+//! 12.5/11.1/10.7/14.1 K vs 14.3/13.2/12.8/15.2 K) and 32-79% lower
+//! operational overhead (0.8-2.7 vs 2.9-4.4 units).
+
+use torta::report::{run_matrix, save_runs};
+use torta::topology::TOPOLOGY_NAMES;
+use torta::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("Fig 9 — power cost + operational overhead (480 slots)");
+    let mut runs = run_matrix(&TOPOLOGY_NAMES, &["torta", "skylb", "sdib", "rr"], 480, 42);
+
+    for topo in TOPOLOGY_NAMES {
+        let mut skylb_power = f64::NAN;
+        let mut torta_power = f64::NAN;
+        let mut skylb_oh = f64::NAN;
+        let mut torta_oh = f64::NAN;
+        for m in runs.iter().filter(|m| m.topology == topo) {
+            suite.metric(
+                &format!("{topo}/{} power cost", m.scheduler),
+                m.power_cost_dollars / 1000.0,
+                "$K",
+            );
+            suite.metric(
+                &format!("{topo}/{} operational overhead", m.scheduler),
+                m.operational_overhead,
+                "units",
+            );
+            suite.metric(
+                &format!("{topo}/{} switching cost (Frobenius)", m.scheduler),
+                m.switching_cost_frob,
+                "",
+            );
+            match m.scheduler.as_str() {
+                "torta" => {
+                    torta_power = m.power_cost_dollars;
+                    torta_oh = m.operational_overhead;
+                }
+                "skylb" => {
+                    skylb_power = m.power_cost_dollars;
+                    skylb_oh = m.operational_overhead;
+                }
+                _ => {}
+            }
+        }
+        suite.metric(
+            &format!("{topo}: power reduction vs SkyLB"),
+            100.0 * (skylb_power - torta_power) / skylb_power,
+            "% (paper 7.2-16.4%)",
+        );
+        suite.metric(
+            &format!("{topo}: overhead reduction vs SkyLB"),
+            100.0 * (skylb_oh - torta_oh) / skylb_oh,
+            "% (paper 32-72%)",
+        );
+    }
+    save_runs("fig9_runs", &mut runs);
+    suite.save("fig9_cost");
+}

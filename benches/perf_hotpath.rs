@@ -1,0 +1,96 @@
+//! Performance benches for the coordinator hot paths (§Perf deliverable):
+//! micro-matching throughput, native vs PJRT Sinkhorn, PJRT policy /
+//! predictor inference latency, and end-to-end slot stepping.
+
+use std::path::Path;
+
+use torta::config::ExperimentConfig;
+use torta::metrics::RunMetrics;
+use torta::ot;
+use torta::power::PriceTable;
+use torta::runtime::TortaArtifacts;
+use torta::scheduler::torta::micro::MicroAllocator;
+use torta::sim::Simulation;
+use torta::topology::Topology;
+use torta::util::bench::{BenchSuite, Bencher};
+use torta::util::rng::Rng;
+use torta::workload::{ArrivalProcess, DiurnalWorkload};
+
+fn main() {
+    let mut suite = BenchSuite::new("Perf — coordinator hot paths");
+    let bencher = Bencher::new(3, 15);
+
+    // ---- L3: micro matching throughput ---------------------------------
+    let topo = Topology::abilene();
+    let prices = PriceTable::for_regions(topo.n, 1);
+    let fleet = torta::cluster::Fleet::build(&topo, &prices, 1);
+    let micro = MicroAllocator::new(1.0, 0.25, 0.6, 0.15);
+    let mut wl = DiurnalWorkload::new(ExperimentConfig::default().workload, topo.n, 1);
+    let mut batch = Vec::new();
+    for slot in 0..10 {
+        batch.extend(wl.slot_tasks(slot, 45.0).into_iter().filter(|t| t.origin == 0));
+    }
+    let n_tasks = batch.len();
+    let mut out_len = 0;
+    suite.time(
+        &format!("micro match_region ({n_tasks} tasks, 1 region)"),
+        &bencher,
+        || {
+            let (a, _) = micro.match_region(&fleet, 0, batch.clone(), 0.0);
+            out_len = a.len();
+        },
+    );
+    let per_task =
+        suite.results().last().unwrap().mean.as_secs_f64() / n_tasks as f64;
+    suite.metric("micro matching throughput", 1.0 / per_task, "tasks/s");
+
+    // ---- L3: native Sinkhorn -------------------------------------------
+    let mut rng = Rng::seeded(3);
+    for r in [12, 25, 32] {
+        let mu = torta::util::prop::simplex(&mut rng, r);
+        let nu = torta::util::prop::simplex(&mut rng, r);
+        let c = torta::util::prop::matrix(&mut rng, r, r, 0.0, 1.0);
+        suite.time(&format!("native sinkhorn R={r} (50 iters)"), &bencher, || {
+            std::hint::black_box(ot::sinkhorn(&c, &mu, &nu, 0.05, 50));
+        });
+    }
+
+    // ---- L1/L2 via PJRT: artifact inference latency ---------------------
+    let dir = torta::runtime::default_artifacts_dir();
+    if TortaArtifacts::available(Path::new(&dir), 12) {
+        let art = TortaArtifacts::load(Path::new(&dir), 12).unwrap();
+        let state = vec![0.1f32; 4 * 12 + 144];
+        suite.time("PJRT policy forward (R=12)", &bencher, || {
+            std::hint::black_box(art.policy_alloc(&state).unwrap());
+        });
+        let hist = vec![0.1f32; 15 * 12];
+        suite.time("PJRT predictor forward (R=12)", &bencher, || {
+            std::hint::black_box(art.predict(&hist).unwrap());
+        });
+        let c32 = vec![0.5f32; 144];
+        let m32 = vec![1.0f32 / 12.0; 12];
+        suite.time("PJRT sinkhorn (R=12, 50 iters)", &bencher, || {
+            std::hint::black_box(art.sinkhorn_plan(&c32, &m32, &m32).unwrap());
+        });
+    } else {
+        suite.note("artifacts missing — run `make artifacts` for PJRT benches");
+    }
+
+    // ---- End-to-end slot stepping ---------------------------------------
+    for sched in ["torta", "torta-native", "skylb", "rr"] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.slots = 60;
+        cfg.scheduler = sched.into();
+        suite.time(&format!("end-to-end 60 slots ({sched})"), &Bencher::quick(), || {
+            let mut sim = Simulation::new(cfg.clone()).unwrap();
+            let mut w = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
+            let mut s = torta::scheduler::build(sched, &sim.ctx, &cfg).unwrap();
+            let mut m = RunMetrics::new(sched, &cfg.topology);
+            for slot in 0..cfg.slots {
+                sim.step(slot, &mut w, s.as_mut(), &mut m);
+            }
+            std::hint::black_box(m.tasks_total);
+        });
+    }
+    suite.save("perf_hotpath");
+}

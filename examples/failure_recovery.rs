@@ -1,0 +1,97 @@
+//! Fig 4 scenario: a critical regional failure under reactive vs
+//! temporal-aware scheduling.
+//!
+//!     cargo run --release --example failure_recovery
+//!
+//! The three wealthiest regions go dark for 8 slots (6 min) under 1.8x
+//! load. We track, slot by slot, the waits and cumulative drops of (a)
+//! SkyLB, the strongest reactive baseline, and (b) full TORTA, through
+//! the failure window and the four recovery slots T1-T4 the paper
+//! highlights. (benches/fig4_failure.rs additionally reproduces the
+//! paper's nearest-region reactive strawman.)
+
+use torta::config::ExperimentConfig;
+use torta::metrics::RunMetrics;
+use torta::sim::Simulation;
+use torta::workload::{DiurnalWorkload, FailureEvent};
+
+const FAIL_START: usize = 30;
+const FAIL_SLOTS: usize = 8;
+const TOTAL_SLOTS: usize = 60;
+
+fn run(scheduler: &str) -> anyhow::Result<(Vec<(usize, f64, u64)>, RunMetrics)> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.slots = TOTAL_SLOTS;
+    cfg.scheduler = scheduler.into();
+    cfg.workload.base_rate *= 1.8; // keep capacity tight enough to matter
+    let mut sim = Simulation::new(cfg.clone())?;
+    // Fail the three wealthiest regions — worst case for their local users.
+    let mut by_size: Vec<usize> = (0..sim.fleet.n_regions()).collect();
+    by_size.sort_by_key(|&r| std::cmp::Reverse(sim.fleet.regions[r].servers.len()));
+    let failures: Vec<FailureEvent> = by_size[..3]
+        .iter()
+        .map(|&region| FailureEvent {
+            region,
+            start_slot: FAIL_START,
+            duration_slots: FAIL_SLOTS,
+        })
+        .collect();
+    sim = sim.with_failures(failures);
+    let mut wl = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
+    let mut sched = torta::scheduler::build(scheduler, &sim.ctx, &cfg)?;
+    let mut metrics = RunMetrics::new(scheduler, &cfg.topology);
+    let mut series = Vec::new();
+    let (mut prev_count, mut prev_sum) = (0usize, 0.0f64);
+    for slot in 0..TOTAL_SLOTS {
+        sim.step(slot, &mut wl, sched.as_mut(), &mut metrics);
+        let count = metrics.waiting.len();
+        let sum: f64 = metrics.waiting.values().iter().sum();
+        let slot_wait = if count > prev_count {
+            (sum - prev_sum) / (count - prev_count) as f64
+        } else {
+            0.0
+        };
+        prev_count = count;
+        prev_sum = sum;
+        series.push((slot, slot_wait, metrics.tasks_dropped));
+    }
+    Ok((series, metrics))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("Fig 4: critical failure at slot {FAIL_START} for {FAIL_SLOTS} slots\n");
+    let (reactive_series, reactive) = run("skylb")?;
+    let (torta_series, torta) = run("torta")?;
+
+    println!(
+        "{:>5} | {:>22} | {:>22}",
+        "slot", "skylb wait/drops", "torta wait/drops"
+    );
+    for slot in FAIL_START.saturating_sub(2)..(FAIL_START + FAIL_SLOTS + 5) {
+        let (_, rb, rd) = reactive_series[slot];
+        let (_, tb, td) = torta_series[slot];
+        let marker = if (FAIL_START..FAIL_START + FAIL_SLOTS).contains(&slot) {
+            "FAIL"
+        } else if slot >= FAIL_START + FAIL_SLOTS && slot < FAIL_START + FAIL_SLOTS + 4 {
+            "T1-4"
+        } else {
+            ""
+        };
+        println!("{slot:>5} | {rb:>11.2}s {rd:>7} | {tb:>11.2}s {td:>7}  {marker}");
+    }
+
+    println!("\n== end-of-run comparison (Fig 4.b) ==");
+    println!(
+        "skylb    : completion {:>6.2}%  mean wait {:>5.2}s  resp {:>6.2}s",
+        100.0 * reactive.completion_rate(),
+        reactive.waiting.mean(),
+        reactive.response.mean()
+    );
+    println!(
+        "torta    : completion {:>6.2}%  mean wait {:>5.2}s  resp {:>6.2}s",
+        100.0 * torta.completion_rate(),
+        torta.waiting.mean(),
+        torta.response.mean()
+    );
+    Ok(())
+}

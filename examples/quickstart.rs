@@ -1,0 +1,34 @@
+//! Quickstart: run TORTA on the Abilene topology for 10 minutes of
+//! simulated time and print the paper's three evaluation metrics.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the PJRT artifacts (policy/predictor/sinkhorn HLO) when
+//! `make artifacts` has produced them, and falls back to the native
+//! OT-with-smoothing path otherwise.
+
+use torta::config::ExperimentConfig;
+use torta::sim::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology = "abilene".into();
+    cfg.scheduler = "torta".into();
+    cfg.slots = 80; // 80 x 45 s = 1 h of simulated serving
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+
+    println!("TORTA quickstart: {} slots on {}", cfg.slots, cfg.topology);
+    let mut metrics = run_experiment(&cfg)?;
+
+    println!("\n== results ==");
+    println!("tasks served        : {}", metrics.tasks_total - metrics.tasks_dropped);
+    println!("mean response time  : {:.2} s", metrics.response.mean());
+    println!("  waiting           : {:.2} s", metrics.waiting.mean());
+    println!("  inference         : {:.2} s", metrics.compute.mean());
+    println!("  network           : {:.3} s", metrics.network.mean());
+    println!("p95 response        : {:.2} s", metrics.response.percentile(0.95));
+    println!("load balance coeff  : {:.3}", metrics.lb_per_slot.mean());
+    println!("power cost          : ${:.0}", metrics.power_cost_dollars);
+    println!("operational overhead: {:.2} units", metrics.operational_overhead);
+    Ok(())
+}

@@ -1,0 +1,194 @@
+"""AOT pipeline: train TORTA's learned components, bake weights, emit HLO text.
+
+Run once at build time (``make artifacts``); the rust coordinator then loads
+the artifacts via PJRT and python never appears on the request path.
+
+Per topology size R in {12, 25, 32} this emits:
+
+* ``policy_r{R}.hlo.txt``     — state f32[1, 4R+R^2] -> allocation f32[R, R]
+* ``predictor_r{R}.hlo.txt``  — history f32[1, 15R] -> distribution f32[R]
+* ``sinkhorn_r{R}.hlo.txt``   — (C f32[R,R], mu f32[R], nu f32[R]) -> P f32[R,R]
+* ``weights_r{R}.npz``        — raw trained parameters (cache + provenance)
+* ``manifest.txt``            — shapes/dims consumed by the rust runtime tests
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Trained weights are baked into the jitted functions as constants, so each
+artifact is a self-contained executable taking only runtime inputs.
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, ppo
+from .kernels import sinkhorn_pallas
+
+# The four evaluation topologies (Table I) have 12, 12, 25 and 32 nodes.
+TOPOLOGY_SIZES = (12, 25, 32)
+
+SINKHORN_EPS = 0.05
+SINKHORN_ITERS = 50
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Weight (de)serialization
+# --------------------------------------------------------------------------
+
+def _flatten_params(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_params(v, f"{prefix}{k}."))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten_params(v, f"{prefix}{i}."))
+    else:
+        out[prefix.rstrip(".")] = np.asarray(tree)
+    return out
+
+
+def save_weights(path, policy, predictor, meta):
+    flat = {}
+    flat.update({f"policy.{k}": v for k, v in _flatten_params(policy).items()})
+    flat.update({f"predictor.{k}": v
+                 for k, v in _flatten_params(predictor).items()})
+    flat.update({f"meta.{k}": np.asarray(v) for k, v in meta.items()})
+    np.savez(path, **flat)
+
+
+def load_weights(path, r):
+    """Rebuild (policy, predictor) param trees from an npz checkpoint."""
+    z = np.load(path)
+
+    def layer(prefix):
+        return (jnp.asarray(z[f"{prefix}.0"]), jnp.asarray(z[f"{prefix}.1"]))
+
+    policy = {
+        "trunk": tuple(layer(f"policy.trunk.{i}") for i in range(3)),
+        "head": layer("policy.head"),
+        "log_std": jnp.asarray(z["policy.log_std"]),
+    }
+    predictor = tuple(layer(f"predictor.{i}") for i in range(3))
+    # Shape sanity: the checkpoint must match this R.
+    assert policy["trunk"][0][0].shape[0] == model.state_dim(r), \
+        f"checkpoint R mismatch: {path}"
+    return policy, predictor
+
+
+# --------------------------------------------------------------------------
+# Export
+# --------------------------------------------------------------------------
+
+def export_policy(policy, r, path):
+    d = model.state_dim(r)
+
+    def forward(state):
+        # Baked-weights deterministic forward through the Pallas MLP kernels.
+        return (model.policy_apply(policy, state, r, use_pallas=True)[0],)
+
+    spec = jax.ShapeDtypeStruct((1, d), jnp.float32)
+    text = to_hlo_text(jax.jit(forward).lower(spec))
+    with open(path, "w") as f:
+        f.write(text)
+    return d
+
+
+def export_predictor(predictor, r, path):
+    d = model.predictor_input_dim(r)
+
+    def forward(hist):
+        return (model.predictor_apply(predictor, hist, use_pallas=True)[0],)
+
+    spec = jax.ShapeDtypeStruct((1, d), jnp.float32)
+    text = to_hlo_text(jax.jit(forward).lower(spec))
+    with open(path, "w") as f:
+        f.write(text)
+    return d
+
+
+def export_sinkhorn(r, path):
+    def forward(c, mu, nu):
+        return (sinkhorn_pallas(c, mu, nu, eps=SINKHORN_EPS,
+                                iters=SINKHORN_ITERS),)
+
+    cs = jax.ShapeDtypeStruct((r, r), jnp.float32)
+    vs = jax.ShapeDtypeStruct((r,), jnp.float32)
+    text = to_hlo_text(jax.jit(forward).lower(cs, vs, vs))
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def build_for_r(r, out_dir, fast, retrain, log=print):
+    weights_path = os.path.join(out_dir, f"weights_r{r}.npz")
+    if os.path.exists(weights_path) and not retrain:
+        log(f"[aot] reusing cached weights {weights_path}")
+        policy, predictor = load_weights(weights_path, r)
+    else:
+        cfg = ppo.TrainConfig(r=r,
+                              updates=3 if fast else 30,
+                              horizon=16 if fast else 64,
+                              seed=1234 + r)
+        policy, _value, info = ppo.train(cfg, log=log)
+        predictor, ploss = ppo.train_predictor(
+            r, episodes=2 if fast else 6,
+            steps=40 if fast else 300, seed=99 + r, log=log)
+        save_weights(weights_path, policy, predictor,
+                     {"k0": info["k0"], "predictor_loss": ploss, "r": r})
+
+    d_pol = export_policy(policy, r, os.path.join(out_dir,
+                                                  f"policy_r{r}.hlo.txt"))
+    d_pred = export_predictor(predictor, r,
+                              os.path.join(out_dir,
+                                           f"predictor_r{r}.hlo.txt"))
+    export_sinkhorn(r, os.path.join(out_dir, f"sinkhorn_r{r}.hlo.txt"))
+    log(f"[aot] r={r}: policy D={d_pol}, predictor D={d_pred}, "
+        f"sinkhorn iters={SINKHORN_ITERS}")
+    return d_pol, d_pred
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--sizes", default=",".join(map(str, TOPOLOGY_SIZES)),
+                    help="comma-separated topology sizes to build")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training budget (CI smoke)")
+    ap.add_argument("--retrain", action="store_true",
+                    help="ignore cached weights")
+    args = ap.parse_args(argv)
+    fast = args.fast or os.environ.get("TORTA_FAST") == "1"
+
+    os.makedirs(args.out, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    manifest = [f"sinkhorn_eps={SINKHORN_EPS}",
+                f"sinkhorn_iters={SINKHORN_ITERS}",
+                f"history_slots={model.HISTORY_SLOTS}"]
+    for r in sizes:
+        d_pol, d_pred = build_for_r(r, args.out, fast, args.retrain)
+        manifest.append(f"r={r} policy_dim={d_pol} predictor_dim={d_pred}")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {len(sizes) * 3 + 1} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

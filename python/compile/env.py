@@ -1,0 +1,135 @@
+"""Lightweight macro-level training twin of the rust simulator.
+
+PPO trains against this environment (paper trains offline on historical
+data).  It mirrors the *macro* dynamics the policy controls — regional
+queues, capacities, diurnal arrivals, routing through the allocation matrix
+A_t — while abstracting the micro layer as a fixed per-region service rate.
+Topology parameters (capacities, prices, latencies, arrival phases) are
+re-sampled every episode so the trained policy generalizes across the four
+evaluation topologies of a given region count R.
+
+Reward (paper Eq. 3):
+
+    r_t = -||A_t - P*_t||_F^2  - lambda1 ||A_t - A_{t-1}||_F^2
+          - lambda2 ||Q_t||_1 / Q_max
+"""
+
+import dataclasses
+
+import numpy as np
+
+from .kernels.ref import sinkhorn_plan_ref
+
+LAMBDA1 = 0.5   # temporal smoothness weight
+LAMBDA2 = 0.5   # queue-cost weight
+Q_MAX_PER_REGION = 200.0
+
+
+@dataclasses.dataclass
+class EpisodeConfig:
+    r: int
+    horizon: int = 64
+    seed: int = 0
+
+
+class MacroEnv:
+    """Queue-level twin: one step = one 45 s time slot."""
+
+    def __init__(self, cfg: EpisodeConfig):
+        self.cfg = cfg
+        self.r = cfg.r
+        self.rng = np.random.default_rng(cfg.seed)
+        self.reset()
+
+    # -- episode setup -----------------------------------------------------
+
+    def _sample_topology(self):
+        r = self.r
+        rng = self.rng
+        # Per-region service capacity (tasks per slot).
+        self.capacity = rng.uniform(20.0, 60.0, size=r)
+        # Regional power price (normalized to [0.2, 1.0], ~4x spread).
+        self.price = rng.uniform(0.2, 1.0, size=r)
+        # Symmetric latency matrix, zero diagonal.
+        lat = rng.uniform(0.05, 0.5, size=(r, r))
+        lat = 0.5 * (lat + lat.T)
+        np.fill_diagonal(lat, 0.0)
+        self.latency = lat
+        # Diurnal arrival pattern: per-region phase + amplitude over the
+        # episode horizon, plus Poisson noise at step time.
+        self.phase = rng.uniform(0.0, 2.0 * np.pi, size=r)
+        self.amp = rng.uniform(0.3, 1.0, size=r)
+        self.base_rate = rng.uniform(10.0, 40.0, size=r)
+        # Paper Eq. 2 cost matrix: C_ij = w1 * price_j + w2 * (lat + bw).
+        w1, w2 = 1.0, 0.15
+        self.cost = w1 * self.price[None, :] + w2 * self.latency
+
+    def reset(self, seed=None):
+        if seed is not None:
+            self.rng = np.random.default_rng(seed)
+        self._sample_topology()
+        self.t = 0
+        self.queues = np.zeros(self.r)
+        self.util = np.zeros(self.r)
+        self.prev_alloc = np.eye(self.r)
+        self.arrivals = self._arrivals(0)
+        return self.observe()
+
+    # -- dynamics ----------------------------------------------------------
+
+    def _rate(self, t: int) -> np.ndarray:
+        wave = 1.0 + self.amp * np.sin(
+            2.0 * np.pi * t / self.cfg.horizon + self.phase)
+        return self.base_rate * np.maximum(wave, 0.05)
+
+    def _arrivals(self, t: int) -> np.ndarray:
+        return self.rng.poisson(self._rate(t)).astype(np.float64)
+
+    def ot_plan(self) -> np.ndarray:
+        """Supervision signal: row-normalized Sinkhorn plan for this slot."""
+        total_demand = self.arrivals + self.queues
+        mu = total_demand / max(total_demand.sum(), 1e-9)
+        nu = self.capacity / self.capacity.sum()
+        plan = sinkhorn_plan_ref(
+            np.asarray(self.cost, np.float32),
+            np.asarray(mu, np.float32),
+            np.asarray(nu, np.float32))
+        return np.asarray(plan, np.float64)
+
+    def observe(self) -> np.ndarray:
+        """Featurization — mirrors rust features.rs (see model.py docstring)."""
+        r = self.r
+        f_pred = self._rate(self.t + 1)
+        f_norm = f_pred / max(f_pred.sum(), 1e-9)
+        state = np.concatenate([
+            self.util,
+            np.minimum(self.queues / Q_MAX_PER_REGION, 1.0),
+            f_norm,
+            self.price,
+            self.prev_alloc.reshape(-1),
+        ])
+        assert state.shape[0] == 4 * r + r * r
+        return state.astype(np.float32)
+
+    def step(self, alloc: np.ndarray):
+        """alloc: [R, R] row-stochastic allocation matrix A_t."""
+        ot = self.ot_plan()
+        # Route this slot's arrivals: region j receives sum_i arrivals_i A_ij.
+        routed = self.arrivals @ alloc
+        self.queues = self.queues + routed
+        served = np.minimum(self.queues, self.capacity)
+        self.queues -= served
+        self.util = served / self.capacity
+
+        r_ot = -float(((alloc - ot) ** 2).sum())
+        r_smooth = -float(((alloc - self.prev_alloc) ** 2).sum())
+        r_cost = -float(self.queues.sum()) / (Q_MAX_PER_REGION * self.r)
+        reward = r_ot + LAMBDA1 * r_smooth + LAMBDA2 * r_cost
+
+        self.prev_alloc = alloc.copy()
+        self.t += 1
+        self.arrivals = self._arrivals(self.t)
+        done = self.t >= self.cfg.horizon
+        info = {"ot": ot, "r_ot": r_ot, "r_smooth": r_smooth,
+                "r_cost": r_cost}
+        return self.observe(), reward, done, info

@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for TORTA's macro-layer compute hot-spots.
+
+Every kernel is lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO ops that
+round-trip through the HLO-text interchange into the rust runtime.  Real-TPU
+performance is estimated analytically in DESIGN.md §Perf / EXPERIMENTS.md.
+"""
+
+from .sinkhorn import sinkhorn_pallas, sinkhorn_plan
+from .mlp import linear_act_pallas, mlp3_pallas
+
+__all__ = [
+    "sinkhorn_pallas",
+    "sinkhorn_plan",
+    "linear_act_pallas",
+    "mlp3_pallas",
+]

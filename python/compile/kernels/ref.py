@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the reference implementations the pytest/hypothesis suite compares
+the kernels against (assert_allclose).  They intentionally share no code with
+the kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_FLOOR = 1e-30
+
+
+def sinkhorn_ref(c, mu, nu, *, eps: float = 0.05, iters: int = 50):
+    """Reference entropic OT: identical math, plain jnp, python loop."""
+    k = jnp.exp(-c / eps)
+    u = jnp.ones_like(mu)
+    v = jnp.ones_like(nu)
+    for _ in range(iters):
+        u = mu / jnp.maximum(k @ v, _FLOOR)
+        v = nu / jnp.maximum(k.T @ u, _FLOOR)
+    return u[:, None] * k * v[None, :]
+
+
+def sinkhorn_plan_ref(c, mu, nu, *, eps: float = 0.05, iters: int = 50):
+    p = sinkhorn_ref(c, mu, nu, eps=eps, iters=iters)
+    return p / jnp.maximum(p.sum(axis=1, keepdims=True), _FLOOR)
+
+
+def linear_act_ref(x, w, b, act: str = "relu"):
+    y = x @ w + b[None, :]
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "softplus":
+        return jnp.logaddexp(y, 0.0)
+    return y
+
+
+def mlp3_ref(x, params, act: str = "relu", final_act: str = "linear"):
+    (w1, b1), (w2, b2), (w3, b3) = params
+    h = linear_act_ref(x, w1, b1, act)
+    h = linear_act_ref(h, w2, b2, act)
+    return linear_act_ref(h, w3, b3, final_act)

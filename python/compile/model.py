@@ -1,0 +1,169 @@
+"""L2: TORTA's learned components as pure-functional JAX models.
+
+Three networks (paper Appendix B):
+
+* **Policy** pi_theta — three hidden layers (256, 512, 256), ReLU, emitting
+  R*R allocation logits; a row-softmax turns them into the row-stochastic
+  allocation matrix A_t (paper §V-B2).  During training the policy is a
+  Gaussian over logits (reparameterized sample -> row-softmax), which plays
+  the role of the paper's Beta head while keeping log-probs closed-form.
+* **Value** V_phi — same trunk widths, scalar output (training only).
+* **Demand predictor** — MLP over a K=5-slot history window
+  (U, Q, H per region => 15R inputs), hidden (512, 256), softmax output:
+  the predicted *distribution* of next-slot arrivals over regions
+  (the coordinator scales it by recent volume).
+
+All forward passes go through the L1 Pallas kernels (``mlp3_pallas``) so the
+kernels lower into the exported HLO artifacts.
+
+State featurization — **must stay in sync with
+rust/src/scheduler/torta/features.rs** (checked by python/tests/test_model.py
+and the rust integration test `runtime_policy_roundtrip`):
+
+    state = concat[ U_t (R), Q_t/Q_max (R), F_t (R, normalized),
+                    price (R, normalized), flatten(A_{t-1}) (R^2) ]
+    D = 4R + R^2
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp3_pallas
+from .kernels.ref import mlp3_ref
+
+# Paper Appendix B network widths.
+POLICY_HIDDEN = (256, 512, 256)
+PREDICTOR_HIDDEN = (512, 256)
+HISTORY_SLOTS = 5  # K
+
+
+def state_dim(r: int) -> int:
+    """Policy input dimensionality for an R-region deployment."""
+    return 4 * r + r * r
+
+
+def predictor_input_dim(r: int) -> int:
+    """Predictor input dimensionality: K slots x (U, Q, H) x R."""
+    return HISTORY_SLOTS * 3 * r
+
+
+def _init_layer(key, fan_in: int, fan_out: int):
+    """He-normal weights, zero bias."""
+    wkey, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / fan_in)
+    w = scale * jax.random.normal(wkey, (fan_in, fan_out), jnp.float32)
+    b = jnp.zeros((fan_out,), jnp.float32)
+    return (w, b)
+
+
+def _init_mlp3(key, dims):
+    """dims = (in, h1, h2, out) -> ((w1,b1),(w2,b2),(w3,b3))."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (
+        _init_layer(k1, dims[0], dims[1]),
+        _init_layer(k2, dims[1], dims[2]),
+        _init_layer(k3, dims[2], dims[3]),
+    )
+
+
+# --------------------------------------------------------------------------
+# Policy network
+# --------------------------------------------------------------------------
+
+def policy_init(key, r: int):
+    """Policy trunk 256->512 plus head 512->256->R^2, grouped as two mlp3s.
+
+    The paper's stack is (256, 512, 256) hidden + output; we realize it as
+    mlp3(in,256,512,512-carry) would waste a layer, so instead:
+      trunk: in -> 256 -> 512 -> 256   (relu, relu, relu)
+      head : 256 -> R^2                (linear)
+    """
+    kt, kh = jax.random.split(key)
+    trunk = _init_mlp3(kt, (state_dim(r), POLICY_HIDDEN[0], POLICY_HIDDEN[1],
+                            POLICY_HIDDEN[2]))
+    head = _init_layer(kh, POLICY_HIDDEN[2], r * r)
+    # Global log-std for the Gaussian-over-logits training distribution.
+    log_std = jnp.full((r * r,), -1.0, jnp.float32)
+    return {"trunk": trunk, "head": head, "log_std": log_std}
+
+
+def policy_logits(params, state, *, use_pallas: bool = True):
+    """state: [B, D] -> logits [B, R^2]."""
+    mlp = mlp3_pallas if use_pallas else mlp3_ref
+    h = mlp(state, params["trunk"], act="relu", final_act="relu")
+    w, b = params["head"]
+    return h @ w + b[None, :]
+
+
+def logits_to_alloc(logits, r: int):
+    """Row-softmax the logits into the allocation matrix A_t.
+
+    Enforces the normalization constraint sum_j A[i, j] = 1 (paper §V-B2).
+    """
+    batch = logits.shape[0]
+    mat = logits.reshape(batch, r, r)
+    return jax.nn.softmax(mat, axis=-1)
+
+
+def policy_apply(params, state, r: int, *, use_pallas: bool = True):
+    """Deterministic forward: state [B, D] -> allocation [B, R, R]."""
+    return logits_to_alloc(policy_logits(params, state, use_pallas=use_pallas), r)
+
+
+def policy_sample(params, state, r: int, key, *, use_pallas: bool = True):
+    """Stochastic forward for PPO rollouts.
+
+    Returns (action_alloc [B,R,R], raw_sample z [B,R^2], log_prob [B]).
+    The action is rowsoftmax(z), z ~ N(logits, exp(log_std)).
+    """
+    logits = policy_logits(params, state, use_pallas=use_pallas)
+    std = jnp.exp(params["log_std"])[None, :]
+    noise = jax.random.normal(key, logits.shape, logits.dtype)
+    z = logits + std * noise
+    logp = gaussian_log_prob(z, logits, params["log_std"])
+    return logits_to_alloc(z, r), z, logp
+
+
+def gaussian_log_prob(z, mean, log_std):
+    """Sum over dims of the diagonal-Gaussian log density. z,mean: [B, D]."""
+    std = jnp.exp(log_std)[None, :]
+    var = std * std
+    ll = -0.5 * ((z - mean) ** 2 / var + 2.0 * log_std[None, :]
+                 + jnp.log(2.0 * jnp.pi))
+    return ll.sum(axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Value network
+# --------------------------------------------------------------------------
+
+def value_init(key, r: int):
+    kt, kh = jax.random.split(key)
+    trunk = _init_mlp3(kt, (state_dim(r), POLICY_HIDDEN[0], POLICY_HIDDEN[1],
+                            POLICY_HIDDEN[2]))
+    head = _init_layer(kh, POLICY_HIDDEN[2], 1)
+    return {"trunk": trunk, "head": head}
+
+
+def value_apply(params, state, *, use_pallas: bool = True):
+    """state [B, D] -> value [B]."""
+    mlp = mlp3_pallas if use_pallas else mlp3_ref
+    h = mlp(state, params["trunk"], act="relu", final_act="relu")
+    w, b = params["head"]
+    return (h @ w + b[None, :])[:, 0]
+
+
+# --------------------------------------------------------------------------
+# Demand predictor
+# --------------------------------------------------------------------------
+
+def predictor_init(key, r: int):
+    return _init_mlp3(key, (predictor_input_dim(r), PREDICTOR_HIDDEN[0],
+                            PREDICTOR_HIDDEN[1], r))
+
+
+def predictor_apply(params, hist, *, use_pallas: bool = True):
+    """hist: [B, 15R] -> predicted next-slot arrival distribution [B, R]."""
+    mlp = mlp3_pallas if use_pallas else mlp3_ref
+    logits = mlp(hist, params, act="relu", final_act="linear")
+    return jax.nn.softmax(logits, axis=-1)

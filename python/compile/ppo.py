@@ -1,0 +1,310 @@
+"""PPO trainer with OT supervision and theoretical-constraint terms.
+
+Implements paper Eq. 4/5 and Appendix B (Algorithm 2):
+
+    L_total = L_PPO + gamma_t * L_eps + delta_t * L_s
+
+* ``L_eps`` bounds the deviation ||A_t^RL - A_t^OT||_F below eps_target.
+* ``L_s`` pushes the switching-cost improvement factor s = K0 / E[Delta^RL]
+  above s_target.
+* Constraint weights gamma_t, delta_t are adapted multiplicatively when the
+  performance-advantage condition (1 - 1/s)/eps > (L_R + beta*L_P)/(alpha*K0)
+  is violated (Algorithm 2 line 18).
+
+Training runs against the numpy MacroEnv twin; forwards use the pure-jnp
+path (``use_pallas=False``) because interpret-mode Pallas is emulation-slow —
+the exported artifacts use the Pallas path, and the two are proven equal by
+the kernel test-suite.
+
+No optax in this environment: Adam is implemented inline.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .env import MacroEnv, EpisodeConfig
+
+
+# --------------------------------------------------------------------------
+# Minimal Adam
+# --------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def adam_step(params, grads, state, lr=3e-4, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale)
+        / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Rollouts
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Rollout:
+    states: np.ndarray      # [T, D]
+    actions_z: np.ndarray   # [T, R^2] raw Gaussian samples
+    logps: np.ndarray       # [T]
+    rewards: np.ndarray     # [T]
+    values: np.ndarray      # [T + 1]
+    ot_plans: np.ndarray    # [T, R, R]
+    allocs: np.ndarray      # [T, R, R]
+
+
+def collect_rollout(policy, value, env: MacroEnv, key, horizon: int) -> Rollout:
+    r = env.r
+    states, zs, logps, rewards, ots, allocs, values = [], [], [], [], [], [], []
+    state = env.observe()
+    for _ in range(horizon):
+        key, sub = jax.random.split(key)
+        s = jnp.asarray(state[None, :])
+        alloc, z, logp = model.policy_sample(policy, s, r, sub,
+                                             use_pallas=False)
+        v = model.value_apply(value, s, use_pallas=False)
+        alloc_np = np.asarray(alloc[0], np.float64)
+        next_state, reward, done, info = env.step(alloc_np)
+        states.append(state)
+        zs.append(np.asarray(z[0]))
+        logps.append(float(logp[0]))
+        rewards.append(reward)
+        values.append(float(v[0]))
+        ots.append(info["ot"])
+        allocs.append(alloc_np)
+        state = next_state
+        if done:
+            state = env.reset(seed=int(env.rng.integers(2**31)))
+    v_last = model.value_apply(value, jnp.asarray(state[None, :]),
+                               use_pallas=False)
+    values.append(float(v_last[0]))
+    return Rollout(np.asarray(states, np.float32), np.asarray(zs, np.float32),
+                   np.asarray(logps, np.float32),
+                   np.asarray(rewards, np.float32),
+                   np.asarray(values, np.float32),
+                   np.asarray(ots, np.float32), np.asarray(allocs, np.float32))
+
+
+def gae(rewards, values, gamma=0.95, lam=0.9):
+    t_len = rewards.shape[0]
+    adv = np.zeros(t_len, np.float32)
+    last = 0.0
+    for t in reversed(range(t_len)):
+        delta = rewards[t] + gamma * values[t + 1] - values[t]
+        last = delta + gamma * lam * last
+        adv[t] = last
+    returns = adv + values[:-1]
+    return adv, returns
+
+
+# --------------------------------------------------------------------------
+# Losses (Eq. 4 + Eq. 5 constraint terms)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("r", "clip"))
+def ppo_loss(policy, value, batch, r: int, clip: float = 0.2,
+             gamma_c: float = 1.0, delta_c: float = 1.0,
+             eps_target: float = 0.15, s_target: float = 2.5,
+             k0: float = 1.0):
+    states = batch["states"]
+    z = batch["z"]
+    old_logp = batch["logp"]
+    adv = batch["adv"]
+    returns = batch["returns"]
+    ot = batch["ot"]
+
+    logits = model.policy_logits(policy, states, use_pallas=False)
+    logp = model.gaussian_log_prob(z, logits, policy["log_std"])
+    ratio = jnp.exp(logp - old_logp)
+    adv_n = (adv - adv.mean()) / (adv.std() + 1e-8)
+    unclipped = ratio * adv_n
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv_n
+    l_pi = -jnp.mean(jnp.minimum(unclipped, clipped))
+
+    v = model.value_apply(value, states, use_pallas=False)
+    l_v = jnp.mean((v - returns) ** 2)
+
+    # Entropy of the Gaussian (up to constants): mean log_std.
+    entropy = jnp.mean(policy["log_std"])
+
+    # Constraint terms (Eq. 5 / Eq. 19-20).  The mean alloc deviation from
+    # the per-slot OT plan stands in for ||B_t||_F; the smoothness of the
+    # deterministic alloc sequence for Delta^RL.
+    alloc = model.logits_to_alloc(logits, r)
+    dev = jnp.sqrt(jnp.sum((alloc - ot) ** 2, axis=(1, 2)) + 1e-12)
+    l_eps = jnp.mean(jnp.maximum(0.0, (dev - eps_target) / 0.1))
+    delta_rl = jnp.sum((alloc[1:] - alloc[:-1]) ** 2, axis=(1, 2))
+    s_current = k0 / (jnp.mean(delta_rl) + 1e-6)
+    l_s = jnp.maximum(0.0, (s_target - s_current) / s_target)
+
+    total = (l_pi + 0.5 * l_v - 1e-3 * entropy
+             + gamma_c * l_eps + delta_c * l_s)
+    metrics = {"l_pi": l_pi, "l_v": l_v, "l_eps": l_eps, "l_s": l_s,
+               "dev": jnp.mean(dev), "s_current": s_current}
+    return total, metrics
+
+
+# --------------------------------------------------------------------------
+# Trainer (Algorithm 2)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainConfig:
+    r: int = 12
+    updates: int = 30
+    horizon: int = 64
+    epochs: int = 4
+    lr: float = 3e-4
+    seed: int = 0
+    eps_target: float = 0.15
+    s_target: float = 2.5
+    alpha: float = 1.0     # switching-cost weight in the advantage condition
+    beta: float = 0.1      # power-cost weight
+
+
+def estimate_k0(env: MacroEnv, slots: int = 64) -> float:
+    """Baseline switching cost K0: E||P*_t - P*_{t-1}||_F^2 of the memoryless
+    OT method (Algorithm 2 line 3)."""
+    prev = None
+    total, n = 0.0, 0
+    for _ in range(slots):
+        ot = env.ot_plan()
+        if prev is not None:
+            total += float(((ot - prev) ** 2).sum())
+            n += 1
+        prev = ot
+        env.step(ot)
+    return total / max(n, 1)
+
+
+def train(cfg: TrainConfig, log=print):
+    key = jax.random.PRNGKey(cfg.seed)
+    key, kp, kv, kr = jax.random.split(key, 4)
+    policy = model.policy_init(kp, cfg.r)
+    value = model.value_init(kv, cfg.r)
+    p_opt, v_opt = adam_init(policy), adam_init(value)
+
+    env = MacroEnv(EpisodeConfig(r=cfg.r, horizon=cfg.horizon, seed=cfg.seed))
+    k0 = max(estimate_k0(MacroEnv(EpisodeConfig(
+        r=cfg.r, horizon=cfg.horizon, seed=cfg.seed + 1))), 1e-3)
+    env.reset(seed=cfg.seed)
+    log(f"[ppo r={cfg.r}] baseline switching cost K0={k0:.4f}")
+
+    gamma_c, delta_c = 1.0, 1.0
+    history = []
+    for update in range(cfg.updates):
+        key, kroll = jax.random.split(key)
+        roll = collect_rollout(policy, value, env, kroll, cfg.horizon)
+        adv, returns = gae(roll.rewards, roll.values)
+        batch = {
+            "states": jnp.asarray(roll.states),
+            "z": jnp.asarray(roll.actions_z),
+            "logp": jnp.asarray(roll.logps),
+            "adv": jnp.asarray(adv),
+            "returns": jnp.asarray(returns),
+            "ot": jnp.asarray(roll.ot_plans),
+        }
+        metrics = None
+        for _ in range(cfg.epochs):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p, v: ppo_loss(p, v, batch, cfg.r,
+                                      gamma_c=gamma_c, delta_c=delta_c,
+                                      eps_target=cfg.eps_target,
+                                      s_target=cfg.s_target, k0=k0),
+                argnums=(0, 1), has_aux=True)(policy, value)
+            policy, p_opt = adam_step(policy, grads[0], p_opt, lr=cfg.lr)
+            value, v_opt = adam_step(value, grads[1], v_opt, lr=cfg.lr)
+
+        # Algorithm 2 line 17-18: validate the advantage condition and adapt
+        # constraint weights.
+        s_cur = float(metrics["s_current"])
+        eps_cur = max(float(metrics["dev"]), 1e-3)
+        lhs = (1.0 - 1.0 / max(s_cur, 1.0 + 1e-6)) / eps_cur
+        # L_R, L_P Lipschitz estimates are folded into a fixed rhs scale: the
+        # macro env's reward terms are O(1), so L_R + beta*L_P ~ 1.
+        rhs = (1.0 + cfg.beta) / (cfg.alpha * k0)
+        if lhs <= rhs:
+            gamma_c *= 1.5
+            delta_c *= 1.5
+        history.append({
+            "update": update,
+            "reward": float(roll.rewards.mean()),
+            "dev": eps_cur,
+            "s": s_cur,
+            "condition": lhs > rhs,
+        })
+        if update % 5 == 0 or update == cfg.updates - 1:
+            log(f"[ppo r={cfg.r}] upd={update} reward={roll.rewards.mean():.3f} "
+                f"dev={eps_cur:.3f} s={s_cur:.2f} cond={'OK' if lhs > rhs else 'viol'} "
+                f"gamma={gamma_c:.2f}")
+    return policy, value, {"k0": k0, "history": history}
+
+
+# --------------------------------------------------------------------------
+# Demand-predictor supervised training
+# --------------------------------------------------------------------------
+
+def make_predictor_dataset(r: int, episodes: int, horizon: int, seed: int):
+    """Histories -> next-slot arrival distribution, from the env twin."""
+    xs, ys = [], []
+    k = model.HISTORY_SLOTS
+    for ep in range(episodes):
+        env = MacroEnv(EpisodeConfig(r=r, horizon=horizon, seed=seed + ep))
+        hist = []  # per-slot (U, Qnorm, arrivals_norm)
+        for _ in range(horizon):
+            arr = env.arrivals
+            arr_n = arr / max(arr.sum(), 1e-9)
+            feat = np.concatenate([
+                env.util, np.minimum(env.queues / 200.0, 1.0), arr_n])
+            hist.append(feat)
+            env.step(env.ot_plan())
+            if len(hist) >= k:
+                nxt = env.arrivals
+                y = nxt / max(nxt.sum(), 1e-9)
+                xs.append(np.concatenate(hist[-k:]))
+                ys.append(y)
+    return (np.asarray(xs, np.float32), np.asarray(ys, np.float32))
+
+
+@jax.jit
+def _predictor_loss(params, x, y):
+    pred = model.predictor_apply(params, x, use_pallas=False)
+    return jnp.mean(jnp.sum((pred - y) ** 2, axis=-1)) \
+        + 1e-4 * sum(jnp.sum(w * w) for (w, b) in params)
+
+
+def train_predictor(r: int, episodes: int = 6, horizon: int = 48,
+                    steps: int = 300, seed: int = 0, log=print):
+    x, y = make_predictor_dataset(r, episodes, horizon, seed)
+    key = jax.random.PRNGKey(seed + 7)
+    params = model.predictor_init(key, r)
+    opt = adam_init(params)
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    loss = None
+    for step in range(steps):
+        idx = rng.integers(0, n, size=min(128, n))
+        xb, yb = jnp.asarray(x[idx]), jnp.asarray(y[idx])
+        loss, grads = jax.value_and_grad(_predictor_loss)(params, xb, yb)
+        params, opt = adam_step(params, grads, opt, lr=1e-3)
+        if step % 100 == 0 or step == steps - 1:
+            log(f"[predictor r={r}] step={step} loss={float(loss):.5f}")
+    return params, float(loss)

@@ -1,0 +1,102 @@
+"""AOT export pipeline tests: HLO text emission + weight roundtrip."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, ppo
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tiny_params(r, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kp, kq = jax.random.split(key)
+    return model.policy_init(kp, r), model.predictor_init(kq, r)
+
+
+def test_weight_save_load_roundtrip(tmp_path):
+    r = 4
+    policy, predictor = _tiny_params(r)
+    path = tmp_path / "weights_r4.npz"
+    aot.save_weights(path, policy, predictor, {"k0": 1.0, "r": r})
+    policy2, predictor2 = aot.load_weights(path, r)
+    np.testing.assert_allclose(np.asarray(policy["head"][0]),
+                               np.asarray(policy2["head"][0]))
+    np.testing.assert_allclose(np.asarray(predictor[2][1]),
+                               np.asarray(predictor2[2][1]))
+
+
+def test_load_weights_rejects_wrong_r(tmp_path):
+    policy, predictor = _tiny_params(4)
+    path = tmp_path / "w.npz"
+    aot.save_weights(path, policy, predictor, {"r": 4})
+    with pytest.raises(AssertionError):
+        aot.load_weights(path, 5)
+
+
+def test_export_policy_emits_hlo_text(tmp_path):
+    r = 4
+    policy, _ = _tiny_params(r)
+    path = tmp_path / "policy.hlo.txt"
+    d = aot.export_policy(policy, r, path)
+    text = path.read_text()
+    assert d == model.state_dim(r)
+    assert "HloModule" in text
+    assert f"f32[1,{d}]" in text  # the runtime-facing input signature
+
+
+def test_export_predictor_emits_hlo_text(tmp_path):
+    r = 4
+    _, predictor = _tiny_params(r)
+    path = tmp_path / "predictor.hlo.txt"
+    d = aot.export_predictor(predictor, r, path)
+    assert d == 15 * r
+    assert "HloModule" in path.read_text()
+
+
+def test_export_sinkhorn_emits_hlo_text(tmp_path):
+    path = tmp_path / "sinkhorn.hlo.txt"
+    aot.export_sinkhorn(4, path)
+    text = path.read_text()
+    assert "HloModule" in text
+    # The fixed-iteration loop must survive lowering (while or unrolled ops).
+    assert "while" in text or "exponential" in text
+
+
+def test_exported_policy_matches_eager(tmp_path):
+    """The baked-constant HLO path must agree with the eager forward."""
+    r = 4
+    policy, _ = _tiny_params(r, seed=3)
+    state = np.random.default_rng(0).normal(
+        size=(1, model.state_dim(r))).astype(np.float32)
+
+    # Eager (pallas path, as exported).
+    want = np.asarray(model.policy_apply(policy, jnp.asarray(state), r,
+                                         use_pallas=True)[0])
+
+    # Compile the same lowered computation locally and execute it.
+    def forward(s):
+        return (model.policy_apply(policy, s, r, use_pallas=True)[0],)
+
+    lowered = jax.jit(forward).lower(
+        jax.ShapeDtypeStruct((1, model.state_dim(r)), jnp.float32))
+    compiled = lowered.compile()
+    got = np.asarray(compiled(jnp.asarray(state))[0])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_manifest_written(tmp_path):
+    # --fast with a tiny R exercises the full main() path quickly.
+    aot.main(["--out", str(tmp_path), "--sizes", "4", "--fast"])
+    files = sorted(os.listdir(tmp_path))
+    assert "manifest.txt" in files
+    assert "policy_r4.hlo.txt" in files
+    assert "predictor_r4.hlo.txt" in files
+    assert "sinkhorn_r4.hlo.txt" in files
+    assert "weights_r4.npz" in files
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "r=4" in manifest

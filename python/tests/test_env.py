@@ -1,0 +1,83 @@
+"""Macro-env twin invariants: conservation, marginals, reward structure."""
+
+import numpy as np
+import pytest
+
+from compile.env import MacroEnv, EpisodeConfig
+
+
+def _env(r=6, seed=0):
+    return MacroEnv(EpisodeConfig(r=r, horizon=32, seed=seed))
+
+
+def test_reset_shapes():
+    env = _env()
+    s = env.reset(seed=1)
+    assert s.shape == (4 * 6 + 36,)
+    assert (env.queues == 0).all()
+
+
+def test_ot_plan_is_row_normalizable_and_feasible():
+    env = _env(r=8, seed=2)
+    plan = env.ot_plan()
+    assert plan.shape == (8, 8)
+    assert (plan >= 0).all()
+    np.testing.assert_allclose(plan.sum(axis=1), np.ones(8), atol=1e-4)
+
+
+def test_step_conserves_tasks():
+    """Routed arrivals + pre-existing queue == served + remaining queue."""
+    env = _env(r=5, seed=3)
+    arrivals = env.arrivals.copy()
+    q_before = env.queues.copy()
+    alloc = np.full((5, 5), 0.2)
+    env.step(alloc)
+    served = env.util * env.capacity
+    total_in = arrivals.sum() + q_before.sum()
+    total_out = served.sum() + env.queues.sum()
+    np.testing.assert_allclose(total_in, total_out, rtol=1e-9)
+
+
+def test_queues_never_negative():
+    env = _env(r=4, seed=4)
+    alloc = np.eye(4)
+    for _ in range(32):
+        env.step(alloc)
+        assert (env.queues >= -1e-12).all()
+        assert (env.util >= 0).all() and (env.util <= 1 + 1e-12).all()
+
+
+def test_identity_alloc_maximizes_smoothness_after_identity():
+    env = _env(r=4, seed=5)
+    alloc = np.eye(4)
+    env.step(alloc)
+    _, _, _, info = env.step(alloc)
+    assert info["r_smooth"] == 0.0
+
+
+def test_reward_penalizes_ot_deviation():
+    env = _env(r=4, seed=6)
+    ot = env.ot_plan()
+    _, r_close, _, _ = env.step(ot)
+    env.reset(seed=6)
+    far = np.roll(np.eye(4), 1, axis=1)
+    _, r_far, _, _ = env.step(far)
+    assert r_close > r_far
+
+
+def test_episode_terminates():
+    env = _env(r=3, seed=7)
+    done = False
+    for _ in range(32):
+        _, _, done, _ = env.step(np.eye(3))
+    assert done
+
+
+def test_observation_matches_feature_layout():
+    env = _env(r=4, seed=8)
+    s = env.observe()
+    r = 4
+    np.testing.assert_allclose(s[:r], env.util)
+    np.testing.assert_allclose(s[3 * r:4 * r], env.price, rtol=1e-6)
+    np.testing.assert_allclose(s[4 * r:].reshape(r, r), env.prev_alloc,
+                               rtol=1e-6)

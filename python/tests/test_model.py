@@ -1,0 +1,87 @@
+"""L2 model shape/invariant tests: policy, value, predictor."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("r", [4, 12])
+def test_state_dim_formula(r):
+    assert model.state_dim(r) == 4 * r + r * r
+    assert model.predictor_input_dim(r) == 15 * r
+
+
+@pytest.mark.parametrize("r", [4, 8])
+def test_policy_output_row_stochastic(r):
+    key = jax.random.PRNGKey(0)
+    params = model.policy_init(key, r)
+    state = jax.random.normal(key, (3, model.state_dim(r)), jnp.float32)
+    alloc = np.asarray(model.policy_apply(params, state, r, use_pallas=False))
+    assert alloc.shape == (3, r, r)
+    assert (alloc >= 0).all()
+    np.testing.assert_allclose(alloc.sum(axis=-1), np.ones((3, r)), atol=1e-5)
+
+
+def test_policy_pallas_and_ref_paths_agree():
+    r = 6
+    key = jax.random.PRNGKey(1)
+    params = model.policy_init(key, r)
+    state = jax.random.normal(key, (2, model.state_dim(r)), jnp.float32)
+    a = np.asarray(model.policy_apply(params, state, r, use_pallas=True))
+    b = np.asarray(model.policy_apply(params, state, r, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_policy_sample_logprob_consistency():
+    """Re-evaluating the Gaussian log-prob at the sampled z matches."""
+    r = 5
+    key = jax.random.PRNGKey(2)
+    params = model.policy_init(key, r)
+    state = jax.random.normal(key, (4, model.state_dim(r)), jnp.float32)
+    alloc, z, logp = model.policy_sample(params, state, r, key,
+                                         use_pallas=False)
+    logits = model.policy_logits(params, state, use_pallas=False)
+    logp2 = model.gaussian_log_prob(z, logits, params["log_std"])
+    np.testing.assert_allclose(np.asarray(logp), np.asarray(logp2),
+                               rtol=1e-5, atol=1e-4)
+    assert alloc.shape == (4, r, r)
+
+
+def test_value_scalar_output():
+    r = 4
+    key = jax.random.PRNGKey(3)
+    params = model.value_init(key, r)
+    state = jax.random.normal(key, (7, model.state_dim(r)), jnp.float32)
+    v = model.value_apply(params, state, use_pallas=False)
+    assert v.shape == (7,)
+
+
+@pytest.mark.parametrize("r", [4, 12])
+def test_predictor_outputs_distribution(r):
+    key = jax.random.PRNGKey(4)
+    params = model.predictor_init(key, r)
+    hist = jax.random.normal(key, (2, model.predictor_input_dim(r)),
+                             jnp.float32)
+    pred = np.asarray(model.predictor_apply(params, hist, use_pallas=False))
+    assert pred.shape == (2, r)
+    assert (pred >= 0).all()
+    np.testing.assert_allclose(pred.sum(axis=-1), np.ones(2), atol=1e-5)
+
+
+def test_gaussian_log_prob_matches_scipy_formula():
+    rng = np.random.default_rng(0)
+    d = 9
+    mean = rng.normal(size=(1, d)).astype(np.float32)
+    log_std = rng.normal(size=(d,)).astype(np.float32) * 0.2
+    z = rng.normal(size=(1, d)).astype(np.float32)
+    got = float(model.gaussian_log_prob(jnp.asarray(z), jnp.asarray(mean),
+                                        jnp.asarray(log_std))[0])
+    std = np.exp(log_std)
+    want = float(np.sum(-0.5 * ((z - mean) / std) ** 2 - np.log(std)
+                        - 0.5 * np.log(2 * np.pi)))
+    assert abs(got - want) < 1e-3

@@ -1,0 +1,197 @@
+//! GPU hardware catalog (Table I.b).
+//!
+//! Five GPU types with heterogeneous compute/memory envelopes, concurrency
+//! (lanes ~ the "3-20 tasks per server" capacity band of Fig 5.b) and power
+//! draw. Task classes map to preferred hardware exactly as Table I.b pairs
+//! them (A100/H100 compute-intensive, V100 memory-intensive, 4090/T4
+//! lightweight).
+
+use crate::workload::TaskClass;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuType {
+    A100,
+    H100,
+    Rtx4090,
+    V100,
+    T4,
+}
+
+pub const ALL_GPUS: [GpuType; 5] =
+    [GpuType::A100, GpuType::H100, GpuType::Rtx4090, GpuType::V100, GpuType::T4];
+
+impl GpuType {
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuType::A100 => "A100",
+            GpuType::H100 => "H100",
+            GpuType::Rtx4090 => "RTX4090",
+            GpuType::V100 => "V100",
+            GpuType::T4 => "T4",
+        }
+    }
+
+    /// Dense bf16 throughput, TFLOPs (approximate public specs).
+    pub fn compute_tflops(self) -> f64 {
+        match self {
+            GpuType::A100 => 312.0,
+            GpuType::H100 => 990.0,
+            GpuType::Rtx4090 => 165.0,
+            GpuType::V100 => 125.0,
+            GpuType::T4 => 65.0,
+        }
+    }
+
+    pub fn memory_gb(self) -> f64 {
+        match self {
+            GpuType::A100 => 80.0,
+            GpuType::H100 => 80.0,
+            GpuType::Rtx4090 => 24.0,
+            GpuType::V100 => 32.0,
+            GpuType::T4 => 16.0,
+        }
+    }
+
+    /// Concurrent inference lanes (continuous-batching slots).
+    pub fn lanes(self) -> usize {
+        match self {
+            GpuType::A100 => 8,
+            GpuType::H100 => 12,
+            GpuType::Rtx4090 => 5,
+            GpuType::V100 => 6,
+            GpuType::T4 => 3,
+        }
+    }
+
+    /// Board power at idle / under load, watts.
+    pub fn idle_watts(self) -> f64 {
+        match self {
+            GpuType::A100 => 60.0,
+            GpuType::H100 => 70.0,
+            GpuType::Rtx4090 => 30.0,
+            GpuType::V100 => 40.0,
+            GpuType::T4 => 15.0,
+        }
+    }
+
+    pub fn active_watts(self) -> f64 {
+        match self {
+            GpuType::A100 => 400.0,
+            GpuType::H100 => 700.0,
+            GpuType::Rtx4090 => 450.0,
+            GpuType::V100 => 250.0,
+            GpuType::T4 => 70.0,
+        }
+    }
+
+    /// Service-time multiplier for a task class: < 1 is faster than the
+    /// reference (V100 on its preferred class ~ 1.0).
+    ///
+    /// LLM serving is memory-bandwidth- and batching-bound, so effective
+    /// latency spreads far less than raw TFLOPs ratios: the multiplier
+    /// interpolates 75% fixed + 25% spec-driven (H100 ~0.78x .. T4 ~1.23x),
+    /// matching the modest per-scheduler inference-time differences of
+    /// Fig 11.
+    pub fn speed_factor(self, class: TaskClass) -> f64 {
+        let base = 0.75 + 0.25 * (125.0 / self.compute_tflops());
+        match class {
+            TaskClass::ComputeIntensive => base,
+            // Memory-bound work tracks memory capacity more than FLOPs.
+            TaskClass::MemoryIntensive => {
+                let mem = 0.75 + 0.25 * (32.0 / self.memory_gb());
+                0.5 * base + 0.5 * mem
+            }
+            // Lightweight tasks are overhead-bound: tighter still.
+            TaskClass::Lightweight => 0.5 + 0.5 * base,
+        }
+    }
+
+    /// Table I.b pairing: is this GPU the architecture of choice for the
+    /// class? Drives `Type_match` in Eq. 8 (1.0 optimal / 0.5 otherwise).
+    pub fn optimal_for(self, class: TaskClass) -> bool {
+        matches!(
+            (self, class),
+            (GpuType::A100, TaskClass::ComputeIntensive)
+                | (GpuType::H100, TaskClass::ComputeIntensive)
+                | (GpuType::V100, TaskClass::MemoryIntensive)
+                | (GpuType::Rtx4090, TaskClass::Lightweight)
+                | (GpuType::T4, TaskClass::Lightweight)
+        )
+    }
+
+    /// Global fleet count range (Table I.b).
+    pub fn count_range(self) -> (usize, usize) {
+        match self {
+            GpuType::A100 => (40, 60),
+            GpuType::H100 => (20, 40),
+            GpuType::Rtx4090 => (40, 60),
+            GpuType::V100 => (60, 80),
+            GpuType::T4 => (40, 60),
+        }
+    }
+
+    /// Cold-start warm-up time in seconds (§II: "GPUs require 1-3 minutes
+    /// to transition from cold start to full readiness"); faster silicon
+    /// readies sooner.
+    pub fn warmup_secs(self) -> f64 {
+        match self {
+            GpuType::H100 => 60.0,
+            GpuType::A100 => 80.0,
+            GpuType::Rtx4090 => 100.0,
+            GpuType::V100 => 150.0,
+            GpuType::T4 => 180.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_within_paper_capacity_band() {
+        for gpu in ALL_GPUS {
+            assert!((3..=20).contains(&gpu.lanes()), "{:?}", gpu);
+        }
+    }
+
+    #[test]
+    fn h100_fastest_for_compute() {
+        let mut best = GpuType::V100;
+        for gpu in ALL_GPUS {
+            if gpu.speed_factor(TaskClass::ComputeIntensive)
+                < best.speed_factor(TaskClass::ComputeIntensive)
+            {
+                best = gpu;
+            }
+        }
+        assert_eq!(best, GpuType::H100);
+    }
+
+    #[test]
+    fn type_match_follows_table() {
+        assert!(GpuType::A100.optimal_for(TaskClass::ComputeIntensive));
+        assert!(GpuType::V100.optimal_for(TaskClass::MemoryIntensive));
+        assert!(GpuType::T4.optimal_for(TaskClass::Lightweight));
+        assert!(!GpuType::T4.optimal_for(TaskClass::ComputeIntensive));
+    }
+
+    #[test]
+    fn warmup_in_one_to_three_minutes() {
+        for gpu in ALL_GPUS {
+            let w = gpu.warmup_secs();
+            assert!((60.0..=180.0).contains(&w), "{:?} warmup {w}", gpu);
+        }
+    }
+
+    #[test]
+    fn speed_factor_positive() {
+        for gpu in ALL_GPUS {
+            for class in
+                [TaskClass::ComputeIntensive, TaskClass::MemoryIntensive, TaskClass::Lightweight]
+            {
+                assert!(gpu.speed_factor(class) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! GPU cluster substrate: hardware catalog, Fig 3 transition cost model,
+//! multi-lane servers, regions and fleet construction.
+
+pub mod gpu;
+pub mod server;
+pub mod transition;
+
+pub use gpu::{GpuType, ALL_GPUS};
+pub use server::{AssignOutcome, Server, ServerState};
+
+use crate::power::PriceTable;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// A geographical region: co-located GPU servers + electricity price.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub id: usize,
+    pub name: String,
+    pub servers: Vec<Server>,
+    pub price_per_kwh: f64,
+    /// Regional failure flag (Fig 4): offline regions accept no work.
+    pub failed: bool,
+}
+
+impl Region {
+    pub fn active_servers(&self) -> usize {
+        self.servers.iter().filter(|s| s.is_active()).count()
+    }
+
+    pub fn total_lanes(&self) -> usize {
+        self.servers.iter().map(|s| s.lanes()).sum()
+    }
+
+    pub fn active_capacity(&self, now: f64) -> usize {
+        if self.failed {
+            return 0;
+        }
+        self.servers
+            .iter()
+            .filter(|s| s.accepting(now))
+            .map(|s| s.lanes())
+            .sum()
+    }
+
+    /// Mean utilization across *active* servers (load-balance metric input).
+    pub fn mean_utilization(&self, now: f64) -> f64 {
+        let active: Vec<&Server> = self.servers.iter().filter(|s| s.is_active()).collect();
+        if active.is_empty() {
+            return 0.0;
+        }
+        active.iter().map(|s| s.utilization(now)).sum::<f64>() / active.len() as f64
+    }
+}
+
+/// The full deployment: one region per topology node.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub regions: Vec<Region>,
+}
+
+impl Fleet {
+    /// Build a fleet for `topo`, distributing the Table I.b global GPU
+    /// counts across regions with a deterministic "wealth" skew — the
+    /// paper's premise is that supply is geographically imbalanced (Fig 1).
+    pub fn build(topo: &Topology, prices: &PriceTable, seed: u64) -> Fleet {
+        let mut rng = Rng::new(seed, 77);
+        let n = topo.n;
+        // Region wealth: how much of the global fleet lands here
+        // (demand-correlated — see geo.rs).
+        let wealth: Vec<f64> = crate::geo::wealth(n, seed);
+        let wealth_sum: f64 = wealth.iter().sum();
+
+        let mut regions: Vec<Region> = (0..n)
+            .map(|id| Region {
+                id,
+                name: topo.node_names[id].clone(),
+                servers: Vec::new(),
+                price_per_kwh: prices.price(id),
+                failed: false,
+            })
+            .collect();
+
+        // Per-type global counts (Table I.b ranges) — global fleet size is
+        // topology-independent (the paper's Fig 9 cost magnitudes are
+        // comparable across topologies).
+        for gpu in ALL_GPUS {
+            let (lo, hi) = gpu.count_range();
+            let count = rng.range(lo, hi);
+            // Distribute by wealth using largest-remainder.
+            let mut allocated = 0usize;
+            let mut shares: Vec<(usize, f64)> = (0..n)
+                .map(|r| {
+                    let exact = count as f64 * wealth[r] / wealth_sum;
+                    (r, exact)
+                })
+                .collect();
+            for &(r, exact) in &shares {
+                let whole = exact.floor() as usize;
+                for _ in 0..whole {
+                    let idx = regions[r].servers.len();
+                    // Half the fleet boots hot; the rest is cold standby.
+                    let hot = rng.chance(0.5);
+                    regions[r].servers.push(Server::new(r, idx, gpu, hot));
+                }
+                allocated += whole;
+            }
+            shares.sort_by(|a, b| {
+                (b.1 - b.1.floor()).partial_cmp(&(a.1 - a.1.floor())).unwrap()
+            });
+            let mut i = 0;
+            while allocated < count {
+                let r = shares[i % n].0;
+                let idx = regions[r].servers.len();
+                regions[r].servers.push(Server::new(r, idx, gpu, rng.chance(0.5)));
+                allocated += 1;
+                i += 1;
+            }
+        }
+        // Every region gets at least one always-available server so no
+        // region is structurally dead.
+        for r in 0..n {
+            if regions[r].servers.is_empty() {
+                regions[r].servers.push(Server::new(r, 0, GpuType::V100, true));
+            }
+            if regions[r].servers.iter().all(|s| !s.is_active()) {
+                regions[r].servers[0].state = ServerState::Active;
+            }
+        }
+        Fleet { regions }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn total_servers(&self) -> usize {
+        self.regions.iter().map(|r| r.servers.len()).sum()
+    }
+
+    /// Normalized resource distribution nu_t over regions (the OT column
+    /// marginal): *free* capacity — accepting lanes discounted by current
+    /// busyness — so the macro flow self-equalizes utilization across
+    /// regions. Failed regions contribute 0.
+    pub fn resource_distribution(&self, now: f64) -> Vec<f64> {
+        let caps: Vec<f64> = self
+            .regions
+            .iter()
+            .map(|r| {
+                if r.failed {
+                    return 0.0;
+                }
+                r.servers
+                    .iter()
+                    .filter(|s| s.accepting(now))
+                    .map(|s| {
+                        // Forward-looking free share of the next window:
+                        // queued lane-seconds eat into lane-capacity.
+                        let backlog_frac = (s.backlog_secs(now) / 45.0).min(1.0);
+                        s.lanes() as f64 * (1.0 - backlog_frac).max(0.05)
+                    })
+                    .sum()
+            })
+            .collect();
+        let sum: f64 = caps.iter().sum::<f64>().max(1e-9);
+        caps.iter().map(|c| c / sum).collect()
+    }
+
+    /// All-server utilization snapshot (Fig 10 LB input), active only.
+    pub fn utilization_snapshot(&self, now: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        for region in &self.regions {
+            if region.failed {
+                continue;
+            }
+            for s in &region.servers {
+                if s.is_active() {
+                    out.push(s.utilization(now));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> (Fleet, Topology) {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 5);
+        (Fleet::build(&topo, &prices, 5), topo)
+    }
+
+    #[test]
+    fn fleet_covers_all_regions() {
+        let (f, topo) = fleet();
+        assert_eq!(f.n_regions(), topo.n);
+        for r in &f.regions {
+            assert!(!r.servers.is_empty(), "region {} empty", r.id);
+            assert!(r.servers.iter().any(|s| s.is_active()));
+        }
+    }
+
+    #[test]
+    fn fleet_size_tracks_table_ranges() {
+        let (f, _) = fleet();
+        // Global Table I.b counts sum to 200..280 for a 12-node topology.
+        let total = f.total_servers();
+        assert!((190..320).contains(&total), "total={total}");
+    }
+
+    #[test]
+    fn fleet_deterministic() {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 5);
+        let a = Fleet::build(&topo, &prices, 5);
+        let b = Fleet::build(&topo, &prices, 5);
+        assert_eq!(a.total_servers(), b.total_servers());
+        for (ra, rb) in a.regions.iter().zip(b.regions.iter()) {
+            assert_eq!(ra.servers.len(), rb.servers.len());
+            for (sa, sb) in ra.servers.iter().zip(rb.servers.iter()) {
+                assert_eq!(sa.gpu, sb.gpu);
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_is_imbalanced_across_regions() {
+        let (f, _) = fleet();
+        let counts: Vec<usize> = f.regions.iter().map(|r| r.servers.len()).collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max >= 2 * min.max(1), "fleet unexpectedly balanced: {counts:?}");
+    }
+
+    #[test]
+    fn resource_distribution_sums_to_one_and_respects_failure() {
+        let (mut f, _) = fleet();
+        let nu = f.resource_distribution(0.0);
+        assert!((nu.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        f.regions[0].failed = true;
+        let nu2 = f.resource_distribution(0.0);
+        assert_eq!(nu2[0], 0.0);
+        assert!((nu2.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_snapshot_counts_active_only() {
+        let (f, _) = fleet();
+        let snap = f.utilization_snapshot(0.0);
+        let active: usize = f
+            .regions
+            .iter()
+            .map(|r| r.servers.iter().filter(|s| s.is_active()).count())
+            .sum();
+        assert_eq!(snap.len(), active);
+    }
+}

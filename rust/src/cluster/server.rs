@@ -1,0 +1,407 @@
+//! GPU server model: multi-lane execution, state machine, model residency.
+//!
+//! Each server is a `lanes()`-way continuous-batching executor. Assigning a
+//! task picks the earliest-free lane (exact multi-server queue semantics, so
+//! waiting time is computed analytically rather than by sub-slot stepping).
+//! The state machine implements §V-C's activation lifecycle: Cold servers
+//! must warm up for `warmup_secs` before serving; model switches on a warm
+//! server incur the Fig 3 switch stages.
+
+use std::collections::VecDeque;
+
+use super::gpu::GpuType;
+use super::transition::{switch_cost, switch_energy_j};
+use crate::workload::{Task, EMBED_DIM};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServerState {
+    /// Powered down; cannot accept work.
+    Cold,
+    /// Warming up; ready at the contained absolute time.
+    Warming { ready_at: f64 },
+    /// Serving (or idle-hot).
+    Active,
+}
+
+/// Record of a recently finished/assigned task, for Eq. 10 locality.
+#[derive(Clone, Debug)]
+pub struct RecentTask {
+    pub model: u32,
+    pub embed: [f32; EMBED_DIM],
+    pub timestamp: f64,
+}
+
+/// Outcome of assigning one task to this server.
+#[derive(Clone, Copy, Debug)]
+pub struct AssignOutcome {
+    pub start_secs: f64,
+    pub finish_secs: f64,
+    /// Queue wait (start - max(arrival, ready)) plus switch stall.
+    pub wait_secs: f64,
+    /// Whether a model switch was triggered (Fig 3 costs charged).
+    pub switched_model: bool,
+    /// Energy charged for the switch, joules (0 if none).
+    pub switch_energy_j: f64,
+    pub service_secs: f64,
+}
+
+pub const RECENT_WINDOW: usize = 16;
+
+/// Fraction of Fig 3 stage time that blocks the triggering request
+/// (weight loads overlap with draining lanes in continuous batching; the
+/// remainder is charged to operational overhead + energy, not latency).
+pub const SWITCH_BLOCKING_FRAC: f64 = 0.15;
+
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub region: usize,
+    pub index: usize,
+    pub gpu: GpuType,
+    pub state: ServerState,
+    /// Absolute time each lane becomes free.
+    lanes_free_at: Vec<f64>,
+    /// Currently resident model (None right after cold start).
+    pub loaded_model: Option<u32>,
+    /// Recent tasks for locality scoring.
+    pub recent: VecDeque<RecentTask>,
+    /// Execution intervals (start, finish) of in-flight/undrained work —
+    /// busy time is attributed to the slots where it actually runs.
+    work_intervals: Vec<(f64, f64)>,
+    /// Time this server last became Active (for full-window accounting).
+    pub active_edge: f64,
+    /// Counters for the operational-overhead metric.
+    pub model_switches: u64,
+    pub activations: u64,
+    pub tasks_served: u64,
+}
+
+impl Server {
+    pub fn new(region: usize, index: usize, gpu: GpuType, initially_active: bool) -> Server {
+        Server {
+            region,
+            index,
+            gpu,
+            state: if initially_active { ServerState::Active } else { ServerState::Cold },
+            lanes_free_at: vec![0.0; gpu.lanes()],
+            loaded_model: None,
+            recent: VecDeque::with_capacity(RECENT_WINDOW),
+            work_intervals: Vec::new(),
+            active_edge: 0.0,
+            model_switches: 0,
+            activations: 0,
+            tasks_served: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes_free_at.len()
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, ServerState::Active)
+    }
+
+    /// Can the server accept work at `now` (Active, or Warming and ready)?
+    pub fn accepting(&self, now: f64) -> bool {
+        match self.state {
+            ServerState::Active => true,
+            ServerState::Warming { ready_at } => ready_at <= now,
+            ServerState::Cold => false,
+        }
+    }
+
+    /// Promote Warming -> Active if the warm-up completed by `now`.
+    pub fn tick_state(&mut self, now: f64) {
+        if let ServerState::Warming { ready_at } = self.state {
+            if ready_at <= now {
+                self.state = ServerState::Active;
+                self.active_edge = ready_at;
+            }
+        }
+    }
+
+    /// Begin warming a Cold server at `now`.
+    pub fn power_on(&mut self, now: f64) {
+        if matches!(self.state, ServerState::Cold) {
+            self.state = ServerState::Warming { ready_at: now + self.gpu.warmup_secs() };
+            self.activations += 1;
+        }
+    }
+
+    /// Power a server down (drops residency; queued lanes drain naturally —
+    /// we only forbid *new* assignments).
+    pub fn power_off(&mut self) {
+        self.state = ServerState::Cold;
+        self.loaded_model = None;
+    }
+
+    /// Earliest moment a new task could start at `now` (lane + readiness).
+    pub fn earliest_start(&self, now: f64) -> f64 {
+        let lane = self.lanes_free_at.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ready = match self.state {
+            ServerState::Warming { ready_at } => ready_at,
+            _ => 0.0,
+        };
+        lane.max(now).max(ready)
+    }
+
+    /// Fraction of lanes busy at `now`.
+    pub fn utilization(&self, now: f64) -> f64 {
+        let busy = self.lanes_free_at.iter().filter(|&&t| t > now).count();
+        busy as f64 / self.lanes_free_at.len() as f64
+    }
+
+    /// Backlog proxy: total queued lane-seconds beyond `now`, normalized by
+    /// lane count (used by Eq. 9 load compatibility).
+    pub fn backlog_secs(&self, now: f64) -> f64 {
+        self.lanes_free_at.iter().map(|&t| (t - now).max(0.0)).sum::<f64>()
+            / self.lanes_free_at.len() as f64
+    }
+
+    /// Effective execution seconds of `task` on this hardware.
+    pub fn effective_service_secs(&self, task: &Task) -> f64 {
+        let penalty = if self.gpu.optimal_for(task.class) { 1.0 } else { 1.25 };
+        task.service_secs * self.gpu.speed_factor(task.class) * penalty
+    }
+
+    /// Assign a task: picks the earliest-free lane, charges model-switch
+    /// stages when the resident model differs, updates locality memory.
+    pub fn assign(&mut self, task: &Task, now: f64) -> AssignOutcome {
+        debug_assert!(self.accepting(now) || matches!(self.state, ServerState::Warming { .. }));
+        self.tick_state(now);
+
+        // Earliest-free lane.
+        let (lane_idx, &lane_free) = self
+            .lanes_free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+
+        let ready = match self.state {
+            ServerState::Warming { ready_at } => ready_at,
+            _ => 0.0,
+        };
+        let mut start = task.arrival_secs.max(lane_free).max(ready).max(now);
+
+        // Model switch (Fig 3) if the resident model differs. Production
+        // engines pipeline weight loading against draining lanes, so only
+        // SWITCH_BLOCKING_FRAC of the stage time blocks the request; the
+        // full duration is charged to operational overhead and energy. The
+        // first load after cold start charges the load+init stages only.
+        let mut switched = false;
+        let mut energy = 0.0;
+        match self.loaded_model {
+            Some(m) if m == task.model => {}
+            Some(_) => {
+                let c = switch_cost(self.gpu);
+                start += SWITCH_BLOCKING_FRAC * c.total();
+                switched = true;
+                energy = switch_energy_j(self.gpu);
+                self.model_switches += 1;
+            }
+            None => {
+                let c = switch_cost(self.gpu);
+                let first_load = c.load + c.state_init;
+                start += SWITCH_BLOCKING_FRAC * first_load;
+                energy = switch_energy_j(self.gpu) * first_load / c.total();
+            }
+        }
+        self.loaded_model = Some(task.model);
+
+        let service = self.effective_service_secs(task);
+        let finish = start + service;
+        self.lanes_free_at[lane_idx] = finish;
+        self.work_intervals.push((start, finish));
+        self.tasks_served += 1;
+
+        if self.recent.len() >= RECENT_WINDOW {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(RecentTask {
+            model: task.model,
+            embed: task.embed,
+            timestamp: task.arrival_secs,
+        });
+
+        AssignOutcome {
+            start_secs: start,
+            finish_secs: finish,
+            wait_secs: start - task.arrival_secs,
+            switched_model: switched,
+            switch_energy_j: energy,
+            service_secs: service,
+        }
+    }
+
+    /// Busy lane-seconds that actually ran inside the window
+    /// `[window_end - slot_secs, window_end)`; intervals fully before the
+    /// window are dropped (called once per slot by the engine).
+    pub fn drain_busy_secs(&mut self, window_end: f64, slot_secs: f64) -> f64 {
+        let lo = window_end - slot_secs;
+        let mut busy = 0.0;
+        self.work_intervals.retain(|&(start, finish)| {
+            busy += (finish.min(window_end) - start.max(lo)).max(0.0);
+            finish > window_end
+        });
+        busy
+    }
+
+    /// Time-averaged utilization over one slot window: busy lane-seconds
+    /// that ran in the window divided by lane-capacity. Attributing work to
+    /// the slots where it runs (not where it was assigned) is what makes
+    /// the Fig 10 LB metric noise-free across slot boundaries.
+    pub fn drain_slot_utilization(&mut self, window_end: f64, slot_secs: f64) -> f64 {
+        (self.drain_busy_secs(window_end, slot_secs) / (self.lanes() as f64 * slot_secs)).min(1.0)
+    }
+
+    /// Idle time since the last task would finish (deactivation ranking).
+    pub fn idle_since(&self, now: f64) -> f64 {
+        let last = self.lanes_free_at.iter().cloned().fold(0.0, f64::max);
+        (now - last).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+
+    fn task_at(arrival: f64, model: u32) -> Task {
+        let mut w = DiurnalWorkload::new(WorkloadConfig::default(), 1, 1);
+        let mut t = w.slot_tasks(0, 45.0).remove(0);
+        t.arrival_secs = arrival;
+        t.model = model;
+        t
+    }
+
+    #[test]
+    fn parallel_lanes_avoid_waiting() {
+        let mut s = Server::new(0, 0, GpuType::A100, true);
+        s.loaded_model = Some(0);
+        let t = task_at(10.0, 0);
+        let a = s.assign(&t, 10.0);
+        let b = s.assign(&t, 10.0);
+        // Two tasks on an 8-lane server start simultaneously.
+        assert_eq!(a.start_secs, b.start_secs);
+        assert_eq!(a.wait_secs, 0.0);
+    }
+
+    #[test]
+    fn saturated_server_queues() {
+        let mut s = Server::new(0, 0, GpuType::T4, true); // 3 lanes
+        s.loaded_model = Some(0);
+        let t = task_at(0.0, 0);
+        for _ in 0..3 {
+            s.assign(&t, 0.0);
+        }
+        let queued = s.assign(&t, 0.0);
+        assert!(queued.wait_secs > 0.0);
+        assert!(s.utilization(1.0) == 1.0);
+    }
+
+    #[test]
+    fn model_switch_charges_fig3_stall() {
+        let mut s = Server::new(0, 0, GpuType::V100, true);
+        s.loaded_model = Some(1);
+        let t = task_at(0.0, 2);
+        let out = s.assign(&t, 0.0);
+        assert!(out.switched_model);
+        // V100 switch total is 30.0 s (Fig 3.a); blocking fraction applies.
+        assert!((out.wait_secs - SWITCH_BLOCKING_FRAC * 30.0).abs() < 1e-9);
+        assert!(out.switch_energy_j > 0.0);
+        assert_eq!(s.model_switches, 1);
+    }
+
+    #[test]
+    fn same_model_no_switch() {
+        let mut s = Server::new(0, 0, GpuType::V100, true);
+        s.loaded_model = Some(3);
+        let out = s.assign(&task_at(0.0, 3), 0.0);
+        assert!(!out.switched_model);
+        assert_eq!(out.wait_secs, 0.0);
+    }
+
+    #[test]
+    fn cold_server_must_warm_up() {
+        let mut s = Server::new(0, 0, GpuType::H100, false);
+        assert!(!s.accepting(0.0));
+        s.power_on(0.0);
+        assert!(matches!(s.state, ServerState::Warming { .. }));
+        assert!(!s.accepting(10.0));
+        assert!(s.accepting(s.gpu.warmup_secs() + 1.0));
+        s.tick_state(s.gpu.warmup_secs() + 1.0);
+        assert!(s.is_active());
+        assert_eq!(s.activations, 1);
+    }
+
+    #[test]
+    fn warming_server_delays_start() {
+        let mut s = Server::new(0, 0, GpuType::H100, false);
+        s.power_on(0.0); // ready at 60
+        let out = s.assign(&task_at(0.0, 0), 0.0);
+        assert!(out.start_secs >= 60.0);
+    }
+
+    #[test]
+    fn utilization_and_backlog_track_lanes() {
+        let mut s = Server::new(0, 0, GpuType::T4, true);
+        s.loaded_model = Some(0);
+        assert_eq!(s.utilization(0.0), 0.0);
+        s.assign(&task_at(0.0, 0), 0.0);
+        assert!(s.utilization(1.0) > 0.0);
+        assert!(s.backlog_secs(0.0) > 0.0);
+        assert_eq!(s.backlog_secs(1e9), 0.0);
+    }
+
+    #[test]
+    fn recent_window_bounded() {
+        let mut s = Server::new(0, 0, GpuType::A100, true);
+        s.loaded_model = Some(0);
+        let t = task_at(0.0, 0);
+        for _ in 0..50 {
+            s.assign(&t, 0.0);
+        }
+        assert_eq!(s.recent.len(), RECENT_WINDOW);
+    }
+
+    #[test]
+    fn effective_service_prefers_matching_hardware() {
+        let s_match = Server::new(0, 0, GpuType::H100, true);
+        let s_miss = Server::new(0, 1, GpuType::T4, true);
+        let mut t = task_at(0.0, 0);
+        t.class = crate::workload::TaskClass::ComputeIntensive;
+        t.service_secs = 10.0;
+        assert!(s_match.effective_service_secs(&t) < s_miss.effective_service_secs(&t));
+    }
+
+    #[test]
+    fn drain_busy_attributes_to_run_window() {
+        let mut s = Server::new(0, 0, GpuType::A100, true);
+        s.loaded_model = Some(0);
+        let mut t = task_at(0.0, 0);
+        t.service_secs = 10.0;
+        let out = s.assign(&t, 0.0);
+        let service = out.service_secs;
+        // Task runs entirely inside the first 45 s window.
+        let b1 = s.drain_busy_secs(45.0, 45.0);
+        assert!((b1 - service).abs() < 1e-9);
+        // Nothing left for the second window.
+        assert_eq!(s.drain_busy_secs(90.0, 45.0), 0.0);
+    }
+
+    #[test]
+    fn drain_busy_splits_across_windows() {
+        let mut s = Server::new(0, 0, GpuType::A100, true);
+        s.loaded_model = Some(0);
+        let mut t = task_at(40.0, 0);
+        t.service_secs = 10.0;
+        let out = s.assign(&t, 40.0);
+        let total = out.finish_secs - out.start_secs;
+        let b1 = s.drain_busy_secs(45.0, 45.0);
+        let b2 = s.drain_busy_secs(90.0, 45.0);
+        assert!(b1 > 0.0 && b2 > 0.0);
+        assert!((b1 + b2 - total).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,177 @@
+//! Task-migration and model-switch cost model (Fig 3).
+//!
+//! Stage timings follow Fig 3.a for LLaMA-2-7B on a V100 — migration:
+//! serialize 15.2 s, deserialize 4.8 s, GPU memory load 5.6 s, engine
+//! warm-up 5.1 s; model switch: unload 3.5 s, memory cleanup 2.1 s, load
+//! 6.8 s, state init 14.2 s, engine reconfigure 3.4 s. Fig 3.b shows other
+//! GPUs scale these down (V100 slowest of the tested set); we encode that
+//! as a per-GPU multiplier. Fig 3.c's power behaviour is captured by a
+//! per-stage power fraction of the board's active draw.
+
+use super::gpu::GpuType;
+
+/// Migration stage durations in seconds (scaled per GPU).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationCost {
+    pub serialize: f64,
+    pub deserialize: f64,
+    pub memory_load: f64,
+    pub engine_warmup: f64,
+}
+
+impl MigrationCost {
+    pub fn total(&self) -> f64 {
+        self.serialize + self.deserialize + self.memory_load + self.engine_warmup
+    }
+}
+
+/// Model-switch stage durations in seconds (scaled per GPU).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchCost {
+    pub unload: f64,
+    pub memory_cleanup: f64,
+    pub load: f64,
+    pub state_init: f64,
+    pub engine_reconfig: f64,
+}
+
+impl SwitchCost {
+    pub fn total(&self) -> f64 {
+        self.unload + self.memory_cleanup + self.load + self.state_init + self.engine_reconfig
+    }
+}
+
+/// Fig 3.a reference numbers (V100, LLaMA-2-7B).
+pub const V100_MIGRATION: MigrationCost = MigrationCost {
+    serialize: 15.2,
+    deserialize: 4.8,
+    memory_load: 5.6,
+    engine_warmup: 5.1,
+};
+
+pub const V100_SWITCH: SwitchCost = SwitchCost {
+    unload: 3.5,
+    memory_cleanup: 2.1,
+    load: 6.8,
+    state_init: 14.2,
+    engine_reconfig: 3.4,
+};
+
+/// Fig 3.b: relative stage-cost multiplier vs the V100 baseline.
+pub fn stage_scale(gpu: GpuType) -> f64 {
+    match gpu {
+        GpuType::V100 => 1.00,
+        GpuType::T4 => 1.10,
+        GpuType::Rtx4090 => 0.62,
+        GpuType::A100 => 0.52,
+        GpuType::H100 => 0.40,
+    }
+}
+
+pub fn migration_cost(gpu: GpuType) -> MigrationCost {
+    let s = stage_scale(gpu);
+    MigrationCost {
+        serialize: V100_MIGRATION.serialize * s,
+        deserialize: V100_MIGRATION.deserialize * s,
+        memory_load: V100_MIGRATION.memory_load * s,
+        engine_warmup: V100_MIGRATION.engine_warmup * s,
+    }
+}
+
+pub fn switch_cost(gpu: GpuType) -> SwitchCost {
+    let s = stage_scale(gpu);
+    SwitchCost {
+        unload: V100_SWITCH.unload * s,
+        memory_cleanup: V100_SWITCH.memory_cleanup * s,
+        load: V100_SWITCH.load * s,
+        state_init: V100_SWITCH.state_init * s,
+        engine_reconfig: V100_SWITCH.engine_reconfig * s,
+    }
+}
+
+/// Fig 3.c: power fraction of `active_watts` drawn during each phase.
+/// Deserialization + memory loading spike close to board peak (the paper
+/// measures 237 W of 250 W on a V100, i.e. ~0.95).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    SerializeOrUnload,
+    DeserializeOrLoad,
+    MemoryOps,
+    WarmupOrInit,
+    Reconfig,
+}
+
+pub fn phase_power_fraction(phase: Phase) -> f64 {
+    match phase {
+        Phase::SerializeOrUnload => 0.55,
+        Phase::DeserializeOrLoad => 0.95,
+        Phase::MemoryOps => 0.90,
+        Phase::WarmupOrInit => 0.70,
+        Phase::Reconfig => 0.45,
+    }
+}
+
+/// Energy burned by one full model switch, in joules.
+pub fn switch_energy_j(gpu: GpuType) -> f64 {
+    let c = switch_cost(gpu);
+    let w = gpu.active_watts();
+    c.unload * phase_power_fraction(Phase::SerializeOrUnload) * w
+        + c.memory_cleanup * phase_power_fraction(Phase::MemoryOps) * w
+        + c.load * phase_power_fraction(Phase::DeserializeOrLoad) * w
+        + c.state_init * phase_power_fraction(Phase::WarmupOrInit) * w
+        + c.engine_reconfig * phase_power_fraction(Phase::Reconfig) * w
+}
+
+/// Energy burned by one task migration (source serialize + dest stages), J.
+pub fn migration_energy_j(gpu: GpuType) -> f64 {
+    let c = migration_cost(gpu);
+    let w = gpu.active_watts();
+    c.serialize * phase_power_fraction(Phase::SerializeOrUnload) * w
+        + c.deserialize * phase_power_fraction(Phase::DeserializeOrLoad) * w
+        + c.memory_load * phase_power_fraction(Phase::MemoryOps) * w
+        + c.engine_warmup * phase_power_fraction(Phase::WarmupOrInit) * w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_matches_paper_figures() {
+        let m = migration_cost(GpuType::V100);
+        assert!((m.serialize - 15.2).abs() < 1e-9);
+        assert!((m.total() - 30.7).abs() < 1e-9);
+        let s = switch_cost(GpuType::V100);
+        assert!((s.state_init - 14.2).abs() < 1e-9);
+        assert!((s.total() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn v100_more_expensive_than_h100_everywhere() {
+        // Fig 3.b: "the V100 exhibits higher migration costs across all
+        // stages compared to the H100, RTX 4090 ...".
+        let v = migration_cost(GpuType::V100);
+        let h = migration_cost(GpuType::H100);
+        assert!(v.serialize > h.serialize);
+        assert!(v.deserialize > h.deserialize);
+        assert!(v.memory_load > h.memory_load);
+        assert!(v.engine_warmup > h.engine_warmup);
+    }
+
+    #[test]
+    fn load_phase_draws_near_peak_power() {
+        // Fig 3.c: V100 peak ~237/250 W during deserialize/load.
+        let frac = phase_power_fraction(Phase::DeserializeOrLoad);
+        assert!((0.9..=1.0).contains(&frac));
+    }
+
+    #[test]
+    fn energies_positive_and_ordered() {
+        for gpu in super::super::gpu::ALL_GPUS {
+            assert!(switch_energy_j(gpu) > 0.0);
+            assert!(migration_energy_j(gpu) > 0.0);
+        }
+        // Higher-wattage boards burn more per switch at similar durations.
+        assert!(switch_energy_j(GpuType::A100) > switch_energy_j(GpuType::T4));
+    }
+}

@@ -1,0 +1,257 @@
+//! Typed configuration system on top of the TOML-subset parser.
+//!
+//! A single [`ExperimentConfig`] describes one simulator run: topology,
+//! scheduler, horizon, workload shape, TORTA hyper-parameters. Configs load
+//! from files (`configs/*.toml`), can be overridden from the CLI, and every
+//! field has a paper-faithful default (Table I / §VI-A).
+
+pub mod parser;
+
+pub use parser::{Table, Value};
+
+/// Workload generation parameters (§VI-A: heterogeneous tasks, uniform
+/// service times, diurnal load with surges).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Mean tasks per region per slot at the diurnal baseline.
+    pub base_rate: f64,
+    /// Diurnal amplitude as a fraction of base rate.
+    pub diurnal_amp: f64,
+    /// Diurnal period in slots (480 slots = 6 h -> one full day compressed).
+    pub diurnal_period: f64,
+    /// Service time lower/upper bound in seconds (uniform distribution).
+    pub service_lo: f64,
+    pub service_hi: f64,
+    /// Deadline slack factor: deadline = arrival + slack * service.
+    pub deadline_slack: f64,
+    /// Task-mix probabilities: (compute-intensive, memory-intensive,
+    /// lightweight). Normalized at use.
+    pub mix_compute: f64,
+    pub mix_memory: f64,
+    pub mix_light: f64,
+    /// Number of distinct model ids (for locality / switching effects).
+    pub model_catalog: usize,
+    /// Number of distinct users (for SkyLB prefix affinity).
+    pub users: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            base_rate: 60.0,
+            diurnal_amp: 0.6,
+            diurnal_period: 160.0,
+            service_lo: 5.0,
+            service_hi: 25.0,
+            deadline_slack: 4.0,
+            mix_compute: 0.35,
+            mix_memory: 0.35,
+            mix_light: 0.30,
+            model_catalog: 6,
+            users: 500,
+        }
+    }
+}
+
+/// TORTA scheduler hyper-parameters (paper §V, Appendix B).
+#[derive(Clone, Debug)]
+pub struct TortaConfig {
+    /// Load PJRT artifacts (policy/predictor/sinkhorn HLO). When false, the
+    /// native Rust OT + exponential-smoothing fallback runs instead (used as
+    /// the "TORTA-native" ablation and when artifacts are absent).
+    pub use_pjrt: bool,
+    pub artifacts_dir: String,
+    /// Max Frobenius deviation of A_t from the OT plan (eps_max, Eq. 19).
+    pub eps_max: f64,
+    /// Temporal smoothing weight toward A_{t-1} for the native fallback.
+    pub smoothing: f64,
+    /// Sinkhorn regularization + iterations (must match aot.py export).
+    pub sinkhorn_eps: f64,
+    pub sinkhorn_iters: usize,
+    /// Micro-layer activation safety factor sigma (Eq. 6).
+    pub activation_sigma: f64,
+    /// Compatibility score weights w1..w3 (Eq. 7).
+    pub w_hw: f64,
+    pub w_load: f64,
+    pub w_locality: f64,
+    /// Cost matrix weights (Eq. 2): w1 power dominates w2 network.
+    pub cost_w_power: f64,
+    pub cost_w_net: f64,
+    /// Demand predictor accuracy in [0,1] for the Fig 12 sweep; 1.0 = use
+    /// the trained predictor unperturbed.
+    pub prediction_accuracy: f64,
+}
+
+impl Default for TortaConfig {
+    fn default() -> Self {
+        TortaConfig {
+            use_pjrt: true,
+            artifacts_dir: "artifacts".into(),
+            eps_max: 0.6,
+            smoothing: 0.5,
+            sinkhorn_eps: 0.05,
+            sinkhorn_iters: 50,
+            activation_sigma: 2.0,
+            w_hw: 0.25,
+            w_load: 0.6,
+            w_locality: 0.15,
+            cost_w_power: 1.0,
+            cost_w_net: 0.15,
+            prediction_accuracy: 1.0,
+        }
+    }
+}
+
+/// One simulator run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub topology: String,
+    pub scheduler: String,
+    /// Total discrete slots (paper: 480 x 45 s = 6 h).
+    pub slots: usize,
+    pub slot_secs: f64,
+    pub seed: u64,
+    pub workload: WorkloadConfig,
+    pub torta: TortaConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            topology: "abilene".into(),
+            scheduler: "torta".into(),
+            slots: 480,
+            slot_secs: 45.0,
+            seed: 42,
+            workload: WorkloadConfig::default(),
+            torta: TortaConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_table(t: &Table) -> Self {
+        let d = ExperimentConfig::default();
+        let wd = WorkloadConfig::default();
+        let td = TortaConfig::default();
+        ExperimentConfig {
+            topology: t.str_or("topology", &d.topology),
+            scheduler: t.str_or("scheduler", &d.scheduler),
+            slots: t.usize_or("slots", d.slots),
+            slot_secs: t.f64_or("slot_secs", d.slot_secs),
+            seed: t.u64_or("seed", d.seed),
+            workload: WorkloadConfig {
+                base_rate: t.f64_or("workload.base_rate", wd.base_rate),
+                diurnal_amp: t.f64_or("workload.diurnal_amp", wd.diurnal_amp),
+                diurnal_period: t.f64_or("workload.diurnal_period", wd.diurnal_period),
+                service_lo: t.f64_or("workload.service_lo", wd.service_lo),
+                service_hi: t.f64_or("workload.service_hi", wd.service_hi),
+                deadline_slack: t.f64_or("workload.deadline_slack", wd.deadline_slack),
+                mix_compute: t.f64_or("workload.mix_compute", wd.mix_compute),
+                mix_memory: t.f64_or("workload.mix_memory", wd.mix_memory),
+                mix_light: t.f64_or("workload.mix_light", wd.mix_light),
+                model_catalog: t.usize_or("workload.model_catalog", wd.model_catalog),
+                users: t.usize_or("workload.users", wd.users),
+            },
+            torta: TortaConfig {
+                use_pjrt: t.bool_or("torta.use_pjrt", td.use_pjrt),
+                artifacts_dir: t.str_or("torta.artifacts_dir", &td.artifacts_dir),
+                eps_max: t.f64_or("torta.eps_max", td.eps_max),
+                smoothing: t.f64_or("torta.smoothing", td.smoothing),
+                sinkhorn_eps: t.f64_or("torta.sinkhorn_eps", td.sinkhorn_eps),
+                sinkhorn_iters: t.usize_or("torta.sinkhorn_iters", td.sinkhorn_iters),
+                activation_sigma: t.f64_or("torta.activation_sigma", td.activation_sigma),
+                w_hw: t.f64_or("torta.w_hw", td.w_hw),
+                w_load: t.f64_or("torta.w_load", td.w_load),
+                w_locality: t.f64_or("torta.w_locality", td.w_locality),
+                cost_w_power: t.f64_or("torta.cost_w_power", td.cost_w_power),
+                cost_w_net: t.f64_or("torta.cost_w_net", td.cost_w_net),
+                prediction_accuracy: t.f64_or(
+                    "torta.prediction_accuracy",
+                    td.prediction_accuracy,
+                ),
+            },
+        }
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        Ok(Self::from_table(&Table::from_file(path)?))
+    }
+
+    /// Validate semantic constraints; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.slots == 0 {
+            errs.push("slots must be > 0".to_string());
+        }
+        if self.slot_secs <= 0.0 {
+            errs.push("slot_secs must be > 0".to_string());
+        }
+        if self.workload.service_lo <= 0.0 || self.workload.service_hi < self.workload.service_lo
+        {
+            errs.push("service time bounds must satisfy 0 < lo <= hi".to_string());
+        }
+        let mix = self.workload.mix_compute + self.workload.mix_memory + self.workload.mix_light;
+        if mix <= 0.0 {
+            errs.push("task mix weights must sum to > 0".to_string());
+        }
+        if !(0.0..=1.0).contains(&self.torta.prediction_accuracy) {
+            errs.push("torta.prediction_accuracy must lie in [0,1]".to_string());
+        }
+        if self.torta.sinkhorn_iters == 0 {
+            errs.push("torta.sinkhorn_iters must be > 0".to_string());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_faithful() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.slots, 480);
+        assert!((c.slot_secs - 45.0).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn from_table_overrides() {
+        let t = Table::parse(
+            r#"
+            topology = "cost2"
+            scheduler = "skylb"
+            slots = 100
+            [workload]
+            base_rate = 50.0
+            [torta]
+            use_pjrt = false
+            prediction_accuracy = 0.5
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.topology, "cost2");
+        assert_eq!(c.scheduler, "skylb");
+        assert_eq!(c.slots, 100);
+        assert!((c.workload.base_rate - 50.0).abs() < 1e-12);
+        assert!(!c.torta.use_pjrt);
+        assert!((c.torta.prediction_accuracy - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.slots = 0;
+        c.torta.prediction_accuracy = 2.0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("slots"));
+        assert!(err.contains("prediction_accuracy"));
+    }
+}

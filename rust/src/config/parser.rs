@@ -1,0 +1,299 @@
+//! TOML-subset parser (offline build: no `serde`/`toml`).
+//!
+//! Supports what TORTA config files need: `[section.subsection]` headers,
+//! `key = value` with strings, integers, floats, booleans and flat arrays,
+//! `#` comments, and blank lines. Keys are exposed flattened as
+//! `section.subsection.key`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Flattened key -> value table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno + 1,
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value_text) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno + 1,
+                message: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: lineno + 1, message: "empty key".into() });
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(value_text.trim()).map_err(|message| ParseError {
+                line: lineno + 1,
+                message,
+            })?;
+            entries.insert(full_key, value);
+        }
+        Ok(Table { entries })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Table> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Ok(Table::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .map(|x| x.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .map(|x| x.max(0) as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = text.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for part in split_array_items(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(body) = text.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {text:?}"))
+}
+
+fn split_array_items(body: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&body[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Table::parse(
+            r#"
+            # top comment
+            name = "torta"
+            [sim]
+            slots = 480
+            slot_secs = 45.0
+            verbose = true
+            [workload.surge]
+            regions = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.str_or("name", ""), "torta");
+        assert_eq!(t.usize_or("sim.slots", 0), 480);
+        assert!((t.f64_or("sim.slot_secs", 0.0) - 45.0).abs() < 1e-12);
+        assert!(t.bool_or("sim.verbose", false));
+        let arr = t.get("workload.surge.regions").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let t = Table::parse("x = 3").unwrap();
+        assert_eq!(t.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn inline_comments_and_hash_in_string() {
+        let t = Table::parse("a = 1 # trailing\nb = \"x#y\"").unwrap();
+        assert_eq!(t.usize_or("a", 0), 1);
+        assert_eq!(t.str_or("b", ""), "x#y");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Table::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_unterminated_string() {
+        assert!(Table::parse("a = \"oops").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let t = Table::parse("xs = []").unwrap();
+        assert_eq!(t.get("xs").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let t = Table::parse("").unwrap();
+        assert_eq!(t.str_or("nope", "dflt"), "dflt");
+        assert_eq!(t.usize_or("nope", 7), 7);
+    }
+}

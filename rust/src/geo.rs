@@ -1,0 +1,72 @@
+//! Shared geographic demand/supply profile.
+//!
+//! The paper's premise (Fig 1) is that GPU supply and user demand are
+//! *imbalanced but not independent*: providers deploy capacity where users
+//! are, yet geography/politics/economics leave a persistent mismatch. Both
+//! the workload generator (demand weights) and the fleet builder (wealth)
+//! draw from this common profile so the correlation is controlled in one
+//! place: wealth = CORR * demand + (1 - CORR) * independent.
+
+use crate::util::rng::Rng;
+
+/// Correlation between regional capacity share and demand share.
+pub const SUPPLY_DEMAND_CORR: f64 = 0.55;
+
+const LO: f64 = 0.35;
+const HI: f64 = 1.65;
+
+/// Per-region demand weights in [LO, HI].
+pub fn demand_weights(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed, 1001);
+    (0..n).map(|_| rng.uniform(LO, HI)).collect()
+}
+
+/// Per-region supply wealth in [LO, HI], correlated with demand.
+pub fn wealth(n: usize, seed: u64) -> Vec<f64> {
+    let demand = demand_weights(n, seed);
+    let mut rng = Rng::new(seed, 2002);
+    demand
+        .iter()
+        .map(|&d| {
+            let indep = rng.uniform(LO, HI);
+            SUPPLY_DEMAND_CORR * d + (1.0 - SUPPLY_DEMAND_CORR) * indep
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(demand_weights(12, 5), demand_weights(12, 5));
+        assert_eq!(wealth(12, 5), wealth(12, 5));
+    }
+
+    #[test]
+    fn bounded() {
+        for &x in wealth(32, 9).iter().chain(demand_weights(32, 9).iter()) {
+            assert!((LO..=HI).contains(&x));
+        }
+    }
+
+    #[test]
+    fn correlated_but_not_identical() {
+        let d = demand_weights(32, 3);
+        let w = wealth(32, 3);
+        let mean_d: f64 = d.iter().sum::<f64>() / 32.0;
+        let mean_w: f64 = w.iter().sum::<f64>() / 32.0;
+        let mut cov = 0.0;
+        let mut var_d = 0.0;
+        let mut var_w = 0.0;
+        for i in 0..32 {
+            cov += (d[i] - mean_d) * (w[i] - mean_w);
+            var_d += (d[i] - mean_d).powi(2);
+            var_w += (w[i] - mean_w).powi(2);
+        }
+        let corr = cov / (var_d.sqrt() * var_w.sqrt());
+        assert!(corr > 0.4, "corr {corr}");
+        assert!(corr < 0.98, "corr {corr}");
+    }
+}

@@ -1,0 +1,34 @@
+//! # TORTA — Temporal Optimal Resource scheduling via Two-layer Architecture
+//!
+//! Production-grade reproduction of *"Temporal-Aware GPU Resource Allocation
+//! for Distributed LLM Inference via Reinforcement Learning"* (CS.DC 2025).
+//!
+//! The crate is the L3 rust coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (Sinkhorn OT, fused MLP) authored in
+//!   `python/compile/kernels/`, lowered AOT into HLO text.
+//! * **L2** — JAX policy / value / demand-predictor networks trained with
+//!   PPO + OT supervision (`python/compile/`), weights baked into the same
+//!   HLO artifacts.
+//! * **L3** — this crate: discrete-slot simulator, real-time serving
+//!   driver, the TORTA two-layer scheduler (macro OT+RL / micro matching),
+//!   baselines (SkyLB, SDIB, RR, reactive-OT), a branch-and-bound MILP
+//!   solver, metrics, and the bench harness regenerating every paper
+//!   figure. Python never runs on the request path: artifacts are executed
+//!   through the PJRT CPU client (`runtime/`).
+
+pub mod cluster;
+pub mod config;
+pub mod geo;
+pub mod metrics;
+pub mod milp;
+pub mod ot;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod serve;
+pub mod sim;
+pub mod topology;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,262 @@
+//! TORTA coordinator CLI.
+//!
+//! Subcommands:
+//!   simulate  — run one experiment (topology x scheduler) and print the row
+//!   suite     — run all schedulers on one/all topologies (Fig 8-11 table)
+//!   milp      — Fig 5 MILP solve-time scaling demo
+//!   trace     — record a workload trace to CSV
+//!   serve     — real-time (time-scaled) serving session
+//!
+//! `torta <cmd> --help` lists options.
+
+use torta::config::ExperimentConfig;
+use torta::report;
+use torta::sim::run_experiment;
+use torta::util::cli::{Cli, CliError};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+    let result = match cmd {
+        "simulate" => cmd_simulate(&rest),
+        "fleet" => cmd_fleet(&rest),
+        "validate-artifacts" => cmd_validate_artifacts(&rest),
+        "suite" => cmd_suite(&rest),
+        "milp" => cmd_milp(&rest),
+        "trace" => cmd_trace(&rest),
+        "serve" => cmd_serve(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        match e.downcast_ref::<CliError>() {
+            Some(CliError::HelpRequested(h)) => println!("{h}"),
+            _ => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "torta — Temporal Optimal Resource scheduling via Two-layer Architecture\n\n\
+         Commands:\n\
+         \x20 simulate   run one experiment and print its metrics row\n\
+         \x20 fleet      inspect a topology's regional supply/demand/prices\n\
+         \x20 validate-artifacts  check AOT artifacts against runtime dims\n\
+         \x20 suite      all schedulers x topologies comparison table\n\
+         \x20 milp       Fig 5 MILP solve-time scaling\n\
+         \x20 trace      record a workload trace CSV\n\
+         \x20 serve      real-time (scaled) serving session\n\n\
+         Run `torta <command> --help` for options."
+    );
+}
+
+fn base_cli(name: &'static str) -> Cli {
+    Cli::new(name, "TORTA experiment runner")
+        .opt("topology", "abilene", "abilene|polska|gabriel|cost2")
+        .opt("scheduler", "torta", "torta|torta-native|reactive|skylb|sdib|rr")
+        .opt("slots", "480", "time slots (45 s each)")
+        .opt("seed", "42", "workload/fleet seed")
+        .opt("config", "", "optional TOML config file")
+        .opt("artifacts", "artifacts", "AOT artifact directory")
+        .flag("no-pjrt", "force the native (non-PJRT) path")
+}
+
+fn load_cfg(cli: &Cli) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = {
+        let path = cli.str("config");
+        if path.is_empty() {
+            ExperimentConfig::default()
+        } else {
+            ExperimentConfig::from_file(std::path::Path::new(&path))?
+        }
+    };
+    cfg.topology = cli.str("topology");
+    cfg.scheduler = cli.str("scheduler");
+    cfg.slots = cli.usize("slots")?;
+    cfg.seed = cli.u64("seed")?;
+    cfg.torta.artifacts_dir = cli.str("artifacts");
+    if cli.has_flag("no-pjrt") {
+        cfg.torta.use_pjrt = false;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("torta simulate").parse(args)?;
+    let cfg = load_cfg(&cli)?;
+    let t0 = std::time::Instant::now();
+    let mut metrics = run_experiment(&cfg)?;
+    println!("{}", metrics.row());
+    println!("(wall time {:?})", t0.elapsed());
+    report::save_runs(&format!("simulate_{}_{}", cfg.scheduler, cfg.topology), &mut [metrics]);
+    Ok(())
+}
+
+fn cmd_suite(args: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("torta suite")
+        .flag("all-topologies", "sweep all four topologies")
+        .parse(args)?;
+    let cfg = load_cfg(&cli)?;
+    let topologies: Vec<String> = if cli.has_flag("all-topologies") {
+        torta::topology::TOPOLOGY_NAMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![cfg.topology.clone()]
+    };
+    let schedulers = ["torta", "skylb", "sdib", "rr"];
+    let mut runs = Vec::new();
+    for topo in &topologies {
+        for sched in schedulers {
+            let mut c = cfg.clone();
+            c.topology = topo.clone();
+            c.scheduler = sched.to_string();
+            let m = run_experiment(&c)?;
+            runs.push(m);
+        }
+    }
+    println!("{}", report::comparison_table(&mut runs));
+    report::save_runs("suite", &mut runs);
+    Ok(())
+}
+
+fn cmd_milp(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("torta milp", "MILP solve-time scaling (Fig 5)")
+        .opt("tasks", "4,6,8,10,12,14", "comma-separated task counts")
+        .opt("budget", "20000000", "branch-and-bound node budget")
+        .parse(args)?;
+    let budget = cli.u64("budget")?;
+    println!("{:>7} {:>14} {:>12} {:>10}", "tasks", "nodes", "time", "optimal");
+    for part in cli.str("tasks").split(',') {
+        let n: usize = part.trim().parse()?;
+        let p = torta::milp::AssignmentProblem::generate(n, 7);
+        let t0 = std::time::Instant::now();
+        let sol = torta::milp::solve_bnb(&p, budget);
+        let dt = t0.elapsed();
+        match sol {
+            Some(s) => println!("{:>7} {:>14} {:>12?} {:>10}", n, s.nodes_explored, dt, s.optimal),
+            None => println!("{:>7} {:>14} {:>12?} {:>10}", n, "-", dt, "infeasible"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("torta trace")
+        .opt("out", "results/trace.csv", "output CSV path")
+        .parse(args)?;
+    let cfg = load_cfg(&cli)?;
+    let topo = torta::topology::Topology::by_name(&cfg.topology)?;
+    let mut wl =
+        torta::workload::DiurnalWorkload::new(cfg.workload.clone(), topo.n, cfg.seed);
+    let out = std::path::PathBuf::from(cli.str("out"));
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let n = torta::workload::trace::record(&mut wl, cfg.slots, cfg.slot_secs, &out)?;
+    println!("recorded {n} tasks over {} slots to {out:?}", cfg.slots);
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("torta serve")
+        .opt("time-scale", "45", "wall-time compression factor")
+        .parse(args)?;
+    let cfg = load_cfg(&cli)?;
+    let topo = torta::topology::Topology::by_name(&cfg.topology)?;
+    let prices = torta::power::PriceTable::for_regions(topo.n, cfg.seed);
+    let ctx = torta::scheduler::Ctx { topo, prices, slot_secs: cfg.slot_secs };
+    let mut wl =
+        torta::workload::DiurnalWorkload::new(cfg.workload.clone(), ctx.topo.n, cfg.seed);
+    let mut sched = torta::scheduler::build(&cfg.scheduler, &ctx, &cfg)?;
+    let scale = cli.f64("time-scale")?;
+    let mut m = torta::serve::serve_realtime(&cfg, &mut wl, sched.as_mut(), cfg.slots, scale)?;
+    println!("{}", m.row());
+    Ok(())
+}
+
+fn cmd_fleet(args: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("torta fleet").parse(args)?;
+    let cfg = load_cfg(&cli)?;
+    let topo = torta::topology::Topology::by_name(&cfg.topology)?;
+    let salt = torta::sim::topo_salt(&cfg.topology);
+    let prices = torta::power::PriceTable::for_regions(topo.n, cfg.seed ^ salt);
+    let fleet = torta::cluster::Fleet::build(&topo, &prices, cfg.seed ^ salt);
+    let demand = torta::geo::demand_weights(topo.n, cfg.seed ^ salt);
+    println!(
+        "{} — {} regions, {} server clusters, {:.0} Gbps, mean latency {:.0} ms\n",
+        topo.name,
+        topo.n,
+        fleet.total_servers(),
+        topo.bandwidth_gbps,
+        topo.mean_latency_ms()
+    );
+    println!(
+        "{:<16} {:>8} {:>8} {:>10} {:>12} {:>10}",
+        "region", "servers", "lanes", "$ / kWh", "demand wt", "hot"
+    );
+    for (r, region) in fleet.regions.iter().enumerate() {
+        println!(
+            "{:<16} {:>8} {:>8} {:>10.3} {:>12.2} {:>10}",
+            region.name,
+            region.servers.len(),
+            region.total_lanes(),
+            region.price_per_kwh,
+            demand[r],
+            region.active_servers()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate_artifacts(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("torta validate-artifacts", "check AOT artifacts")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .parse(args)?;
+    let dir = std::path::PathBuf::from(cli.str("artifacts"));
+    let mut ok = true;
+    for r in [12usize, 25, 32] {
+        if !torta::runtime::TortaArtifacts::available(&dir, r) {
+            println!("R={r}: MISSING (run `make artifacts`)");
+            ok = false;
+            continue;
+        }
+        match torta::runtime::TortaArtifacts::load(&dir, r) {
+            Ok(art) => {
+                let d = 4 * r + r * r;
+                let state = vec![0.1f32; d];
+                let hist = vec![0.1f32; 15 * r];
+                let c = vec![0.5f32; r * r];
+                let m = vec![1.0f32 / r as f32; r];
+                let policy = art.policy_alloc(&state).is_ok();
+                let pred = art.predict(&hist).is_ok();
+                let sk = art.sinkhorn_plan(&c, &m, &m).is_ok();
+                println!(
+                    "R={r}: policy={} predictor={} sinkhorn={}",
+                    if policy { "OK" } else { "FAIL" },
+                    if pred { "OK" } else { "FAIL" },
+                    if sk { "OK" } else { "FAIL" }
+                );
+                ok &= policy && pred && sk;
+            }
+            Err(e) => {
+                println!("R={r}: LOAD ERROR {e:#}");
+                ok = false;
+            }
+        }
+    }
+    anyhow::ensure!(ok, "artifact validation failed");
+    println!("all artifacts valid");
+    Ok(())
+}

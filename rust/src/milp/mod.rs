@@ -1,0 +1,331 @@
+//! Branch-and-bound MILP solver for the §III reactive assignment problem.
+//!
+//! The paper's Fig 5 formulation (Fig 5.b): N tasks x (M regions x K
+//! servers) binary assignment variables, per-task assignment constraints,
+//! per-server capacity limits, a per-region load cap (<= 80% of total
+//! tasks), minimizing total assignment cost. Generic MILP solvers exhibit
+//! exponential solve-time growth here; our depth-first branch-and-bound
+//! with a per-task min-cost admissible bound reproduces that shape
+//! (`benches/fig5_milp.rs`).
+
+use crate::util::rng::Rng;
+
+/// Problem instance.
+#[derive(Clone, Debug)]
+pub struct AssignmentProblem {
+    pub n_tasks: usize,
+    pub n_servers: usize,
+    pub regions: usize,
+    /// Row-major cost[task][server].
+    pub cost: Vec<f64>,
+    /// Per-server capacity (3-20 tasks, Fig 5.b).
+    pub capacity: Vec<usize>,
+    /// Region of each server.
+    pub server_region: Vec<usize>,
+    /// Region load cap as a fraction of total tasks (0.8 in the paper).
+    pub region_cap_frac: f64,
+}
+
+impl AssignmentProblem {
+    /// Paper-configured random instance: 5 regions x 10 servers, 2 task
+    /// types, dynamic capacities 3-20 (Fig 5.b).
+    pub fn generate(n_tasks: usize, seed: u64) -> AssignmentProblem {
+        let regions = 5;
+        let per_region = 10;
+        let n_servers = regions * per_region;
+        let mut rng = Rng::new(seed, 55);
+        let mut cost = Vec::with_capacity(n_tasks * n_servers);
+        // Two task types with distinct affinity patterns.
+        let task_type: Vec<usize> = (0..n_tasks).map(|_| rng.below(2)).collect();
+        let server_speed: Vec<f64> = (0..n_servers).map(|_| rng.uniform(0.5, 2.0)).collect();
+        for t in 0..n_tasks {
+            for s in 0..n_servers {
+                let affinity = if (s / per_region) % 2 == task_type[t] { 0.8 } else { 1.2 };
+                cost.push(server_speed[s] * affinity * rng.uniform(0.8, 1.2));
+            }
+        }
+        AssignmentProblem {
+            n_tasks,
+            n_servers,
+            regions,
+            cost,
+            capacity: (0..n_servers).map(|_| rng.range(3, 20)).collect(),
+            server_region: (0..n_servers).map(|s| s / per_region).collect(),
+            region_cap_frac: 0.8,
+        }
+    }
+
+    fn c(&self, task: usize, server: usize) -> f64 {
+        self.cost[task * self.n_servers + server]
+    }
+
+    pub fn region_cap(&self) -> usize {
+        ((self.n_tasks as f64) * self.region_cap_frac).floor().max(1.0) as usize
+    }
+}
+
+/// Solver outcome.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// server index per task.
+    pub assignment: Vec<usize>,
+    pub cost: f64,
+    pub nodes_explored: u64,
+    pub optimal: bool,
+}
+
+/// Exact branch-and-bound with a node budget (returns best-so-far marked
+/// non-optimal when the budget trips — mirrors a solver time limit).
+pub fn solve_bnb(p: &AssignmentProblem, node_budget: u64) -> Option<Solution> {
+    // Admissible lower bound: per-task minimum cost ignoring constraints,
+    // as a suffix sum over the task order.
+    let mut suffix_min = vec![0.0; p.n_tasks + 1];
+    for t in (0..p.n_tasks).rev() {
+        let m = (0..p.n_servers)
+            .map(|s| p.c(t, s))
+            .fold(f64::INFINITY, f64::min);
+        suffix_min[t] = suffix_min[t + 1] + m;
+    }
+
+    struct Search<'a> {
+        p: &'a AssignmentProblem,
+        suffix_min: Vec<f64>,
+        cap_left: Vec<i64>,
+        region_left: Vec<i64>,
+        current: Vec<usize>,
+        best: Option<(f64, Vec<usize>)>,
+        nodes: u64,
+        budget: u64,
+        /// Per-task candidate order (cheapest first) — dramatic pruning.
+        order: Vec<Vec<usize>>,
+    }
+
+    impl Search<'_> {
+        fn dfs(&mut self, task: usize, cost_so_far: f64) {
+            self.nodes += 1;
+            if self.nodes > self.budget {
+                return;
+            }
+            if let Some((best_cost, _)) = &self.best {
+                if cost_so_far + self.suffix_min[task] >= *best_cost - 1e-12 {
+                    return; // bound prune
+                }
+            }
+            if task == self.p.n_tasks {
+                let better = self
+                    .best
+                    .as_ref()
+                    .map_or(true, |(bc, _)| cost_so_far < *bc);
+                if better {
+                    self.best = Some((cost_so_far, self.current.clone()));
+                }
+                return;
+            }
+            let candidates = self.order[task].clone();
+            for s in candidates {
+                if self.cap_left[s] == 0 {
+                    continue;
+                }
+                let region = self.p.server_region[s];
+                if self.region_left[region] == 0 {
+                    continue;
+                }
+                self.cap_left[s] -= 1;
+                self.region_left[region] -= 1;
+                self.current[task] = s;
+                self.dfs(task + 1, cost_so_far + self.p.c(task, s));
+                self.cap_left[s] += 1;
+                self.region_left[region] += 1;
+                if self.nodes > self.budget {
+                    return;
+                }
+            }
+        }
+    }
+
+    let order: Vec<Vec<usize>> = (0..p.n_tasks)
+        .map(|t| {
+            let mut idx: Vec<usize> = (0..p.n_servers).collect();
+            idx.sort_by(|&a, &b| p.c(t, a).partial_cmp(&p.c(t, b)).unwrap());
+            idx
+        })
+        .collect();
+    let mut search = Search {
+        p,
+        suffix_min,
+        cap_left: p.capacity.iter().map(|&c| c as i64).collect(),
+        region_left: vec![p.region_cap() as i64; p.regions],
+        current: vec![usize::MAX; p.n_tasks],
+        best: None,
+        nodes: 0,
+        budget: node_budget,
+        order,
+    };
+    search.dfs(0, 0.0);
+    let nodes = search.nodes;
+    let optimal = nodes <= node_budget;
+    search.best.map(|(cost, assignment)| Solution {
+        assignment,
+        cost,
+        nodes_explored: nodes,
+        optimal,
+    })
+}
+
+/// Greedy heuristic (the "sub-second decision" the paper says production
+/// needs): cheapest feasible server per task in order.
+pub fn solve_greedy(p: &AssignmentProblem) -> Option<Solution> {
+    let mut cap_left: Vec<i64> = p.capacity.iter().map(|&c| c as i64).collect();
+    let mut region_left = vec![p.region_cap() as i64; p.regions];
+    let mut assignment = vec![0usize; p.n_tasks];
+    let mut total = 0.0;
+    for t in 0..p.n_tasks {
+        let mut best: Option<(usize, f64)> = None;
+        for s in 0..p.n_servers {
+            if cap_left[s] == 0 || region_left[p.server_region[s]] == 0 {
+                continue;
+            }
+            let c = p.c(t, s);
+            if best.map_or(true, |(_, bc)| c < bc) {
+                best = Some((s, c));
+            }
+        }
+        let (s, c) = best?;
+        cap_left[s] -= 1;
+        region_left[p.server_region[s]] -= 1;
+        assignment[t] = s;
+        total += c;
+    }
+    Some(Solution { assignment, cost: total, nodes_explored: p.n_tasks as u64, optimal: false })
+}
+
+/// Validate a solution against all constraints.
+pub fn validate(p: &AssignmentProblem, sol: &Solution) -> Result<(), String> {
+    if sol.assignment.len() != p.n_tasks {
+        return Err("wrong assignment length".into());
+    }
+    let mut used = vec![0usize; p.n_servers];
+    let mut region_used = vec![0usize; p.regions];
+    for (t, &s) in sol.assignment.iter().enumerate() {
+        if s >= p.n_servers {
+            return Err(format!("task {t} unassigned"));
+        }
+        used[s] += 1;
+        region_used[p.server_region[s]] += 1;
+    }
+    for s in 0..p.n_servers {
+        if used[s] > p.capacity[s] {
+            return Err(format!("server {s} over capacity"));
+        }
+    }
+    let cap = p.region_cap();
+    for r in 0..p.regions {
+        if region_used[r] > cap {
+            return Err(format!("region {r} over 80% cap"));
+        }
+    }
+    let cost: f64 = sol
+        .assignment
+        .iter()
+        .enumerate()
+        .map(|(t, &s)| p.c(t, s))
+        .sum();
+    if (cost - sol.cost).abs() > 1e-6 {
+        return Err(format!("cost mismatch {cost} vs {}", sol.cost));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bnb_solves_small_instance_optimally() {
+        let p = AssignmentProblem::generate(6, 3);
+        let sol = solve_bnb(&p, 10_000_000).unwrap();
+        assert!(sol.optimal);
+        validate(&p, &sol).unwrap();
+    }
+
+    #[test]
+    fn bnb_no_worse_than_greedy() {
+        for seed in 0..5 {
+            let p = AssignmentProblem::generate(8, seed);
+            let exact = solve_bnb(&p, 10_000_000).unwrap();
+            let greedy = solve_greedy(&p).unwrap();
+            validate(&p, &greedy).unwrap();
+            assert!(exact.cost <= greedy.cost + 1e-9,
+                "seed {seed}: bnb {} > greedy {}", exact.cost, greedy.cost);
+        }
+    }
+
+    #[test]
+    fn exhaustive_check_on_tiny_instance() {
+        // 3 tasks, tiny custom instance: brute-force all assignments.
+        let p = AssignmentProblem {
+            n_tasks: 3,
+            n_servers: 4,
+            regions: 2,
+            cost: vec![
+                1.0, 2.0, 3.0, 4.0, //
+                4.0, 3.0, 2.0, 1.0, //
+                1.0, 1.0, 5.0, 5.0,
+            ],
+            capacity: vec![1, 1, 1, 1],
+            server_region: vec![0, 0, 1, 1],
+            region_cap_frac: 0.8,
+        };
+        let sol = solve_bnb(&p, 1_000_000).unwrap();
+        // region cap = floor(3*0.8)=2 per region.
+        let mut best = f64::INFINITY;
+        for a in 0..4 {
+            for b in 0..4 {
+                for c in 0..4 {
+                    let assignment = [a, b, c];
+                    let mut used = [0; 4];
+                    let mut reg = [0; 2];
+                    let mut feasible = true;
+                    let mut cost = 0.0;
+                    for (t, &s) in assignment.iter().enumerate() {
+                        used[s] += 1;
+                        reg[s / 2] += 1;
+                        cost += p.c(t, s);
+                        if used[s] > 1 || reg[s / 2] > 2 {
+                            feasible = false;
+                        }
+                    }
+                    if feasible && cost < best {
+                        best = cost;
+                    }
+                }
+            }
+        }
+        assert!((sol.cost - best).abs() < 1e-9, "bnb {} vs brute {best}", sol.cost);
+    }
+
+    #[test]
+    fn node_budget_marks_non_optimal() {
+        let p = AssignmentProblem::generate(40, 1);
+        let sol = solve_bnb(&p, 200).map(|s| s.optimal);
+        // Either no solution found within budget, or flagged non-optimal.
+        assert!(sol != Some(true));
+    }
+
+    #[test]
+    fn region_cap_enforced() {
+        let p = AssignmentProblem::generate(10, 2);
+        let sol = solve_bnb(&p, 1_000_000).unwrap();
+        validate(&p, &sol).unwrap();
+    }
+
+    #[test]
+    fn nodes_grow_with_task_count() {
+        let nodes = |n: usize| solve_bnb(&AssignmentProblem::generate(n, 7), 50_000_000)
+            .unwrap()
+            .nodes_explored;
+        let small = nodes(4);
+        let large = nodes(12);
+        assert!(large > small, "nodes {small} -> {large}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Optimal transport (macro layer, paper §V-B1).
+//!
+//! Native f64 Sinkhorn with the exact same math as the L1 Pallas kernel
+//! (`python/compile/kernels/sinkhorn.py`); the TORTA scheduler can run
+//! either this or the AOT artifact through PJRT (ablated in
+//! `benches/ablation.rs`). Also provides the Eq. 2 cost-matrix builder and
+//! an exhaustive small-instance LP check used by tests.
+
+use crate::power::PriceTable;
+use crate::topology::Topology;
+
+const FLOOR: f64 = 1e-30;
+
+/// Entropic OT plan: returns the R*R transport plan (row-major).
+pub fn sinkhorn(cost: &[f64], mu: &[f64], nu: &[f64], eps: f64, iters: usize) -> Vec<f64> {
+    let r = mu.len();
+    debug_assert_eq!(cost.len(), r * r);
+    debug_assert_eq!(nu.len(), r);
+    let k: Vec<f64> = cost.iter().map(|c| (-c / eps).exp()).collect();
+    let mut u = vec![1.0; r];
+    let mut v = vec![1.0; r];
+    for _ in 0..iters {
+        // u = mu / (K v)
+        for i in 0..r {
+            let mut kv = 0.0;
+            for j in 0..r {
+                kv += k[i * r + j] * v[j];
+            }
+            u[i] = mu[i] / kv.max(FLOOR);
+        }
+        // v = nu / (K^T u)
+        for j in 0..r {
+            let mut ktu = 0.0;
+            for i in 0..r {
+                ktu += k[i * r + j] * u[i];
+            }
+            v[j] = nu[j] / ktu.max(FLOOR);
+        }
+    }
+    let mut p = vec![0.0; r * r];
+    for i in 0..r {
+        for j in 0..r {
+            p[i * r + j] = u[i] * k[i * r + j] * v[j];
+        }
+    }
+    p
+}
+
+/// Row-normalize a plan into routing probabilities Prob_{i->j} (§V-B1).
+pub fn row_normalize(plan: &[f64], r: usize) -> Vec<f64> {
+    let mut out = vec![0.0; r * r];
+    for i in 0..r {
+        let row_sum: f64 = plan[i * r..(i + 1) * r].iter().sum();
+        if row_sum <= FLOOR {
+            // Degenerate row: route locally.
+            out[i * r + i] = 1.0;
+            continue;
+        }
+        for j in 0..r {
+            out[i * r + j] = plan[i * r + j] / row_sum;
+        }
+    }
+    out
+}
+
+/// Transport cost <C, P>.
+pub fn transport_cost(cost: &[f64], plan: &[f64]) -> f64 {
+    cost.iter().zip(plan).map(|(c, p)| c * p).sum()
+}
+
+/// Build the Eq. 2 cost matrix:
+/// C_{i,j} = w1 * PowerCost_j + w2 * (L_{i,j} + BandwidthCost_{i,j}),
+/// with power normalized to [0,1] and latency to the topology's max so the
+/// w1 >> w2 dominance matches the paper's intent at any scale.
+pub fn cost_matrix(topo: &Topology, prices: &PriceTable, w_power: f64, w_net: f64) -> Vec<f64> {
+    let r = topo.n;
+    let price_norm = prices.normalized();
+    let mut max_lat: f64 = 1e-9;
+    for i in 0..r {
+        for j in 0..r {
+            max_lat = max_lat.max(topo.latency_ms(i, j));
+        }
+    }
+    // Bandwidth cost: inverse of Table I bandwidth, same for all pairs
+    // except local (free).
+    let bw_cost = 10.0 / topo.bandwidth_gbps;
+    let mut c = vec![0.0; r * r];
+    for i in 0..r {
+        for j in 0..r {
+            let net = if i == j { 0.0 } else { topo.latency_ms(i, j) / max_lat + 0.1 * bw_cost };
+            c[i * r + j] = w_power * price_norm[j] + w_net * net;
+        }
+    }
+    c
+}
+
+/// Exact LP solution by exhaustive vertex search for tiny instances
+/// (R <= 3): the transportation polytope's optimum is attained at a vertex
+/// with at most 2R-1 non-zeros; we brute-force over support patterns via
+/// the north-west-corner family of permuted orders. Test oracle only.
+pub fn exact_small(cost: &[f64], mu: &[f64], nu: &[f64]) -> Vec<f64> {
+    let r = mu.len();
+    assert!(r <= 3, "exact_small is a test oracle for R<=3");
+    // Enumerate all orderings of rows and columns, run greedy north-west
+    // fills, keep the cheapest feasible plan.
+    let mut best: Option<(f64, Vec<f64>)> = None;
+    let rows: Vec<usize> = (0..r).collect();
+    let cols: Vec<usize> = (0..r).collect();
+    for rperm in permutations(&rows) {
+        for cperm in permutations(&cols) {
+            let mut supply = mu.to_vec();
+            let mut demand = nu.to_vec();
+            let mut plan = vec![0.0; r * r];
+            for &i in &rperm {
+                for &j in &cperm {
+                    let m = supply[i].min(demand[j]);
+                    if m > 0.0 {
+                        plan[i * r + j] += m;
+                        supply[i] -= m;
+                        demand[j] -= m;
+                    }
+                }
+            }
+            let c = transport_cost(cost, &plan);
+            if best.as_ref().map_or(true, |(bc, _)| c < *bc) {
+                best = Some((c, plan));
+            }
+        }
+    }
+    best.unwrap().1
+}
+
+fn permutations(xs: &[usize]) -> Vec<Vec<usize>> {
+    if xs.len() <= 1 {
+        return vec![xs.to_vec()];
+    }
+    let mut out = Vec::new();
+    for (i, &x) in xs.iter().enumerate() {
+        let rest: Vec<usize> =
+            xs.iter().enumerate().filter(|&(j, _)| j != i).map(|(_, &y)| y).collect();
+        for mut p in permutations(&rest) {
+            p.insert(0, x);
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn simplex(rng: &mut Rng, n: usize) -> Vec<f64> {
+        prop::simplex(rng, n)
+    }
+
+    #[test]
+    fn marginals_satisfied() {
+        prop::check(40, |rng, size| {
+            let r = 2 + rng.below(size.min(30));
+            let mu = simplex(rng, r);
+            let nu = simplex(rng, r);
+            let cost = prop::matrix(rng, r, r, 0.0, 1.0);
+            let p = sinkhorn(&cost, &mu, &nu, 0.05, 300);
+            for i in 0..r {
+                let row: f64 = p[i * r..(i + 1) * r].iter().sum();
+                assert!((row - mu[i]).abs() < 5e-3, "row {i}: {row} vs {}", mu[i]);
+            }
+            for j in 0..r {
+                let col: f64 = (0..r).map(|i| p[i * r + j]).sum();
+                assert!((col - nu[j]).abs() < 5e-3, "col {j}");
+            }
+            assert!(p.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn near_lp_optimal_on_tiny_instances() {
+        // Entropic cost approaches the LP optimum as eps -> 0.
+        prop::check(25, |rng, _| {
+            let r = 2 + rng.below(2);
+            let mu = simplex(rng, r);
+            let nu = simplex(rng, r);
+            let cost = prop::matrix(rng, r, r, 0.0, 1.0);
+            let p_ent = sinkhorn(&cost, &mu, &nu, 0.01, 2000);
+            let p_lp = exact_small(&cost, &mu, &nu);
+            let gap = transport_cost(&cost, &p_ent) - transport_cost(&cost, &p_lp);
+            // The entropic plan satisfies marginals only approximately, so
+            // it may undercut the exactly-feasible LP cost by a hair.
+            assert!(gap > -0.01, "entropic beat the LP oracle: {gap}");
+            assert!(gap < 0.08, "entropic too far from optimal: {gap}");
+        });
+    }
+
+    #[test]
+    fn uniform_cost_gives_product_plan() {
+        let r = 6;
+        let mut rng = Rng::seeded(1);
+        let mu = simplex(&mut rng, r);
+        let nu = simplex(&mut rng, r);
+        let cost = vec![0.5; r * r];
+        let p = sinkhorn(&cost, &mu, &nu, 0.05, 400);
+        for i in 0..r {
+            for j in 0..r {
+                assert!((p[i * r + j] - mu[i] * nu[j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn row_normalize_is_row_stochastic() {
+        prop::check(30, |rng, size| {
+            let r = 2 + rng.below(size.min(20));
+            let plan = prop::matrix(rng, r, r, 0.0, 1.0);
+            let p = row_normalize(&plan, r);
+            for i in 0..r {
+                let s: f64 = p[i * r..(i + 1) * r].iter().sum();
+                assert!((s - 1.0).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn row_normalize_degenerate_row_routes_local() {
+        let plan = vec![0.0, 0.0, 0.3, 0.7];
+        let p = row_normalize(&plan, 2);
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[1], 0.0);
+    }
+
+    #[test]
+    fn cost_matrix_power_dominates() {
+        let topo = crate::topology::Topology::abilene();
+        let prices = crate::power::PriceTable::for_regions(topo.n, 3);
+        let c = cost_matrix(&topo, &prices, 1.0, 0.15);
+        // The cheapest column should belong to (one of) the cheapest regions.
+        let r = topo.n;
+        let col_mean = |j: usize| (0..r).map(|i| c[i * r + j]).sum::<f64>() / r as f64;
+        let cheapest_col = (0..r).min_by(|&a, &b| col_mean(a).partial_cmp(&col_mean(b)).unwrap()).unwrap();
+        let cheapest_price = (0..r)
+            .min_by(|&a, &b| prices.price(a).partial_cmp(&prices.price(b)).unwrap())
+            .unwrap();
+        assert_eq!(cheapest_col, cheapest_price);
+    }
+
+    #[test]
+    fn cheap_region_attracts_mass() {
+        let r = 3;
+        // Region 2 cheap, others expensive.
+        let mut cost = vec![1.0; r * r];
+        for i in 0..r {
+            cost[i * r + 2] = 0.05;
+        }
+        let mu = vec![1.0 / 3.0; 3];
+        let nu = vec![0.2, 0.2, 0.6];
+        let p = sinkhorn(&cost, &mu, &nu, 0.05, 500);
+        let col2: f64 = (0..r).map(|i| p[i * r + 2]).sum();
+        assert!((col2 - 0.6).abs() < 1e-3); // fills the cheap capacity
+    }
+}

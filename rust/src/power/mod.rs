@@ -1,0 +1,134 @@
+//! Regional electricity pricing + energy accounting (Fig 9 cost model).
+//!
+//! The paper uses real-world electricity prices [42]; we encode a reference
+//! price list spanning the same ~5x global spread ($/kWh) and assign prices
+//! to topology regions deterministically, so a region's cost advantage is
+//! stable across runs and schedulers (DESIGN.md §Substitutions).
+
+use crate::util::rng::Rng;
+
+/// Reference $/kWh industrial prices (2025-era magnitudes [42]).
+pub const REFERENCE_PRICES: [(&str, f64); 16] = [
+    ("Iceland", 0.055),
+    ("Norway", 0.061),
+    ("Canada", 0.072),
+    ("UnitedStates", 0.118),
+    ("China", 0.084),
+    ("India", 0.091),
+    ("Poland", 0.171),
+    ("France", 0.158),
+    ("Germany", 0.252),
+    ("UnitedKingdom", 0.235),
+    ("Japan", 0.197),
+    ("Singapore", 0.181),
+    ("Brazil", 0.133),
+    ("SouthAfrica", 0.102),
+    ("Australia", 0.164),
+    ("Korea", 0.125),
+];
+
+/// Per-region electricity prices for one deployment.
+#[derive(Clone, Debug)]
+pub struct PriceTable {
+    per_region: Vec<f64>,
+}
+
+impl PriceTable {
+    /// Deterministic assignment: regions draw (with jitter) from the
+    /// reference list, keyed by the topology seed so every scheduler sees
+    /// identical prices.
+    pub fn for_regions(n: usize, seed: u64) -> PriceTable {
+        let mut rng = Rng::new(seed, 4242);
+        let per_region = (0..n)
+            .map(|_| {
+                let (_, base) = REFERENCE_PRICES[rng.below(REFERENCE_PRICES.len())];
+                (base * rng.uniform(0.9, 1.1)).max(0.03)
+            })
+            .collect();
+        PriceTable { per_region }
+    }
+
+    pub fn n(&self) -> usize {
+        self.per_region.len()
+    }
+
+    /// $/kWh in region `r`.
+    pub fn price(&self, r: usize) -> f64 {
+        self.per_region[r]
+    }
+
+    pub fn prices(&self) -> &[f64] {
+        &self.per_region
+    }
+
+    pub fn max_price(&self) -> f64 {
+        self.per_region.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Normalized prices in [0, 1] (featurization input).
+    pub fn normalized(&self) -> Vec<f64> {
+        let max = self.max_price().max(1e-9);
+        self.per_region.iter().map(|p| p / max).collect()
+    }
+}
+
+/// Convert joules to dollars at a region's price.
+pub fn joules_to_dollars(joules: f64, price_per_kwh: f64) -> f64 {
+    joules / 3.6e6 * price_per_kwh
+}
+
+/// Energy (J) of a server drawing `idle_w`..`active_w` at `util` in [0,1]
+/// over `secs` seconds.
+pub fn server_energy_j(idle_w: f64, active_w: f64, util: f64, secs: f64) -> f64 {
+    let w = idle_w + (active_w - idle_w) * util.clamp(0.0, 1.0);
+    w * secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = PriceTable::for_regions(12, 7);
+        let b = PriceTable::for_regions(12, 7);
+        assert_eq!(a.prices(), b.prices());
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = PriceTable::for_regions(12, 7);
+        let b = PriceTable::for_regions(12, 8);
+        assert_ne!(a.prices(), b.prices());
+    }
+
+    #[test]
+    fn prices_span_a_meaningful_spread() {
+        let t = PriceTable::for_regions(32, 3);
+        let min = t.prices().iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = t.max_price();
+        assert!(min > 0.0);
+        assert!(max / min > 1.5, "spread too small: {min}..{max}");
+    }
+
+    #[test]
+    fn normalized_in_unit_interval() {
+        let t = PriceTable::for_regions(8, 1);
+        for &p in &t.normalized() {
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+
+    #[test]
+    fn joule_conversion() {
+        // 1 kWh = 3.6e6 J at $0.10 -> $0.10.
+        assert!((joules_to_dollars(3.6e6, 0.10) - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_interpolates_idle_to_active() {
+        assert_eq!(server_energy_j(50.0, 250.0, 0.0, 10.0), 500.0);
+        assert_eq!(server_energy_j(50.0, 250.0, 1.0, 10.0), 2500.0);
+        assert_eq!(server_energy_j(50.0, 250.0, 0.5, 10.0), 1500.0);
+    }
+}

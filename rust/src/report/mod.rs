@@ -1,0 +1,145 @@
+//! Paper-style result tables + JSON export for simulation runs.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RunMetrics;
+use crate::util::json::Json;
+use crate::util::pool::parallel_map;
+
+/// Run the (topology x scheduler) experiment matrix in parallel — the
+/// shared engine behind the Fig 8/9/10/11 benches. Each worker thread
+/// owns its own PJRT engines (they are thread-local).
+pub fn run_matrix(
+    topologies: &[&str],
+    schedulers: &[&str],
+    slots: usize,
+    seed: u64,
+) -> Vec<RunMetrics> {
+    let mut jobs = Vec::new();
+    for &topo in topologies {
+        for &sched in schedulers {
+            let mut cfg = ExperimentConfig::default();
+            cfg.topology = topo.to_string();
+            cfg.scheduler = sched.to_string();
+            cfg.slots = slots;
+            cfg.seed = seed;
+            jobs.push(cfg);
+        }
+    }
+    let workers = crate::util::pool::default_workers().min(jobs.len());
+    parallel_map(jobs, workers, |cfg| {
+        crate::sim::run_experiment(&cfg).expect("experiment run failed")
+    })
+}
+
+/// Format the Fig 8/9/10/11 comparison table for a set of finished runs.
+pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:<9} {:>9} {:>8} {:>8} {:>8} {:>7} {:>11} {:>9} {:>7}\n",
+        "scheduler", "topology", "resp(s)", "wait(s)", "inf(s)", "net(s)", "LB",
+        "power($)", "overhead", "drop%"
+    ));
+    for m in runs.iter_mut() {
+        out.push_str(&format!(
+            "{:<12} {:<9} {:>9.2} {:>8.2} {:>8.2} {:>8.3} {:>7.3} {:>11.1} {:>9.2} {:>7.2}\n",
+            m.scheduler,
+            m.topology,
+            m.response.mean(),
+            m.waiting.mean(),
+            m.compute.mean(),
+            m.network.mean(),
+            m.lb_per_slot.mean(),
+            m.power_cost_dollars,
+            m.operational_overhead,
+            100.0 * m.drop_rate(),
+        ));
+    }
+    out
+}
+
+/// Serialize a run to JSON (for results/*.json).
+pub fn run_to_json(m: &mut RunMetrics) -> Json {
+    let mut j = Json::obj();
+    j.set("scheduler", m.scheduler.as_str())
+        .set("topology", m.topology.as_str())
+        .set("mean_response_s", m.response.mean())
+        .set("p50_response_s", m.response.percentile(0.5))
+        .set("p95_response_s", m.response.percentile(0.95))
+        .set("p99_response_s", m.response.percentile(0.99))
+        .set("mean_wait_s", m.waiting.mean())
+        .set("mean_inference_s", m.compute.mean())
+        .set("mean_network_s", m.network.mean())
+        .set("mean_lb", m.lb_per_slot.mean())
+        .set("power_cost_dollars", m.power_cost_dollars)
+        .set("switching_cost_frob", m.switching_cost_frob)
+        .set("operational_overhead", m.operational_overhead)
+        .set("tasks_total", m.tasks_total)
+        .set("tasks_dropped", m.tasks_dropped)
+        .set("deadline_misses", m.deadline_misses)
+        .set("model_switches", m.model_switches)
+        .set("server_activations", m.server_activations);
+    let cdf = m.lb_per_slot.cdf(20);
+    let mut arr = Json::Arr(vec![]);
+    for (v, q) in cdf {
+        let mut o = Json::obj();
+        o.set("value", v).set("q", q);
+        arr.push(o);
+    }
+    j.set("lb_cdf", arr);
+    j
+}
+
+/// Write a set of runs as one results JSON file.
+pub fn save_runs(file_stem: &str, runs: &mut [RunMetrics]) {
+    let mut root = Json::Arr(vec![]);
+    for m in runs.iter_mut() {
+        root.push(run_to_json(m));
+    }
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{file_stem}.json"));
+        if std::fs::write(&path, root.to_string_pretty()).is_ok() {
+            println!("(saved results/{file_stem}.json)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TaskRecord;
+
+    fn run() -> RunMetrics {
+        let mut m = RunMetrics::new("torta", "abilene");
+        for i in 0..10 {
+            m.record_task(&TaskRecord {
+                task_id: i,
+                origin: 0,
+                served_region: 1,
+                network_secs: 0.05,
+                wait_secs: 0.5,
+                compute_secs: 15.0 + i as f64,
+                met_deadline: true,
+                dropped: false,
+            });
+        }
+        m.record_slot_balance(&[0.5, 0.6]);
+        m
+    }
+
+    #[test]
+    fn table_contains_all_rows() {
+        let mut runs = vec![run(), run()];
+        let t = comparison_table(&mut runs);
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("torta"));
+    }
+
+    #[test]
+    fn json_has_percentiles() {
+        let mut m = run();
+        let j = run_to_json(&mut m).to_string_pretty();
+        assert!(j.contains("p95_response_s"));
+        assert!(j.contains("lb_cdf"));
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them natively.
+//!
+//! The interchange is HLO *text* (`HloModuleProto::from_text_file`), not a
+//! serialized proto: jax >= 0.5 emits 64-bit instruction ids the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). All artifacts are lowered with
+//! `return_tuple=True`, so outputs unwrap with `to_tuple1()`.
+//!
+//! The PJRT client is thread-local: `xla` handles are not Sync, and every
+//! simulator run is single-threaded anyway (bench sweeps parallelize at the
+//! run level, each worker thread building its own engines).
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+thread_local! {
+    static CPU_CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+    /// Compiled-executable cache keyed by (path, mtime): schedulers are
+    /// constructed per run in bench sweeps, and XLA compilation (~100 ms)
+    /// would otherwise dominate setup (§Perf optimization #1).
+    static EXE_CACHE: RefCell<std::collections::HashMap<(PathBuf, u64), std::rc::Rc<xla::PjRtLoadedExecutable>>> =
+        RefCell::new(std::collections::HashMap::new());
+}
+
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CPU_CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// One compiled HLO executable (one model variant).
+pub struct Engine {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    path: PathBuf,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine").field("path", &self.path).finish()
+    }
+}
+
+impl Engine {
+    /// Load + compile an HLO text artifact (memoized per thread: repeated
+    /// loads of an unchanged file reuse the compiled executable).
+    pub fn load(path: &Path) -> Result<Engine> {
+        let mtime = std::fs::metadata(path)
+            .and_then(|m| m.modified())
+            .map(|t| {
+                t.duration_since(std::time::UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+            })
+            .unwrap_or(0);
+        let key = (path.to_path_buf(), mtime);
+        let cached = EXE_CACHE.with(|c| c.borrow().get(&key).cloned());
+        if let Some(exe) = cached {
+            return Ok(Engine { exe, path: path.to_path_buf() });
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|client| {
+            client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+        })?;
+        let exe = std::rc::Rc::new(exe);
+        EXE_CACHE.with(|c| c.borrow_mut().insert(key, exe.clone()));
+        Ok(Engine { exe, path: path.to_path_buf() })
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns the first
+    /// element of the result tuple flattened to f32.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input to {shape:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {:?}", self.path))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// The three TORTA artifacts for one topology size R.
+#[derive(Debug)]
+pub struct TortaArtifacts {
+    pub r: usize,
+    pub policy: Engine,
+    pub predictor: Engine,
+    pub sinkhorn: Engine,
+}
+
+impl TortaArtifacts {
+    pub fn policy_path(dir: &Path, r: usize) -> PathBuf {
+        dir.join(format!("policy_r{r}.hlo.txt"))
+    }
+
+    /// Do all three artifacts exist for this R?
+    pub fn available(dir: &Path, r: usize) -> bool {
+        ["policy", "predictor", "sinkhorn"]
+            .iter()
+            .all(|k| dir.join(format!("{k}_r{r}.hlo.txt")).exists())
+    }
+
+    pub fn load(dir: &Path, r: usize) -> Result<TortaArtifacts> {
+        Ok(TortaArtifacts {
+            r,
+            policy: Engine::load(&dir.join(format!("policy_r{r}.hlo.txt")))?,
+            predictor: Engine::load(&dir.join(format!("predictor_r{r}.hlo.txt")))?,
+            sinkhorn: Engine::load(&dir.join(format!("sinkhorn_r{r}.hlo.txt")))?,
+        })
+    }
+
+    /// Policy forward: state vector (4R + R^2) -> allocation matrix R*R
+    /// (row-major, row-stochastic by construction).
+    pub fn policy_alloc(&self, state: &[f32]) -> Result<Vec<f32>> {
+        let d = 4 * self.r + self.r * self.r;
+        anyhow::ensure!(state.len() == d, "state dim {} != {d}", state.len());
+        self.policy.run_f32(&[(state, &[1, d])])
+    }
+
+    /// Predictor forward: 15R history window -> next-slot distribution (R).
+    pub fn predict(&self, hist: &[f32]) -> Result<Vec<f32>> {
+        let d = 15 * self.r;
+        anyhow::ensure!(hist.len() == d, "hist dim {} != {d}", hist.len());
+        self.predictor.run_f32(&[(hist, &[1, d])])
+    }
+
+    /// Sinkhorn forward: (C, mu, nu) -> transport plan R*R.
+    pub fn sinkhorn_plan(&self, cost: &[f32], mu: &[f32], nu: &[f32]) -> Result<Vec<f32>> {
+        let r = self.r;
+        anyhow::ensure!(cost.len() == r * r && mu.len() == r && nu.len() == r);
+        self.sinkhorn.run_f32(&[(cost, &[r, r]), (mu, &[r]), (nu, &[r])])
+    }
+}
+
+/// Default artifact directory: $TORTA_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TORTA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime round-trips (policy/predictor/sinkhorn vs the native
+    // implementations) live in rust/tests/runtime_roundtrip.rs because they
+    // need `make artifacts` to have run. Here: path/shape-validation logic.
+
+    #[test]
+    fn availability_checks_all_three() {
+        let dir = std::env::temp_dir().join("torta_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(!TortaArtifacts::available(&dir, 12));
+        for k in ["policy", "predictor", "sinkhorn"] {
+            std::fs::write(dir.join(format!("{k}_r12.hlo.txt")), "x").unwrap();
+        }
+        assert!(TortaArtifacts::available(&dir, 12));
+        assert!(!TortaArtifacts::available(&dir, 25));
+        for k in ["policy", "predictor", "sinkhorn"] {
+            std::fs::remove_file(dir.join(format!("{k}_r12.hlo.txt"))).ok();
+        }
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let dir = std::env::temp_dir().join("torta_rt_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Engine::load(&dir.join("nope.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Scheduler interface + implementations.
+//!
+//! A scheduler is called once per 45 s time slot with the tasks that
+//! arrived (plus any buffered backlog) and full mutable access to the
+//! fleet: it may flip server power states (the engine meters the cost) and
+//! must return an assignment for each task or buffer it. The macro
+//! allocation matrix it reports feeds the paper's switching-cost metric.
+
+pub mod rr;
+pub mod sdib;
+pub mod skylb;
+pub mod torta;
+
+use crate::cluster::Fleet;
+use crate::power::PriceTable;
+use crate::topology::Topology;
+use crate::workload::Task;
+
+/// Immutable per-run context shared by all schedulers.
+pub struct Ctx {
+    pub topo: Topology,
+    pub prices: PriceTable,
+    pub slot_secs: f64,
+}
+
+/// What the scheduler decides for one slot.
+pub struct SlotPlan {
+    /// (task, region, server index within region).
+    pub assignments: Vec<(Task, usize, usize)>,
+    /// Tasks deferred to the next slot (capacity exhausted).
+    pub buffered: Vec<Task>,
+    /// Row-major R*R macro allocation matrix actually used this slot
+    /// (row-stochastic); feeds ||A_t - A_{t-1}||_F^2.
+    pub alloc: Vec<f64>,
+}
+
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Plan one slot. `now` is the slot start in absolute seconds.
+    fn schedule(
+        &mut self,
+        ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        slot: usize,
+        now: f64,
+    ) -> SlotPlan;
+}
+
+/// Empirical request distribution mu_t over regions (normalized; uniform
+/// when the slot is empty).
+pub fn request_distribution(tasks: &[Task], r: usize) -> Vec<f64> {
+    let mut mu = vec![0.0; r];
+    for t in tasks {
+        mu[t.origin] += 1.0;
+    }
+    let total: f64 = mu.iter().sum();
+    if total <= 0.0 {
+        return vec![1.0 / r as f64; r];
+    }
+    mu.iter().map(|x| x / total).collect()
+}
+
+/// Derive the empirical allocation matrix from concrete assignments
+/// (row-stochastic; identity rows for regions that sent nothing).
+pub fn empirical_alloc(assignments: &[(Task, usize, usize)], r: usize) -> Vec<f64> {
+    let mut counts = vec![0.0; r * r];
+    for (task, region, _) in assignments {
+        counts[task.origin * r + region] += 1.0;
+    }
+    for i in 0..r {
+        let row_sum: f64 = counts[i * r..(i + 1) * r].iter().sum();
+        if row_sum <= 0.0 {
+            counts[i * r + i] = 1.0;
+        } else {
+            for j in 0..r {
+                counts[i * r + j] /= row_sum;
+            }
+        }
+    }
+    counts
+}
+
+/// Pick the accepting server in `region` with the earliest start for a
+/// task (returns (server_idx, start_secs)). Baseline building block.
+pub fn earliest_server(
+    fleet: &Fleet,
+    region: usize,
+    now: f64,
+) -> Option<(usize, f64)> {
+    let reg = &fleet.regions[region];
+    if reg.failed {
+        return None;
+    }
+    reg.servers
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.accepting(now) || matches!(s.state, crate::cluster::ServerState::Warming { .. }))
+        .map(|(i, s)| (i, s.earliest_start(now)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+/// Scheduler factory: name -> boxed instance.
+///
+/// Names: `torta` (PJRT artifacts when present), `torta-native` (native
+/// fallback ablation), `reactive` (per-slot OT upper-bound method),
+/// `skylb`, `sdib`, `rr`.
+pub fn build(
+    name: &str,
+    ctx: &Ctx,
+    cfg: &crate::config::ExperimentConfig,
+) -> anyhow::Result<Box<dyn Scheduler>> {
+    use torta::{TortaMode, TortaScheduler};
+    let r = ctx.topo.n;
+    Ok(match name {
+        "torta" => {
+            Box::new(TortaScheduler::new(ctx, &cfg.torta, TortaMode::Full, cfg.seed))
+        }
+        "torta-native" => {
+            Box::new(TortaScheduler::new(ctx, &cfg.torta, TortaMode::Native, cfg.seed))
+        }
+        "reactive" => {
+            Box::new(TortaScheduler::new(ctx, &cfg.torta, TortaMode::Reactive, cfg.seed))
+        }
+        "skylb" => Box::new(skylb::SkyLb::new(r)),
+        "sdib" => Box::new(sdib::Sdib::new(r)),
+        "rr" => Box::new(rr::RoundRobin::new(r)),
+        other => anyhow::bail!(
+            "unknown scheduler {other:?}; expected torta|torta-native|reactive|skylb|sdib|rr"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+
+    #[test]
+    fn request_distribution_normalizes() {
+        let mut w = DiurnalWorkload::new(WorkloadConfig::default(), 4, 3);
+        let tasks = w.slot_tasks(0, 45.0);
+        let mu = request_distribution(&tasks, 4);
+        assert!((mu.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn request_distribution_empty_is_uniform() {
+        let mu = request_distribution(&[], 5);
+        assert!(mu.iter().all(|&x| (x - 0.2).abs() < 1e-12));
+    }
+
+    #[test]
+    fn empirical_alloc_row_stochastic() {
+        let mut w = DiurnalWorkload::new(WorkloadConfig::default(), 3, 3);
+        let tasks = w.slot_tasks(0, 45.0);
+        let assignments: Vec<(Task, usize, usize)> =
+            tasks.into_iter().map(|t| (t, 1, 0)).collect();
+        let a = empirical_alloc(&assignments, 3);
+        for i in 0..3 {
+            let s: f64 = a[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+        // All mass flows to region 1 for rows that had tasks.
+        assert!(a[0 * 3 + 1] == 1.0 || a[0 * 3 + 0] == 1.0);
+    }
+}

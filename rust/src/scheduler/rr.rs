@@ -1,0 +1,212 @@
+//! Round-Robin baseline (§VI-A): cycles regions for every task, then
+//! cycles servers within the chosen region, honoring capacity and
+//! state constraints. No locality, no cost-awareness, reactive scaling
+//! only — the paper's performance lower bound.
+
+use super::{empirical_alloc, Ctx, Scheduler, SlotPlan};
+use crate::cluster::Fleet;
+use crate::workload::Task;
+
+/// Shared reactive autoscaling rule used by all baseline schedulers: power
+/// servers on only after observed pressure (the paper's "staircase" §II-A),
+/// and power idle servers off aggressively after load subsides.
+pub fn reactive_autoscale(fleet: &mut Fleet, region: usize, pending: usize, now: f64) {
+    let reg = &mut fleet.regions[region];
+    if reg.failed {
+        return;
+    }
+    let active_lanes: usize =
+        reg.servers.iter().filter(|s| s.is_active()).map(|s| s.lanes()).sum();
+    let mean_backlog: f64 = {
+        let active: Vec<&crate::cluster::Server> =
+            reg.servers.iter().filter(|s| s.is_active()).collect();
+        if active.is_empty() {
+            f64::INFINITY
+        } else {
+            active.iter().map(|s| s.backlog_secs(now)).sum::<f64>() / active.len() as f64
+        }
+    };
+    // Scale up when the pending work exceeds what active lanes absorb.
+    if pending > active_lanes || mean_backlog > 60.0 {
+        // Wake the fastest-warming cold server.
+        if let Some(s) = reg
+            .servers
+            .iter_mut()
+            .filter(|s| matches!(s.state, crate::cluster::ServerState::Cold))
+            .min_by(|a, b| a.gpu.warmup_secs().partial_cmp(&b.gpu.warmup_secs()).unwrap())
+        {
+            s.power_on(now);
+        }
+    } else if mean_backlog < 5.0 && pending * 2 < active_lanes {
+        // Scale down: power off up to two clearly-idle servers per slot
+        // (keep at least one active).
+        let mut actives = reg.servers.iter().filter(|s| s.is_active()).count();
+        for _ in 0..2 {
+            if actives <= 1 {
+                break;
+            }
+            let victim = reg
+                .servers
+                .iter_mut()
+                .filter(|s| s.is_active())
+                .max_by(|a, b| a.idle_since(now).partial_cmp(&b.idle_since(now)).unwrap());
+            match victim {
+                Some(s) if s.idle_since(now) > 60.0 => {
+                    s.power_off();
+                    actives -= 1;
+                }
+                _ => break,
+            }
+        }
+    }
+}
+
+pub struct RoundRobin {
+    r: usize,
+    next_region: usize,
+    next_server: Vec<usize>,
+}
+
+impl RoundRobin {
+    pub fn new(r: usize) -> RoundRobin {
+        RoundRobin { r, next_region: 0, next_server: vec![0; r] }
+    }
+
+    /// Next accepting server in `region` in cyclic order.
+    fn pick_server(&mut self, fleet: &Fleet, region: usize, now: f64) -> Option<usize> {
+        let reg = &fleet.regions[region];
+        if reg.failed || reg.servers.is_empty() {
+            return None;
+        }
+        let n = reg.servers.len();
+        for k in 0..n {
+            let idx = (self.next_server[region] + k) % n;
+            if reg.servers[idx].accepting(now) {
+                self.next_server[region] = (idx + 1) % n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn schedule(
+        &mut self,
+        _ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        _slot: usize,
+        now: f64,
+    ) -> SlotPlan {
+        // Reactive scaling: one decision per region per slot.
+        let mut per_region_pending = vec![0usize; self.r];
+        for t in &tasks {
+            per_region_pending[t.origin] += 1;
+        }
+        for region in 0..self.r {
+            reactive_autoscale(fleet, region, per_region_pending[region], now);
+        }
+
+        let mut assignments = Vec::with_capacity(tasks.len());
+        let mut buffered = Vec::new();
+        for task in tasks {
+            // Cycle regions until one yields a server.
+            let mut placed = false;
+            for k in 0..self.r {
+                let region = (self.next_region + k) % self.r;
+                if let Some(server) = self.pick_server(fleet, region, now) {
+                    self.next_region = (region + 1) % self.r;
+                    assignments.push((task.clone(), region, server));
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                buffered.push(task);
+            }
+        }
+        let alloc = empirical_alloc(&assignments, self.r);
+        SlotPlan { assignments, buffered, alloc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, WorkloadConfig};
+    use crate::power::PriceTable;
+    use crate::topology::Topology;
+    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+
+    fn setup() -> (Ctx, Fleet, Vec<Task>) {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 1);
+        let fleet = Fleet::build(&topo, &prices, 1);
+        let mut wl = DiurnalWorkload::new(WorkloadConfig::default(), topo.n, 1);
+        let tasks = wl.slot_tasks(0, 45.0);
+        let cfg = ExperimentConfig::default();
+        (Ctx { topo, prices, slot_secs: cfg.slot_secs }, fleet, tasks)
+    }
+
+    #[test]
+    fn assigns_every_task_or_buffers() {
+        let (ctx, mut fleet, tasks) = setup();
+        let n = tasks.len();
+        let mut rr = RoundRobin::new(ctx.topo.n);
+        let plan = rr.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        assert_eq!(plan.assignments.len() + plan.buffered.len(), n);
+        assert!(plan.assignments.len() > 0);
+    }
+
+    #[test]
+    fn spreads_across_regions() {
+        let (ctx, mut fleet, tasks) = setup();
+        let mut rr = RoundRobin::new(ctx.topo.n);
+        let plan = rr.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        let mut regions_hit = std::collections::HashSet::new();
+        for (_, region, _) in &plan.assignments {
+            regions_hit.insert(*region);
+        }
+        assert!(regions_hit.len() > ctx.topo.n / 2);
+    }
+
+    #[test]
+    fn avoids_failed_regions() {
+        let (ctx, mut fleet, tasks) = setup();
+        fleet.regions[0].failed = true;
+        let mut rr = RoundRobin::new(ctx.topo.n);
+        let plan = rr.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        assert!(plan.assignments.iter().all(|(_, region, _)| *region != 0));
+    }
+
+    #[test]
+    fn alloc_is_row_stochastic() {
+        let (ctx, mut fleet, tasks) = setup();
+        let mut rr = RoundRobin::new(ctx.topo.n);
+        let plan = rr.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        let r = ctx.topo.n;
+        for i in 0..r {
+            let s: f64 = plan.alloc[i * r..(i + 1) * r].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn autoscale_wakes_cold_server_under_pressure() {
+        let (_, mut fleet, _) = setup();
+        // Force region 0 all-cold except none active.
+        for s in &mut fleet.regions[0].servers {
+            s.power_off();
+        }
+        reactive_autoscale(&mut fleet, 0, 100, 0.0);
+        assert!(fleet.regions[0]
+            .servers
+            .iter()
+            .any(|s| matches!(s.state, crate::cluster::ServerState::Warming { .. })));
+    }
+}

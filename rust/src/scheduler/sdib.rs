@@ -1,0 +1,212 @@
+//! SDIB baseline (after MERL-LB [49]): Standard-Deviation and Idle-time
+//! Balanced allocation.
+//!
+//! Two objectives, per the paper's description (§VI-A): minimize the
+//! standard deviation of server utilization, and minimize mean GPU idle
+//! time. Like the original (an evolutionary-RL neural load balancer), the
+//! policy runs *batched*: scores are evaluated once per batch of BATCH
+//! requests and the batch is dispatched round-robin over the top-ranked
+//! servers, then estimates refresh — per-request exact re-scoring would be
+//! an oracle the learned policy does not have. Objective per server:
+//!     sigma_util(after) + w_idle * mean_idle(after)
+//! with O(1) incremental variance updates. Reactive scaling only, no
+//! cost- or locality-awareness.
+
+use super::rr::reactive_autoscale;
+use super::{empirical_alloc, Ctx, Scheduler, SlotPlan};
+use crate::cluster::Fleet;
+use crate::workload::Task;
+
+const W_IDLE: f64 = 0.02;
+
+pub struct Sdib {
+    r: usize,
+}
+
+impl Sdib {
+    pub fn new(r: usize) -> Sdib {
+        Sdib { r }
+    }
+}
+
+/// Flat candidate view of one server.
+struct Cand {
+    region: usize,
+    server: usize,
+    util: f64,
+    lanes: f64,
+    idle: f64,
+    backlog: f64,
+}
+
+impl Scheduler for Sdib {
+    fn name(&self) -> &'static str {
+        "sdib"
+    }
+
+    fn schedule(
+        &mut self,
+        _ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        _slot: usize,
+        now: f64,
+    ) -> SlotPlan {
+        let mut pending = vec![0usize; self.r];
+        for t in &tasks {
+            pending[t.origin] += 1;
+        }
+        for region in 0..self.r {
+            reactive_autoscale(fleet, region, pending[region], now);
+        }
+
+        // Snapshot candidates once; maintain utilization estimates as we
+        // assign (the engine applies the real effects afterwards).
+        let mut cands: Vec<Cand> = Vec::new();
+        for (ri, reg) in fleet.regions.iter().enumerate() {
+            if reg.failed {
+                continue;
+            }
+            for (si, s) in reg.servers.iter().enumerate() {
+                if s.accepting(now) {
+                    cands.push(Cand {
+                        region: ri,
+                        server: si,
+                        util: s.utilization(now),
+                        lanes: s.lanes() as f64,
+                        idle: s.idle_since(now),
+                        backlog: s.backlog_secs(now),
+                    });
+                }
+            }
+        }
+        let mut assignments = Vec::with_capacity(tasks.len());
+        let mut buffered = Vec::new();
+        if cands.is_empty() {
+            return SlotPlan {
+                assignments,
+                buffered: tasks,
+                alloc: empirical_alloc(&[], self.r),
+            };
+        }
+
+        // Running sums for O(1) variance deltas.
+        let n = cands.len() as f64;
+        let mut sum: f64 = cands.iter().map(|c| c.util).sum();
+        let mut sumsq: f64 = cands.iter().map(|c| c.util * c.util).sum();
+        let mut idle_sum: f64 = cands.iter().map(|c| c.idle).sum();
+
+        const BATCH: usize = 8;
+        let mut queue: std::collections::VecDeque<Task> = tasks.into();
+        while !queue.is_empty() {
+            // One batched policy evaluation: rank all viable candidates.
+            let mut ranked: Vec<(usize, f64)> = cands
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.backlog <= 120.0)
+                .map(|(ci, c)| {
+                    let delta_u = 1.0 / c.lanes;
+                    let new_util = (c.util + delta_u).min(1.5);
+                    let new_sum = sum - c.util + new_util;
+                    let new_sumsq = sumsq - c.util * c.util + new_util * new_util;
+                    let mean = new_sum / n;
+                    let var = (new_sumsq / n - mean * mean).max(0.0);
+                    // Assigning to an idle server reduces mean idle time.
+                    let new_idle_sum = idle_sum - c.idle;
+                    (ci, var.sqrt() + W_IDLE * new_idle_sum / n)
+                })
+                .collect();
+            if ranked.is_empty() {
+                buffered.extend(queue);
+                break;
+            }
+            ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            // Dispatch the batch round-robin over the top-ranked servers.
+            let take = queue.len().min(BATCH);
+            for k in 0..take {
+                let task = queue.pop_front().unwrap();
+                let ci = ranked[k % ranked.len().min(BATCH)].0;
+                let c = &mut cands[ci];
+                let delta_u = 1.0 / c.lanes;
+                sum += delta_u.min(1.5 - c.util).max(0.0);
+                sumsq += -c.util * c.util
+                    + (c.util + delta_u).min(1.5) * (c.util + delta_u).min(1.5);
+                c.util = (c.util + delta_u).min(1.5);
+                idle_sum -= c.idle;
+                c.idle = 0.0;
+                c.backlog += task.service_secs / c.lanes;
+                assignments.push((task, c.region, c.server));
+            }
+        }
+        let alloc = empirical_alloc(&assignments, self.r);
+        SlotPlan { assignments, buffered, alloc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::power::PriceTable;
+    use crate::topology::Topology;
+    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+
+    fn setup() -> (Ctx, Fleet, Vec<Task>) {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 1);
+        let fleet = Fleet::build(&topo, &prices, 1);
+        let mut wl = DiurnalWorkload::new(WorkloadConfig::default(), topo.n, 1);
+        let tasks = wl.slot_tasks(0, 45.0);
+        (Ctx { topo, prices, slot_secs: 45.0 }, fleet, tasks)
+    }
+
+    #[test]
+    fn all_tasks_placed_or_buffered() {
+        let (ctx, mut fleet, tasks) = setup();
+        let n = tasks.len();
+        let mut s = Sdib::new(ctx.topo.n);
+        let plan = s.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        assert_eq!(plan.assignments.len() + plan.buffered.len(), n);
+        assert!(!plan.assignments.is_empty());
+    }
+
+    #[test]
+    fn balances_utilization_better_than_single_server() {
+        let (ctx, mut fleet, tasks) = setup();
+        let mut s = Sdib::new(ctx.topo.n);
+        let plan = s.schedule(&ctx, &mut fleet, tasks.clone(), 0, 0.0);
+        // No single server should hog more than 30% of assignments when
+        // hundreds of lanes are available.
+        let mut counts = std::collections::HashMap::new();
+        for (_, region, server) in &plan.assignments {
+            *counts.entry((region, server)).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        assert!(
+            (max as f64) < 0.3 * plan.assignments.len() as f64,
+            "max share {max}/{}",
+            plan.assignments.len()
+        );
+    }
+
+    #[test]
+    fn ignores_failed_regions() {
+        let (ctx, mut fleet, tasks) = setup();
+        fleet.regions[2].failed = true;
+        let mut s = Sdib::new(ctx.topo.n);
+        let plan = s.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        assert!(plan.assignments.iter().all(|(_, region, _)| *region != 2));
+    }
+
+    #[test]
+    fn buffers_when_everything_failed() {
+        let (ctx, mut fleet, tasks) = setup();
+        for r in &mut fleet.regions {
+            r.failed = true;
+        }
+        let n = tasks.len();
+        let mut s = Sdib::new(ctx.topo.n);
+        let plan = s.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        assert_eq!(plan.buffered.len(), n);
+    }
+}

@@ -1,0 +1,207 @@
+//! SkyLB baseline [45]: locality-aware cross-region load balancer.
+//!
+//! Core principles preserved from the paper's description (§VI-A):
+//! * per-region local balancers that *prefer local processing*;
+//! * spillover to other regions' balancers when the local region saturates,
+//!   weighted by available capacity;
+//! * prefix-tree session affinity — requests from the same user route to a
+//!   fixed replica when possible, exploiting cache locality.
+//! Reactive scaling only (no demand prediction).
+
+use std::collections::HashMap;
+
+use super::rr::reactive_autoscale;
+use super::{empirical_alloc, Ctx, Scheduler, SlotPlan};
+use crate::cluster::Fleet;
+use crate::workload::Task;
+
+/// Local backlog (queue seconds) beyond which a region spills over.
+const SPILL_BACKLOG_SECS: f64 = 30.0;
+/// Affinity entries expire after this many seconds of inactivity.
+const AFFINITY_TTL_SECS: f64 = 1800.0;
+
+pub struct SkyLb {
+    r: usize,
+    /// user -> (region, server, last_used) session affinity.
+    affinity: HashMap<u32, (usize, usize, f64)>,
+}
+
+impl SkyLb {
+    pub fn new(r: usize) -> SkyLb {
+        SkyLb { r, affinity: HashMap::new() }
+    }
+
+    /// Least-backlogged accepting server in `region`.
+    fn best_local(&self, fleet: &Fleet, region: usize, now: f64) -> Option<(usize, f64)> {
+        let reg = &fleet.regions[region];
+        if reg.failed {
+            return None;
+        }
+        reg.servers
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.accepting(now))
+            .map(|(i, s)| (i, s.backlog_secs(now)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Spill target: region with the most free active lanes.
+    fn spill_region(&self, fleet: &Fleet, exclude: usize, now: f64) -> Option<usize> {
+        (0..self.r)
+            .filter(|&j| j != exclude && !fleet.regions[j].failed)
+            .map(|j| {
+                let reg = &fleet.regions[j];
+                let free: f64 = reg
+                    .servers
+                    .iter()
+                    .filter(|s| s.accepting(now))
+                    .map(|s| s.lanes() as f64 * (1.0 - s.utilization(now)))
+                    .sum();
+                (j, free)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .filter(|&(_, free)| free > 0.0)
+            .map(|(j, _)| j)
+    }
+}
+
+impl Scheduler for SkyLb {
+    fn name(&self) -> &'static str {
+        "skylb"
+    }
+
+    fn schedule(
+        &mut self,
+        _ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        _slot: usize,
+        now: f64,
+    ) -> SlotPlan {
+        let mut pending = vec![0usize; self.r];
+        for t in &tasks {
+            pending[t.origin] += 1;
+        }
+        for region in 0..self.r {
+            reactive_autoscale(fleet, region, pending[region], now);
+        }
+        self.affinity.retain(|_, &mut (_, _, last)| now - last < AFFINITY_TTL_SECS);
+
+        let mut assignments = Vec::with_capacity(tasks.len());
+        let mut buffered = Vec::new();
+        for task in tasks {
+            // 1) Session affinity: same user -> same replica when healthy.
+            if let Some(&(region, server, _)) = self.affinity.get(&task.user) {
+                let reg = &fleet.regions[region];
+                if !reg.failed
+                    && server < reg.servers.len()
+                    && reg.servers[server].accepting(now)
+                    && reg.servers[server].backlog_secs(now) < SPILL_BACKLOG_SECS
+                {
+                    self.affinity.insert(task.user, (region, server, now));
+                    assignments.push((task, region, server));
+                    continue;
+                }
+            }
+            // 2) Local-first.
+            let origin = task.origin;
+            let local = self.best_local(fleet, origin, now);
+            let choice = match local {
+                Some((server, backlog)) if backlog < SPILL_BACKLOG_SECS => Some((origin, server)),
+                _ => {
+                    // 3) Spillover to the freest remote region.
+                    match self.spill_region(fleet, origin, now) {
+                        Some(remote) => {
+                            self.best_local(fleet, remote, now).map(|(srv, _)| (remote, srv))
+                        }
+                        // Saturated everywhere: worst local option if any.
+                        None => local.map(|(srv, _)| (origin, srv)),
+                    }
+                }
+            };
+            match choice {
+                Some((region, server)) => {
+                    self.affinity.insert(task.user, (region, server, now));
+                    assignments.push((task, region, server));
+                }
+                None => buffered.push(task),
+            }
+        }
+        let alloc = empirical_alloc(&assignments, self.r);
+        SlotPlan { assignments, buffered, alloc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::power::PriceTable;
+    use crate::topology::Topology;
+    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+
+    fn setup() -> (Ctx, Fleet, Vec<Task>) {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 1);
+        let fleet = Fleet::build(&topo, &prices, 1);
+        let mut wl = DiurnalWorkload::new(WorkloadConfig::default(), topo.n, 1);
+        let tasks = wl.slot_tasks(0, 45.0);
+        (Ctx { topo, prices, slot_secs: 45.0 }, fleet, tasks)
+    }
+
+    #[test]
+    fn prefers_local_region_when_uncontended() {
+        let (ctx, mut fleet, tasks) = setup();
+        let mut lb = SkyLb::new(ctx.topo.n);
+        let plan = lb.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        let local = plan
+            .assignments
+            .iter()
+            .filter(|(t, region, _)| t.origin == *region)
+            .count();
+        let frac = local as f64 / plan.assignments.len() as f64;
+        assert!(frac > 0.5, "local fraction {frac}");
+    }
+
+    #[test]
+    fn session_affinity_sticks() {
+        let (ctx, mut fleet, tasks) = setup();
+        let mut lb = SkyLb::new(ctx.topo.n);
+        let mut t1 = tasks[0].clone();
+        t1.user = 7;
+        let mut t2 = tasks[1].clone();
+        t2.user = 7;
+        t2.origin = (t1.origin + 1) % ctx.topo.n; // different origin
+        let plan = lb.schedule(&ctx, &mut fleet, vec![t1, t2], 0, 0.0);
+        assert_eq!(plan.assignments.len(), 2);
+        let (_, r1, s1) = &plan.assignments[0];
+        let (_, r2, s2) = &plan.assignments[1];
+        assert_eq!((r1, s1), (r2, s2));
+    }
+
+    #[test]
+    fn spills_when_local_region_fails() {
+        let (ctx, mut fleet, tasks) = setup();
+        let origin = tasks[0].origin;
+        fleet.regions[origin].failed = true;
+        let mut lb = SkyLb::new(ctx.topo.n);
+        let plan = lb.schedule(&ctx, &mut fleet, tasks, 0, 0.0);
+        assert!(plan
+            .assignments
+            .iter()
+            .all(|(t, region, _)| t.origin != origin || *region != origin));
+    }
+
+    #[test]
+    fn affinity_expires() {
+        let (ctx, mut fleet, tasks) = setup();
+        let mut lb = SkyLb::new(ctx.topo.n);
+        let mut t = tasks[0].clone();
+        t.user = 3;
+        lb.schedule(&ctx, &mut fleet, vec![t.clone()], 0, 0.0);
+        assert!(lb.affinity.contains_key(&3));
+        // Far in the future the entry is dropped.
+        lb.schedule(&ctx, &mut fleet, vec![], 100, AFFINITY_TTL_SECS + 1.0);
+        assert!(!lb.affinity.contains_key(&3));
+    }
+}

@@ -1,0 +1,147 @@
+//! State featurization for the RL policy — **must stay in sync with
+//! `python/compile/model.py` / `env.py`** (checked by the
+//! `runtime_roundtrip` integration test):
+//!
+//! ```text
+//! state = concat[ U_t (R), Q_t/Q_max (R), F_t (R, normalized),
+//!                 price (R, normalized to max), flatten(A_{t-1}) (R^2) ]
+//! D = 4R + R^2
+//! ```
+
+use crate::cluster::Fleet;
+use crate::power::PriceTable;
+
+/// Q_max used to normalize queue lengths (matches env.py).
+pub const Q_MAX_PER_REGION: f64 = 200.0;
+
+pub fn state_dim(r: usize) -> usize {
+    4 * r + r * r
+}
+
+/// Build the policy input vector.
+///
+/// * `queues` — pending task count per region (buffered + routed backlog).
+/// * `f_pred` — predicted next-slot arrivals per region (any scale; it is
+///   normalized to a distribution here, as in env.py).
+/// * `prev_alloc` — previous slot's allocation matrix, row-major R*R.
+pub fn featurize(
+    fleet: &Fleet,
+    prices: &PriceTable,
+    queues: &[f64],
+    f_pred: &[f64],
+    prev_alloc: &[f64],
+    now: f64,
+) -> Vec<f32> {
+    let r = fleet.n_regions();
+    debug_assert_eq!(queues.len(), r);
+    debug_assert_eq!(f_pred.len(), r);
+    debug_assert_eq!(prev_alloc.len(), r * r);
+    let mut state = Vec::with_capacity(state_dim(r));
+    // U_t: mean active-server utilization per region.
+    for region in &fleet.regions {
+        state.push(region.mean_utilization(now) as f32);
+    }
+    // Q_t / Q_max, clamped.
+    for &q in queues {
+        state.push((q / Q_MAX_PER_REGION).min(1.0) as f32);
+    }
+    // F_t normalized to a distribution.
+    let f_sum: f64 = f_pred.iter().sum::<f64>().max(1e-9);
+    for &f in f_pred {
+        state.push((f / f_sum) as f32);
+    }
+    // Prices normalized by the deployment max (env.py uses raw [0.2,1]
+    // samples; both are scale-bounded inputs).
+    for p in prices.normalized() {
+        state.push(p as f32);
+    }
+    for &a in prev_alloc {
+        state.push(a as f32);
+    }
+    state
+}
+
+/// Predictor history window: K=5 slots of (U, Qnorm, arrivals_norm), 15R
+/// total (matches `model.predictor_input_dim` / `ppo.make_predictor_dataset`).
+#[derive(Clone, Debug)]
+pub struct HistoryWindow {
+    r: usize,
+    k: usize,
+    /// Most recent last; each entry is 3R floats.
+    slots: std::collections::VecDeque<Vec<f32>>,
+}
+
+impl HistoryWindow {
+    pub fn new(r: usize, k: usize) -> HistoryWindow {
+        HistoryWindow { r, k, slots: std::collections::VecDeque::with_capacity(k + 1) }
+    }
+
+    pub fn push(&mut self, utils: &[f64], queues: &[f64], arrivals: &[f64]) {
+        debug_assert_eq!(utils.len(), self.r);
+        let mut feat = Vec::with_capacity(3 * self.r);
+        for &u in utils {
+            feat.push(u as f32);
+        }
+        for &q in queues {
+            feat.push((q / Q_MAX_PER_REGION).min(1.0) as f32);
+        }
+        let a_sum: f64 = arrivals.iter().sum::<f64>().max(1e-9);
+        for &a in arrivals {
+            feat.push((a / a_sum) as f32);
+        }
+        self.slots.push_back(feat);
+        while self.slots.len() > self.k {
+            self.slots.pop_front();
+        }
+    }
+
+    pub fn ready(&self) -> bool {
+        self.slots.len() == self.k
+    }
+
+    /// Flattened window, oldest first (15R floats).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.k * 3 * self.r);
+        for s in &self.slots {
+            out.extend_from_slice(s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn state_has_expected_dim_and_ranges() {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 1);
+        let fleet = Fleet::build(&topo, &prices, 1);
+        let r = topo.n;
+        let queues = vec![10.0; r];
+        let f = vec![5.0; r];
+        let prev = vec![1.0 / r as f64; r * r];
+        let s = featurize(&fleet, &prices, &queues, &f, &prev, 0.0);
+        assert_eq!(s.len(), state_dim(r));
+        assert!(s.iter().all(|&x| (0.0..=1.0).contains(&(x as f64))));
+        // F block is a distribution.
+        let f_block: f32 = s[2 * r..3 * r].iter().sum();
+        assert!((f_block - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn history_window_fills_and_slides() {
+        let mut h = HistoryWindow::new(2, 3);
+        assert!(!h.ready());
+        for i in 0..5 {
+            h.push(&[0.1 * i as f64, 0.2], &[1.0, 2.0], &[3.0, 4.0]);
+        }
+        assert!(h.ready());
+        let flat = h.flatten();
+        assert_eq!(flat.len(), 3 * 3 * 2);
+        // Oldest retained slot is i=2.
+        assert!((flat[0] - 0.2).abs() < 1e-6);
+    }
+}

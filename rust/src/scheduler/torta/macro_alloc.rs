@@ -1,0 +1,271 @@
+//! Macro-level regional allocation (§V-B): OT baseline + RL refinement.
+//!
+//! Per slot:
+//! 1. Solve the entropic OT problem (PJRT Sinkhorn artifact or the native
+//!    solver — bitwise-equivalent math) for the plan P*.
+//! 2. Produce the allocation matrix A_t: RL policy artifact output when
+//!    available, else the native fallback A = smooth * A_{t-1} +
+//!    (1-smooth) * Prob(P*) — exactly the temporally-smoothed OT-anchored
+//!    behaviour the constrained PPO objective (Eq. 5) trains toward.
+//! 3. Project A_t into the theoretical trust region ||A - Prob(P*)||_F <=
+//!    eps_max (Eq. 19), preserving row-stochasticity; this is what makes
+//!    Theorem 3's advantage condition enforceable at runtime regardless of
+//!    policy quality.
+
+use crate::ot;
+use crate::runtime::TortaArtifacts;
+
+pub struct MacroAllocator {
+    pub r: usize,
+    pub eps_max: f64,
+    pub smoothing: f64,
+    pub sinkhorn_eps: f64,
+    pub sinkhorn_iters: usize,
+    pub prev_alloc: Vec<f64>,
+    /// Pure-reactive mode: per-slot OT only, no smoothing / no RL
+    /// (the paper's single-timeslot upper-bound method, used for K0).
+    pub reactive: bool,
+}
+
+impl MacroAllocator {
+    pub fn new(r: usize, eps_max: f64, smoothing: f64, sk_eps: f64, sk_iters: usize) -> Self {
+        // Start from the identity (serve locally).
+        let mut prev = vec![0.0; r * r];
+        for i in 0..r {
+            prev[i * r + i] = 1.0;
+        }
+        MacroAllocator {
+            r,
+            eps_max,
+            smoothing,
+            sinkhorn_eps: sk_eps,
+            sinkhorn_iters: sk_iters,
+            prev_alloc: prev,
+            reactive: false,
+        }
+    }
+
+    /// OT plan, row-normalized to routing probabilities.
+    pub fn ot_probabilities(
+        &self,
+        cost: &[f64],
+        mu: &[f64],
+        nu: &[f64],
+        artifacts: Option<&TortaArtifacts>,
+    ) -> Vec<f64> {
+        let plan: Vec<f64> = match artifacts {
+            Some(art) => {
+                let c32: Vec<f32> = cost.iter().map(|&x| x as f32).collect();
+                let m32: Vec<f32> = mu.iter().map(|&x| x as f32).collect();
+                let n32: Vec<f32> = nu.iter().map(|&x| x as f32).collect();
+                match art.sinkhorn_plan(&c32, &m32, &n32) {
+                    Ok(p) => p.iter().map(|&x| x as f64).collect(),
+                    Err(_) => ot::sinkhorn(cost, mu, nu, self.sinkhorn_eps, self.sinkhorn_iters),
+                }
+            }
+            None => ot::sinkhorn(cost, mu, nu, self.sinkhorn_eps, self.sinkhorn_iters),
+        };
+        ot::row_normalize(&plan, self.r)
+    }
+
+    /// Produce this slot's allocation matrix A_t and advance state.
+    ///
+    /// `policy_alloc` is the (already row-stochastic) RL output if the
+    /// policy artifact ran; `ot_prob` the row-normalized OT plan.
+    pub fn allocate(&mut self, ot_prob: &[f64], policy_alloc: Option<Vec<f64>>) -> Vec<f64> {
+        let r = self.r;
+        let mut a = if self.reactive {
+            ot_prob.to_vec()
+        } else {
+            match policy_alloc {
+                Some(pa) => {
+                    debug_assert_eq!(pa.len(), r * r);
+                    // Blend the policy with temporal smoothing — mirrors the
+                    // r_smooth reward the policy was trained under, and keeps
+                    // the system stable even with a mediocre checkpoint.
+                    let mut blended = vec![0.0; r * r];
+                    for k in 0..r * r {
+                        blended[k] = 0.5 * pa[k]
+                            + 0.5 * (self.smoothing * self.prev_alloc[k]
+                                + (1.0 - self.smoothing) * ot_prob[k]);
+                    }
+                    blended
+                }
+                None => {
+                    let mut blended = vec![0.0; r * r];
+                    for k in 0..r * r {
+                        blended[k] = self.smoothing * self.prev_alloc[k]
+                            + (1.0 - self.smoothing) * ot_prob[k];
+                    }
+                    blended
+                }
+            }
+        };
+        if !self.reactive {
+            project_to_trust_region(&mut a, ot_prob, self.eps_max, r);
+        }
+        normalize_rows(&mut a, r);
+        self.prev_alloc = a.clone();
+        a
+    }
+}
+
+/// Clamp ||A - OT||_F to eps_max by moving A toward OT (convex combination
+/// keeps rows stochastic).
+pub fn project_to_trust_region(a: &mut [f64], anchor: &[f64], eps_max: f64, r: usize) {
+    let dist_sq: f64 = a
+        .iter()
+        .zip(anchor)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+    let dist = dist_sq.sqrt();
+    if dist > eps_max && dist > 0.0 {
+        let t = eps_max / dist; // fraction of A kept
+        for (x, &y) in a.iter_mut().zip(anchor) {
+            *x = y + t * (*x - y);
+        }
+    }
+    let _ = r;
+}
+
+pub fn normalize_rows(a: &mut [f64], r: usize) {
+    for i in 0..r {
+        let row = &mut a[i * r..(i + 1) * r];
+        for x in row.iter_mut() {
+            *x = x.max(0.0);
+        }
+        let s: f64 = row.iter().sum();
+        if s <= 1e-12 {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = if j == i { 1.0 } else { 0.0 };
+            }
+        } else {
+            for x in row.iter_mut() {
+                *x /= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn uniform_prob(r: usize) -> Vec<f64> {
+        vec![1.0 / r as f64; r * r]
+    }
+
+    #[test]
+    fn reactive_mode_returns_ot_exactly() {
+        let mut m = MacroAllocator::new(3, 0.5, 0.5, 0.05, 50);
+        m.reactive = true;
+        let ot = uniform_prob(3);
+        let a = m.allocate(&ot, None);
+        for (x, y) in a.iter().zip(ot.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fallback_smooths_toward_previous() {
+        let mut m = MacroAllocator::new(2, 10.0, 0.5, 0.05, 50);
+        // prev = identity; ot = uniform.
+        let ot = uniform_prob(2);
+        let a = m.allocate(&ot, None);
+        // Halfway between identity and uniform.
+        assert!((a[0] - 0.75).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allocation_always_row_stochastic() {
+        prop::check(50, |rng, size| {
+            let r = 2 + rng.below(size.min(16));
+            let mut m = MacroAllocator::new(r, 0.6, rng.f64(), 0.05, 30);
+            let ot_raw = prop::matrix(rng, r, r, 0.0, 1.0);
+            let mut ot = ot_raw;
+            normalize_rows(&mut ot, r);
+            let policy = if rng.chance(0.5) {
+                let mut p = prop::matrix(rng, r, r, 0.0, 1.0);
+                normalize_rows(&mut p, r);
+                Some(p)
+            } else {
+                None
+            };
+            let a = m.allocate(&ot, policy);
+            for i in 0..r {
+                let s: f64 = a[i * r..(i + 1) * r].iter().sum();
+                assert!((s - 1.0).abs() < 1e-9, "row {i} sums {s}");
+                assert!(a[i * r..(i + 1) * r].iter().all(|&x| x >= 0.0));
+            }
+        });
+    }
+
+    #[test]
+    fn trust_region_bounds_deviation() {
+        prop::check(50, |rng, size| {
+            let r = 2 + rng.below(size.min(12));
+            let eps = 0.3;
+            let mut m = MacroAllocator::new(r, eps, 0.0, 0.05, 30);
+            // Adversarial policy far from OT.
+            let mut ot = prop::matrix(rng, r, r, 0.0, 1.0);
+            normalize_rows(&mut ot, r);
+            let mut policy = vec![0.0; r * r];
+            for i in 0..r {
+                policy[i * r + (i + 1) % r] = 1.0;
+            }
+            let a = m.allocate(&ot, Some(policy));
+            let dist: f64 = a
+                .iter()
+                .zip(ot.iter())
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt();
+            // Post-projection row re-normalization can add a hair.
+            assert!(dist <= eps + 0.05, "dist {dist} > eps {eps}");
+        });
+    }
+
+    #[test]
+    fn smoothing_reduces_switching_cost_vs_reactive() {
+        // Alternate between two OT plans; smoothed allocation must switch
+        // less (Theorem 3 part 1 mechanism).
+        let r = 4;
+        let mut ot_a = vec![0.0; r * r];
+        let mut ot_b = vec![0.0; r * r];
+        for i in 0..r {
+            ot_a[i * r + 0] = 1.0;
+            ot_b[i * r + 1] = 1.0;
+        }
+        let run = |reactive: bool| {
+            let mut m = MacroAllocator::new(r, 2.0, 0.7, 0.05, 30);
+            m.reactive = reactive;
+            let mut switch = 0.0;
+            let mut prev: Option<Vec<f64>> = None;
+            for t in 0..20 {
+                let ot = if t % 2 == 0 { &ot_a } else { &ot_b };
+                let a = m.allocate(ot, None);
+                if let Some(p) = &prev {
+                    switch += crate::util::stats::frobenius_dist_sq(&a, p);
+                }
+                prev = Some(a);
+            }
+            switch
+        };
+        let reactive_cost = run(true);
+        let smooth_cost = run(false);
+        assert!(
+            smooth_cost < 0.6 * reactive_cost,
+            "smooth {smooth_cost} vs reactive {reactive_cost}"
+        );
+    }
+
+    #[test]
+    fn normalize_rows_handles_zero_rows() {
+        let mut a = vec![0.0, 0.0, 0.5, 0.5];
+        normalize_rows(&mut a, 2);
+        assert_eq!(a[0], 1.0);
+        assert_eq!(a[1], 0.0);
+    }
+}

@@ -1,0 +1,440 @@
+//! TORTA: the paper's two-layer temporal-aware scheduler (§IV, §V).
+//!
+//! Slot pipeline (Algorithm 1):
+//! 1. mu/nu normalization from this slot's demand and live capacity;
+//! 2. OT plan P* (PJRT Sinkhorn artifact or native solver);
+//! 3. demand prediction F_t (PJRT MLP artifact / EMA / noisy oracle);
+//! 4. allocation matrix A_t from the RL policy artifact, trust-region
+//!    projected around Prob(P*) and temporally smoothed (macro layer);
+//! 5. per-task regional routing by sampling A_t[origin, :];
+//! 6. micro layer per region: Eq. 6 activation (proactive, fed by F_t) and
+//!    Eqs. 7-10 greedy task-server matching, with overflow buffering.
+
+pub mod features;
+pub mod macro_alloc;
+pub mod micro;
+pub mod predictor;
+pub mod state_mgr;
+
+use super::{request_distribution, Ctx, Scheduler, SlotPlan};
+use crate::cluster::Fleet;
+use crate::config::TortaConfig;
+use crate::ot;
+use crate::runtime::TortaArtifacts;
+use crate::util::rng::Rng;
+use crate::workload::Task;
+
+use macro_alloc::MacroAllocator;
+use micro::MicroAllocator;
+use predictor::{DemandPredictor, PredictorMode};
+
+/// Operating variants for the factory / ablations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TortaMode {
+    /// Full system: PJRT artifacts when available.
+    Full,
+    /// Native fallback only (no PJRT) — ablation "TORTA-native".
+    Native,
+    /// Reactive per-slot OT, no smoothing, no prediction — the paper's
+    /// single-timeslot upper-bound method (K0 baseline, Fig 2/4 reactive).
+    Reactive,
+}
+
+pub struct TortaScheduler {
+    r: usize,
+    mode: TortaMode,
+    macro_alloc: MacroAllocator,
+    micro: MicroAllocator,
+    pub predictor: DemandPredictor,
+    artifacts: Option<TortaArtifacts>,
+    cost_matrix: Vec<f64>,
+    rng: Rng,
+    /// Per-region queue estimate (buffered backlog), for Eq. 6 and features.
+    queue_estimate: Vec<f64>,
+    name: &'static str,
+}
+
+impl TortaScheduler {
+    pub fn new(ctx: &Ctx, cfg: &TortaConfig, mode: TortaMode, seed: u64) -> TortaScheduler {
+        let r = ctx.topo.n;
+        let mut macro_alloc = MacroAllocator::new(
+            r,
+            cfg.eps_max,
+            cfg.smoothing,
+            cfg.sinkhorn_eps,
+            cfg.sinkhorn_iters,
+        );
+        macro_alloc.reactive = mode == TortaMode::Reactive;
+        let artifacts = if mode == TortaMode::Full && cfg.use_pjrt {
+            let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
+            if TortaArtifacts::available(&dir, r) {
+                match TortaArtifacts::load(&dir, r) {
+                    Ok(a) => Some(a),
+                    Err(e) => {
+                        eprintln!("torta: artifact load failed ({e}); native fallback");
+                        None
+                    }
+                }
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let pred_mode = if mode == TortaMode::Reactive {
+            PredictorMode::Ema // unused for activation; reactive scales lazily
+        } else if cfg.prediction_accuracy >= 1.0 {
+            PredictorMode::Learned
+        } else {
+            // Sweep mode is installed by `with_oracle` (benches); until
+            // then degrade to EMA.
+            PredictorMode::Ema
+        };
+        TortaScheduler {
+            r,
+            mode,
+            macro_alloc,
+            micro: MicroAllocator::new(cfg.activation_sigma, cfg.w_hw, cfg.w_load, cfg.w_locality),
+            predictor: DemandPredictor::new(r, pred_mode, seed),
+            artifacts,
+            cost_matrix: ot::cost_matrix(&ctx.topo, &ctx.prices, cfg.cost_w_power, cfg.cost_w_net),
+            rng: Rng::new(seed, 313),
+            queue_estimate: vec![0.0; r],
+            name: match mode {
+                TortaMode::Full => "torta",
+                TortaMode::Native => "torta-nat",
+                TortaMode::Reactive => "reactive",
+            },
+        }
+    }
+
+    /// Install a noisy-oracle predictor (Fig 12 accuracy sweep).
+    pub fn with_oracle(
+        mut self,
+        accuracy: f64,
+        oracle: Box<dyn Fn(usize) -> Vec<f64>>,
+        seed: u64,
+    ) -> TortaScheduler {
+        self.predictor =
+            DemandPredictor::new(self.r, PredictorMode::OracleNoise { accuracy, oracle }, seed);
+        self
+    }
+
+    pub fn has_artifacts(&self) -> bool {
+        self.artifacts.is_some()
+    }
+
+    /// Largest-remainder quota split of `n` tasks from `origin` over
+    /// destination regions according to A[origin, :] (failed regions
+    /// excluded, row renormalized). Returns (region, count) pairs.
+    fn row_quotas(
+        &mut self,
+        alloc: &[f64],
+        origin: usize,
+        n: usize,
+        fleet: &Fleet,
+    ) -> Vec<(usize, usize)> {
+        let r = self.r;
+        let row = &alloc[origin * r..(origin + 1) * r];
+        let weights: Vec<f64> = (0..r)
+            .map(|j| if fleet.regions[j].failed { 0.0 } else { row[j] })
+            .collect();
+        let sum: f64 = weights.iter().sum();
+        if sum <= 1e-12 {
+            return vec![(origin, n)];
+        }
+        let exact: Vec<f64> = weights.iter().map(|w| w / sum * n as f64).collect();
+        let mut counts: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        let mut rema: Vec<(usize, f64)> =
+            exact.iter().enumerate().map(|(j, e)| (j, e - e.floor())).collect();
+        rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut k = 0;
+        while assigned < n {
+            let j = rema[k % r].0;
+            if weights[j] > 0.0 {
+                counts[j] += 1;
+                assigned += 1;
+            }
+            k += 1;
+        }
+        counts
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, c)| c > 0)
+            .map(|(j, c)| (j, c))
+            .collect()
+    }
+
+    /// Route a task's destination region by sampling A[origin, :],
+    /// excluding failed regions (renormalized).
+    fn route(&mut self, alloc: &[f64], origin: usize, fleet: &Fleet) -> usize {
+        let r = self.r;
+        let row = &alloc[origin * r..(origin + 1) * r];
+        let weights: Vec<f64> = (0..r)
+            .map(|j| if fleet.regions[j].failed { 0.0 } else { row[j] })
+            .collect();
+        if weights.iter().sum::<f64>() <= 1e-12 {
+            // Everything it wanted is down: pick any live region.
+            let live: Vec<usize> =
+                (0..r).filter(|&j| !fleet.regions[j].failed).collect();
+            if live.is_empty() {
+                return origin;
+            }
+            return live[self.rng.below(live.len())];
+        }
+        self.rng.categorical(&weights)
+    }
+}
+
+impl Scheduler for TortaScheduler {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn schedule(
+        &mut self,
+        _ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        slot: usize,
+        now: f64,
+    ) -> SlotPlan {
+        let r = self.r;
+
+        // --- Observations for the predictor -----------------------------
+        let mut arrivals = vec![0.0; r];
+        for t in &tasks {
+            arrivals[t.origin] += 1.0;
+        }
+        let utils: Vec<f64> =
+            fleet.regions.iter().map(|reg| reg.mean_utilization(now)).collect();
+        self.predictor.observe(&utils, &self.queue_estimate, &arrivals);
+
+        // --- Phase 1: macro allocation (Algorithm 1 lines 1-5) ----------
+        let mu = request_distribution(&tasks, r);
+        let nu = fleet.resource_distribution(now);
+        let ot_prob =
+            self.macro_alloc
+                .ot_probabilities(&self.cost_matrix, &mu, &nu, self.artifacts.as_ref());
+
+        let f_pred = if self.mode == TortaMode::Reactive {
+            vec![0.0; r]
+        } else {
+            self.predictor.predict(slot, self.artifacts.as_ref())
+        };
+
+        let policy_out = match (&self.artifacts, self.mode) {
+            (Some(art), TortaMode::Full) => {
+                let state = features::featurize(
+                    fleet,
+                    &_ctx.prices,
+                    &self.queue_estimate,
+                    &f_pred,
+                    &self.macro_alloc.prev_alloc,
+                    now,
+                );
+                art.policy_alloc(&state)
+                    .ok()
+                    .map(|v| v.iter().map(|&x| x as f64).collect::<Vec<f64>>())
+            }
+            _ => None,
+        };
+        let alloc = self.macro_alloc.allocate(&ot_prob, policy_out);
+
+        // --- Phase 2: micro (Algorithm 1 lines 9-19) --------------------
+        // Route tasks to regions: deterministic largest-remainder quotas
+        // per origin row (a variance-reduced implementation of Algorithm
+        // 1's "sample from A_t[origin]" — removes multinomial routing noise
+        // that would otherwise dominate per-slot load imbalance).
+        let mut regional: Vec<Vec<Task>> = (0..r).map(|_| Vec::new()).collect();
+        let mut by_origin: Vec<Vec<Task>> = (0..r).map(|_| Vec::new()).collect();
+        for task in tasks {
+            by_origin[task.origin].push(task);
+        }
+        for (origin, batch) in by_origin.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let quotas = self.row_quotas(&alloc, origin, batch.len(), fleet);
+            let mut it = batch.into_iter();
+            for (dest, q) in quotas {
+                for _ in 0..q {
+                    if let Some(task) = it.next() {
+                        regional[dest].push(task);
+                    }
+                }
+            }
+            // Rounding leftovers (shouldn't happen; guard anyway).
+            for task in it {
+                let dest = self.route(&alloc, task.origin, fleet);
+                regional[dest].push(task);
+            }
+        }
+
+        // Proactive activation (Eq. 6): Q_t is the *backlog* carried into
+        // this slot and F_t the predicted next-slot arrivals routed through
+        // A_t to destination regions — so activation is sized by the
+        // predictor, and prediction accuracy directly drives performance
+        // (Fig 12). Reactive mode sizes on observed arrivals only (the
+        // §II-A staircase).
+        let f_routed: Vec<f64> = (0..r)
+            .map(|dest| {
+                (0..r).map(|i| f_pred[i] * alloc[i * r + dest]).sum::<f64>()
+            })
+            .collect();
+        for region in 0..r {
+            let (queued, predicted) = if self.mode == TortaMode::Reactive {
+                (regional[region].len() as f64, 0.0)
+            } else {
+                // Small observed-arrival term stabilizes the learned
+                // predictor's volume estimate without masking forecast
+                // errors (the Fig 12 mechanism).
+                (self.queue_estimate[region] + regional[region].len() as f64 * 0.1,
+                 f_routed[region])
+            };
+            self.micro.activate_region(fleet, region, queued, predicted, now);
+        }
+
+        // Greedy matching per region; overflow re-routes once to the
+        // region's best OT alternative, then buffers.
+        let mut assignments = Vec::new();
+        let mut buffered = Vec::new();
+        let mut reroute: Vec<(usize, Vec<Task>)> = Vec::new();
+        for region in 0..r {
+            let batch = std::mem::take(&mut regional[region]);
+            if batch.is_empty() {
+                continue;
+            }
+            let (done, overflow) = self.micro.match_region(fleet, region, batch, now);
+            assignments.extend(done);
+            if !overflow.is_empty() {
+                reroute.push((region, overflow));
+            }
+        }
+        for (from, overflow) in reroute {
+            // Best alternative: highest remaining capacity live region.
+            let alt = (0..r)
+                .filter(|&j| j != from && !fleet.regions[j].failed)
+                .max_by(|&a, &b| {
+                    fleet.regions[a]
+                        .active_capacity(now)
+                        .cmp(&fleet.regions[b].active_capacity(now))
+                });
+            match alt {
+                Some(j) => {
+                    let (done, still) = self.micro.match_region(fleet, j, overflow, now);
+                    assignments.extend(done);
+                    buffered.extend(still);
+                }
+                None => buffered.extend(overflow),
+            }
+        }
+
+        // Queue estimate for next slot's features: buffered per origin.
+        self.queue_estimate = vec![0.0; r];
+        for t in &buffered {
+            self.queue_estimate[t.origin] += 1.0;
+        }
+
+        SlotPlan { assignments, buffered, alloc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, WorkloadConfig};
+    use crate::power::PriceTable;
+    use crate::topology::Topology;
+    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+
+    fn setup(mode: TortaMode) -> (Ctx, Fleet, TortaScheduler) {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 1);
+        let fleet = Fleet::build(&topo, &prices, 1);
+        let cfg = ExperimentConfig::default();
+        let mut tcfg = cfg.torta.clone();
+        tcfg.use_pjrt = false; // unit tests never require artifacts
+        let ctx = Ctx { topo, prices, slot_secs: 45.0 };
+        let sched = TortaScheduler::new(&ctx, &tcfg, mode, 3);
+        (ctx, fleet, sched)
+    }
+
+    fn tasks(r: usize, seed: u64) -> Vec<Task> {
+        let mut wl = DiurnalWorkload::new(WorkloadConfig::default(), r, seed);
+        wl.slot_tasks(0, 45.0)
+    }
+
+    #[test]
+    fn schedules_all_tasks() {
+        let (ctx, mut fleet, mut s) = setup(TortaMode::Native);
+        let ts = tasks(ctx.topo.n, 5);
+        let n = ts.len();
+        let plan = s.schedule(&ctx, &mut fleet, ts, 0, 0.0);
+        assert_eq!(plan.assignments.len() + plan.buffered.len(), n);
+        assert!(plan.assignments.len() as f64 > 0.9 * n as f64);
+    }
+
+    #[test]
+    fn alloc_row_stochastic_every_slot() {
+        let (ctx, mut fleet, mut s) = setup(TortaMode::Native);
+        for slot in 0..5 {
+            let ts = tasks(ctx.topo.n, slot as u64);
+            let plan = s.schedule(&ctx, &mut fleet, ts, slot, slot as f64 * 45.0);
+            let r = ctx.topo.n;
+            for i in 0..r {
+                let sum: f64 = plan.alloc[i * r..(i + 1) * r].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn smoother_than_reactive_across_slots() {
+        let run = |mode: TortaMode| {
+            let (ctx, mut fleet, mut s) = setup(mode);
+            let mut prev: Option<Vec<f64>> = None;
+            let mut switch = 0.0;
+            for slot in 0..10 {
+                let ts = tasks(ctx.topo.n, 100 + slot as u64);
+                let plan = s.schedule(&ctx, &mut fleet, ts, slot, slot as f64 * 45.0);
+                if let Some(p) = &prev {
+                    switch += crate::util::stats::frobenius_dist_sq(&plan.alloc, p);
+                }
+                prev = Some(plan.alloc);
+            }
+            switch
+        };
+        let smooth = run(TortaMode::Native);
+        let reactive = run(TortaMode::Reactive);
+        assert!(smooth < reactive, "smooth {smooth} vs reactive {reactive}");
+    }
+
+    #[test]
+    fn avoids_failed_regions() {
+        let (ctx, mut fleet, mut s) = setup(TortaMode::Native);
+        fleet.regions[0].failed = true;
+        fleet.regions[1].failed = true;
+        let ts = tasks(ctx.topo.n, 9);
+        let plan = s.schedule(&ctx, &mut fleet, ts, 0, 0.0);
+        for (_, region, _) in &plan.assignments {
+            assert!(*region != 0 && *region != 1);
+        }
+    }
+
+    #[test]
+    fn oracle_sweep_installs() {
+        let (ctx, mut fleet, s) = setup(TortaMode::Native);
+        let mut s = s.with_oracle(0.5, Box::new(|_| vec![10.0; 12]), 3);
+        let ts = tasks(ctx.topo.n, 2);
+        let plan = s.schedule(&ctx, &mut fleet, ts, 0, 0.0);
+        assert!(!plan.assignments.is_empty());
+    }
+
+    #[test]
+    fn no_artifacts_in_native_mode() {
+        let (_, _, s) = setup(TortaMode::Native);
+        assert!(!s.has_artifacts());
+    }
+}

@@ -1,0 +1,196 @@
+//! Demand predictor (macro layer, §V-B2) with three operating modes:
+//!
+//! * **Learned** — the trained MLP artifact executed via PJRT on the K=5
+//!   history window; its distribution output is scaled by recent volume.
+//! * **Ema** — native exponential-moving-average fallback (no artifacts).
+//! * **OracleNoise** — ground-truth next-slot rates perturbed to a target
+//!   prediction accuracy PA (Eq. 12); drives the Fig 12 sweep. Noise is
+//!   multiplicative log-normal-ish with E|rel.err| = -ln(PA), making the
+//!   realized PA land on the target in expectation.
+
+use super::features::HistoryWindow;
+use crate::runtime::TortaArtifacts;
+use crate::util::rng::Rng;
+
+pub enum PredictorMode {
+    Learned,
+    Ema,
+    /// (target accuracy, oracle giving true expected rates for slot+1)
+    OracleNoise { accuracy: f64, oracle: Box<dyn Fn(usize) -> Vec<f64>> },
+}
+
+pub struct DemandPredictor {
+    r: usize,
+    mode: PredictorMode,
+    history: HistoryWindow,
+    /// EMA of per-region arrivals.
+    ema: Vec<f64>,
+    /// EMA of total volume (scales the learned distribution).
+    volume_ema: f64,
+    rng: Rng,
+    /// Realized (pred, actual) accumulator for Eq. 12 reporting.
+    abs_rel_err_sum: f64,
+    err_count: u64,
+    last_pred: Option<Vec<f64>>,
+}
+
+impl DemandPredictor {
+    pub fn new(r: usize, mode: PredictorMode, seed: u64) -> DemandPredictor {
+        DemandPredictor {
+            r,
+            mode,
+            history: HistoryWindow::new(r, 5),
+            ema: vec![0.0; r],
+            volume_ema: 0.0,
+            rng: Rng::new(seed, 909),
+            abs_rel_err_sum: 0.0,
+            err_count: 0,
+            last_pred: None,
+        }
+    }
+
+    /// Observe this slot's actuals (utilization snapshot, queues, arrivals).
+    pub fn observe(&mut self, utils: &[f64], queues: &[f64], arrivals: &[f64]) {
+        // Score the previous prediction against what actually arrived.
+        if let Some(pred) = self.last_pred.take() {
+            for (p, &a) in pred.iter().zip(arrivals) {
+                self.abs_rel_err_sum += (p - a).abs() / (a + 1.0);
+                self.err_count += 1;
+            }
+        }
+        self.history.push(utils, queues, arrivals);
+        let alpha = 0.4;
+        for (e, &a) in self.ema.iter_mut().zip(arrivals) {
+            *e = alpha * a + (1.0 - alpha) * *e;
+        }
+        let total: f64 = arrivals.iter().sum();
+        self.volume_ema = alpha * total + (1.0 - alpha) * self.volume_ema;
+    }
+
+    /// Predict next-slot arrivals per region (task counts).
+    pub fn predict(&mut self, slot: usize, artifacts: Option<&TortaArtifacts>) -> Vec<f64> {
+        let pred = match &self.mode {
+            PredictorMode::OracleNoise { accuracy, oracle } => {
+                let truth = oracle(slot + 1);
+                debug_assert_eq!(truth.len(), self.r);
+                // E|rel err| = -ln(PA)  (Eq. 12 inverted); half-normal noise
+                // with that mean => sigma = mean * sqrt(pi/2).
+                let target = accuracy.clamp(0.01, 0.9999);
+                let sigma = -target.ln() * (std::f64::consts::PI / 2.0).sqrt();
+                // Median-preserving log-normal noise: no zero-clipping
+                // asymmetry, so degradation is monotone in sigma.
+                truth
+                    .iter()
+                    .map(|&t| {
+                        let z = self.rng.normal();
+                        t * (sigma * z - 0.5 * sigma * sigma).exp()
+                    })
+                    .collect()
+            }
+            PredictorMode::Learned => {
+                match artifacts {
+                    Some(art) if self.history.ready() => {
+                        match art.predict(&self.history.flatten()) {
+                            Ok(dist) => {
+                                let vol = self.volume_ema.max(1.0);
+                                dist.iter().map(|&d| d as f64 * vol).collect()
+                            }
+                            Err(_) => self.ema.clone(),
+                        }
+                    }
+                    _ => self.ema.clone(),
+                }
+            }
+            PredictorMode::Ema => self.ema.clone(),
+        };
+        self.last_pred = Some(pred.clone());
+        pred
+    }
+
+    /// Realized prediction accuracy PA = exp(-mean |F_pred-F_act|/F_act)
+    /// (Eq. 12). NaN-free: returns 1.0 before any scoring happened.
+    pub fn realized_accuracy(&self) -> f64 {
+        if self.err_count == 0 {
+            return 1.0;
+        }
+        (-self.abs_rel_err_sum / self.err_count as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_tracks_constant_load() {
+        let mut p = DemandPredictor::new(2, PredictorMode::Ema, 1);
+        for _ in 0..20 {
+            p.observe(&[0.5, 0.5], &[0.0, 0.0], &[10.0, 30.0]);
+        }
+        let f = p.predict(20, None);
+        assert!((f[0] - 10.0).abs() < 0.5);
+        assert!((f[1] - 30.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn oracle_perfect_accuracy_is_nearly_exact() {
+        let oracle = Box::new(|_slot: usize| vec![20.0, 40.0]);
+        let mut p = DemandPredictor::new(
+            2,
+            PredictorMode::OracleNoise { accuracy: 0.9999, oracle },
+            1,
+        );
+        let f = p.predict(0, None);
+        assert!((f[0] - 20.0).abs() < 1.0);
+        assert!((f[1] - 40.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn oracle_noise_grows_as_accuracy_drops() {
+        let mk = |acc: f64| {
+            let oracle = Box::new(|_s: usize| vec![100.0; 4]);
+            let mut p =
+                DemandPredictor::new(4, PredictorMode::OracleNoise { accuracy: acc, oracle }, 7);
+            let mut err = 0.0;
+            for s in 0..200 {
+                let f = p.predict(s, None);
+                err += f.iter().map(|x| (x - 100.0).abs() / 100.0).sum::<f64>() / 4.0;
+            }
+            err / 200.0
+        };
+        let hi = mk(0.9);
+        let lo = mk(0.3);
+        assert!(lo > 2.0 * hi, "err@0.3={lo} err@0.9={hi}");
+    }
+
+    #[test]
+    fn realized_accuracy_matches_target_roughly() {
+        let oracle = Box::new(|_s: usize| vec![50.0; 3]);
+        let target = 0.6;
+        let mut p = DemandPredictor::new(
+            3,
+            PredictorMode::OracleNoise { accuracy: target, oracle },
+            3,
+        );
+        for s in 0..400 {
+            let _f = p.predict(s, None);
+            // actual equals the oracle truth (constant 50)
+            p.observe(&[0.0; 3], &[0.0; 3], &[50.0; 3]);
+        }
+        let pa = p.realized_accuracy();
+        assert!(
+            (pa - target).abs() < 0.12,
+            "realized {pa} vs target {target}"
+        );
+    }
+
+    #[test]
+    fn learned_mode_falls_back_to_ema_without_artifacts() {
+        let mut p = DemandPredictor::new(2, PredictorMode::Learned, 1);
+        for _ in 0..10 {
+            p.observe(&[0.1, 0.1], &[0.0, 0.0], &[5.0, 15.0]);
+        }
+        let f = p.predict(10, None);
+        assert!(f[1] > f[0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Server state manager (§IV "state manager"): coordinates the *timing*
+//! of server state transitions with hysteresis, so the micro layer's Eq. 6
+//! targets turn into smooth power sequences instead of thrash.
+//!
+//! Responsibilities:
+//! * dead-zone hysteresis around the activation target;
+//! * per-slot transition budgets (gradual scaling, §V-C1);
+//! * minimum dwell times — a server must stay in a state for a few slots
+//!   before it can flip back (prevents warm/cool oscillation, which burns
+//!   the Fig 3 transition energy for nothing);
+//! * accounting of decisions for the operational-overhead metric.
+
+use crate::cluster::{Fleet, ServerState};
+
+#[derive(Clone, Copy, Debug)]
+pub struct StatePolicy {
+    /// |target - active| must exceed this to act.
+    pub dead_zone: usize,
+    /// Max servers powered on per region per slot.
+    pub max_on_per_slot: usize,
+    /// Max fraction of the active set powered off per slot.
+    pub max_off_frac: f64,
+    /// Seconds a server must have been active before power-off.
+    pub min_dwell_secs: f64,
+    /// Utilization above which a server is never powered off.
+    pub protect_util: f64,
+}
+
+impl Default for StatePolicy {
+    fn default() -> Self {
+        StatePolicy {
+            dead_zone: 2,
+            max_on_per_slot: usize::MAX,
+            max_off_frac: 0.5,
+            min_dwell_secs: 90.0,
+            protect_util: 0.9,
+        }
+    }
+}
+
+/// Outcome of one region's transition pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Transitions {
+    pub powered_on: usize,
+    pub powered_off: usize,
+}
+
+/// Drive region `region` toward `target` active servers under `policy`.
+pub fn apply(
+    fleet: &mut Fleet,
+    region: usize,
+    target: usize,
+    now: f64,
+    policy: &StatePolicy,
+) -> Transitions {
+    let reg = &mut fleet.regions[region];
+    if reg.failed {
+        return Transitions::default();
+    }
+    let active = reg
+        .servers
+        .iter()
+        .filter(|s| !matches!(s.state, ServerState::Cold))
+        .count();
+    let mut out = Transitions::default();
+
+    if target > active {
+        // Scale up: fastest-warming cold servers first.
+        let mut cold: Vec<usize> = (0..reg.servers.len())
+            .filter(|&i| matches!(reg.servers[i].state, ServerState::Cold))
+            .collect();
+        cold.sort_by(|&a, &b| {
+            reg.servers[a]
+                .gpu
+                .warmup_secs()
+                .partial_cmp(&reg.servers[b].gpu.warmup_secs())
+                .unwrap()
+        });
+        for &i in cold.iter().take((target - active).min(policy.max_on_per_slot)) {
+            reg.servers[i].power_on(now);
+            out.powered_on += 1;
+        }
+    } else if target + policy.dead_zone < active {
+        // Scale down: lowest-utilization, longest-dwelled actives first.
+        let mut candidates: Vec<usize> = (0..reg.servers.len())
+            .filter(|&i| reg.servers[i].is_active())
+            .collect();
+        candidates.sort_by(|&a, &b| {
+            let ka = (reg.servers[a].utilization(now), -reg.servers[a].idle_since(now));
+            let kb = (reg.servers[b].utilization(now), -reg.servers[b].idle_since(now));
+            ka.partial_cmp(&kb).unwrap()
+        });
+        let max_off = ((active as f64 * policy.max_off_frac) as usize).max(2);
+        let mut remaining = active;
+        for &i in &candidates {
+            if remaining <= target.max(1) || out.powered_off >= max_off {
+                break;
+            }
+            let s = &mut reg.servers[i];
+            let dwell = now - s.active_edge;
+            if s.utilization(now) < policy.protect_util && dwell >= policy.min_dwell_secs {
+                s.power_off();
+                out.powered_off += 1;
+                remaining -= 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::PriceTable;
+    use crate::topology::Topology;
+
+    fn fleet() -> Fleet {
+        let topo = Topology::abilene();
+        let prices = PriceTable::for_regions(topo.n, 1);
+        Fleet::build(&topo, &prices, 1)
+    }
+
+    fn actives(f: &Fleet, r: usize) -> usize {
+        f.regions[r]
+            .servers
+            .iter()
+            .filter(|s| !matches!(s.state, ServerState::Cold))
+            .count()
+    }
+
+    #[test]
+    fn scales_up_toward_target() {
+        let mut f = fleet();
+        for s in &mut f.regions[0].servers {
+            s.power_off();
+        }
+        let t = apply(&mut f, 0, 4, 0.0, &StatePolicy::default());
+        assert_eq!(t.powered_on, 4.min(f.regions[0].servers.len()));
+        assert_eq!(actives(&f, 0), t.powered_on);
+    }
+
+    #[test]
+    fn dead_zone_suppresses_small_downscale() {
+        let mut f = fleet();
+        let active = actives(&f, 0);
+        // target within the dead zone: no transitions.
+        let t = apply(&mut f, 0, active.saturating_sub(1), 1e6, &StatePolicy::default());
+        assert_eq!(t, Transitions::default());
+    }
+
+    #[test]
+    fn min_dwell_blocks_fresh_servers() {
+        let mut f = fleet();
+        // All servers became active "just now".
+        for s in &mut f.regions[0].servers {
+            s.active_edge = 100.0;
+        }
+        let t = apply(&mut f, 0, 1, 110.0, &StatePolicy::default());
+        assert_eq!(t.powered_off, 0);
+        // After the dwell time they can be retired.
+        let t2 = apply(&mut f, 0, 1, 100.0 + 91.0, &StatePolicy::default());
+        assert!(t2.powered_off > 0);
+    }
+
+    #[test]
+    fn off_budget_is_fraction_of_active() {
+        let mut f = fleet();
+        let active = actives(&f, 1);
+        for s in &mut f.regions[1].servers {
+            s.active_edge = -1e6; // dwelled forever
+        }
+        let policy = StatePolicy { max_off_frac: 0.25, ..Default::default() };
+        let t = apply(&mut f, 1, 1, 0.0, &policy);
+        assert!(t.powered_off <= ((active as f64 * 0.25) as usize).max(2));
+    }
+
+    #[test]
+    fn failed_region_untouched() {
+        let mut f = fleet();
+        f.regions[2].failed = true;
+        let t = apply(&mut f, 2, 100, 0.0, &StatePolicy::default());
+        assert_eq!(t, Transitions::default());
+    }
+
+    #[test]
+    fn up_budget_respected() {
+        let mut f = fleet();
+        for s in &mut f.regions[0].servers {
+            s.power_off();
+        }
+        let policy = StatePolicy { max_on_per_slot: 2, ..Default::default() };
+        let t = apply(&mut f, 0, 10, 0.0, &policy);
+        assert_eq!(t.powered_on, 2);
+    }
+}

@@ -1,0 +1,330 @@
+//! Network topologies (Table I): Abilene, Polska, Gabriel, Cost2.
+//!
+//! Abilene and Polska use the real SNDlib [31] edge lists; Gabriel (25
+//! nodes) and Cost2 (32 nodes) are generated as deterministic geometric
+//! (Waxman-style) graphs because their SNDlib instances are not
+//! redistributable here — node counts, bandwidth, and mean inter-node
+//! latency are calibrated to Table I, which is what the evaluation depends
+//! on (documented in DESIGN.md §Substitutions).
+//!
+//! Per-edge latencies are shortest-path expanded (Floyd–Warshall) into a
+//! full all-pairs latency matrix, then scaled so the mean off-diagonal
+//! latency matches Table I's figure for the topology.
+
+use crate::util::rng::Rng;
+
+/// Immutable network topology: nodes (== regions), all-pairs latency.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub n: usize,
+    pub bandwidth_gbps: f64,
+    pub node_names: Vec<String>,
+    /// Direct edges (i, j, latency_ms) — kept for diagnostics/reports.
+    pub edges: Vec<(usize, usize, f64)>,
+    /// Row-major n*n all-pairs latency in milliseconds (0 diagonal).
+    latency_ms: Vec<f64>,
+}
+
+pub const TOPOLOGY_NAMES: [&str; 4] = ["abilene", "polska", "gabriel", "cost2"];
+
+impl Topology {
+    pub fn by_name(name: &str) -> anyhow::Result<Topology> {
+        match name.to_ascii_lowercase().as_str() {
+            "abilene" => Ok(Self::abilene()),
+            "polska" => Ok(Self::polska()),
+            "gabriel" => Ok(Self::gabriel()),
+            "cost2" => Ok(Self::cost2()),
+            other => anyhow::bail!(
+                "unknown topology {other:?}; expected one of {TOPOLOGY_NAMES:?}"
+            ),
+        }
+    }
+
+    /// All four evaluation topologies (Fig 8-12 sweeps).
+    pub fn all() -> Vec<Topology> {
+        TOPOLOGY_NAMES.iter().map(|n| Self::by_name(n).unwrap()).collect()
+    }
+
+    /// Abilene (Internet2): 12 nodes, 10 Gbps, mean latency 25 ms.
+    pub fn abilene() -> Topology {
+        let names = [
+            "Seattle", "Sunnyvale", "LosAngeles", "ElPaso", "Denver", "KansasCity",
+            "Houston", "Chicago", "Indianapolis", "Atlanta", "WashingtonDC", "NewYork",
+        ];
+        // Real Abilene links; weights ~ geographic distance (arbitrary units,
+        // rescaled below).
+        let edges = [
+            (0, 1, 11.0),  // Seattle-Sunnyvale
+            (0, 4, 13.0),  // Seattle-Denver
+            (1, 2, 5.0),   // Sunnyvale-LosAngeles
+            (1, 4, 12.0),  // Sunnyvale-Denver
+            (2, 3, 9.0),   // LosAngeles-ElPaso
+            (3, 6, 9.0),   // ElPaso-Houston
+            (4, 5, 7.0),   // Denver-KansasCity
+            (5, 6, 9.0),   // KansasCity-Houston
+            (5, 8, 6.0),   // KansasCity-Indianapolis
+            (6, 9, 9.0),   // Houston-Atlanta
+            (7, 8, 3.0),   // Chicago-Indianapolis
+            (7, 11, 9.0),  // Chicago-NewYork
+            (8, 9, 6.0),   // Indianapolis-Atlanta
+            (9, 10, 7.0),  // Atlanta-WashingtonDC
+            (10, 11, 3.0), // WashingtonDC-NewYork
+        ];
+        Self::build("abilene", &names, &edges, 10.0, 25.0)
+    }
+
+    /// Polska (SNDlib): 12 nodes, 10 Gbps, mean latency 45 ms.
+    pub fn polska() -> Topology {
+        let names = [
+            "Gdansk", "Kolobrzeg", "Szczecin", "Bydgoszcz", "Bialystok", "Warszawa",
+            "Poznan", "Lodz", "Wroclaw", "Katowice", "Krakow", "Rzeszow",
+        ];
+        let edges = [
+            (0, 1, 4.0),  // Gdansk-Kolobrzeg
+            (0, 3, 4.0),  // Gdansk-Bydgoszcz
+            (0, 5, 7.0),  // Gdansk-Warszawa
+            (0, 4, 8.0),  // Gdansk-Bialystok
+            (1, 2, 3.0),  // Kolobrzeg-Szczecin
+            (2, 6, 5.0),  // Szczecin-Poznan
+            (3, 6, 3.0),  // Bydgoszcz-Poznan
+            (3, 5, 6.0),  // Bydgoszcz-Warszawa
+            (4, 5, 5.0),  // Bialystok-Warszawa
+            (4, 11, 9.0), // Bialystok-Rzeszow
+            (5, 7, 3.0),  // Warszawa-Lodz
+            (5, 10, 7.0), // Warszawa-Krakow
+            (6, 7, 4.0),  // Poznan-Lodz
+            (6, 8, 4.0),  // Poznan-Wroclaw
+            (7, 9, 4.0),  // Lodz-Katowice
+            (8, 9, 4.0),  // Wroclaw-Katowice
+            (9, 10, 2.0), // Katowice-Krakow
+            (10, 11, 4.0),// Krakow-Rzeszow
+        ];
+        Self::build("polska", &names, &edges, 10.0, 45.0)
+    }
+
+    /// Gabriel: 25 nodes, 15 Gbps, mean latency 80 ms (generated).
+    pub fn gabriel() -> Topology {
+        Self::generated("gabriel", 25, 15.0, 80.0, 0x6AB41E1)
+    }
+
+    /// Cost2: 32 nodes, 20 Gbps, mean latency 150 ms (generated).
+    pub fn cost2() -> Topology {
+        Self::generated("cost2", 32, 20.0, 150.0, 0xC0572)
+    }
+
+    /// Deterministic geometric graph: uniform points on the unit square,
+    /// each node linked to its 3 nearest neighbours plus a chord skeleton
+    /// guaranteeing connectivity; edge weight = Euclidean distance.
+    fn generated(name: &str, n: usize, bandwidth: f64, mean_latency: f64, seed: u64) -> Topology {
+        let mut rng = Rng::seeded(seed);
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+        let dist = |a: (f64, f64), b: (f64, f64)| ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt();
+
+        let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+        let mut have = std::collections::HashSet::new();
+        let add = |edges: &mut Vec<(usize, usize, f64)>,
+                       have: &mut std::collections::HashSet<(usize, usize)>,
+                       i: usize,
+                       j: usize,
+                       w: f64| {
+            let key = (i.min(j), i.max(j));
+            if i != j && have.insert(key) {
+                edges.push((key.0, key.1, w));
+            }
+        };
+        // k-nearest-neighbour links.
+        for i in 0..n {
+            let mut by_dist: Vec<(f64, usize)> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| (dist(pts[i], pts[j]), j))
+                .collect();
+            by_dist.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for &(w, j) in by_dist.iter().take(3) {
+                add(&mut edges, &mut have, i, j, w);
+            }
+        }
+        // Connectivity skeleton: chain in x-order (covers stray components).
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| pts[a].0.partial_cmp(&pts[b].0).unwrap());
+        for w in order.windows(2) {
+            add(&mut edges, &mut have, w[0], w[1], dist(pts[w[0]], pts[w[1]]));
+        }
+        let names: Vec<String> = (0..n).map(|i| format!("{name}-{i:02}")).collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        Self::build(name, &name_refs, &edges, bandwidth, mean_latency)
+    }
+
+    fn build<S: AsRef<str>>(
+        name: &str,
+        node_names: &[S],
+        edges: &[(usize, usize, f64)],
+        bandwidth_gbps: f64,
+        target_mean_latency_ms: f64,
+    ) -> Topology {
+        let n = node_names.len();
+        let inf = f64::INFINITY;
+        let mut d = vec![inf; n * n];
+        for i in 0..n {
+            d[i * n + i] = 0.0;
+        }
+        for &(i, j, w) in edges {
+            assert!(i < n && j < n, "edge ({i},{j}) out of range for n={n}");
+            d[i * n + j] = d[i * n + j].min(w);
+            d[j * n + i] = d[j * n + i].min(w);
+        }
+        // Floyd-Warshall.
+        for k in 0..n {
+            for i in 0..n {
+                let dik = d[i * n + k];
+                if dik == inf {
+                    continue;
+                }
+                for j in 0..n {
+                    let cand = dik + d[k * n + j];
+                    if cand < d[i * n + j] {
+                        d[i * n + j] = cand;
+                    }
+                }
+            }
+        }
+        let off_diag: Vec<f64> = (0..n * n)
+            .filter(|idx| idx / n != idx % n)
+            .map(|idx| d[idx])
+            .collect();
+        assert!(
+            off_diag.iter().all(|x| x.is_finite()),
+            "topology {name} is disconnected"
+        );
+        let mean: f64 = off_diag.iter().sum::<f64>() / off_diag.len() as f64;
+        let scale = target_mean_latency_ms / mean;
+        for x in &mut d {
+            *x *= scale;
+        }
+        let edges = edges
+            .iter()
+            .map(|&(i, j, w)| (i, j, w * scale))
+            .collect();
+        Topology {
+            name: name.to_string(),
+            n,
+            bandwidth_gbps,
+            node_names: node_names.iter().map(|s| s.as_ref().to_string()).collect(),
+            edges,
+            latency_ms: d,
+        }
+    }
+
+    /// One-way latency between regions, in milliseconds.
+    pub fn latency_ms(&self, i: usize, j: usize) -> f64 {
+        self.latency_ms[i * self.n + j]
+    }
+
+    /// Mean off-diagonal latency (ms) — calibrated to Table I.
+    pub fn mean_latency_ms(&self) -> f64 {
+        let mut sum = 0.0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    sum += self.latency_ms(i, j);
+                }
+            }
+        }
+        sum / (self.n * (self.n - 1)) as f64
+    }
+
+    /// Network time for a request+response of `kb` kilobytes between regions
+    /// (latency RTT + serialization over the Table I bandwidth), in seconds.
+    pub fn network_secs(&self, i: usize, j: usize, kb: f64) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        let rtt = 2.0 * self.latency_ms(i, j) / 1000.0;
+        let transfer = kb * 8.0 / (self.bandwidth_gbps * 1e6);
+        rtt + transfer
+    }
+
+    /// Row-major copy of the full latency matrix (for featurization).
+    pub fn latency_matrix(&self) -> &[f64] {
+        &self.latency_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_one_node_counts() {
+        assert_eq!(Topology::abilene().n, 12);
+        assert_eq!(Topology::polska().n, 12);
+        assert_eq!(Topology::gabriel().n, 25);
+        assert_eq!(Topology::cost2().n, 32);
+    }
+
+    #[test]
+    fn table_one_bandwidths() {
+        assert_eq!(Topology::abilene().bandwidth_gbps, 10.0);
+        assert_eq!(Topology::polska().bandwidth_gbps, 10.0);
+        assert_eq!(Topology::gabriel().bandwidth_gbps, 15.0);
+        assert_eq!(Topology::cost2().bandwidth_gbps, 20.0);
+    }
+
+    #[test]
+    fn mean_latency_calibrated() {
+        for (topo, want) in [
+            (Topology::abilene(), 25.0),
+            (Topology::polska(), 45.0),
+            (Topology::gabriel(), 80.0),
+            (Topology::cost2(), 150.0),
+        ] {
+            let got = topo.mean_latency_ms();
+            assert!(
+                (got - want).abs() < 1e-6,
+                "{}: mean latency {got} != {want}",
+                topo.name
+            );
+        }
+    }
+
+    #[test]
+    fn latency_matrix_is_metric_like() {
+        for topo in Topology::all() {
+            for i in 0..topo.n {
+                assert_eq!(topo.latency_ms(i, i), 0.0);
+                for j in 0..topo.n {
+                    assert!((topo.latency_ms(i, j) - topo.latency_ms(j, i)).abs() < 1e-9);
+                    if i != j {
+                        assert!(topo.latency_ms(i, j) > 0.0);
+                    }
+                    // Triangle inequality (shortest paths guarantee it).
+                    for k in 0..topo.n {
+                        assert!(
+                            topo.latency_ms(i, j)
+                                <= topo.latency_ms(i, k) + topo.latency_ms(k, j) + 1e-9
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generated_topologies_are_deterministic() {
+        let a = Topology::gabriel();
+        let b = Topology::gabriel();
+        assert_eq!(a.latency_matrix(), b.latency_matrix());
+    }
+
+    #[test]
+    fn network_secs_zero_for_local() {
+        let t = Topology::abilene();
+        assert_eq!(t.network_secs(3, 3, 100.0), 0.0);
+        assert!(t.network_secs(0, 11, 100.0) > 0.0);
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(Topology::by_name("geant").is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Mini benchmark harness (offline build: no `criterion`).
+//!
+//! Benches are plain binaries (`[[bench]] harness = false`) that construct a
+//! [`BenchSuite`], register cases, and print paper-style rows. Warmup +
+//! repeated timed iterations with mean/std/median; results can also be
+//! dumped as JSON for the report pipeline.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::percentile;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64().max(1e-12)
+    }
+}
+
+pub struct Bencher {
+    warmup: usize,
+    iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        assert!(iters > 0);
+        Bencher { warmup, iters }
+    }
+
+    /// Quick config for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, iters: 3 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / times.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean: Duration::from_secs_f64(mean),
+            std: Duration::from_secs_f64(var.sqrt()),
+            median: Duration::from_secs_f64(percentile(&times, 0.5)),
+            min: Duration::from_secs_f64(times.iter().cloned().fold(f64::INFINITY, f64::min)),
+        }
+    }
+}
+
+/// Named collection of results with table + JSON output.
+pub struct BenchSuite {
+    pub title: String,
+    results: Vec<BenchResult>,
+    /// Free-form metric rows (label, value, unit) for paper metrics that are
+    /// not wall-clock times (response seconds, $K, LB coefficients, ...).
+    metrics: Vec<(String, f64, String)>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        BenchSuite { title: title.to_string(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    pub fn time<F: FnMut()>(&mut self, name: &str, bencher: &Bencher, f: F) {
+        let res = bencher.run(name, f);
+        println!(
+            "  {:<44} {:>12?} ± {:>10?}  (median {:?}, n={})",
+            res.name, res.mean, res.std, res.median, res.iters
+        );
+        self.results.push(res);
+    }
+
+    pub fn metric(&mut self, label: &str, value: f64, unit: &str) {
+        println!("  {label:<52} {value:>12.4} {unit}");
+        self.metrics.push((label.to_string(), value, unit.to_string()));
+    }
+
+    pub fn note(&self, text: &str) {
+        println!("  -- {text}");
+    }
+
+    pub fn metrics(&self) -> &[(String, f64, String)] {
+        &self.metrics
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("title", self.title.as_str());
+        let mut timings = Json::Arr(vec![]);
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str())
+                .set("mean_s", r.mean.as_secs_f64())
+                .set("std_s", r.std.as_secs_f64())
+                .set("median_s", r.median.as_secs_f64())
+                .set("iters", r.iters);
+            timings.push(o);
+        }
+        root.set("timings", timings);
+        let mut metrics = Json::Arr(vec![]);
+        for (label, value, unit) in &self.metrics {
+            let mut o = Json::obj();
+            o.set("label", label.as_str()).set("value", *value).set("unit", unit.as_str());
+            metrics.push(o);
+        }
+        root.set("metrics", metrics);
+        root
+    }
+
+    /// Write results JSON under `results/` (created on demand).
+    pub fn save(&self, file_stem: &str) {
+        let dir = std::path::Path::new("results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{file_stem}.json"));
+            if let Err(e) = std::fs::write(&path, self.to_json().to_string_pretty()) {
+                eprintln!("warn: could not write {path:?}: {e}");
+            } else {
+                println!("  (saved results/{file_stem}.json)");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_counts_iterations() {
+        let mut calls = 0;
+        let b = Bencher::new(2, 5);
+        let res = b.run("case", || calls += 1);
+        assert_eq!(calls, 7); // warmup + iters
+        assert_eq!(res.iters, 5);
+        assert!(res.mean >= Duration::ZERO);
+    }
+
+    #[test]
+    fn suite_collects_metrics_and_json() {
+        let mut s = BenchSuite::new("test-suite");
+        s.metric("mean response", 16.39, "s");
+        s.time("noop", &Bencher::new(0, 2), || {});
+        let j = s.to_json().to_string_pretty();
+        assert!(j.contains("mean response"));
+        assert!(j.contains("noop"));
+        assert!(j.contains("16.39"));
+    }
+}

@@ -1,0 +1,219 @@
+//! Tiny CLI argument parser (offline build: no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Typed getters with defaults; `--help` text generated from
+//! registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    UnknownOption(String),
+    MissingValue(String),
+    BadValue(String, String),
+    HelpRequested(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(o) => write!(f, "unknown option --{o}"),
+            CliError::MissingValue(o) => write!(f, "option --{o} requires a value"),
+            CliError::BadValue(o, v) => write!(f, "invalid value {v:?} for --{o}"),
+            CliError::HelpRequested(h) => write!(f, "{h}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Cli { program: program.to_string(), about, ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: Some(default), takes_value: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, takes_value: false });
+        self
+    }
+
+    fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let default = spec
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", spec.name, spec.help, default));
+        }
+        s.push_str("  --help                   show this message\n");
+        s
+    }
+
+    pub fn parse(mut self, args: &[String]) -> Result<Cli, CliError> {
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::HelpRequested(self.help_text()));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::UnknownOption(name.clone()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    self.values.insert(name, value);
+                } else {
+                    self.flags.push(name);
+                }
+            } else {
+                self.positionals.push(arg.clone());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str()).or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name && s.takes_value)
+                .and_then(|s| s.default)
+        })
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::BadValue(name.to_string(), v))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::BadValue(name.to_string(), v))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::BadValue(name.to_string(), v))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("torta", "test")
+            .opt("topology", "abilene", "topology name")
+            .opt("slots", "480", "number of slots")
+            .flag("verbose", "noisy output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = cli().parse(&args(&[])).unwrap();
+        assert_eq!(c.str("topology"), "abilene");
+        assert_eq!(c.usize("slots").unwrap(), 480);
+        assert!(!c.has_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let c = cli()
+            .parse(&args(&["--topology", "polska", "--slots=12", "--verbose"]))
+            .unwrap();
+        assert_eq!(c.str("topology"), "polska");
+        assert_eq!(c.usize("slots").unwrap(), 12);
+        assert!(c.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cli().parse(&args(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cli().parse(&args(&["--slots"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let c = cli().parse(&args(&["--slots", "abc"])).unwrap();
+        assert!(matches!(c.usize("slots"), Err(CliError::BadValue(_, _))));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let c = cli().parse(&args(&["run", "--slots", "2", "x"])).unwrap();
+        assert_eq!(c.positionals(), &["run".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn help_is_generated() {
+        match cli().parse(&args(&["--help"])) {
+            Err(CliError::HelpRequested(h)) => {
+                assert!(h.contains("--topology"));
+                assert!(h.contains("default: 480"));
+            }
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+}

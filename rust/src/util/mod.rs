@@ -1,0 +1,12 @@
+//! Foundational substrates built in-repo (the offline build environment has
+//! no `rand`/`clap`/`serde`/`criterion`/`proptest`/`tokio`): deterministic
+//! RNG, streaming stats, JSON writer, CLI parser, bench harness, property
+//! testing, and a scoped thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

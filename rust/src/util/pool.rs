@@ -1,0 +1,89 @@
+//! Scoped worker pool over std threads (offline build: no `tokio`/`rayon`).
+//!
+//! The coordinator's leader/worker topology and the bench sweeps use
+//! [`parallel_map`]; the real-time serving driver in `serve/` builds its own
+//! long-lived channel workers on top of std::sync::mpsc.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers: respects TORTA_THREADS, defaults to available cores.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("TORTA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every item on a scoped thread pool, preserving input order.
+pub fn parallel_map<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let inputs: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().unwrap();
+                let out = f(item);
+                *outputs[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped an item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(xs, 8, |x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let ys = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(ys, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let ys: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn workers_actually_parallel() {
+        // 4 tasks sleeping 30ms each on 4 workers should take ~30ms, not 120.
+        let t0 = std::time::Instant::now();
+        parallel_map(vec![(); 4], 4, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(30))
+        });
+        assert!(t0.elapsed() < std::time::Duration::from_millis(100));
+    }
+}

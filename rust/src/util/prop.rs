@@ -1,0 +1,112 @@
+//! Property-testing helper (offline build: no `proptest`).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! seed so the case replays deterministically, and performs "shrinking-lite"
+//! by retrying the failing seed with progressively smaller size hints.
+//!
+//! ```ignore
+//! check(100, |rng, size| {
+//!     let n = rng.range(1, size.max(2));
+//!     ... assert invariant ...
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Maximum structural size hint passed to generators.
+pub const DEFAULT_SIZE: usize = 64;
+
+/// Run `cases` random trials of a property. The closure receives a seeded
+/// RNG and a size hint; it should panic (assert) on violation.
+pub fn check<F>(cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng, usize) + std::panic::UnwindSafe + Copy,
+{
+    for case in 0..cases {
+        let seed = 0xA5EED ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(move || {
+            let mut rng = Rng::seeded(seed);
+            let size = 2 + (case as usize * DEFAULT_SIZE / cases.max(1) as usize);
+            property(&mut rng, size);
+        });
+        if let Err(err) = result {
+            // Shrinking-lite: find the smallest size at which this seed fails.
+            let mut smallest_failing = None;
+            for size in 2..=DEFAULT_SIZE {
+                let r = std::panic::catch_unwind(move || {
+                    let mut rng = Rng::seeded(seed);
+                    property(&mut rng, size);
+                });
+                if r.is_err() {
+                    smallest_failing = Some(size);
+                    break;
+                }
+            }
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed (case {case}, seed {seed:#x}, smallest failing \
+                 size {smallest_failing:?}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random probability simplex of dimension `n`.
+pub fn simplex(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.05, 1.0)).collect();
+    let sum: f64 = xs.iter().sum();
+    for x in &mut xs {
+        *x /= sum;
+    }
+    xs
+}
+
+/// Generate a random row-major non-negative matrix.
+pub fn matrix(rng: &mut Rng, rows: usize, cols: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..rows * cols).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(50, |rng, size| {
+            let n = rng.range(1, size.max(2));
+            assert!(n >= 1);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(20, |rng, _size| {
+            assert!(rng.f64() < 0.5, "coin landed high");
+        });
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        check(30, |rng, size| {
+            let n = rng.range(1, size.max(2));
+            let s = simplex(rng, n);
+            assert_eq!(s.len(), n);
+            let total: f64 = s.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9);
+            assert!(s.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    fn matrix_respects_bounds() {
+        let mut rng = Rng::seeded(5);
+        let m = matrix(&mut rng, 3, 4, -1.0, 1.0);
+        assert_eq!(m.len(), 12);
+        assert!(m.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+}

@@ -1,0 +1,360 @@
+//! Streaming statistics, histograms and distribution summaries.
+//!
+//! Replaces `statrs`/`hdrhistogram` (offline build). Used for the paper's
+//! metrics: response-time distributions (Fig 8/11), load-balance coefficient
+//! CDFs (Fig 10), and cost accounting (Fig 9).
+
+/// Welford online mean/variance plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        let new_mean = self.mean + d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean = new_mean;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation sigma/mu; 0 for degenerate inputs.
+    pub fn cv(&self) -> f64 {
+        if self.n == 0 || self.mean.abs() < 1e-12 { 0.0 } else { self.std() / self.mean }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Load-balance coefficient LB = 1 / (1 + CV) (paper Eq. 11).
+pub fn load_balance_coefficient(utils: &[f64]) -> f64 {
+    let mut s = Summary::new();
+    for &u in utils {
+        s.add(u);
+    }
+    1.0 / (1.0 + s.cv())
+}
+
+/// Exact percentile (linear interpolation) over a sample set.
+/// `q` in [0, 1]. Sorts a copy; use [`Samples`] for repeated queries.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Collected samples with summary + percentile + CDF export.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    summary: Summary,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { xs: Vec::new(), summary: Summary::new(), sorted: true }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.summary.add(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn summary(&self) -> &Summary {
+        &self.summary
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        self.ensure_sorted();
+        percentile_sorted(&self.xs, q)
+    }
+
+    /// `n`-point CDF: (value, cumulative probability) pairs.
+    pub fn cdf(&mut self, n: usize) -> Vec<(f64, f64)> {
+        self.ensure_sorted();
+        if self.xs.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        (0..n)
+            .map(|i| {
+                let q = (i + 1) as f64 / n as f64;
+                (percentile_sorted(&self.xs, q), q)
+            })
+            .collect()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to edge bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], total: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = if x < self.lo {
+            0
+        } else if x >= self.hi {
+            n - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * n as f64) as usize
+        };
+        self.bins[idx.min(n - 1)] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// Probability-density estimate per bin (integrates to 1).
+    pub fn density(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let norm = (self.total as f64 * w).max(1e-12);
+        self.bins.iter().map(|&c| c as f64 / norm).collect()
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Count of local maxima above `min_frac` of the peak — detects the
+    /// bimodal queueing pattern of Fig 2.b.
+    pub fn modes(&self, min_frac: f64) -> usize {
+        let peak = *self.bins.iter().max().unwrap_or(&0) as f64;
+        if peak == 0.0 {
+            return 0;
+        }
+        let mut modes = 0;
+        for i in 0..self.bins.len() {
+            let c = self.bins[i] as f64;
+            let left = if i == 0 { 0 } else { self.bins[i - 1] };
+            let right = if i + 1 == self.bins.len() { 0 } else { self.bins[i + 1] };
+            if c >= min_frac * peak && c as u64 >= left && c as u64 >= right && (c as u64 > left || c as u64 > right) {
+                modes += 1;
+            }
+        }
+        modes
+    }
+}
+
+/// Frobenius-norm-squared distance between two row-major matrices
+/// (the paper's switching cost ||X_t - X_{t-1}||_F^2).
+pub fn frobenius_dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 1.25).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Summary::new();
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.add(x);
+            if i < 37 { a.add(x) } else { b.add(x) }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lb_coefficient_perfect_balance() {
+        assert!((load_balance_coefficient(&[0.5, 0.5, 0.5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lb_coefficient_imbalance_lowers() {
+        let lb = load_balance_coefficient(&[0.9, 0.1, 0.5, 0.5]);
+        assert!(lb < 1.0 && lb > 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_cdf_monotone() {
+        let mut s = Samples::new();
+        for i in 0..1000 {
+            s.add((i % 37) as f64);
+        }
+        let cdf = s.cdf(20);
+        assert_eq!(cdf.len(), 20);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 > w[0].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_one() {
+        let mut h = Histogram::new(0.0, 10.0, 20);
+        for i in 0..500 {
+            h.add(i as f64 % 10.0);
+        }
+        let w = 0.5;
+        let integral: f64 = h.density().iter().map(|d| d * w).sum();
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_detects_bimodal() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for _ in 0..100 {
+            h.add(1.0);
+            h.add(8.0);
+        }
+        assert_eq!(h.modes(0.5), 2);
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add(-5.0);
+        h.add(5.0);
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[3], 1);
+    }
+
+    #[test]
+    fn frobenius_distance() {
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let b = [0.0, 1.0, 1.0, 0.0];
+        assert!((frobenius_dist_sq(&a, &b) - 4.0).abs() < 1e-12);
+        assert_eq!(frobenius_dist_sq(&a, &a), 0.0);
+    }
+}

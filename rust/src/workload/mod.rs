@@ -1,0 +1,393 @@
+//! Workload model: LLM inference tasks and arrival-process generators.
+//!
+//! Tasks follow §VI-A: heterogeneous classes (compute-/memory-intensive,
+//! lightweight — Table I.b), uniform service-time distribution, per-region
+//! diurnal load with Poisson noise, plus the motivation scenarios: periodic
+//! surges (Fig 2) and regional critical failures (Fig 4). Traces can be
+//! recorded and replayed byte-identically (CSV) for A/B scheduler runs.
+
+pub mod trace;
+
+use crate::config::WorkloadConfig;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskClass {
+    ComputeIntensive,
+    MemoryIntensive,
+    Lightweight,
+}
+
+impl TaskClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskClass::ComputeIntensive => "compute",
+            TaskClass::MemoryIntensive => "memory",
+            TaskClass::Lightweight => "light",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TaskClass> {
+        match s {
+            "compute" => Some(TaskClass::ComputeIntensive),
+            "memory" => Some(TaskClass::MemoryIntensive),
+            "light" => Some(TaskClass::Lightweight),
+            _ => None,
+        }
+    }
+}
+
+/// Embedding signature dimensionality for task-similarity (Eq. 10).
+pub const EMBED_DIM: usize = 8;
+
+/// One LLM inference request.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    /// Region where the request originated.
+    pub origin: usize,
+    pub class: TaskClass,
+    /// Model identity (drives model-switch costs and locality).
+    pub model: u32,
+    /// User identity (drives SkyLB prefix affinity).
+    pub user: u32,
+    /// Reference service time in seconds (V100 on its preferred class);
+    /// per-server effective time = service_secs * gpu.speed_factor(class).
+    pub service_secs: f64,
+    /// Absolute arrival time in simulation seconds.
+    pub arrival_secs: f64,
+    /// Absolute deadline (arrival + slack * service).
+    pub deadline_secs: f64,
+    /// Resource demands for Eq. 8 compatibility.
+    pub compute_demand_tflops: f64,
+    pub memory_demand_gb: f64,
+    /// Input-embedding signature for Eq. 10 cosine similarity.
+    pub embed: [f32; EMBED_DIM],
+    /// Request+response payload size (network transfer), KB.
+    pub payload_kb: f64,
+}
+
+impl Task {
+    /// Urgency key: earliest deadline first, resource-heavy tie-break
+    /// (paper §V-C2 ordering).
+    pub fn urgency_key(&self) -> (f64, f64) {
+        (self.deadline_secs, -self.compute_demand_tflops)
+    }
+}
+
+/// Per-slot arrivals for every region.
+pub trait ArrivalProcess {
+    fn n_regions(&self) -> usize;
+    /// Generate the tasks arriving during `slot` (absolute slot index).
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task>;
+    /// Expected (noise-free) arrival rate per region for this slot — the
+    /// "ground truth" a perfect demand predictor would know.
+    fn expected_rate(&self, slot: usize) -> Vec<f64>;
+}
+
+/// Diurnal + Poisson workload (§VI-A baseline for all main experiments).
+pub struct DiurnalWorkload {
+    cfg: WorkloadConfig,
+    n_regions: usize,
+    rng: Rng,
+    /// Per-region demand weight (population imbalance: the paper's premise
+    /// is that demand and supply distributions are mismatched).
+    region_weight: Vec<f64>,
+    phase: Vec<f64>,
+    next_id: u64,
+    /// Model-id embedding anchors.
+    model_embeds: Vec<[f32; EMBED_DIM]>,
+    /// Precomputed Zipf popularity weights (powf once, not per task).
+    model_weights: Vec<f64>,
+}
+
+impl DiurnalWorkload {
+    pub fn new(cfg: WorkloadConfig, n_regions: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed, 101);
+        let region_weight = crate::geo::demand_weights(n_regions, seed);
+        let phase = (0..n_regions)
+            .map(|_| rng.uniform(0.0, 2.0 * std::f64::consts::PI))
+            .collect();
+        let model_embeds = (0..cfg.model_catalog.max(1))
+            .map(|_| {
+                let mut e = [0f32; EMBED_DIM];
+                for x in &mut e {
+                    *x = rng.normal() as f32;
+                }
+                e
+            })
+            .collect();
+        let model_weights = (0..cfg.model_catalog.max(1))
+            .map(|k| 1.0 / ((k + 1) as f64).powf(1.5))
+            .collect();
+        DiurnalWorkload {
+            cfg,
+            n_regions,
+            rng,
+            region_weight,
+            phase,
+            next_id: 0,
+            model_embeds,
+            model_weights,
+        }
+    }
+
+    fn class_for(&mut self) -> TaskClass {
+        let w = [self.cfg.mix_compute, self.cfg.mix_memory, self.cfg.mix_light];
+        match self.rng.categorical(&w) {
+            0 => TaskClass::ComputeIntensive,
+            1 => TaskClass::MemoryIntensive,
+            _ => TaskClass::Lightweight,
+        }
+    }
+
+    /// Zipf-like model popularity: request traffic concentrates on a few
+    /// hot models (weight ∝ 1/rank^1.5), as in production serving.
+    fn sample_model(&mut self) -> u32 {
+        let weights = std::mem::take(&mut self.model_weights);
+        let m = self.rng.categorical(&weights) as u32;
+        self.model_weights = weights;
+        m
+    }
+
+    fn make_task(&mut self, region: usize, slot: usize, slot_secs: f64) -> Task {
+        let class = self.class_for();
+        let service = self.rng.uniform(self.cfg.service_lo, self.cfg.service_hi);
+        let arrival = slot as f64 * slot_secs + self.rng.uniform(0.0, slot_secs);
+        let model = self.sample_model();
+        let anchor = self.model_embeds[model as usize];
+        let mut embed = [0f32; EMBED_DIM];
+        for (e, a) in embed.iter_mut().zip(anchor.iter()) {
+            *e = a + 0.3 * self.rng.normal() as f32;
+        }
+        let (compute, memory) = match class {
+            TaskClass::ComputeIntensive => {
+                (self.rng.uniform(60.0, 220.0), self.rng.uniform(8.0, 24.0))
+            }
+            TaskClass::MemoryIntensive => {
+                (self.rng.uniform(20.0, 80.0), self.rng.uniform(20.0, 70.0))
+            }
+            TaskClass::Lightweight => {
+                (self.rng.uniform(5.0, 40.0), self.rng.uniform(2.0, 10.0))
+            }
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        Task {
+            id,
+            origin: region,
+            class,
+            model,
+            user: self.rng.below(self.cfg.users.max(1)) as u32,
+            service_secs: service,
+            arrival_secs: arrival,
+            deadline_secs: arrival + self.cfg.deadline_slack * service,
+            compute_demand_tflops: compute,
+            memory_demand_gb: memory,
+            embed,
+            payload_kb: self.rng.uniform(2.0, 64.0),
+        }
+    }
+}
+
+impl ArrivalProcess for DiurnalWorkload {
+    fn n_regions(&self) -> usize {
+        self.n_regions
+    }
+
+    fn expected_rate(&self, slot: usize) -> Vec<f64> {
+        (0..self.n_regions)
+            .map(|r| {
+                let wave = 1.0
+                    + self.cfg.diurnal_amp
+                        * (2.0 * std::f64::consts::PI * slot as f64
+                            / self.cfg.diurnal_period
+                            + self.phase[r])
+                            .sin();
+                (self.cfg.base_rate * self.region_weight[r] * wave).max(0.5)
+            })
+            .collect()
+    }
+
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let rates = self.expected_rate(slot);
+        let mut tasks = Vec::new();
+        for (region, &rate) in rates.iter().enumerate() {
+            let n = self.rng.poisson(rate);
+            for _ in 0..n {
+                tasks.push(self.make_task(region, slot, slot_secs));
+            }
+        }
+        tasks.sort_by(|a, b| a.arrival_secs.partial_cmp(&b.arrival_secs).unwrap());
+        tasks
+    }
+}
+
+/// Wraps a base workload with multiplicative surge windows (Fig 2's
+/// "periodic traffic peaks" and flash-crowd events).
+pub struct SurgeWorkload {
+    base: DiurnalWorkload,
+    /// (start_slot, end_slot, multiplier, affected region or None for all)
+    surges: Vec<(usize, usize, f64, Option<usize>)>,
+}
+
+impl SurgeWorkload {
+    pub fn new(base: DiurnalWorkload, surges: Vec<(usize, usize, f64, Option<usize>)>) -> Self {
+        SurgeWorkload { base, surges }
+    }
+
+    fn multiplier(&self, slot: usize, region: usize) -> f64 {
+        let mut m = 1.0;
+        for &(s, e, mult, reg) in &self.surges {
+            if slot >= s && slot < e && reg.map_or(true, |r| r == region) {
+                m *= mult;
+            }
+        }
+        m
+    }
+}
+
+impl ArrivalProcess for SurgeWorkload {
+    fn n_regions(&self) -> usize {
+        self.base.n_regions()
+    }
+
+    fn expected_rate(&self, slot: usize) -> Vec<f64> {
+        self.base
+            .expected_rate(slot)
+            .iter()
+            .enumerate()
+            .map(|(r, &x)| x * self.multiplier(slot, r))
+            .collect()
+    }
+
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let rates = self.expected_rate(slot);
+        let mut tasks = Vec::new();
+        for (region, &rate) in rates.iter().enumerate() {
+            let n = self.base.rng.poisson(rate);
+            for _ in 0..n {
+                tasks.push(self.base.make_task(region, slot, slot_secs));
+            }
+        }
+        tasks.sort_by(|a, b| a.arrival_secs.partial_cmp(&b.arrival_secs).unwrap());
+        tasks
+    }
+}
+
+/// Regional critical-failure scenario (Fig 4): the region's servers go
+/// offline for `[start_slot, start_slot + duration_slots)`.
+#[derive(Clone, Copy, Debug)]
+pub struct FailureEvent {
+    pub region: usize,
+    pub start_slot: usize,
+    pub duration_slots: usize,
+}
+
+impl FailureEvent {
+    pub fn active(&self, slot: usize) -> bool {
+        slot >= self.start_slot && slot < self.start_slot + self.duration_slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> DiurnalWorkload {
+        DiurnalWorkload::new(WorkloadConfig::default(), n, 7)
+    }
+
+    #[test]
+    fn slot_tasks_have_valid_fields() {
+        let mut w = mk(4);
+        let tasks = w.slot_tasks(3, 45.0);
+        assert!(!tasks.is_empty());
+        for t in &tasks {
+            assert!(t.origin < 4);
+            assert!((5.0..=25.0).contains(&t.service_secs));
+            assert!(t.arrival_secs >= 3.0 * 45.0 && t.arrival_secs < 4.0 * 45.0);
+            assert!(t.deadline_secs > t.arrival_secs);
+            assert!(t.compute_demand_tflops > 0.0 && t.memory_demand_gb > 0.0);
+        }
+    }
+
+    #[test]
+    fn tasks_sorted_by_arrival() {
+        let mut w = mk(6);
+        let tasks = w.slot_tasks(0, 45.0);
+        for pair in tasks.windows(2) {
+            assert!(pair[0].arrival_secs <= pair[1].arrival_secs);
+        }
+    }
+
+    #[test]
+    fn ids_unique_across_slots() {
+        let mut w = mk(3);
+        let mut seen = std::collections::HashSet::new();
+        for slot in 0..5 {
+            for t in w.slot_tasks(slot, 45.0) {
+                assert!(seen.insert(t.id));
+            }
+        }
+    }
+
+    #[test]
+    fn expected_rate_positive_and_diurnal() {
+        let w = mk(3);
+        let r0 = w.expected_rate(0);
+        let r40 = w.expected_rate(40);
+        assert!(r0.iter().all(|&x| x > 0.0));
+        assert_ne!(r0, r40); // the wave moves
+    }
+
+    #[test]
+    fn poisson_volume_tracks_rate() {
+        let mut w = mk(2);
+        let mut total = 0usize;
+        let mut expected = 0.0;
+        for slot in 0..50 {
+            expected += w.expected_rate(slot).iter().sum::<f64>();
+            total += w.slot_tasks(slot, 45.0).len();
+        }
+        let ratio = total as f64 / expected;
+        assert!((0.9..1.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn surge_multiplies_rate_only_in_window() {
+        let base = mk(2);
+        let s = SurgeWorkload::new(base, vec![(10, 20, 3.0, Some(1))]);
+        let inside = s.expected_rate(15);
+        let outside = s.expected_rate(25);
+        let base2 = mk(2);
+        let raw_inside = base2.expected_rate(15);
+        assert!((inside[1] / raw_inside[1] - 3.0).abs() < 1e-9);
+        assert!((inside[0] / raw_inside[0] - 1.0).abs() < 1e-9);
+        let raw_outside = base2.expected_rate(25);
+        assert!((outside[1] / raw_outside[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failure_event_window() {
+        let f = FailureEvent { region: 2, start_slot: 5, duration_slots: 3 };
+        assert!(!f.active(4));
+        assert!(f.active(5));
+        assert!(f.active(7));
+        assert!(!f.active(8));
+    }
+
+    #[test]
+    fn same_seed_same_workload() {
+        let mut a = mk(3);
+        let mut b = mk(3);
+        let ta = a.slot_tasks(0, 45.0);
+        let tb = b.slot_tasks(0, 45.0);
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(tb.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.origin, y.origin);
+            assert!((x.service_secs - y.service_secs).abs() < 1e-12);
+        }
+    }
+}

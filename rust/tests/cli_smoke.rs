@@ -1,0 +1,81 @@
+//! CLI smoke tests: drive the built `torta` binary end-to-end.
+
+use std::process::Command;
+
+fn torta() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_torta"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = torta().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["simulate", "suite", "milp", "trace", "serve"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn simulate_runs_and_prints_row() {
+    let out = torta()
+        .args(["simulate", "--scheduler", "rr", "--slots", "6", "--no-pjrt"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rr") && text.contains("LB="), "got: {text}");
+}
+
+#[test]
+fn simulate_with_config_file() {
+    let dir = std::env::temp_dir().join("torta_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("c.toml");
+    std::fs::write(&path, "scheduler = \"sdib\"\nslots = 4\n[torta]\nuse_pjrt = false\n").unwrap();
+    let out = torta()
+        .args(["simulate", "--config", path.to_str().unwrap(), "--scheduler", "sdib", "--slots", "4", "--no-pjrt"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("sdib"));
+}
+
+#[test]
+fn milp_prints_scaling_table() {
+    let out = torta().args(["milp", "--tasks", "4,6", "--budget", "1000000"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("tasks") && text.contains("nodes"));
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = torta().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn bad_scheduler_reports_error() {
+    let out = torta()
+        .args(["simulate", "--scheduler", "nope", "--slots", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown scheduler"));
+}
+
+#[test]
+fn trace_records_csv() {
+    let dir = std::env::temp_dir().join("torta_cli_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.csv");
+    let out = torta()
+        .args(["trace", "--slots", "3", "--out", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let content = std::fs::read_to_string(&path).unwrap();
+    assert!(content.lines().count() > 10);
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,104 @@
+//! Integration: every scheduler x topology runs end-to-end with invariants.
+
+use torta::config::ExperimentConfig;
+use torta::sim::run_experiment;
+use torta::topology::TOPOLOGY_NAMES;
+
+fn short_cfg(topology: &str, scheduler: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology = topology.into();
+    cfg.scheduler = scheduler.into();
+    cfg.slots = 24;
+    cfg.torta.use_pjrt = false; // PJRT paths covered by runtime_roundtrip
+    cfg
+}
+
+#[test]
+fn every_scheduler_on_every_topology() {
+    for topo in TOPOLOGY_NAMES {
+        for sched in ["torta-native", "reactive", "skylb", "sdib", "rr"] {
+            let cfg = short_cfg(topo, sched);
+            let m = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{sched}@{topo} failed: {e}"));
+            assert!(m.tasks_total > 0, "{sched}@{topo}: no tasks");
+            assert!(
+                m.completion_rate() > 0.5,
+                "{sched}@{topo}: completion {:.2}",
+                m.completion_rate()
+            );
+            assert!(m.mean_response() > 0.0 && m.mean_response() < 300.0);
+            assert!(m.mean_lb() > 0.0 && m.mean_lb() <= 1.0);
+            assert!(m.power_cost_dollars > 0.0);
+            assert!(m.operational_overhead >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn torta_beats_rr_on_response_time() {
+    // The robust headline ordering at modest horizons.
+    let torta = run_experiment(&short_cfg("abilene", "torta-native")).unwrap();
+    let rr = run_experiment(&short_cfg("abilene", "rr")).unwrap();
+    assert!(
+        torta.mean_response() < rr.mean_response(),
+        "torta {:.2} !< rr {:.2}",
+        torta.mean_response(),
+        rr.mean_response()
+    );
+}
+
+#[test]
+fn torta_switching_cost_below_reactive() {
+    // Theorem 3 mechanism at system level.
+    let mut a = short_cfg("abilene", "torta-native");
+    let mut b = short_cfg("abilene", "reactive");
+    a.slots = 60;
+    b.slots = 60;
+    let torta = run_experiment(&a).unwrap();
+    let reactive = run_experiment(&b).unwrap();
+    assert!(
+        torta.switching_cost_frob < reactive.switching_cost_frob,
+        "torta {:.3} !< reactive {:.3}",
+        torta.switching_cost_frob,
+        reactive.switching_cost_frob
+    );
+}
+
+#[test]
+fn identical_seeds_are_bitwise_reproducible() {
+    let a = run_experiment(&short_cfg("polska", "torta-native")).unwrap();
+    let b = run_experiment(&short_cfg("polska", "torta-native")).unwrap();
+    assert_eq!(a.tasks_total, b.tasks_total);
+    assert_eq!(a.tasks_dropped, b.tasks_dropped);
+    assert!((a.mean_response() - b.mean_response()).abs() < 1e-12);
+    assert!((a.power_cost_dollars - b.power_cost_dollars).abs() < 1e-9);
+    assert!((a.switching_cost_frob - b.switching_cost_frob).abs() < 1e-12);
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut cfg = short_cfg("abilene", "skylb");
+    let a = run_experiment(&cfg).unwrap();
+    cfg.seed = 1234;
+    let b = run_experiment(&cfg).unwrap();
+    assert_ne!(a.tasks_total, b.tasks_total);
+}
+
+#[test]
+fn config_file_roundtrip_drives_run() {
+    let dir = std::env::temp_dir().join("torta_e2e_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        "topology = \"polska\"\nscheduler = \"sdib\"\nslots = 8\n\
+         [workload]\nbase_rate = 20.0\n[torta]\nuse_pjrt = false\n",
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.topology, "polska");
+    assert_eq!(cfg.slots, 8);
+    let m = run_experiment(&cfg).unwrap();
+    assert!(m.tasks_total > 0);
+    std::fs::remove_file(&path).ok();
+}

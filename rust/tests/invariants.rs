@@ -1,0 +1,96 @@
+//! Property-based cross-module invariants: random configurations through
+//! the full engine must preserve conservation, bounds, and determinism.
+
+use torta::config::ExperimentConfig;
+use torta::milp::{solve_bnb, solve_greedy, validate, AssignmentProblem};
+use torta::sim::Simulation;
+use torta::util::prop;
+use torta::workload::{ArrivalProcess, DiurnalWorkload};
+
+fn random_cfg(rng: &mut torta::util::rng::Rng) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology = ["abilene", "polska"][rng.below(2)].to_string();
+    cfg.slots = rng.range(4, 10);
+    cfg.seed = rng.next_u64();
+    cfg.workload.base_rate = rng.uniform(5.0, 80.0);
+    cfg.workload.diurnal_amp = rng.uniform(0.0, 0.9);
+    cfg.workload.service_lo = rng.uniform(1.0, 8.0);
+    cfg.workload.service_hi = cfg.workload.service_lo + rng.uniform(1.0, 20.0);
+    cfg.workload.model_catalog = rng.range(1, 10);
+    cfg.torta.use_pjrt = false;
+    cfg.torta.smoothing = rng.f64();
+    cfg.torta.eps_max = rng.uniform(0.05, 1.5);
+    cfg
+}
+
+#[test]
+fn task_conservation_under_random_configs() {
+    prop::check(12, |rng, _size| {
+        let cfg = random_cfg(rng);
+        let sched_name =
+            ["torta-native", "reactive", "skylb", "sdib", "rr"][rng.below(5)];
+        let mut c = cfg.clone();
+        c.scheduler = sched_name.to_string();
+        let mut sim = Simulation::new(c.clone()).unwrap();
+        let mut wl =
+            DiurnalWorkload::new(c.workload.clone(), sim.ctx.topo.n, c.seed);
+        let mut twin =
+            DiurnalWorkload::new(c.workload.clone(), sim.ctx.topo.n, c.seed);
+        let mut generated = 0u64;
+        for slot in 0..c.slots {
+            generated += twin.slot_tasks(slot, c.slot_secs).len() as u64;
+        }
+        let mut sched = torta::scheduler::build(sched_name, &sim.ctx, &c).unwrap();
+        let m = sim.run(&mut wl, sched.as_mut());
+        // served + dropped + still-buffered == generated
+        assert_eq!(
+            m.tasks_total + sim.backlog_len() as u64,
+            generated,
+            "{sched_name}: conservation violated"
+        );
+        // Bounds.
+        if m.response.len() > 0 {
+            assert!(m.mean_response() > 0.0);
+            assert!(m.waiting.mean() >= 0.0);
+        }
+        assert!(m.mean_lb() > 0.0 && m.mean_lb() <= 1.0);
+        assert!(m.power_cost_dollars >= 0.0);
+        assert!(m.switching_cost_frob >= -1e-12);
+    });
+}
+
+#[test]
+fn milp_solutions_always_feasible_and_ordered() {
+    prop::check(15, |rng, size| {
+        let n = 2 + rng.below(size.min(10));
+        let p = AssignmentProblem::generate(n, rng.next_u64());
+        let exact = solve_bnb(&p, 5_000_000).expect("bnb");
+        validate(&p, &exact).expect("bnb feasible");
+        let greedy = solve_greedy(&p).expect("greedy");
+        validate(&p, &greedy).expect("greedy feasible");
+        if exact.optimal {
+            assert!(
+                exact.cost <= greedy.cost + 1e-9,
+                "exact {} > greedy {}",
+                exact.cost,
+                greedy.cost
+            );
+        }
+    });
+}
+
+#[test]
+fn switching_cost_zero_for_constant_allocation() {
+    // A scheduler that reports the same alloc every slot accrues zero
+    // Frobenius switching cost regardless of workload randomness.
+    prop::check(8, |rng, _| {
+        let cfg = random_cfg(rng);
+        let mut m = torta::metrics::RunMetrics::new("const", "x");
+        let r = 4;
+        let alloc = prop::simplex(rng, r * r);
+        for _ in 0..cfg.slots {
+            m.record_alloc(&alloc);
+        }
+        assert!(m.switching_cost_frob.abs() < 1e-12);
+    });
+}

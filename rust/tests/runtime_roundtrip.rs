@@ -1,0 +1,119 @@
+//! Integration over the PJRT runtime: the AOT artifacts produced by
+//! `make artifacts` must load, execute, and agree with the native
+//! implementations (L1 kernel <-> L3 solver equivalence).
+//!
+//! Skipped (with a notice) when artifacts are absent so `cargo test` works
+//! on a fresh checkout; CI runs `make artifacts` first.
+
+use std::path::PathBuf;
+
+use torta::ot;
+use torta::runtime::TortaArtifacts;
+use torta::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    // Tests run from the crate root.
+    torta::runtime::default_artifacts_dir()
+}
+
+fn load(r: usize) -> Option<TortaArtifacts> {
+    let dir = artifacts_dir();
+    if !TortaArtifacts::available(&dir, r) {
+        eprintln!("SKIP: artifacts for R={r} missing in {dir:?}; run `make artifacts`");
+        return None;
+    }
+    Some(TortaArtifacts::load(&dir, r).expect("artifact load"))
+}
+
+fn simplex32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let v = torta::util::prop::simplex(rng, n);
+    v.iter().map(|&x| x as f32).collect()
+}
+
+#[test]
+fn sinkhorn_artifact_matches_native_solver() {
+    for r in [12, 25, 32] {
+        let Some(art) = load(r) else { return };
+        let mut rng = Rng::seeded(7 + r as u64);
+        for case in 0..5 {
+            let mu = simplex32(&mut rng, r);
+            let nu = simplex32(&mut rng, r);
+            let c: Vec<f32> = (0..r * r).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+            let got = art.sinkhorn_plan(&c, &mu, &nu).expect("pjrt sinkhorn");
+            let want = ot::sinkhorn(
+                &c.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                &mu.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                &nu.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                0.05,
+                50,
+            );
+            for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (g as f64 - w).abs() < 1e-4,
+                    "R={r} case={case} idx={i}: pjrt {g} vs native {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn policy_artifact_outputs_row_stochastic_alloc() {
+    for r in [12, 25, 32] {
+        let Some(art) = load(r) else { return };
+        let d = 4 * r + r * r;
+        let mut rng = Rng::seeded(3);
+        let state: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        let alloc = art.policy_alloc(&state).expect("policy run");
+        assert_eq!(alloc.len(), r * r);
+        for i in 0..r {
+            let row: f32 = alloc[i * r..(i + 1) * r].iter().sum();
+            assert!((row - 1.0).abs() < 1e-4, "R={r} row {i} sums {row}");
+            assert!(alloc[i * r..(i + 1) * r].iter().all(|&x| x >= 0.0));
+        }
+    }
+}
+
+#[test]
+fn policy_artifact_is_deterministic() {
+    let Some(art) = load(12) else { return };
+    let d = 4 * 12 + 144;
+    let state = vec![0.25f32; d];
+    let a = art.policy_alloc(&state).unwrap();
+    let b = art.policy_alloc(&state).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn predictor_artifact_outputs_distribution() {
+    for r in [12, 25, 32] {
+        let Some(art) = load(r) else { return };
+        let d = 15 * r;
+        let mut rng = Rng::seeded(9);
+        let hist: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        let pred = art.predict(&hist).expect("predictor run");
+        assert_eq!(pred.len(), r);
+        let sum: f32 = pred.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "R={r} predictor sums {sum}");
+        assert!(pred.iter().all(|&x| x >= 0.0));
+    }
+}
+
+#[test]
+fn wrong_input_dims_rejected() {
+    let Some(art) = load(12) else { return };
+    assert!(art.policy_alloc(&[0.0; 7]).is_err());
+    assert!(art.predict(&[0.0; 7]).is_err());
+    assert!(art.sinkhorn_plan(&[0.0; 4], &[0.0; 2], &[0.0; 2]).is_err());
+}
+
+#[test]
+fn full_torta_uses_artifacts_end_to_end() {
+    let Some(_) = load(12) else { return };
+    let mut cfg = torta::config::ExperimentConfig::default();
+    cfg.slots = 16;
+    cfg.scheduler = "torta".into();
+    let m = torta::sim::run_experiment(&cfg).expect("full torta run");
+    assert!(m.tasks_total > 0);
+    assert!(m.completion_rate() > 0.9);
+}
