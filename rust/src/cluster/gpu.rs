@@ -20,7 +20,22 @@ pub enum GpuType {
 pub const ALL_GPUS: [GpuType; 5] =
     [GpuType::A100, GpuType::H100, GpuType::Rtx4090, GpuType::V100, GpuType::T4];
 
+/// Number of catalog entries (size of per-GPU lookup tables).
+pub const N_GPU_TYPES: usize = ALL_GPUS.len();
+
 impl GpuType {
+    /// Dense catalog index, consistent with [`ALL_GPUS`] ordering (used for
+    /// per-(GpuType, TaskClass) lookup tables on the matching hot path).
+    pub fn index(self) -> usize {
+        match self {
+            GpuType::A100 => 0,
+            GpuType::H100 => 1,
+            GpuType::Rtx4090 => 2,
+            GpuType::V100 => 3,
+            GpuType::T4 => 4,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             GpuType::A100 => "A100",
@@ -147,6 +162,14 @@ impl GpuType {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn index_is_consistent_with_catalog_order() {
+        for (k, gpu) in ALL_GPUS.iter().enumerate() {
+            assert_eq!(gpu.index(), k);
+        }
+        assert_eq!(N_GPU_TYPES, ALL_GPUS.len());
+    }
 
     #[test]
     fn lanes_within_paper_capacity_band() {

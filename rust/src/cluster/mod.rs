@@ -5,7 +5,7 @@ pub mod gpu;
 pub mod server;
 pub mod transition;
 
-pub use gpu::{GpuType, ALL_GPUS};
+pub use gpu::{GpuType, ALL_GPUS, N_GPU_TYPES};
 pub use server::{AssignOutcome, Server, ServerState};
 
 use crate::power::PriceTable;
@@ -53,10 +53,31 @@ impl Region {
     }
 }
 
+/// Per-slot cached fleet aggregates (§Perf fleet caches): everything the
+/// scheduler's read-mostly prelude consumes — the OT capacity marginal and
+/// per-region mean utilization — computed in ONE pass over the fleet by
+/// [`Fleet::refresh_aggregates`] instead of one sweep per consumer.
+/// Invalidated by power events (the state manager) and by plan execution
+/// (the engine), both of which mutate the quantities below.
+#[derive(Clone, Debug)]
+pub struct SlotAggregates {
+    /// Timestamp the snapshot was taken at; reads at a different `now`
+    /// bypass the cache and compute directly.
+    pub now: f64,
+    /// Normalized free-capacity distribution nu_t (see
+    /// [`Fleet::resource_distribution`]).
+    pub nu: Vec<f64>,
+    /// Mean active-server utilization per region (see
+    /// [`Region::mean_utilization`]).
+    pub mean_util: Vec<f64>,
+}
+
 /// The full deployment: one region per topology node.
 #[derive(Clone, Debug)]
 pub struct Fleet {
     pub regions: Vec<Region>,
+    /// Cached per-slot aggregates; `None` when stale.
+    agg: Option<SlotAggregates>,
 }
 
 impl Fleet {
@@ -64,6 +85,16 @@ impl Fleet {
     /// counts across regions with a deterministic "wealth" skew — the
     /// paper's premise is that supply is geographically imbalanced (Fig 1).
     pub fn build(topo: &Topology, prices: &PriceTable, seed: u64) -> Fleet {
+        Self::build_scaled(topo, prices, seed, 1.0)
+    }
+
+    /// [`build`](Self::build) with the Table I.b global GPU counts
+    /// multiplied by `scale` — the scale benchmarks run the coordinator
+    /// against up-to-10x fleets (thousands of servers) that the paper's
+    /// R=12 reproduction never exercises. `scale = 1.0` reproduces
+    /// `build` exactly (identical RNG draw sequence).
+    pub fn build_scaled(topo: &Topology, prices: &PriceTable, seed: u64, scale: f64) -> Fleet {
+        assert!(scale > 0.0);
         let mut rng = Rng::new(seed, 77);
         let n = topo.n;
         // Region wealth: how much of the global fleet lands here
@@ -86,7 +117,7 @@ impl Fleet {
         // comparable across topologies).
         for gpu in ALL_GPUS {
             let (lo, hi) = gpu.count_range();
-            let count = rng.range(lo, hi);
+            let count = (rng.range(lo, hi) as f64 * scale).round() as usize;
             // Distribute by wealth using largest-remainder.
             let mut allocated = 0usize;
             let mut shares: Vec<(usize, f64)> = (0..n)
@@ -127,7 +158,7 @@ impl Fleet {
                 regions[r].servers[0].state = ServerState::Active;
             }
         }
-        Fleet { regions }
+        Fleet { regions, agg: None }
     }
 
     pub fn n_regions(&self) -> usize {
@@ -138,11 +169,73 @@ impl Fleet {
         self.regions.iter().map(|r| r.servers.len()).sum()
     }
 
+    /// Recompute the per-slot aggregate cache in a single pass over every
+    /// server (each server's lane array is scanned exactly once via
+    /// [`Server::lane_stats`]). Call at the top of a scheduling slot,
+    /// before any power/assign mutation; subsequent same-`now` reads of
+    /// [`resource_distribution`](Self::resource_distribution) and
+    /// [`mean_utilizations`](Self::mean_utilizations) hit the cache.
+    pub fn refresh_aggregates(&mut self, now: f64) {
+        let n = self.regions.len();
+        let mut nu_raw = Vec::with_capacity(n);
+        let mut mean_util = Vec::with_capacity(n);
+        for region in &self.regions {
+            let mut free = 0.0;
+            let mut util_sum = 0.0;
+            let mut active = 0usize;
+            for s in &region.servers {
+                let is_active = s.is_active();
+                let accepting = s.accepting(now);
+                if !is_active && !accepting {
+                    continue; // cold / still-warming: no aggregate input
+                }
+                let (util, backlog) = s.lane_stats(now);
+                if is_active {
+                    util_sum += util;
+                    active += 1;
+                }
+                if accepting && !region.failed {
+                    // Forward-looking free share of the next window:
+                    // queued lane-seconds eat into lane-capacity.
+                    let backlog_frac = (backlog / 45.0).min(1.0);
+                    free += s.lanes() as f64 * (1.0 - backlog_frac).max(0.05);
+                }
+            }
+            nu_raw.push(if region.failed { 0.0 } else { free });
+            mean_util.push(if active == 0 { 0.0 } else { util_sum / active as f64 });
+        }
+        let sum: f64 = nu_raw.iter().sum::<f64>().max(1e-9);
+        let nu = nu_raw.iter().map(|c| c / sum).collect();
+        self.agg = Some(SlotAggregates { now, nu, mean_util });
+    }
+
+    /// Drop the aggregate cache (any power/assign event makes it stale).
+    pub fn invalidate_aggregates(&mut self) {
+        self.agg = None;
+    }
+
+    /// Mean active-server utilization per region; served from the slot
+    /// cache when fresh, recomputed directly otherwise.
+    pub fn mean_utilizations(&self, now: f64) -> Vec<f64> {
+        if let Some(a) = &self.agg {
+            if a.now == now {
+                return a.mean_util.clone();
+            }
+        }
+        self.regions.iter().map(|r| r.mean_utilization(now)).collect()
+    }
+
     /// Normalized resource distribution nu_t over regions (the OT column
     /// marginal): *free* capacity — accepting lanes discounted by current
     /// busyness — so the macro flow self-equalizes utilization across
-    /// regions. Failed regions contribute 0.
+    /// regions. Failed regions contribute 0. Served from the slot cache
+    /// when fresh.
     pub fn resource_distribution(&self, now: f64) -> Vec<f64> {
+        if let Some(a) = &self.agg {
+            if a.now == now {
+                return a.nu.clone();
+            }
+        }
         let caps: Vec<f64> = self
             .regions
             .iter()
@@ -227,6 +320,20 @@ mod tests {
     }
 
     #[test]
+    fn scaled_fleet_multiplies_capacity() {
+        let topo = Topology::synthetic(64);
+        let prices = PriceTable::for_regions(topo.n, 5);
+        let base = Fleet::build(&topo, &prices, 5);
+        let scaled = Fleet::build_scaled(&topo, &prices, 5, 4.0);
+        let b = base.total_servers() as f64;
+        let s = scaled.total_servers() as f64;
+        assert!(s > 3.5 * b && s < 4.5 * b, "base {b}, scaled {s}");
+        // scale = 1.0 is bit-identical to build().
+        let one = Fleet::build_scaled(&topo, &prices, 5, 1.0);
+        assert_eq!(one.total_servers(), base.total_servers());
+    }
+
+    #[test]
     fn fleet_is_imbalanced_across_regions() {
         let (f, _) = fleet();
         let counts: Vec<usize> = f.regions.iter().map(|r| r.servers.len()).collect();
@@ -244,6 +351,38 @@ mod tests {
         let nu2 = f.resource_distribution(0.0);
         assert_eq!(nu2[0], 0.0);
         assert!((nu2.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_cache_matches_direct_computation() {
+        let (mut f, _) = fleet();
+        let direct_nu = f.resource_distribution(10.0);
+        let direct_util = f.mean_utilizations(10.0);
+        f.refresh_aggregates(10.0);
+        assert_eq!(f.resource_distribution(10.0), direct_nu);
+        assert_eq!(f.mean_utilizations(10.0), direct_util);
+        // A different `now` bypasses the cache.
+        assert_eq!(f.resource_distribution(20.0), {
+            let mut g = f.clone();
+            g.invalidate_aggregates();
+            g.resource_distribution(20.0)
+        });
+    }
+
+    #[test]
+    fn aggregate_cache_invalidation_reflects_power_events() {
+        let (mut f, _) = fleet();
+        f.refresh_aggregates(0.0);
+        let before = f.resource_distribution(0.0);
+        // Power off every server in region 0 — the stale cache would keep
+        // reporting capacity; invalidation must expose the change.
+        for s in &mut f.regions[0].servers {
+            s.power_off();
+        }
+        f.invalidate_aggregates();
+        let after = f.resource_distribution(0.0);
+        assert_eq!(after[0], 0.0);
+        assert!(before[0] > 0.0);
     }
 
     #[test]

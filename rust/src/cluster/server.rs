@@ -158,6 +158,22 @@ impl Server {
             / self.lanes_free_at.len() as f64
     }
 
+    /// `(utilization, backlog_secs)` in a single pass over the lanes —
+    /// hot-path helper for fleet-aggregate construction, which needs both
+    /// and would otherwise scan the lane array twice per server per slot.
+    pub fn lane_stats(&self, now: f64) -> (f64, f64) {
+        let mut busy = 0usize;
+        let mut queued = 0.0;
+        for &t in &self.lanes_free_at {
+            if t > now {
+                busy += 1;
+            }
+            queued += (t - now).max(0.0);
+        }
+        let n = self.lanes_free_at.len() as f64;
+        (busy as f64 / n, queued / n)
+    }
+
     /// Effective execution seconds of `task` on this hardware.
     pub fn effective_service_secs(&self, task: &Task) -> f64 {
         let penalty = if self.gpu.optimal_for(task.class) { 1.0 } else { 1.25 };
@@ -353,6 +369,20 @@ mod tests {
         assert!(s.utilization(1.0) > 0.0);
         assert!(s.backlog_secs(0.0) > 0.0);
         assert_eq!(s.backlog_secs(1e9), 0.0);
+    }
+
+    #[test]
+    fn lane_stats_agrees_with_separate_accessors() {
+        let mut s = Server::new(0, 0, GpuType::V100, true);
+        s.loaded_model = Some(0);
+        for _ in 0..4 {
+            s.assign(&task_at(0.0, 0), 0.0);
+        }
+        for now in [0.0, 1.0, 5.0, 1e9] {
+            let (util, backlog) = s.lane_stats(now);
+            assert_eq!(util, s.utilization(now));
+            assert_eq!(backlog, s.backlog_secs(now));
+        }
     }
 
     #[test]

@@ -35,6 +35,16 @@ pub struct WorkloadConfig {
     pub users: usize,
 }
 
+impl WorkloadConfig {
+    /// High-rate preset for the scale benchmarks (§Perf): ~4x the paper's
+    /// per-region arrival rate, everything else Table-I faithful. Used by
+    /// `benches/perf_hotpath.rs` to stress per-slot decision latency at
+    /// R=32/64/128 synthetic topologies.
+    pub fn high_rate() -> Self {
+        WorkloadConfig { base_rate: 240.0, ..Default::default() }
+    }
+}
+
 impl Default for WorkloadConfig {
     fn default() -> Self {
         WorkloadConfig {
@@ -65,9 +75,16 @@ pub struct TortaConfig {
     pub eps_max: f64,
     /// Temporal smoothing weight toward A_{t-1} for the native fallback.
     pub smoothing: f64,
-    /// Sinkhorn regularization + iterations (must match aot.py export).
+    /// Sinkhorn regularization + iteration cap (must match aot.py export).
     pub sinkhorn_eps: f64,
     pub sinkhorn_iters: usize,
+    /// Early-exit tolerance on the native solver's L1 row-marginal error;
+    /// 0 disables both early exit and warm starting (the classic cold
+    /// fixed-`sinkhorn_iters` schedule, matching the aot.py export). The
+    /// warm-started solver typically reaches the tolerance within a
+    /// handful of iterations once the allocation stabilizes (§V-B
+    /// temporal coherence).
+    pub sinkhorn_tol: f64,
     /// Micro-layer activation safety factor sigma (Eq. 6).
     pub activation_sigma: f64,
     /// Compatibility score weights w1..w3 (Eq. 7).
@@ -91,6 +108,7 @@ impl Default for TortaConfig {
             smoothing: 0.5,
             sinkhorn_eps: 0.05,
             sinkhorn_iters: 50,
+            sinkhorn_tol: 1e-6,
             activation_sigma: 2.0,
             w_hw: 0.25,
             w_load: 0.6,
@@ -160,6 +178,7 @@ impl ExperimentConfig {
                 smoothing: t.f64_or("torta.smoothing", td.smoothing),
                 sinkhorn_eps: t.f64_or("torta.sinkhorn_eps", td.sinkhorn_eps),
                 sinkhorn_iters: t.usize_or("torta.sinkhorn_iters", td.sinkhorn_iters),
+                sinkhorn_tol: t.f64_or("torta.sinkhorn_tol", td.sinkhorn_tol),
                 activation_sigma: t.f64_or("torta.activation_sigma", td.activation_sigma),
                 w_hw: t.f64_or("torta.w_hw", td.w_hw),
                 w_load: t.f64_or("torta.w_load", td.w_load),
@@ -200,6 +219,9 @@ impl ExperimentConfig {
         }
         if self.torta.sinkhorn_iters == 0 {
             errs.push("torta.sinkhorn_iters must be > 0".to_string());
+        }
+        if self.torta.sinkhorn_tol < 0.0 {
+            errs.push("torta.sinkhorn_tol must be >= 0".to_string());
         }
         if errs.is_empty() {
             Ok(())

@@ -46,6 +46,160 @@ pub fn sinkhorn(cost: &[f64], mu: &[f64], nu: &[f64], eps: f64, iters: usize) ->
     p
 }
 
+/// Reusable Sinkhorn solver for the per-slot macro OT problem (§Perf
+/// tentpole: "coordinator hot-path overhaul").
+///
+/// Three hot-path optimizations over the free-function [`sinkhorn`]:
+///
+/// 1. **Cached kernel** — the cost matrix is fixed for a whole run, so
+///    `exp(-C/eps)` is computed once at construction instead of every slot.
+/// 2. **Preallocated scratch** — the `u`/`v` potentials and the plan are
+///    owned by the solver; a steady-state solve allocates nothing.
+/// 3. **Warm start + early exit** — the potentials from the previous solve
+///    seed the next one. TORTA's temporal smoothing (§V-B) makes
+///    consecutive slots' marginals nearly identical, so once the
+///    allocation stabilizes the fixed point barely moves and a handful of
+///    iterations reaches the marginal-error tolerance that a cold start
+///    needs hundreds for.
+///
+/// Convergence is measured as the L1 row-marginal error
+/// `sum_i |row_i(P) - mu_i|` (the column marginals are satisfied exactly
+/// by the `v` update); the solve stops as soon as it drops to `tol`, or at
+/// `max_iters` whichever comes first. `tol == 0` disables early exit
+/// (exactly `max_iters` iterations); combined with [`reset`](Self::reset)
+/// before each solve it is bit-identical to the classic [`sinkhorn`]
+/// free function.
+pub struct SinkhornSolver {
+    r: usize,
+    /// Early-exit tolerance on the L1 row-marginal error (0 disables).
+    pub tol: f64,
+    /// Iteration cap per solve.
+    pub max_iters: usize,
+    /// Convergence is checked every this many iterations (each check costs
+    /// one extra R^2 mat-vec, so checking every iteration would add ~50%);
+    /// 0 is treated as 1.
+    pub check_every: usize,
+    /// Iterations executed by the most recent solve.
+    pub last_iters: usize,
+    /// Marginal error observed at the end of the most recent solve
+    /// (`f64::INFINITY` when `tol == 0` and no check ran).
+    pub last_marginal_err: f64,
+    cost: Vec<f64>,
+    kernel: Vec<f64>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+    plan: Vec<f64>,
+    warm: bool,
+}
+
+impl SinkhornSolver {
+    pub fn new(cost: &[f64], r: usize, eps: f64, tol: f64, max_iters: usize) -> SinkhornSolver {
+        assert_eq!(cost.len(), r * r, "cost must be r*r row-major");
+        assert!(max_iters > 0);
+        SinkhornSolver {
+            r,
+            tol,
+            max_iters,
+            check_every: 5,
+            last_iters: 0,
+            last_marginal_err: f64::INFINITY,
+            cost: cost.to_vec(),
+            kernel: cost.iter().map(|c| (-c / eps).exp()).collect(),
+            u: vec![1.0; r],
+            v: vec![1.0; r],
+            plan: vec![0.0; r * r],
+            warm: false,
+        }
+    }
+
+    /// Does this solver's cached kernel correspond to `cost`? (The cost
+    /// matrix is fixed per run; this guards against accidental reuse.)
+    pub fn matches_cost(&self, cost: &[f64]) -> bool {
+        self.cost == cost
+    }
+
+    /// Whether the next solve starts from previous potentials.
+    pub fn is_warm(&self) -> bool {
+        self.warm
+    }
+
+    /// Drop the warm-start state (next solve is a cold start).
+    pub fn reset(&mut self) {
+        self.u.fill(1.0);
+        self.v.fill(1.0);
+        self.warm = false;
+    }
+
+    /// Solve the entropic OT problem for (`mu`, `nu`); returns the plan as
+    /// a borrow of the internal buffer. Potentials persist across calls
+    /// (warm start) — call [`reset`](Self::reset) for a cold start.
+    pub fn solve(&mut self, mu: &[f64], nu: &[f64]) -> &[f64] {
+        let r = self.r;
+        debug_assert_eq!(mu.len(), r);
+        debug_assert_eq!(nu.len(), r);
+        let mut iters = 0;
+        let mut err = f64::INFINITY;
+        while iters < self.max_iters {
+            // u = mu / (K v)
+            for i in 0..r {
+                let mut kv = 0.0;
+                for j in 0..r {
+                    kv += self.kernel[i * r + j] * self.v[j];
+                }
+                self.u[i] = mu[i] / kv.max(FLOOR);
+            }
+            // v = nu / (K^T u)
+            for j in 0..r {
+                let mut ktu = 0.0;
+                for i in 0..r {
+                    ktu += self.kernel[i * r + j] * self.u[i];
+                }
+                self.v[j] = nu[j] / ktu.max(FLOOR);
+            }
+            iters += 1;
+            // Check at iteration 1 too: a warm start on a stabilized
+            // problem converges immediately, and this is what turns the
+            // steady-state cost into a single iteration + one check.
+            if self.tol > 0.0
+                && (iters == 1
+                    || iters % self.check_every.max(1) == 0
+                    || iters == self.max_iters)
+            {
+                err = self.row_marginal_err(mu);
+                if err <= self.tol {
+                    break;
+                }
+            }
+        }
+        if self.tol > 0.0 && !err.is_finite() {
+            err = self.row_marginal_err(mu);
+        }
+        self.last_iters = iters;
+        self.last_marginal_err = err;
+        self.warm = true;
+        for i in 0..r {
+            for j in 0..r {
+                self.plan[i * r + j] = self.u[i] * self.kernel[i * r + j] * self.v[j];
+            }
+        }
+        &self.plan
+    }
+
+    /// L1 row-marginal error of the current potentials against `mu`.
+    fn row_marginal_err(&self, mu: &[f64]) -> f64 {
+        let r = self.r;
+        let mut err = 0.0;
+        for i in 0..r {
+            let mut kvi = 0.0;
+            for j in 0..r {
+                kvi += self.kernel[i * r + j] * self.v[j];
+            }
+            err += (self.u[i] * kvi - mu[i]).abs();
+        }
+        err
+    }
+}
+
 /// Row-normalize a plan into routing probabilities Prob_{i->j} (§V-B1).
 pub fn row_normalize(plan: &[f64], r: usize) -> Vec<f64> {
     let mut out = vec![0.0; r * r];
@@ -243,6 +397,55 @@ mod tests {
             .min_by(|&a, &b| prices.price(a).partial_cmp(&prices.price(b)).unwrap())
             .unwrap();
         assert_eq!(cheapest_col, cheapest_price);
+    }
+
+    #[test]
+    fn solver_cold_with_zero_tol_matches_free_function() {
+        // tol = 0 disables early exit: a cold solver must reproduce the
+        // classic fixed-iteration schedule bit-for-bit.
+        prop::check(20, |rng, size| {
+            let r = 2 + rng.below(size.min(16));
+            let mu = simplex(rng, r);
+            let nu = simplex(rng, r);
+            let cost = prop::matrix(rng, r, r, 0.0, 1.0);
+            let want = sinkhorn(&cost, &mu, &nu, 0.05, 40);
+            let mut solver = SinkhornSolver::new(&cost, r, 0.05, 0.0, 40);
+            let got = solver.solve(&mu, &nu).to_vec();
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn solver_warm_start_reuses_potentials() {
+        let r = 8;
+        let mut rng = Rng::seeded(11);
+        let mu = simplex(&mut rng, r);
+        let nu = simplex(&mut rng, r);
+        let cost = prop::matrix(&mut rng, r, r, 0.0, 1.0);
+        let mut solver = SinkhornSolver::new(&cost, r, 0.05, 1e-6, 50_000);
+        solver.solve(&mu, &nu);
+        let cold_iters = solver.last_iters;
+        assert!(cold_iters < 50_000, "cold solve hit the iteration cap");
+        assert!(solver.is_warm());
+        // Re-solving the identical problem warm must converge immediately
+        // (first convergence check passes).
+        solver.solve(&mu, &nu);
+        assert!(solver.last_iters <= solver.check_every);
+        assert!(solver.last_iters < cold_iters);
+        assert!(solver.last_marginal_err <= 1e-6);
+        // After reset the solve is cold again.
+        solver.reset();
+        solver.solve(&mu, &nu);
+        assert_eq!(solver.last_iters, cold_iters);
+    }
+
+    #[test]
+    fn solver_matches_cost_guard() {
+        let cost = vec![0.5; 9];
+        let solver = SinkhornSolver::new(&cost, 3, 0.05, 1e-6, 100);
+        assert!(solver.matches_cost(&cost));
+        let other = vec![0.25; 9];
+        assert!(!solver.matches_cost(&other));
     }
 
     #[test]

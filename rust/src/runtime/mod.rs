@@ -9,93 +9,140 @@
 //! The PJRT client is thread-local: `xla` handles are not Sync, and every
 //! simulator run is single-threaded anyway (bench sweeps parallelize at the
 //! run level, each worker thread building its own engines).
+//!
+//! The `xla` bindings need a local XLA toolchain, so the whole backend is
+//! gated behind the `pjrt` cargo feature: default builds compile a stub
+//! whose `Engine::load` always errors, and every caller already treats a
+//! load failure as "fall back to the native Rust path" — the offline
+//! build is fully functional as `torta-native`.
 
-use std::cell::RefCell;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-thread_local! {
-    static CPU_CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
-    /// Compiled-executable cache keyed by (path, mtime): schedulers are
-    /// constructed per run in bench sweeps, and XLA compilation (~100 ms)
-    /// would otherwise dominate setup (§Perf optimization #1).
-    static EXE_CACHE: RefCell<std::collections::HashMap<(PathBuf, u64), std::rc::Rc<xla::PjRtLoadedExecutable>>> =
-        RefCell::new(std::collections::HashMap::new());
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::cell::RefCell;
+    use std::path::{Path, PathBuf};
 
-fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
-    CPU_CLIENT.with(|cell| {
-        let mut slot = cell.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+    use anyhow::{Context, Result};
+
+    thread_local! {
+        static CPU_CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+        /// Compiled-executable cache keyed by (path, mtime): schedulers are
+        /// constructed per run in bench sweeps, and XLA compilation (~100 ms)
+        /// would otherwise dominate setup (§Perf optimization #1).
+        static EXE_CACHE: RefCell<std::collections::HashMap<(PathBuf, u64), std::rc::Rc<xla::PjRtLoadedExecutable>>> =
+            RefCell::new(std::collections::HashMap::new());
+    }
+
+    fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+        CPU_CLIENT.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+            }
+            f(slot.as_ref().unwrap())
+        })
+    }
+
+    /// One compiled HLO executable (one model variant).
+    pub struct Engine {
+        exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+        path: PathBuf,
+    }
+
+    impl std::fmt::Debug for Engine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Engine").field("path", &self.path).finish()
         }
-        f(slot.as_ref().unwrap())
-    })
-}
-
-/// One compiled HLO executable (one model variant).
-pub struct Engine {
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
-    path: PathBuf,
-}
-
-impl std::fmt::Debug for Engine {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Engine").field("path", &self.path).finish()
     }
-}
 
-impl Engine {
-    /// Load + compile an HLO text artifact (memoized per thread: repeated
-    /// loads of an unchanged file reuse the compiled executable).
-    pub fn load(path: &Path) -> Result<Engine> {
-        let mtime = std::fs::metadata(path)
-            .and_then(|m| m.modified())
-            .map(|t| {
-                t.duration_since(std::time::UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
-            })
-            .unwrap_or(0);
-        let key = (path.to_path_buf(), mtime);
-        let cached = EXE_CACHE.with(|c| c.borrow().get(&key).cloned());
-        if let Some(exe) = cached {
-            return Ok(Engine { exe, path: path.to_path_buf() });
+    impl Engine {
+        /// Load + compile an HLO text artifact (memoized per thread: repeated
+        /// loads of an unchanged file reuse the compiled executable).
+        pub fn load(path: &Path) -> Result<Engine> {
+            let mtime = std::fs::metadata(path)
+                .and_then(|m| m.modified())
+                .map(|t| {
+                    t.duration_since(std::time::UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+                })
+                .unwrap_or(0);
+            let key = (path.to_path_buf(), mtime);
+            let cached = EXE_CACHE.with(|c| c.borrow().get(&key).cloned());
+            if let Some(exe) = cached {
+                return Ok(Engine { exe, path: path.to_path_buf() });
+            }
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = with_client(|client| {
+                client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+            })?;
+            let exe = std::rc::Rc::new(exe);
+            EXE_CACHE.with(|c| c.borrow_mut().insert(key, exe.clone()));
+            Ok(Engine { exe, path: path.to_path_buf() })
         }
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = with_client(|client| {
-            client.compile(&comp).with_context(|| format!("compiling {path:?}"))
-        })?;
-        let exe = std::rc::Rc::new(exe);
-        EXE_CACHE.with(|c| c.borrow_mut().insert(key, exe.clone()));
-        Ok(Engine { exe, path: path.to_path_buf() })
-    }
 
-    /// Execute with f32 inputs of the given shapes; returns the first
-    /// element of the result tuple flattened to f32.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .with_context(|| format!("reshaping input to {shape:?}"))?;
-            literals.push(lit);
+        /// Execute with f32 inputs of the given shapes; returns the first
+        /// element of the result tuple flattened to f32.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input to {shape:?}"))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {:?}", self.path))?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+            Ok(out.to_vec::<f32>()?)
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {:?}", self.path))?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
-        Ok(out.to_vec::<f32>()?)
-    }
 
-    pub fn path(&self) -> &Path {
-        &self.path
+        pub fn path(&self) -> &Path {
+            &self.path
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::Result;
+
+    /// Stub engine for builds without the `pjrt` feature: loading always
+    /// fails, which every caller treats as "use the native fallback".
+    #[derive(Debug)]
+    pub struct Engine {
+        path: PathBuf,
+    }
+
+    impl Engine {
+        pub fn load(path: &Path) -> Result<Engine> {
+            let _ = Engine { path: path.to_path_buf() }; // keep the shape honest
+            anyhow::bail!(
+                "built without the `pjrt` feature; cannot load artifact {path:?} \
+                 (native fallback will be used)"
+            )
+        }
+
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+            anyhow::bail!("built without the `pjrt` feature")
+        }
+
+        pub fn path(&self) -> &Path {
+            &self.path
+        }
+    }
+}
+
+pub use backend::Engine;
 
 /// The three TORTA artifacts for one topology size R.
 #[derive(Debug)]

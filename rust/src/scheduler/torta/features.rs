@@ -37,9 +37,10 @@ pub fn featurize(
     debug_assert_eq!(f_pred.len(), r);
     debug_assert_eq!(prev_alloc.len(), r * r);
     let mut state = Vec::with_capacity(state_dim(r));
-    // U_t: mean active-server utilization per region.
-    for region in &fleet.regions {
-        state.push(region.mean_utilization(now) as f32);
+    // U_t: mean active-server utilization per region (served from the
+    // fleet's per-slot aggregate cache when the scheduler refreshed it).
+    for u in fleet.mean_utilizations(now) {
+        state.push(u as f32);
     }
     // Q_t / Q_max, clamped.
     for &q in queues {

@@ -21,10 +21,17 @@ pub struct MacroAllocator {
     pub smoothing: f64,
     pub sinkhorn_eps: f64,
     pub sinkhorn_iters: usize,
+    /// Early-exit tolerance for the native solver (0 = fixed iterations).
+    pub sinkhorn_tol: f64,
     pub prev_alloc: Vec<f64>,
     /// Pure-reactive mode: per-slot OT only, no smoothing / no RL
     /// (the paper's single-timeslot upper-bound method, used for K0).
     pub reactive: bool,
+    /// Warm-started native Sinkhorn solver: cached `exp(-C/eps)` kernel,
+    /// preallocated scratch, and potentials carried across slots (§V-B
+    /// temporal coherence — consecutive slots pose nearly identical OT
+    /// problems). Built lazily on the first native solve.
+    solver: Option<ot::SinkhornSolver>,
 }
 
 impl MacroAllocator {
@@ -40,14 +47,48 @@ impl MacroAllocator {
             smoothing,
             sinkhorn_eps: sk_eps,
             sinkhorn_iters: sk_iters,
+            sinkhorn_tol: 1e-6,
             prev_alloc: prev,
             reactive: false,
+            solver: None,
         }
+    }
+
+    /// Native Sinkhorn via the persistent warm-started solver. The cost
+    /// matrix is fixed per run, so the kernel is cached after the first
+    /// call; a changed cost rebuilds the solver (and restarts cold).
+    ///
+    /// `sinkhorn_tol == 0` restores the pre-optimization behaviour
+    /// exactly: no early exit AND a cold start every slot (the classic
+    /// per-slot fixed-iteration schedule, bit-identical to
+    /// `ot::sinkhorn`) — only the kernel cache is kept.
+    fn native_plan(&mut self, cost: &[f64], mu: &[f64], nu: &[f64]) -> Vec<f64> {
+        let stale = self.solver.as_ref().map_or(true, |s| !s.matches_cost(cost));
+        if stale {
+            self.solver = Some(ot::SinkhornSolver::new(
+                cost,
+                self.r,
+                self.sinkhorn_eps,
+                self.sinkhorn_tol,
+                self.sinkhorn_iters,
+            ));
+        }
+        let solver = self.solver.as_mut().unwrap();
+        if self.sinkhorn_tol == 0.0 {
+            solver.reset();
+        }
+        solver.solve(mu, nu).to_vec()
+    }
+
+    /// Iterations spent by the most recent native solve (bench telemetry;
+    /// `None` if no native solve has run).
+    pub fn last_solver_iters(&self) -> Option<usize> {
+        self.solver.as_ref().map(|s| s.last_iters)
     }
 
     /// OT plan, row-normalized to routing probabilities.
     pub fn ot_probabilities(
-        &self,
+        &mut self,
         cost: &[f64],
         mu: &[f64],
         nu: &[f64],
@@ -60,10 +101,10 @@ impl MacroAllocator {
                 let n32: Vec<f32> = nu.iter().map(|&x| x as f32).collect();
                 match art.sinkhorn_plan(&c32, &m32, &n32) {
                     Ok(p) => p.iter().map(|&x| x as f64).collect(),
-                    Err(_) => ot::sinkhorn(cost, mu, nu, self.sinkhorn_eps, self.sinkhorn_iters),
+                    Err(_) => self.native_plan(cost, mu, nu),
                 }
             }
-            None => ot::sinkhorn(cost, mu, nu, self.sinkhorn_eps, self.sinkhorn_iters),
+            None => self.native_plan(cost, mu, nu),
         };
         ot::row_normalize(&plan, self.r)
     }
@@ -259,6 +300,36 @@ mod tests {
             smooth_cost < 0.6 * reactive_cost,
             "smooth {smooth_cost} vs reactive {reactive_cost}"
         );
+    }
+
+    #[test]
+    fn ot_probabilities_warm_starts_and_tracks_cost_changes() {
+        let r = 4;
+        let mut m = MacroAllocator::new(r, 0.5, 0.5, 0.05, 10_000);
+        m.sinkhorn_tol = 1e-5;
+        let mut cost = vec![0.0; r * r];
+        for i in 0..r {
+            for j in 0..r {
+                cost[i * r + j] = ((i * r + j) as f64 * 0.37).sin().abs();
+            }
+        }
+        let mu = vec![0.25; r];
+        let nu = vec![0.4, 0.3, 0.2, 0.1];
+        let p1 = m.ot_probabilities(&cost, &mu, &nu, None);
+        let first_iters = m.last_solver_iters().unwrap();
+        assert!(first_iters < 10_000, "cold solve hit the iteration cap");
+        let p2 = m.ot_probabilities(&cost, &mu, &nu, None);
+        let second_iters = m.last_solver_iters().unwrap();
+        // Identical problem, warm potentials: immediate convergence and
+        // (numerically) the same routing probabilities.
+        assert!(second_iters < first_iters.max(2));
+        for (a, b) in p1.iter().zip(p2.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // A different cost matrix must rebuild the solver (cold start).
+        let cost2: Vec<f64> = cost.iter().map(|c| 1.0 - c).collect();
+        let _ = m.ot_probabilities(&cost2, &mu, &nu, None);
+        assert!(m.last_solver_iters().unwrap() >= second_iters);
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //!   w3*Comp_locality, tasks processed in deadline-urgency order, running
 //!   load estimates updated after every assignment.
 
-use crate::cluster::{Fleet, Server};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::cluster::{Fleet, GpuType, Region, Server, ALL_GPUS, N_GPU_TYPES};
 use crate::workload::{Task, EMBED_DIM};
 
 /// Locality decay rate lambda (Eq. 10) per second.
@@ -19,6 +22,10 @@ const W_MODEL: f64 = 0.7;
 const W_COS: f64 = 0.3;
 /// Backlog (queue seconds per lane) treated as saturation.
 const SATURATION_BACKLOG: f64 = 45.0;
+/// Model-residency score bonus (switch avoidance). Shared by the exact
+/// score and the heap bound — the bound is only sound if it adds at
+/// least this much unconditionally, so keep them the same constant.
+const RESIDENCY_BONUS: f64 = 0.10;
 
 pub struct MicroAllocator {
     pub sigma: f64,
@@ -60,13 +67,12 @@ impl MicroAllocator {
         }
         // Average per-server capacity this slot: lanes * slot/mean-service
         // * target utilization. 45 s slot / ~15 s mean service = 3 tasks
-        // per lane per slot at 100% busy; sizing for ~70% keeps queueing
-        // waits low while staying far leaner than the reactive baselines.
+        // per lane per slot at 100% busy; the 0.45 factor sizes the active
+        // set for ~45% mean utilization — enough headroom that queueing
+        // waits stay sub-second while remaining far leaner than the
+        // reactive baselines.
         let mean_lanes = reg.servers.iter().map(|s| s.lanes()).sum::<usize>() as f64
             / reg.servers.len().max(1) as f64;
-        // Size the active set for ~45% mean utilization: enough headroom
-        // that queueing waits stay sub-second while remaining far leaner
-        // than the reactive baselines.
         let cap_per_server = mean_lanes * 3.0 * 0.45;
         let target =
             self.target_active(queue_len, predicted, cap_per_server, reg.servers.len());
@@ -131,8 +137,64 @@ impl MicroAllocator {
             + self.w_locality * Self::comp_locality(task, server, now)
     }
 
+    /// Task-independent upper bound on any task's Eq. 7 score against a
+    /// candidate: Comp_hw <= 1 always, Comp_load is exactly `load_cache`,
+    /// and the Eq. 10 raw locality is bounded by `W_MODEL * max_model_w`
+    /// (a task matches at most the heaviest per-model weight) plus
+    /// `W_COS * ||centroid||` (Cauchy–Schwarz against the unit task
+    /// embedding); the saturation x/(1+x) is monotone, so the cap maps
+    /// through. The residency bonus and a small float-safety margin are
+    /// added unconditionally, keeping the bound sound so the lazy matcher
+    /// is exact (never prunes the true argmax).
+    fn score_bound(&self, cand: &Cand) -> f64 {
+        let raw_cap = W_MODEL * cand.max_model_w + W_COS * cand.centroid_norm;
+        let loc_cap = raw_cap / (1.0 + raw_cap);
+        self.w_hw + self.w_load * cand.load_cache + self.w_locality * loc_cap
+            + RESIDENCY_BONUS
+            + 1e-9
+    }
+
+    /// Eq. 7 score of a prepared task against a candidate snapshot —
+    /// arithmetically identical to the reference scan matcher (checked by
+    /// `tests/perf_equivalence.rs`).
+    fn score_cand(&self, tv: &TaskView, cand: &Cand) -> f64 {
+        let load = cand.load_cache;
+        let model_part = cand
+            .model_decay
+            .iter()
+            .find(|(m, _)| *m == tv.model)
+            .map(|&(_, w)| w)
+            .unwrap_or(0.0);
+        let dot: f64 = tv
+            .unit_embed
+            .iter()
+            .zip(cand.embed_centroid.iter())
+            .map(|(&e, &c)| e * c)
+            .sum();
+        let raw_loc = W_MODEL * model_part + W_COS * dot.max(0.0);
+        let locality = raw_loc / (1.0 + raw_loc);
+        let mut s = self.w_hw * tv.hw_by_gpu[cand.gpu.index()]
+            + self.w_load * load
+            + self.w_locality * locality;
+        // Model-residency bonus: avoids Fig 3 switch stalls; uses the
+        // running estimate so within-slot packing stays model-coherent.
+        if cand.last_model == Some(tv.model) {
+            s += RESIDENCY_BONUS;
+        }
+        s
+    }
+
     /// Greedy matching of `tasks` (already routed to `region`) onto that
     /// region's accepting servers. Returns (assignments, overflow).
+    ///
+    /// Hot-path variant (§Perf tentpole): candidates live in a max-heap
+    /// keyed by a sound task-independent score bound, and each task pops
+    /// candidates in bound order, stopping as soon as the next bound
+    /// cannot beat the incumbent exact score — lazy re-evaluation instead
+    /// of a full rescan. After an assignment only the chosen candidate's
+    /// running estimates change, so only that one entry is re-keyed
+    /// (versioned entries; stale keys are discarded on pop). Produces the
+    /// same assignments as [`match_region_scan`], including tie-breaks.
     pub fn match_region(
         &self,
         fleet: &Fleet,
@@ -148,143 +210,290 @@ impl MicroAllocator {
         }
         // Urgency order: deadline first, heavy tasks first on ties (§V-C2).
         tasks.sort_by(|a, b| a.urgency_key().partial_cmp(&b.urgency_key()).unwrap());
-
-        // Candidate snapshot with running estimates, plus an O(window)
-        // locality summary computed ONCE per candidate per slot instead of
-        // per (task, candidate) pair (§Perf optimization #2): Eq. 10
-        // factorizes as  wm * sum_j decay_j [model_j = m]
-        //              + wc * e_task . (sum_j decay_j e_j / |e_j|)
-        // so a per-model decayed weight map + a decayed embed centroid
-        // reproduce the score with one dot product per pair.
-        struct Est {
-            idx: usize,
-            util: f64,
-            backlog: f64,
-            lanes: f64,
-            last_model: Option<u32>,
-            /// (model, decayed weight) pairs — tiny, linear scan beats
-            /// hashing (§Perf optimization #3).
-            model_decay: Vec<(u32, f64)>,
-            embed_centroid: [f64; EMBED_DIM],
-            /// Cached Comp_load value; recomputed only when this
-            /// candidate's running estimates change (removes exp() from
-            /// the O(tasks x candidates) inner loop).
-            load_cache: f64,
+        let mut cands = snapshot_candidates(reg, now);
+        if cands.is_empty() {
+            return (assignments, tasks);
         }
-        let mut cands: Vec<Est> = reg
-            .servers
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.accepting(now))
-            .map(|(i, s)| {
-                let mut model_decay: Vec<(u32, f64)> = Vec::with_capacity(8);
-                let mut centroid = [0.0f64; EMBED_DIM];
-                for recent in &s.recent {
-                    let decay = (-LOCALITY_DECAY * (now - recent.timestamp).max(0.0)).exp();
-                    match model_decay.iter_mut().find(|(m, _)| *m == recent.model) {
-                        Some((_, w)) => *w += decay,
-                        None => model_decay.push((recent.model, decay)),
-                    }
-                    let norm = recent
-                        .embed
-                        .iter()
-                        .map(|&x| (x as f64) * (x as f64))
-                        .sum::<f64>()
-                        .sqrt()
-                        .max(1e-12);
-                    for (c, &e) in centroid.iter_mut().zip(recent.embed.iter()) {
-                        *c += decay * e as f64 / norm;
+        let slot_secs = 45.0;
+
+        let mut versions: Vec<u64> = vec![0; cands.len()];
+        let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::with_capacity(cands.len());
+        for (ci, cand) in cands.iter().enumerate() {
+            if cand.backlog <= SATURATION_BACKLOG {
+                heap.push(HeapEntry { bound: self.score_bound(cand), version: 0, ci });
+            }
+        }
+        let mut popped: Vec<HeapEntry> = Vec::with_capacity(cands.len());
+        for task in tasks {
+            let tv = TaskView::new(&task);
+            let mut best: Option<(usize, f64)> = None;
+            popped.clear();
+            // Fields are copied out of the peeked entry so the heap can
+            // be mutated inside the loop body.
+            while let Some(&HeapEntry { bound, version, ci }) = heap.peek() {
+                if version != versions[ci] {
+                    heap.pop(); // stale key from an earlier re-scoring
+                    continue;
+                }
+                if let Some((_, bs)) = best {
+                    if bound < bs {
+                        // No remaining candidate can beat the incumbent
+                        // (bound is sound); ties must still be popped so
+                        // the lowest-index winner matches the scan.
+                        break;
                     }
                 }
-                // Projected share of the upcoming window already taken by
-                // carryover work — the quantity the LB metric will measure,
-                // so equalizing it equalizes measured utilization.
-                let util = (s.backlog_secs(now) / 45.0).min(1.0);
-                let backlog = s.backlog_secs(now);
-                Est {
-                    idx: i,
-                    util,
-                    backlog,
-                    lanes: s.lanes() as f64,
-                    last_model: s.loaded_model,
-                    model_decay,
-                    embed_centroid: centroid,
-                    load_cache: (-Self::LOAD_SHARPNESS
-                        * (util + backlog / SATURATION_BACKLOG))
-                        .exp(),
+                let entry = heap.pop().unwrap();
+                let s = self.score_cand(&tv, &cands[ci]);
+                let better = match best {
+                    None => true,
+                    Some((bi, bs)) => s > bs || (s == bs && ci < bi),
+                };
+                if better {
+                    best = Some((ci, s));
                 }
-            })
-            .collect();
+                popped.push(entry);
+            }
+            match best {
+                Some((ci, _)) => {
+                    // Only the winner's running estimates changed: bump
+                    // its version and push a fresh key; every other
+                    // popped entry goes back untouched.
+                    apply_assignment(&mut cands[ci], &tv, slot_secs);
+                    versions[ci] += 1;
+                    for e in popped.drain(..) {
+                        if e.ci != ci {
+                            heap.push(e);
+                        }
+                    }
+                    if cands[ci].backlog <= SATURATION_BACKLOG {
+                        heap.push(HeapEntry {
+                            bound: self.score_bound(&cands[ci]),
+                            version: versions[ci],
+                            ci,
+                        });
+                    }
+                    assignments.push((task, region, cands[ci].idx));
+                }
+                None => {
+                    debug_assert!(popped.is_empty());
+                    overflow.push(task);
+                }
+            }
+        }
+        (assignments, overflow)
+    }
+
+    /// Reference full-rescan matcher: the pre-optimization algorithm,
+    /// kept as the equivalence oracle for [`match_region`] and as the
+    /// bench baseline (`benches/perf_hotpath.rs` reports the speedup).
+    /// Scores every unsaturated candidate for every task.
+    pub fn match_region_scan(
+        &self,
+        fleet: &Fleet,
+        region: usize,
+        mut tasks: Vec<Task>,
+        now: f64,
+    ) -> (Vec<(Task, usize, usize)>, Vec<Task>) {
+        let reg = &fleet.regions[region];
+        let mut assignments = Vec::with_capacity(tasks.len());
+        let mut overflow = Vec::new();
+        if reg.failed {
+            return (assignments, tasks);
+        }
+        tasks.sort_by(|a, b| a.urgency_key().partial_cmp(&b.urgency_key()).unwrap());
+        let mut cands = snapshot_candidates(reg, now);
         if cands.is_empty() {
             return (assignments, tasks);
         }
         let slot_secs = 45.0;
         for task in tasks {
+            let tv = TaskView::new(&task);
             let mut best: Option<(usize, f64)> = None;
-            for (ci, est) in cands.iter_mut().enumerate() {
-                if est.backlog > SATURATION_BACKLOG {
+            for (ci, cand) in cands.iter().enumerate() {
+                if cand.backlog > SATURATION_BACKLOG {
                     continue;
                 }
-                // Score with live running-load estimates replacing the
-                // stale snapshot inside Comp_load; locality from the
-                // precomputed per-candidate summary.
-                let load = est.load_cache;
-                let raw_loc = {
-                    let model_part = est
-                        .model_decay
-                        .iter()
-                        .find(|(m, _)| *m == task.model)
-                        .map(|&(_, w)| w)
-                        .unwrap_or(0.0);
-                    let e_norm = task
-                        .embed
-                        .iter()
-                        .map(|&x| (x as f64) * (x as f64))
-                        .sum::<f64>()
-                        .sqrt()
-                        .max(1e-12);
-                    let dot: f64 = task
-                        .embed
-                        .iter()
-                        .zip(est.embed_centroid.iter())
-                        .map(|(&e, &c)| e as f64 / e_norm * c)
-                        .sum();
-                    W_MODEL * model_part + W_COS * dot.max(0.0)
-                };
-                let locality = raw_loc / (1.0 + raw_loc);
-                let mut s = self.w_hw * Self::comp_hw(&task, &reg.servers[est.idx])
-                    + self.w_load * load
-                    + self.w_locality * locality;
-                // Model-residency bonus: avoids Fig 3 switch stalls; uses
-                // the running estimate so within-slot packing stays
-                // model-coherent.
-                if est.last_model == Some(task.model) {
-                    s += 0.10;
-                }
+                let s = self.score_cand(&tv, cand);
                 if best.map_or(true, |(_, b)| s > b) {
                     best = Some((ci, s));
                 }
             }
             match best {
                 Some((ci, _)) => {
-                    let eff = reg.servers[cands[ci].idx].effective_service_secs(&task);
-                    let est = &mut cands[ci];
-                    // Busy-seconds-accurate running estimates: the paper's
-                    // "running estimates of server utilization and queue
-                    // lengths" (§V-C2), in the same units the LB metric
-                    // measures.
-                    est.util = (est.util + eff / (est.lanes * slot_secs)).min(1.0);
-                    est.backlog += eff / est.lanes;
-                    est.load_cache = (-Self::LOAD_SHARPNESS
-                        * (est.util + est.backlog / SATURATION_BACKLOG))
-                        .exp();
-                    est.last_model = Some(task.model);
-                    assignments.push((task, region, est.idx));
+                    apply_assignment(&mut cands[ci], &tv, slot_secs);
+                    assignments.push((task, region, cands[ci].idx));
                 }
                 None => overflow.push(task),
             }
         }
         (assignments, overflow)
+    }
+}
+
+/// Candidate snapshot with running estimates, plus an O(window) locality
+/// summary computed ONCE per candidate per slot instead of per
+/// (task, candidate) pair: Eq. 10 factorizes as
+/// `wm * sum_j decay_j [model_j = m] + wc * e_task . (sum_j decay_j e_j / |e_j|)`,
+/// so a per-model decayed weight map + a decayed embed centroid reproduce
+/// the score with one dot product per pair. Shared by the lazy and scan
+/// matchers so their arithmetic is identical.
+struct Cand {
+    /// Server index within the region.
+    idx: usize,
+    gpu: GpuType,
+    util: f64,
+    backlog: f64,
+    lanes: f64,
+    last_model: Option<u32>,
+    /// (model, decayed weight) pairs — tiny, linear scan beats hashing.
+    model_decay: Vec<(u32, f64)>,
+    embed_centroid: [f64; EMBED_DIM],
+    /// Cached Comp_load value; recomputed only when this candidate's
+    /// running estimates change (removes exp() from the inner loop).
+    load_cache: f64,
+    /// Largest decayed same-model weight (locality bound input).
+    max_model_w: f64,
+    /// ||embed_centroid|| (Cauchy–Schwarz cap on the cosine term).
+    centroid_norm: f64,
+}
+
+fn snapshot_candidates(reg: &Region, now: f64) -> Vec<Cand> {
+    reg.servers
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.accepting(now))
+        .map(|(i, s)| {
+            let mut model_decay: Vec<(u32, f64)> = Vec::with_capacity(8);
+            let mut centroid = [0.0f64; EMBED_DIM];
+            for recent in &s.recent {
+                let decay = (-LOCALITY_DECAY * (now - recent.timestamp).max(0.0)).exp();
+                match model_decay.iter_mut().find(|(m, _)| *m == recent.model) {
+                    Some((_, w)) => *w += decay,
+                    None => model_decay.push((recent.model, decay)),
+                }
+                let norm = recent
+                    .embed
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt()
+                    .max(1e-12);
+                for (c, &e) in centroid.iter_mut().zip(recent.embed.iter()) {
+                    *c += decay * e as f64 / norm;
+                }
+            }
+            // Projected share of the upcoming window already taken by
+            // carryover work — the quantity the LB metric will measure,
+            // so equalizing it equalizes measured utilization. The
+            // backlog is computed once and `util` derived from it.
+            let backlog = s.backlog_secs(now);
+            let util = (backlog / 45.0).min(1.0);
+            let max_model_w = model_decay.iter().map(|&(_, w)| w).fold(0.0, f64::max);
+            let centroid_norm = centroid.iter().map(|c| c * c).sum::<f64>().sqrt();
+            Cand {
+                idx: i,
+                gpu: s.gpu,
+                util,
+                backlog,
+                lanes: s.lanes() as f64,
+                last_model: s.loaded_model,
+                model_decay,
+                embed_centroid: centroid,
+                load_cache: (-MicroAllocator::LOAD_SHARPNESS
+                    * (util + backlog / SATURATION_BACKLOG))
+                    .exp(),
+                max_model_w,
+                centroid_norm,
+            }
+        })
+        .collect()
+}
+
+/// Per-task precomputation hoisted out of the candidate loop: Eq. 8
+/// hardware compatibility and the Eq. 8-penalized effective service time
+/// depend only on (GpuType, task), so both are evaluated once per task
+/// against the 5-entry GPU catalog instead of once per candidate; the
+/// task embedding is normalized once for the Eq. 10 dot product.
+struct TaskView {
+    model: u32,
+    /// Eq. 8 `Comp_hw` by `GpuType::index()`.
+    hw_by_gpu: [f64; N_GPU_TYPES],
+    /// `Server::effective_service_secs` by `GpuType::index()`.
+    eff_by_gpu: [f64; N_GPU_TYPES],
+    /// `task.embed / ||task.embed||` widened to f64.
+    unit_embed: [f64; EMBED_DIM],
+}
+
+impl TaskView {
+    fn new(task: &Task) -> TaskView {
+        let mut hw_by_gpu = [0.0; N_GPU_TYPES];
+        let mut eff_by_gpu = [0.0; N_GPU_TYPES];
+        for (k, &gpu) in ALL_GPUS.iter().enumerate() {
+            let compute = (gpu.compute_tflops() / task.compute_demand_tflops).min(1.0);
+            let memory = (gpu.memory_gb() / task.memory_demand_gb).min(1.0);
+            let optimal = gpu.optimal_for(task.class);
+            let type_match = if optimal { 1.0 } else { 0.5 };
+            hw_by_gpu[k] = compute * memory * type_match;
+            let penalty = if optimal { 1.0 } else { 1.25 };
+            eff_by_gpu[k] = task.service_secs * gpu.speed_factor(task.class) * penalty;
+        }
+        let e_norm = task
+            .embed
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+            .max(1e-12);
+        let mut unit_embed = [0.0f64; EMBED_DIM];
+        for (u, &e) in unit_embed.iter_mut().zip(task.embed.iter()) {
+            *u = e as f64 / e_norm;
+        }
+        TaskView { model: task.model, hw_by_gpu, eff_by_gpu, unit_embed }
+    }
+}
+
+/// Busy-seconds-accurate running-estimate update after an assignment: the
+/// paper's "running estimates of server utilization and queue lengths"
+/// (§V-C2), in the same units the LB metric measures.
+fn apply_assignment(cand: &mut Cand, tv: &TaskView, slot_secs: f64) {
+    let eff = tv.eff_by_gpu[cand.gpu.index()];
+    cand.util = (cand.util + eff / (cand.lanes * slot_secs)).min(1.0);
+    cand.backlog += eff / cand.lanes;
+    cand.load_cache = (-MicroAllocator::LOAD_SHARPNESS
+        * (cand.util + cand.backlog / SATURATION_BACKLOG))
+        .exp();
+    cand.last_model = Some(tv.model);
+}
+
+/// Max-heap entry ordered by score bound; ties prefer the lower candidate
+/// index, matching the scan matcher's first-wins tie-break.
+struct HeapEntry {
+    bound: f64,
+    version: u64,
+    ci: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.bound
+            .partial_cmp(&other.bound)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.ci.cmp(&self.ci))
     }
 }
 
@@ -431,6 +640,34 @@ mod tests {
         let (assigned, _) = m.match_region(&f, 1, vec![t], 0.0);
         assert_eq!(assigned.len(), 1);
         assert_eq!(assigned[0].2, 0, "task not routed to the model-resident server");
+    }
+
+    #[test]
+    fn lazy_matcher_equals_scan_matcher() {
+        // The bound-heap matcher must reproduce the reference full-rescan
+        // matcher exactly: same assignments, same order, same overflow.
+        let m = micro();
+        let f = fleet();
+        for seed in [3u64, 7, 11] {
+            let mut wl = DiurnalWorkload::new(WorkloadConfig::default(), 12, seed);
+            let ts = wl.slot_tasks(0, 45.0);
+            for region in 0..3 {
+                let batch: Vec<Task> =
+                    ts.iter().filter(|t| t.origin == region).cloned().collect();
+                let (a1, o1) = m.match_region(&f, region, batch.clone(), 0.0);
+                let (a2, o2) = m.match_region_scan(&f, region, batch, 0.0);
+                assert_eq!(a1.len(), a2.len());
+                assert_eq!(o1.len(), o2.len());
+                for ((ta, ra, sa), (tb, rb, sb)) in a1.iter().zip(a2.iter()) {
+                    assert_eq!(ta.id, tb.id);
+                    assert_eq!(ra, rb);
+                    assert_eq!(sa, sb);
+                }
+                for (x, y) in o1.iter().zip(o2.iter()) {
+                    assert_eq!(x.id, y.id);
+                }
+            }
+        }
     }
 
     #[test]

@@ -64,6 +64,7 @@ impl TortaScheduler {
             cfg.sinkhorn_eps,
             cfg.sinkhorn_iters,
         );
+        macro_alloc.sinkhorn_tol = cfg.sinkhorn_tol;
         macro_alloc.reactive = mode == TortaMode::Reactive;
         let artifacts = if mode == TortaMode::Full && cfg.use_pjrt {
             let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
@@ -202,13 +203,18 @@ impl Scheduler for TortaScheduler {
     ) -> SlotPlan {
         let r = self.r;
 
+        // One pass over the fleet computes every aggregate the read-mostly
+        // prelude below needs (predictor utils, OT capacity marginal,
+        // policy features); the cache is invalidated as soon as the state
+        // manager flips power states (§Perf fleet caches).
+        fleet.refresh_aggregates(now);
+
         // --- Observations for the predictor -----------------------------
         let mut arrivals = vec![0.0; r];
         for t in &tasks {
             arrivals[t.origin] += 1.0;
         }
-        let utils: Vec<f64> =
-            fleet.regions.iter().map(|reg| reg.mean_utilization(now)).collect();
+        let utils = fleet.mean_utilizations(now);
         self.predictor.observe(&utils, &self.queue_estimate, &arrivals);
 
         // --- Phase 1: macro allocation (Algorithm 1 lines 1-5) ----------

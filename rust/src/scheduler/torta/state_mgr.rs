@@ -53,6 +53,11 @@ pub fn apply(
     now: f64,
     policy: &StatePolicy,
 ) -> Transitions {
+    // Power events change the capacity/utilization aggregates the macro
+    // layer reads; drop the per-slot cache before mutating (§Perf fleet
+    // caches — the scheduler's read-mostly prelude has already consumed
+    // it by the time activation runs).
+    fleet.invalidate_aggregates();
     let reg = &mut fleet.regions[region];
     if reg.failed {
         return Transitions::default();

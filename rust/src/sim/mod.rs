@@ -159,7 +159,9 @@ impl Simulation {
 
         let plan = scheduler.schedule(&self.ctx, &mut self.fleet, tasks, slot, now);
 
-        // Execute assignments.
+        // Execute assignments. Assignment mutates lane state, so any
+        // per-slot fleet aggregates cached during scheduling are stale.
+        self.fleet.invalidate_aggregates();
         for (task, region, server_idx) in plan.assignments {
             let reg = &mut self.fleet.regions[region];
             if reg.failed || server_idx >= reg.servers.len() {
@@ -220,14 +222,22 @@ impl Simulation {
         }
         self.buffered = plan.buffered;
 
-        // Slot-level metrics + energy in one pass over the fleet, using
-        // time-averaged (busy-lane-seconds) utilization for the slot.
+        // Slot-level metrics + energy + operational counters in ONE pass
+        // over the fleet, using time-averaged (busy-lane-seconds)
+        // utilization for the slot. Folding the counter aggregation into
+        // this mandatory sweep removes the extra per-slot full-fleet
+        // `counters()` scan the engine used to make (§Perf incremental
+        // counters).
         metrics.record_alloc(&plan.alloc);
         let mut snapshot = Vec::new();
         let mut dollars = 0.0;
+        let mut sw: u64 = 0;
+        let mut act: u64 = 0;
         let slot_secs = self.ctx.slot_secs;
         for region in &mut self.fleet.regions {
             for s in &mut region.servers {
+                sw += s.model_switches;
+                act += s.activations;
                 let util_avg = s.drain_slot_utilization(slot_end, slot_secs);
                 let draw = match s.state {
                     crate::cluster::ServerState::Cold => 0.0,
@@ -256,7 +266,7 @@ impl Simulation {
 
         // Operational overhead from transition counters (Fig 9 right axis):
         // model switches + activations, weighted by their Fig 3 stage time.
-        let (sw, act) = self.counters();
+        // `sw`/`act` were accumulated in the metering pass above.
         let d_sw = (sw - self.prev_switches) as f64;
         let d_act = (act - self.prev_activations) as f64;
         self.prev_switches = sw;

@@ -35,9 +35,21 @@ impl Topology {
             "polska" => Ok(Self::polska()),
             "gabriel" => Ok(Self::gabriel()),
             "cost2" => Ok(Self::cost2()),
-            other => anyhow::bail!(
-                "unknown topology {other:?}; expected one of {TOPOLOGY_NAMES:?}"
-            ),
+            other => {
+                // Scale-benchmark family: "synthetic-<n>" for any n >= 2
+                // (e.g. synthetic-64, synthetic-128).
+                if let Some(rest) = other.strip_prefix("synthetic-") {
+                    if let Ok(n) = rest.parse::<usize>() {
+                        if n >= 2 {
+                            return Ok(Self::synthetic(n));
+                        }
+                    }
+                }
+                anyhow::bail!(
+                    "unknown topology {other:?}; expected one of {TOPOLOGY_NAMES:?} \
+                     or synthetic-<n>"
+                )
+            }
         }
     }
 
@@ -111,6 +123,16 @@ impl Topology {
     /// Cost2: 32 nodes, 20 Gbps, mean latency 150 ms (generated).
     pub fn cost2() -> Topology {
         Self::generated("cost2", 32, 20.0, 150.0, 0xC0572)
+    }
+
+    /// Synthetic scale topology with `n` regions: the same deterministic
+    /// geometric construction as Gabriel/Cost2, sized for the coordinator
+    /// scale benchmarks (R=32/64/128 — beyond the paper's Table I). 20
+    /// Gbps, 100 ms mean latency, seed derived from `n` so every size is
+    /// reproducible and distinct.
+    pub fn synthetic(n: usize) -> Topology {
+        assert!(n >= 2, "synthetic topology needs at least 2 regions");
+        Self::generated(&format!("synthetic-{n}"), n, 20.0, 100.0, 0x5CA1E ^ ((n as u64) << 8))
     }
 
     /// Deterministic geometric graph: uniform points on the unit square,
@@ -326,5 +348,24 @@ mod tests {
     #[test]
     fn by_name_rejects_unknown() {
         assert!(Topology::by_name("geant").is_err());
+        assert!(Topology::by_name("synthetic-").is_err());
+        assert!(Topology::by_name("synthetic-1").is_err());
+        assert!(Topology::by_name("synthetic-abc").is_err());
+    }
+
+    #[test]
+    fn synthetic_scales_and_roundtrips_by_name() {
+        for n in [32usize, 64, 128] {
+            let t = Topology::synthetic(n);
+            assert_eq!(t.n, n);
+            assert_eq!(t.name, format!("synthetic-{n}"));
+            assert!((t.mean_latency_ms() - 100.0).abs() < 1e-6);
+            let via_name = Topology::by_name(&format!("synthetic-{n}")).unwrap();
+            assert_eq!(via_name.latency_matrix(), t.latency_matrix());
+        }
+        // Distinct sizes are distinct graphs, deterministically.
+        let a = Topology::synthetic(64);
+        let b = Topology::synthetic(64);
+        assert_eq!(a.latency_matrix(), b.latency_matrix());
     }
 }

@@ -4,6 +4,12 @@
 //! [`BenchSuite`], register cases, and print paper-style rows. Warmup +
 //! repeated timed iterations with mean/std/median; results can also be
 //! dumped as JSON for the report pipeline.
+//!
+//! [`BenchSuite::save`] additionally maintains a `BENCH_<stem>.json`
+//! baseline in the working directory: when one exists from a previous run,
+//! a delta column (old -> new mean, speedup factor) is printed for every
+//! matching case before the baseline is overwritten — the before/after
+//! record for perf work.
 
 use std::time::{Duration, Instant};
 
@@ -137,7 +143,9 @@ impl BenchSuite {
         root
     }
 
-    /// Write results JSON under `results/` (created on demand).
+    /// Write results JSON under `results/` (created on demand), print the
+    /// delta table against the previously saved `BENCH_<stem>.json`
+    /// baseline when one exists, then refresh that baseline.
     pub fn save(&self, file_stem: &str) {
         let dir = std::path::Path::new("results");
         if std::fs::create_dir_all(dir).is_ok() {
@@ -148,7 +156,63 @@ impl BenchSuite {
                 println!("  (saved results/{file_stem}.json)");
             }
         }
+        let baseline = std::path::PathBuf::from(format!("BENCH_{file_stem}.json"));
+        if let Some(base) = load_baseline(&baseline) {
+            self.print_deltas(&base, &baseline);
+        }
+        if let Err(e) = std::fs::write(&baseline, self.to_json().to_string_pretty()) {
+            eprintln!("warn: could not write baseline {baseline:?}: {e}");
+        } else {
+            println!("  (baseline updated: {})", baseline.display());
+        }
     }
+
+    /// Delta column vs a prior run: old mean -> new mean and the speedup
+    /// factor, per case whose name matches the baseline.
+    fn print_deltas(&self, base: &[(String, f64)], path: &std::path::Path) {
+        let mut any = false;
+        for r in &self.results {
+            let Some((_, old_mean)) = base.iter().find(|(n, _)| *n == r.name) else {
+                continue;
+            };
+            if !any {
+                println!("  -- delta vs {}:", path.display());
+                any = true;
+            }
+            let new_mean = r.mean.as_secs_f64();
+            let ratio = old_mean / new_mean.max(1e-12);
+            let verdict = if ratio >= 1.0 {
+                format!("{ratio:.2}x faster")
+            } else {
+                format!("{:.2}x slower", 1.0 / ratio.max(1e-12))
+            };
+            println!(
+                "     {:<41} {:>11.3?} -> {:>11.3?}  ({verdict})",
+                r.name,
+                Duration::from_secs_f64(*old_mean),
+                Duration::from_secs_f64(new_mean),
+            );
+        }
+        if !any {
+            println!("  -- baseline {} has no matching cases", path.display());
+        }
+    }
+}
+
+/// Read `(name, mean_s)` rows from a previously saved suite JSON; `None`
+/// when the file is absent or unparseable (first run, corrupt file).
+fn load_baseline(path: &std::path::Path) -> Option<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let json = Json::parse(&text).ok()?;
+    let timings = json.get("timings")?.as_arr()?;
+    Some(
+        timings
+            .iter()
+            .filter_map(|t| {
+                Some((t.get("name")?.as_str()?.to_string(), t.get("mean_s")?.as_f64()?))
+            })
+            .collect(),
+    )
 }
 
 #[cfg(test)]
@@ -163,6 +227,26 @@ mod tests {
         assert_eq!(calls, 7); // warmup + iters
         assert_eq!(res.iters, 5);
         assert!(res.mean >= Duration::ZERO);
+    }
+
+    #[test]
+    fn baseline_loader_reads_saved_suite_shape() {
+        let mut s = BenchSuite::new("baseline-shape");
+        s.time("case-a", &Bencher::new(0, 2), || {});
+        s.time("case-b", &Bencher::new(0, 2), || {});
+        let dir = std::env::temp_dir().join("torta_bench_baseline");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        std::fs::write(&path, s.to_json().to_string_pretty()).unwrap();
+        let base = load_baseline(&path).unwrap();
+        assert_eq!(base.len(), 2);
+        assert_eq!(base[0].0, "case-a");
+        assert!(base[0].1 >= 0.0);
+        // Absent / corrupt files degrade to None, not a panic.
+        assert!(load_baseline(&dir.join("nope.json")).is_none());
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(load_baseline(&path).is_none());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

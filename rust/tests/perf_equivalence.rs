@@ -1,0 +1,214 @@
+//! Regression suite for the coordinator hot-path overhaul (§Perf PR):
+//!
+//! * warm-started Sinkhorn must match cold-start transport cost on a
+//!   drifting 20-slot marginal sequence (the temporal-coherence trick must
+//!   not change the answer);
+//! * early exit must never terminate above the configured tolerance;
+//! * the lazy bound-heap micro matcher must reproduce the reference
+//!   full-rescan matcher assignment-for-assignment;
+//! * every scheduler must produce bit-identical `SlotPlan`s for a fixed
+//!   seed (determinism preserved across the refactor).
+
+use torta::cluster::Fleet;
+use torta::config::{ExperimentConfig, WorkloadConfig};
+use torta::ot::{self, SinkhornSolver};
+use torta::power::PriceTable;
+use torta::scheduler::torta::micro::MicroAllocator;
+use torta::sim::{topo_salt, Simulation};
+use torta::topology::Topology;
+use torta::util::prop;
+use torta::util::rng::Rng;
+use torta::workload::{ArrivalProcess, DiurnalWorkload, Task};
+
+/// Deterministic drifting marginal: a base simplex nudged by a smooth
+/// per-slot perturbation, renormalized.
+fn drifted(base: &[f64], slot: usize, phase: f64) -> Vec<f64> {
+    let raw: Vec<f64> = base
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| (m + 0.02 * (slot as f64 * 0.3 + i as f64 * phase).sin()).max(1e-4))
+        .collect();
+    let s: f64 = raw.iter().sum();
+    raw.iter().map(|x| x / s).collect()
+}
+
+#[test]
+fn warm_start_matches_cold_start_on_drifting_sequence() {
+    let r = 12;
+    let mut rng = Rng::seeded(21);
+    let cost = prop::matrix(&mut rng, r, r, 0.0, 1.0);
+    let base_mu = prop::simplex(&mut rng, r);
+    let base_nu = prop::simplex(&mut rng, r);
+    let max_iters = 100_000;
+    let mut warm = SinkhornSolver::new(&cost, r, 0.05, 1e-7, max_iters);
+    let mut warm_iters_total = 0usize;
+    let mut cold_iters_total = 0usize;
+    for slot in 0..20 {
+        let mu = drifted(&base_mu, slot, 0.7);
+        let nu = drifted(&base_nu, slot, 1.3);
+        let plan_warm = warm.solve(&mu, &nu).to_vec();
+        assert!(warm.last_iters < max_iters, "slot {slot}: warm solve did not converge");
+        warm_iters_total += warm.last_iters;
+        let mut cold = SinkhornSolver::new(&cost, r, 0.05, 1e-7, max_iters);
+        let plan_cold = cold.solve(&mu, &nu).to_vec();
+        cold_iters_total += cold.last_iters;
+        let cw = ot::transport_cost(&cost, &plan_warm);
+        let cc = ot::transport_cost(&cost, &plan_cold);
+        assert!(
+            (cw - cc).abs() < 1e-6,
+            "slot {slot}: warm transport cost {cw} vs cold {cc}"
+        );
+    }
+    // The whole point of warm starting: strictly fewer total iterations.
+    assert!(
+        warm_iters_total < cold_iters_total,
+        "warm {warm_iters_total} !< cold {cold_iters_total}"
+    );
+}
+
+#[test]
+fn early_exit_never_terminates_above_tolerance() {
+    let tol = 1e-6;
+    let max_iters = 5000;
+    let mut rng = Rng::seeded(33);
+    let mut early_exits = 0;
+    for case in 0..25 {
+        let r = 2 + rng.below(20);
+        let cost = prop::matrix(&mut rng, r, r, 0.0, 1.0);
+        let mu = prop::simplex(&mut rng, r);
+        let nu = prop::simplex(&mut rng, r);
+        let mut solver = SinkhornSolver::new(&cost, r, 0.05, tol, max_iters);
+        let plan = solver.solve(&mu, &nu).to_vec();
+        if solver.last_iters < max_iters {
+            early_exits += 1;
+            assert!(
+                solver.last_marginal_err <= tol,
+                "case {case}: early exit at {} iters with err {}",
+                solver.last_iters,
+                solver.last_marginal_err
+            );
+            // And the reported error is the real row-marginal error of the
+            // returned plan (small slack for summation-order rounding).
+            let mut row_err = 0.0;
+            for i in 0..r {
+                let row: f64 = plan[i * r..(i + 1) * r].iter().sum();
+                row_err += (row - mu[i]).abs();
+            }
+            assert!(
+                row_err <= tol * 1.01 + 1e-12,
+                "case {case}: plan row error {row_err} above tol {tol}"
+            );
+        }
+    }
+    assert!(early_exits > 0, "no case early-exited; tolerance test is vacuous");
+}
+
+#[test]
+fn lazy_matcher_equals_scan_matcher_across_slots_and_load() {
+    let topo = Topology::abilene();
+    let prices = PriceTable::for_regions(topo.n, 9);
+    let fleet = Fleet::build(&topo, &prices, 9);
+    let micro = MicroAllocator::new(1.0, 0.25, 0.6, 0.15);
+    // Default and high-rate (saturating → exercises the overflow path).
+    for (wseed, wcfg) in [(5u64, WorkloadConfig::default()), (6, WorkloadConfig::high_rate())] {
+        let mut wl = DiurnalWorkload::new(wcfg, topo.n, wseed);
+        for slot in 0..4 {
+            let now = slot as f64 * 45.0;
+            let tasks = wl.slot_tasks(slot, 45.0);
+            for region in 0..topo.n {
+                let batch: Vec<Task> =
+                    tasks.iter().filter(|t| t.origin == region).cloned().collect();
+                if batch.is_empty() {
+                    continue;
+                }
+                let (a_lazy, o_lazy) = micro.match_region(&fleet, region, batch.clone(), now);
+                let (a_scan, o_scan) = micro.match_region_scan(&fleet, region, batch, now);
+                assert_eq!(a_lazy.len(), a_scan.len(), "region {region} slot {slot}");
+                for (k, ((tl, rl, sl), (ts, rs, ss))) in
+                    a_lazy.iter().zip(a_scan.iter()).enumerate()
+                {
+                    assert_eq!(tl.id, ts.id, "assignment {k} region {region}");
+                    assert_eq!(rl, rs);
+                    assert_eq!(sl, ss, "task {} routed to different server", tl.id);
+                }
+                assert_eq!(o_lazy.len(), o_scan.len());
+                for (x, y) in o_lazy.iter().zip(o_scan.iter()) {
+                    assert_eq!(x.id, y.id);
+                }
+            }
+        }
+    }
+}
+
+/// Drive a scheduler slot-by-slot (mirroring the engine's tick/schedule/
+/// execute loop) and collect a compact fingerprint of every `SlotPlan`.
+fn run_plans(name: &str, slots: usize) -> Vec<(Vec<(u64, usize, usize)>, Vec<f64>)> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = name.into();
+    cfg.slots = slots;
+    cfg.torta.use_pjrt = false;
+    let mut sim = Simulation::new(cfg.clone()).unwrap();
+    let mut wl = DiurnalWorkload::new(
+        cfg.workload.clone(),
+        sim.ctx.topo.n,
+        cfg.seed ^ topo_salt(&cfg.topology),
+    );
+    let mut sched = torta::scheduler::build(name, &sim.ctx, &cfg).unwrap();
+    let mut plans = Vec::with_capacity(slots);
+    for slot in 0..slots {
+        let now = slot as f64 * cfg.slot_secs;
+        for region in &mut sim.fleet.regions {
+            for s in &mut region.servers {
+                s.tick_state(now);
+            }
+        }
+        let tasks = wl.slot_tasks(slot, cfg.slot_secs);
+        let plan = sched.schedule(&sim.ctx, &mut sim.fleet, tasks, slot, now);
+        sim.fleet.invalidate_aggregates();
+        for (task, region, si) in &plan.assignments {
+            sim.fleet.regions[*region].servers[*si].assign(task, now);
+        }
+        let fp: Vec<(u64, usize, usize)> =
+            plan.assignments.iter().map(|(t, r, s)| (t.id, *r, *s)).collect();
+        plans.push((fp, plan.alloc));
+    }
+    plans
+}
+
+#[test]
+fn tol_zero_macro_path_is_bit_identical_to_pre_refactor_solver() {
+    // The pre-PR macro layer solved `ot::sinkhorn(cost, mu, nu, eps,
+    // iters)` cold every slot. That free function is unchanged, so it is
+    // the before-refactor oracle: with `sinkhorn_tol = 0` the new
+    // warm-started solver path must reproduce it bit-for-bit across a
+    // slot sequence (no early exit, cold start per slot).
+    use torta::scheduler::torta::macro_alloc::MacroAllocator;
+    let r = 12;
+    let mut rng = Rng::seeded(77);
+    let cost = prop::matrix(&mut rng, r, r, 0.0, 1.0);
+    let base_mu = prop::simplex(&mut rng, r);
+    let base_nu = prop::simplex(&mut rng, r);
+    let mut m = MacroAllocator::new(r, 0.6, 0.5, 0.05, 50);
+    m.sinkhorn_tol = 0.0;
+    for slot in 0..10 {
+        let mu = drifted(&base_mu, slot, 0.9);
+        let nu = drifted(&base_nu, slot, 1.7);
+        let got = m.ot_probabilities(&cost, &mu, &nu, None);
+        let want = ot::row_normalize(&ot::sinkhorn(&cost, &mu, &nu, 0.05, 50), r);
+        assert_eq!(got, want, "slot {slot}: tol=0 path diverged from pre-refactor solver");
+    }
+}
+
+#[test]
+fn all_schedulers_produce_bit_identical_slot_plans() {
+    for name in ["torta-native", "reactive", "skylb", "sdib", "rr"] {
+        let a = run_plans(name, 8);
+        let b = run_plans(name, 8);
+        assert_eq!(a.len(), b.len());
+        for (slot, (pa, pb)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(pa.0, pb.0, "{name}: assignments differ at slot {slot}");
+            // Bitwise allocation-matrix equality, not approximate.
+            assert_eq!(pa.1, pb.1, "{name}: alloc matrix differs at slot {slot}");
+        }
+    }
+}
