@@ -28,6 +28,23 @@ use torta::util::rng::Rng;
 use torta::workload::{ArrivalProcess, DiurnalWorkload};
 
 fn main() {
+    // `--max-r N` caps the fleet-scale sweep (CI smoke runs R<=32 to keep
+    // the job short; local runs default to the full R=128 sweep).
+    let args: Vec<String> = std::env::args().collect();
+    let mut max_r = usize::MAX;
+    let mut i = 1;
+    while i < args.len() {
+        if args[i] == "--max-r" && i + 1 < args.len() {
+            max_r = args[i + 1].parse().unwrap_or_else(|_| {
+                eprintln!("perf_hotpath: --max-r expects an integer, got {:?}", args[i + 1]);
+                std::process::exit(2);
+            });
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+
     let mut suite = BenchSuite::new("Perf — coordinator hot paths");
     let bencher = Bencher::new(3, 15);
 
@@ -146,6 +163,10 @@ fn main() {
     // decision time is measured; assignment execution happens between
     // timed sections so lane state evolves realistically across slots.
     for (r, fleet_scale) in [(32usize, 2.0f64), (64, 4.0), (128, 8.0)] {
+        if r > max_r {
+            suite.note(&format!("scale R={r} skipped (--max-r {max_r})"));
+            continue;
+        }
         let topo = Topology::synthetic(r);
         let prices = PriceTable::for_regions(r, 7);
         let fleet = Fleet::build_scaled(&topo, &prices, 7, fleet_scale);

@@ -43,6 +43,10 @@ pub struct AssignOutcome {
     /// Energy charged for the switch, joules (0 if none).
     pub switch_energy_j: f64,
     pub service_secs: f64,
+    /// Lane the task was queued on (for reservation cancellation).
+    pub lane: usize,
+    /// That lane's free time before this reservation (the refund value).
+    pub lane_prev_free: f64,
 }
 
 pub const RECENT_WINDOW: usize = 16;
@@ -247,7 +251,38 @@ impl Server {
             switched_model: switched,
             switch_energy_j: energy,
             service_secs: service,
+            lane: lane_idx,
+            lane_prev_free: lane_free,
         }
+    }
+
+    /// Cancel a queued reservation previously made by
+    /// [`assign`](Self::assign) — the engine's `Migrate` support. Succeeds
+    /// only while the reservation is still the lane's tail (nothing queued
+    /// behind it on that lane), restoring the lane's previous free time and
+    /// removing the work interval. Model residency, the locality window and
+    /// the switch counters are deliberately *not* rewound: the speculative
+    /// switch already happened when the plan was made, and its cost stands.
+    pub fn cancel_reservation(
+        &mut self,
+        lane: usize,
+        start: f64,
+        finish: f64,
+        prev_free: f64,
+    ) -> bool {
+        if lane >= self.lanes_free_at.len() || self.lanes_free_at[lane] != finish {
+            return false;
+        }
+        self.lanes_free_at[lane] = prev_free;
+        if let Some(pos) = self
+            .work_intervals
+            .iter()
+            .rposition(|&(s, f)| s == start && f == finish)
+        {
+            self.work_intervals.remove(pos);
+        }
+        self.tasks_served = self.tasks_served.saturating_sub(1);
+        true
     }
 
     /// Busy lane-seconds that actually ran inside the window
@@ -383,6 +418,31 @@ mod tests {
             assert_eq!(util, s.utilization(now));
             assert_eq!(backlog, s.backlog_secs(now));
         }
+    }
+
+    #[test]
+    fn cancel_reservation_refunds_lane_tail_only() {
+        let mut s = Server::new(0, 0, GpuType::T4, true); // 3 lanes
+        s.loaded_model = Some(0);
+        let t = task_at(0.0, 0);
+        for _ in 0..3 {
+            s.assign(&t, 0.0); // all lanes busy
+        }
+        let before = s.backlog_secs(0.0);
+        let a = s.assign(&t, 0.0); // queued: its lane's tail
+        assert!(s.cancel_reservation(a.lane, a.start_secs, a.finish_secs, a.lane_prev_free));
+        assert!((s.backlog_secs(0.0) - before).abs() < 1e-9);
+        // Double-cancel fails: the reservation is gone.
+        assert!(!s.cancel_reservation(a.lane, a.start_secs, a.finish_secs, a.lane_prev_free));
+        // Queue depth 2 on one lane: the older reservation is no longer
+        // the tail and cannot be refunded; the newer one still can.
+        let b = s.assign(&t, 0.0);
+        s.assign(&t, 0.0);
+        s.assign(&t, 0.0);
+        let e = s.assign(&t, 0.0);
+        assert_eq!(e.lane, b.lane);
+        assert!(!s.cancel_reservation(b.lane, b.start_secs, b.finish_secs, b.lane_prev_free));
+        assert!(s.cancel_reservation(e.lane, e.start_secs, e.finish_secs, e.lane_prev_free));
     }
 
     #[test]

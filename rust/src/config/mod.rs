@@ -97,6 +97,12 @@ pub struct TortaConfig {
     /// Demand predictor accuracy in [0,1] for the Fig 12 sweep; 1.0 = use
     /// the trained predictor unperturbed.
     pub prediction_accuracy: f64,
+    /// Backlog-seconds threshold above which TORTA's micro layer emits
+    /// `Migrate` actions for queued-but-unstarted reservations (failed
+    /// source regions always trigger). 0 disables migration entirely —
+    /// the engine then accounts at assignment time, bit-identical to the
+    /// pre-action-stream engine.
+    pub migrate_backlog_secs: f64,
 }
 
 impl Default for TortaConfig {
@@ -116,6 +122,7 @@ impl Default for TortaConfig {
             cost_w_power: 1.0,
             cost_w_net: 0.15,
             prediction_accuracy: 1.0,
+            migrate_backlog_secs: 0.0,
         }
     }
 }
@@ -189,6 +196,10 @@ impl ExperimentConfig {
                     "torta.prediction_accuracy",
                     td.prediction_accuracy,
                 ),
+                migrate_backlog_secs: t.f64_or(
+                    "torta.migrate_backlog_secs",
+                    td.migrate_backlog_secs,
+                ),
             },
         }
     }
@@ -223,6 +234,9 @@ impl ExperimentConfig {
         if self.torta.sinkhorn_tol < 0.0 {
             errs.push("torta.sinkhorn_tol must be >= 0".to_string());
         }
+        if self.torta.migrate_backlog_secs < 0.0 {
+            errs.push("torta.migrate_backlog_secs must be >= 0".to_string());
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -255,6 +269,7 @@ mod tests {
             [torta]
             use_pjrt = false
             prediction_accuracy = 0.5
+            migrate_backlog_secs = 30.0
             "#,
         )
         .unwrap();
@@ -265,6 +280,8 @@ mod tests {
         assert!((c.workload.base_rate - 50.0).abs() < 1e-12);
         assert!(!c.torta.use_pjrt);
         assert!((c.torta.prediction_accuracy - 0.5).abs() < 1e-12);
+        assert!((c.torta.migrate_backlog_secs - 30.0).abs() < 1e-12);
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! Unified execution engine: the single owner of backlog, deadline
+//! expiry, failure handling, action execution and metering.
+//!
+//! Both execution surfaces — the virtual-time simulator (`crate::sim`,
+//! §VI-A: 480 slots x 45 s) and the real-time serving driver
+//! (`crate::serve`) — are thin drivers over [`ExecutionEngine::step`], so
+//! their task accounting is one code path and their `RunMetrics` agree
+//! bit-for-bit for the same config/seed (tested).
+//!
+//! Per slot the engine: applies failure events, ticks server warm-ups,
+//! feeds the previous slot's [`SlotOutcome`] back to the scheduler
+//! (closed loop), commits started reservations, offers the slot's
+//! arrivals plus FIFO-ordered backlog to the scheduler, executes the
+//! returned [`Action`] stream (assignments with admission control,
+//! buffering, migrations), meters energy + Fig 3 transition costs, and
+//! collects the paper's metrics. See `docs/API.md` for the lifecycle.
+//!
+//! Power accounting treats each simulated server as a *server cluster*
+//! (Fig 1's units are clusters): `POWER_SCALE` physical boards per cluster,
+//! which puts 6-hour totals in the paper's $K range.
+
+use crate::cluster::Fleet;
+use crate::config::ExperimentConfig;
+use crate::metrics::{RunMetrics, TaskRecord};
+use crate::power::{joules_to_dollars, server_energy_j, PriceTable};
+use crate::scheduler::{Action, ActionResult, Ctx, PendingView, Scheduler, SlotOutcome};
+use crate::topology::Topology;
+use crate::workload::{ArrivalProcess, FailureEvent, Task};
+
+/// Physical GPUs represented by one simulated server (cluster).
+pub const POWER_SCALE: f64 = 650.0;
+
+/// Boards that actually reload on a model switch (one replica group of the
+/// cluster, not the whole cluster).
+pub const SWITCH_POWER_SCALE: f64 = 32.0;
+
+/// Tasks whose start would lag arrival by more than this are dropped
+/// (client-timeout model; drives the Fig 4 completion-rate differences).
+pub const DROP_WAIT_SECS: f64 = 240.0;
+
+/// Operational seconds charged per executed migration — drain, context/KV
+/// transfer and queue re-entry — in the same Fig 9 accounting bucket as
+/// the 30 s model-switch and 100 s activation stages. Any model-switch
+/// energy the destination incurs is charged through the ordinary
+/// assignment path.
+pub const MIGRATION_SECS: f64 = 20.0;
+
+/// Deterministic per-topology seed salt (FNV-1a over the name).
+pub fn topo_salt(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The single shape of every dropped-task record the engine emits
+/// (expiry, invalid-target, admission): zero compute/network, honest wait.
+fn drop_record(task: &Task, served_region: usize, wait_secs: f64) -> TaskRecord {
+    TaskRecord {
+        task_id: task.id,
+        origin: task.origin,
+        served_region,
+        network_secs: 0.0,
+        wait_secs,
+        compute_secs: 0.0,
+        met_deadline: false,
+        dropped: true,
+    }
+}
+
+/// A queued-but-unstarted assignment the engine still owns: until its
+/// start time passes, the lane reservation can be refunded and the task
+/// moved by an [`Action::Migrate`]. The task record is deferred until the
+/// reservation commits so a migration can rewrite it (records are only
+/// deferred when migration is enabled; otherwise accounting is immediate,
+/// matching the pre-redesign engine exactly).
+struct PendingEntry {
+    task: Task,
+    region: usize,
+    server: usize,
+    lane: usize,
+    start: f64,
+    finish: f64,
+    prev_lane_free: f64,
+    record: TaskRecord,
+}
+
+/// Engine owning the world state for one run.
+pub struct ExecutionEngine {
+    pub ctx: Ctx,
+    pub fleet: Fleet,
+    pub cfg: ExperimentConfig,
+    pub failures: Vec<FailureEvent>,
+    buffered: Vec<Task>,
+    pending: Vec<PendingEntry>,
+    /// Pending-reservation tracking is active (torta.migrate_backlog_secs
+    /// > 0). When off, the engine records at assignment time and exposes
+    /// no migration candidates — bit-identical to the legacy engine.
+    migration_enabled: bool,
+    last_outcome: Option<SlotOutcome>,
+    /// Operational counters snapshot (for per-slot overhead deltas).
+    prev_switches: u64,
+    prev_activations: u64,
+}
+
+impl ExecutionEngine {
+    pub fn new(cfg: ExperimentConfig) -> anyhow::Result<ExecutionEngine> {
+        let topo = Topology::by_name(&cfg.topology)?;
+        // Fold the topology into the seed so equal-sized topologies still
+        // get distinct fleets/prices (Abilene and Polska are both R=12).
+        let seed = cfg.seed ^ topo_salt(&topo.name);
+        let prices = PriceTable::for_regions(topo.n, seed);
+        let fleet = Fleet::build(&topo, &prices, seed);
+        let migration_enabled = cfg.torta.migrate_backlog_secs > 0.0;
+        Ok(ExecutionEngine {
+            ctx: Ctx { topo, prices, slot_secs: cfg.slot_secs },
+            fleet,
+            cfg,
+            failures: Vec::new(),
+            buffered: Vec::new(),
+            pending: Vec::new(),
+            migration_enabled,
+            last_outcome: None,
+            prev_switches: 0,
+            prev_activations: 0,
+        })
+    }
+
+    pub fn with_failures(mut self, failures: Vec<FailureEvent>) -> ExecutionEngine {
+        self.failures = failures;
+        self
+    }
+
+    fn apply_failures(&mut self, slot: usize) {
+        for f in &self.failures {
+            let region = &mut self.fleet.regions[f.region];
+            let was = region.failed;
+            region.failed = f.active(slot);
+            if region.failed && !was {
+                // Knock servers cold: recovery requires re-warm-up.
+                for s in &mut region.servers {
+                    s.power_off();
+                }
+            }
+        }
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        let mut switches = 0;
+        let mut activations = 0;
+        for r in &self.fleet.regions {
+            for s in &r.servers {
+                switches += s.model_switches;
+                activations += s.activations;
+            }
+        }
+        (switches, activations)
+    }
+
+    /// Run the full horizon with `scheduler` over `workload`.
+    pub fn run<W: ArrivalProcess>(
+        &mut self,
+        workload: &mut W,
+        scheduler: &mut dyn Scheduler,
+    ) -> RunMetrics {
+        let mut metrics = RunMetrics::new(scheduler.name(), &self.cfg.topology);
+        let slots = self.cfg.slots;
+        for slot in 0..slots {
+            self.step(slot, workload, scheduler, &mut metrics);
+        }
+        self.finish(&mut metrics);
+        metrics
+    }
+
+    /// Finalize a run: flush still-pending reservations into `metrics` and
+    /// snapshot the operational counters. `run` calls this; slot-by-slot
+    /// drivers (serve, benches) call it after their last `step`.
+    pub fn finish(&mut self, metrics: &mut RunMetrics) {
+        self.flush_pending(metrics);
+        let (sw, act) = self.counters();
+        metrics.model_switches = sw;
+        metrics.server_activations = act;
+    }
+
+    /// Record every still-pending reservation (end-of-run flush).
+    pub fn flush_pending(&mut self, metrics: &mut RunMetrics) {
+        for e in self.pending.drain(..) {
+            metrics.record_task(&e.record);
+        }
+    }
+
+    /// One slot; public so examples can drive slot-by-slot (Fig 2/4).
+    pub fn step<W: ArrivalProcess>(
+        &mut self,
+        slot: usize,
+        workload: &mut W,
+        scheduler: &mut dyn Scheduler,
+        metrics: &mut RunMetrics,
+    ) {
+        let now = slot as f64 * self.ctx.slot_secs;
+        let slot_end = now + self.ctx.slot_secs;
+        self.apply_failures(slot);
+        for region in &mut self.fleet.regions {
+            for s in &mut region.servers {
+                s.tick_state(now);
+            }
+        }
+
+        // Closed loop: the previous slot's realized outcome reaches the
+        // scheduler before it plans this one.
+        if let Some(outcome) = self.last_outcome.take() {
+            scheduler.feedback(&outcome);
+        }
+
+        // Commit reservations that started: no longer migratable, their
+        // deferred records are final.
+        if !self.pending.is_empty() {
+            let mut keep = Vec::with_capacity(self.pending.len());
+            for e in self.pending.drain(..) {
+                if e.start <= now {
+                    metrics.record_task(&e.record);
+                } else {
+                    keep.push(e);
+                }
+            }
+            self.pending = keep;
+        }
+
+        let mut results: Vec<ActionResult> = Vec::new();
+
+        // Offer backlog ahead of new arrivals, FIFO-stable across slots:
+        // re-offered tasks go oldest-arrival first (id tiebreak) so a task
+        // repeatedly beaten to capacity cannot starve behind newer backlog.
+        let mut tasks = std::mem::take(&mut self.buffered);
+        tasks.sort_by(|a, b| {
+            a.arrival_secs
+                .partial_cmp(&b.arrival_secs)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        tasks.extend(workload.slot_tasks(slot, self.ctx.slot_secs));
+        // Expired buffered tasks are dropped (client gave up) with their
+        // honest accumulated wait.
+        tasks.retain(|t| {
+            if now > t.deadline_secs {
+                let wait = now - t.arrival_secs;
+                metrics.record_task(&drop_record(t, t.origin, wait));
+                results.push(ActionResult::Expired { task_id: t.id, wait_secs: wait });
+                false
+            } else {
+                true
+            }
+        });
+
+        let pending_views: Vec<PendingView> = self
+            .pending
+            .iter()
+            .map(|e| PendingView {
+                task_id: e.task.id,
+                region: e.region,
+                server: e.server,
+                start_secs: e.start,
+                service_secs: e.task.service_secs,
+                origin: e.task.origin,
+                arrival_secs: e.task.arrival_secs,
+                deadline_secs: e.task.deadline_secs,
+            })
+            .collect();
+
+        let decision =
+            scheduler.decide(&self.ctx, &mut self.fleet, tasks, &pending_views, slot, now);
+
+        // Execute the stream in order. Assignment mutates lane state, so
+        // any per-slot fleet aggregates cached during scheduling are stale.
+        self.fleet.invalidate_aggregates();
+        let mut migration_secs = 0.0;
+        for action in decision.actions {
+            match action {
+                Action::Assign { task, region, server } => {
+                    self.exec_assign(task, region, server, now, metrics, &mut results);
+                }
+                Action::Buffer { task } => {
+                    results.push(ActionResult::Buffered {
+                        task_id: task.id,
+                        origin: task.origin,
+                    });
+                    self.buffered.push(task);
+                }
+                Action::Migrate { task_id, from, to } => {
+                    migration_secs +=
+                        self.exec_migrate(task_id, from, to, now, metrics, &mut results);
+                }
+                Action::Power { region, server, state } => {
+                    // Applied by the policy at decision time (it plans
+                    // against the post-transition fleet); the stream entry
+                    // is the record the engine echoes back.
+                    results.push(ActionResult::Powered { region, server, state });
+                }
+            }
+        }
+
+        // Slot-level metrics + energy + operational counters in ONE pass
+        // over the fleet, using time-averaged (busy-lane-seconds)
+        // utilization for the slot. Folding the counter aggregation into
+        // this mandatory sweep removes the extra per-slot full-fleet
+        // `counters()` scan the engine used to make (§Perf incremental
+        // counters).
+        let switch_delta = metrics.record_alloc(&decision.alloc);
+        let mut snapshot = Vec::new();
+        let mut dollars = 0.0;
+        let mut sw: u64 = 0;
+        let mut act: u64 = 0;
+        let slot_secs = self.ctx.slot_secs;
+        for region in &mut self.fleet.regions {
+            for s in &mut region.servers {
+                sw += s.model_switches;
+                act += s.activations;
+                let util_avg = s.drain_slot_utilization(slot_end, slot_secs);
+                let draw = match s.state {
+                    crate::cluster::ServerState::Cold => 0.0,
+                    crate::cluster::ServerState::Warming { .. } => {
+                        // Warm-up burns near-peak power (Fig 3.c).
+                        0.7 * s.gpu.active_watts() * slot_secs
+                    }
+                    crate::cluster::ServerState::Active => server_energy_j(
+                        s.gpu.idle_watts(),
+                        s.gpu.active_watts(),
+                        util_avg,
+                        slot_secs,
+                    ),
+                };
+                // LB snapshot: only servers active for the full window —
+                // a mid-window activation has partial capacity and would
+                // read as spurious imbalance.
+                if s.is_active() && !region.failed && s.active_edge <= now {
+                    snapshot.push(util_avg);
+                }
+                dollars += joules_to_dollars(draw * POWER_SCALE, region.price_per_kwh);
+            }
+        }
+        metrics.record_slot_balance(&snapshot);
+        metrics.add_power_dollars(dollars);
+
+        // Operational overhead from transition counters (Fig 9 right axis):
+        // model switches + activations, weighted by their Fig 3 stage time.
+        // `sw`/`act` were accumulated in the metering pass above.
+        let d_sw = (sw - self.prev_switches) as f64;
+        let d_act = (act - self.prev_activations) as f64;
+        self.prev_switches = sw;
+        self.prev_activations = act;
+        metrics.add_operational_secs(d_sw * 30.0 + d_act * 100.0);
+
+        // Assemble the outcome for next slot's feedback call.
+        let mut assigned = 0;
+        let mut dropped = 0;
+        let mut buffered = 0;
+        let mut migrated = 0;
+        for res in &results {
+            match res {
+                ActionResult::Assigned { .. } => assigned += 1,
+                ActionResult::Dropped { .. } | ActionResult::Expired { .. } => dropped += 1,
+                ActionResult::Buffered { .. } | ActionResult::Rebuffered { .. } => buffered += 1,
+                ActionResult::Migrated { .. } => migrated += 1,
+                _ => {}
+            }
+        }
+        self.last_outcome = Some(SlotOutcome {
+            slot,
+            results,
+            alloc: decision.alloc,
+            switching_cost_frob: switch_delta,
+            migration_secs,
+            assigned,
+            dropped,
+            buffered,
+            migrated,
+        });
+    }
+
+    /// Execute one `Assign` action: admission control, the lane
+    /// reservation, and metering. Accepted assignments whose start lies
+    /// beyond `now` become migratable pending entries when migration is
+    /// enabled.
+    fn exec_assign(
+        &mut self,
+        task: Task,
+        region: usize,
+        server_idx: usize,
+        now: f64,
+        metrics: &mut RunMetrics,
+        results: &mut Vec<ActionResult>,
+    ) {
+        let region_ok = region < self.fleet.regions.len();
+        if !region_ok
+            || self.fleet.regions[region].failed
+            || server_idx >= self.fleet.regions[region].servers.len()
+        {
+            // Failed/invalid target: the task is not silently lost — it
+            // returns to the backlog and is retried until its deadline
+            // passes (then the expiry path records its honest wait).
+            if task.deadline_secs >= now {
+                results.push(ActionResult::Rebuffered {
+                    task_id: task.id,
+                    origin: task.origin,
+                });
+                self.buffered.push(task);
+            } else {
+                let wait = now - task.arrival_secs;
+                let served = if region_ok { region } else { task.origin };
+                metrics.record_task(&drop_record(&task, served, wait));
+                results.push(ActionResult::Dropped { task_id: task.id, wait_secs: wait });
+            }
+            return;
+        }
+        let reg = &mut self.fleet.regions[region];
+        let server = &mut reg.servers[server_idx];
+        // Admission control: drop tasks whose projected completion
+        // cannot meet the deadline constraint d_i (the task tuple's
+        // third element, §V-A) or whose wait exceeds the client
+        // timeout — the paper's "task-dropping mechanism".
+        let projected_start = server.earliest_start(now.max(task.arrival_secs));
+        let projected_finish = projected_start + server.effective_service_secs(&task);
+        if projected_start - task.arrival_secs > DROP_WAIT_SECS
+            || projected_finish > task.deadline_secs + task.service_secs
+        {
+            let wait = projected_start - task.arrival_secs;
+            metrics.record_task(&drop_record(&task, region, wait));
+            results.push(ActionResult::Dropped { task_id: task.id, wait_secs: wait });
+            return;
+        }
+        let out = server.assign(&task, now);
+        let net = self.ctx.topo.network_secs(task.origin, region, task.payload_kb);
+        let price = reg.price_per_kwh;
+        if out.switch_energy_j > 0.0 {
+            metrics.add_power_dollars(joules_to_dollars(
+                out.switch_energy_j * SWITCH_POWER_SCALE,
+                price,
+            ));
+        }
+        let record = TaskRecord {
+            task_id: task.id,
+            origin: task.origin,
+            served_region: region,
+            network_secs: net,
+            wait_secs: out.wait_secs,
+            compute_secs: out.service_secs,
+            met_deadline: out.finish_secs + net <= task.deadline_secs,
+            dropped: false,
+        };
+        results.push(ActionResult::Assigned {
+            task_id: task.id,
+            region,
+            server: server_idx,
+            wait_secs: out.wait_secs,
+            network_secs: net,
+            compute_secs: out.service_secs,
+            start_secs: out.start_secs,
+        });
+        if self.migration_enabled && out.start_secs > now {
+            self.pending.push(PendingEntry {
+                task,
+                region,
+                server: server_idx,
+                lane: out.lane,
+                start: out.start_secs,
+                finish: out.finish_secs,
+                prev_lane_free: out.lane_prev_free,
+                record,
+            });
+        } else {
+            metrics.record_task(&record);
+        }
+    }
+
+    /// Execute one `Migrate` action. Returns the operational seconds
+    /// metered (0 on rejection). The source reservation is refunded only
+    /// when it is still its lane's tail; the destination queues the task
+    /// through the ordinary assignment path (so model-switch energy is
+    /// charged by the existing accounting), and the payload's
+    /// source-to-destination hop is added to the task's network time.
+    fn exec_migrate(
+        &mut self,
+        task_id: u64,
+        from: (usize, usize),
+        to: (usize, usize),
+        now: f64,
+        metrics: &mut RunMetrics,
+        results: &mut Vec<ActionResult>,
+    ) -> f64 {
+        let idx = match self.pending.iter().position(|e| e.task.id == task_id) {
+            Some(i) => i,
+            None => {
+                results.push(ActionResult::MigrateRejected { task_id });
+                return 0.0;
+            }
+        };
+        let (to_region, to_server) = to;
+        let feasible = self.pending[idx].region == from.0
+            && self.pending[idx].server == from.1
+            && to != from
+            && to_region < self.fleet.regions.len()
+            && !self.fleet.regions[to_region].failed
+            && to_server < self.fleet.regions[to_region].servers.len()
+            && self.fleet.regions[to_region].servers[to_server].accepting(now);
+        if !feasible {
+            results.push(ActionResult::MigrateRejected { task_id });
+            return 0.0;
+        }
+        // Destination admission: a migration may not place the task
+        // anywhere an Assign would have dropped it — same client-timeout
+        // and deadline rules. On violation the source reservation is kept
+        // (rejecting beats converting a queued task into a drop).
+        {
+            let task = &self.pending[idx].task;
+            let dest = &self.fleet.regions[to_region].servers[to_server];
+            let projected_start = dest.earliest_start(now.max(task.arrival_secs));
+            let projected_finish = projected_start + dest.effective_service_secs(task);
+            if projected_start - task.arrival_secs > DROP_WAIT_SECS
+                || projected_finish > task.deadline_secs + task.service_secs
+            {
+                results.push(ActionResult::MigrateRejected { task_id });
+                return 0.0;
+            }
+        }
+        let mut entry = self.pending.remove(idx);
+        let cancelled = self.fleet.regions[entry.region].servers[entry.server]
+            .cancel_reservation(entry.lane, entry.start, entry.finish, entry.prev_lane_free);
+        if !cancelled {
+            // Work queued behind it on the same lane: refund impossible.
+            results.push(ActionResult::MigrateRejected { task_id });
+            self.pending.insert(idx, entry);
+            return 0.0;
+        }
+        let out = self.fleet.regions[to_region].servers[to_server].assign(&entry.task, now);
+        // Payload path accumulates across hops: the deferred record already
+        // carries origin -> ... -> current placement, so a re-migrated task
+        // keeps every hop it actually traveled.
+        let net = entry.record.network_secs
+            + self
+                .ctx
+                .topo
+                .network_secs(entry.region, to_region, entry.task.payload_kb);
+        let price = self.fleet.regions[to_region].price_per_kwh;
+        if out.switch_energy_j > 0.0 {
+            metrics.add_power_dollars(joules_to_dollars(
+                out.switch_energy_j * SWITCH_POWER_SCALE,
+                price,
+            ));
+        }
+        metrics.record_migration(MIGRATION_SECS);
+        entry.record = TaskRecord {
+            task_id,
+            origin: entry.task.origin,
+            served_region: to_region,
+            network_secs: net,
+            wait_secs: out.wait_secs,
+            compute_secs: out.service_secs,
+            met_deadline: out.finish_secs + net <= entry.task.deadline_secs,
+            dropped: false,
+        };
+        results.push(ActionResult::Migrated {
+            task_id,
+            from,
+            to,
+            wait_secs: out.wait_secs,
+        });
+        entry.region = to_region;
+        entry.server = to_server;
+        entry.lane = out.lane;
+        entry.start = out.start_secs;
+        entry.finish = out.finish_secs;
+        entry.prev_lane_free = out.lane_prev_free;
+        self.pending.push(entry);
+        MIGRATION_SECS
+    }
+
+    /// Realized outcome of the most recent `step` (cleared when it is fed
+    /// back to the scheduler at the start of the next slot).
+    pub fn last_outcome(&self) -> Option<&SlotOutcome> {
+        self.last_outcome.as_ref()
+    }
+
+    /// Backlog currently buffered (Fig 2/4 queue-depth plots).
+    pub fn backlog_len(&self) -> usize {
+        self.buffered.len()
+    }
+
+    /// Queued-but-unstarted reservations currently migratable.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}

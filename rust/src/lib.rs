@@ -19,6 +19,7 @@
 
 pub mod cluster;
 pub mod config;
+pub mod engine;
 pub mod geo;
 pub mod metrics;
 pub mod milp;

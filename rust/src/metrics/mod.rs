@@ -50,6 +50,11 @@ pub struct RunMetrics {
     pub deadline_misses: u64,
     pub model_switches: u64,
     pub server_activations: u64,
+    /// Executed `Migrate` actions (queued reservations moved by the engine).
+    pub migrations: u64,
+    /// Raw operational seconds of migration machinery (also folded into
+    /// `operational_overhead` through the normalizer).
+    pub migration_secs: f64,
     /// Most recent per-server utilization snapshot (diagnostics).
     pub last_balance_snapshot: Vec<f64>,
     prev_alloc: Option<Vec<f64>>,
@@ -87,12 +92,25 @@ impl RunMetrics {
         }
     }
 
-    /// Record this slot's macro allocation matrix for switching cost.
-    pub fn record_alloc(&mut self, alloc: &[f64]) {
+    /// Record this slot's macro allocation matrix for switching cost;
+    /// returns this slot's realized Frobenius increment (the engine echoes
+    /// it to the scheduler through `SlotOutcome`).
+    pub fn record_alloc(&mut self, alloc: &[f64]) -> f64 {
+        let mut delta = 0.0;
         if let Some(prev) = &self.prev_alloc {
-            self.switching_cost_frob += frobenius_dist_sq(alloc, prev);
+            delta = frobenius_dist_sq(alloc, prev);
+            self.switching_cost_frob += delta;
         }
         self.prev_alloc = Some(alloc.to_vec());
+        delta
+    }
+
+    /// Meter one executed migration: counted, and its operational seconds
+    /// charged to the Fig 9 overhead bucket.
+    pub fn record_migration(&mut self, secs: f64) {
+        self.migrations += 1;
+        self.migration_secs += secs;
+        self.add_operational_secs(secs);
     }
 
     pub fn add_power_dollars(&mut self, d: f64) {
@@ -130,7 +148,7 @@ impl RunMetrics {
     pub fn row(&mut self) -> String {
         format!(
             "{:<10} {:<8} resp={:>6.2}s (wait {:>5.2} / inf {:>5.2} / net {:>5.3}) \
-             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}%",
+             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}% mig={}",
             self.scheduler,
             self.topology,
             self.response.mean(),
@@ -140,7 +158,8 @@ impl RunMetrics {
             self.lb_per_slot.mean(),
             self.power_cost_dollars,
             self.operational_overhead,
-            100.0 * self.drop_rate()
+            100.0 * self.drop_rate(),
+            self.migrations
         )
     }
 }
@@ -190,6 +209,26 @@ mod tests {
         assert!((m.switching_cost_frob - 4.0).abs() < 1e-12);
         m.record_alloc(&b);
         assert!((m.switching_cost_frob - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_metering_counts_and_charges_overhead() {
+        let mut m = RunMetrics::new("t", "t");
+        assert_eq!(m.migrations, 0);
+        m.record_migration(20.0);
+        m.record_migration(20.0);
+        assert_eq!(m.migrations, 2);
+        assert!((m.migration_secs - 40.0).abs() < 1e-12);
+        assert!(m.operational_overhead > 0.0);
+    }
+
+    #[test]
+    fn record_alloc_returns_slot_delta() {
+        let mut m = RunMetrics::new("t", "t");
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![0.0, 1.0, 1.0, 0.0];
+        assert_eq!(m.record_alloc(&a), 0.0);
+        assert!((m.record_alloc(&b) - 4.0).abs() < 1e-12);
     }
 
     #[test]

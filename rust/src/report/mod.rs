@@ -35,13 +35,14 @@ pub fn run_matrix(
 pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<12} {:<9} {:>9} {:>8} {:>8} {:>8} {:>7} {:>11} {:>9} {:>7}\n",
+        "{:<12} {:<9} {:>9} {:>8} {:>8} {:>8} {:>7} {:>11} {:>9} {:>7} {:>6}\n",
         "scheduler", "topology", "resp(s)", "wait(s)", "inf(s)", "net(s)", "LB",
-        "power($)", "overhead", "drop%"
+        "power($)", "overhead", "drop%", "migr"
     ));
     for m in runs.iter_mut() {
         out.push_str(&format!(
-            "{:<12} {:<9} {:>9.2} {:>8.2} {:>8.2} {:>8.3} {:>7.3} {:>11.1} {:>9.2} {:>7.2}\n",
+            "{:<12} {:<9} {:>9.2} {:>8.2} {:>8.2} {:>8.3} {:>7.3} {:>11.1} {:>9.2} {:>7.2} \
+             {:>6}\n",
             m.scheduler,
             m.topology,
             m.response.mean(),
@@ -52,6 +53,7 @@ pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
             m.power_cost_dollars,
             m.operational_overhead,
             100.0 * m.drop_rate(),
+            m.migrations,
         ));
     }
     out
@@ -77,7 +79,9 @@ pub fn run_to_json(m: &mut RunMetrics) -> Json {
         .set("tasks_dropped", m.tasks_dropped)
         .set("deadline_misses", m.deadline_misses)
         .set("model_switches", m.model_switches)
-        .set("server_activations", m.server_activations);
+        .set("server_activations", m.server_activations)
+        .set("migrations", m.migrations)
+        .set("migration_secs", m.migration_secs);
     let cdf = m.lb_per_slot.cdf(20);
     let mut arr = Json::Arr(vec![]);
     for (v, q) in cdf {

@@ -2,9 +2,21 @@
 //!
 //! A scheduler is called once per 45 s time slot with the tasks that
 //! arrived (plus any buffered backlog) and full mutable access to the
-//! fleet: it may flip server power states (the engine meters the cost) and
-//! must return an assignment for each task or buffer it. The macro
-//! allocation matrix it reports feeds the paper's switching-cost metric.
+//! fleet. Since the action-stream redesign (see `docs/API.md`) it returns a
+//! [`SlotDecision`]: a typed stream of [`Action`]s — `Assign`, `Buffer`,
+//! `Migrate`, `Power` — plus the macro allocation matrix that feeds the
+//! paper's switching-cost metric. The [`ExecutionEngine`]
+//! (`crate::engine`) executes the stream, owns backlog / deadline-expiry /
+//! failure handling, and feeds a [`SlotOutcome`] (per-action realized
+//! results) back to the scheduler before the next slot — the closed loop
+//! the RL macro layer and the demand predictor learn from.
+//!
+//! The pre-redesign [`SlotPlan`] API is kept as a compatibility shim: the
+//! trait's `decide` and `schedule` methods default to each other, so
+//! legacy schedulers (positional tuples, no migration) and new
+//! action-stream schedulers are interchangeable.
+//!
+//! [`ExecutionEngine`]: crate::engine::ExecutionEngine
 
 pub mod rr;
 pub mod sdib;
@@ -23,7 +35,92 @@ pub struct Ctx {
     pub slot_secs: f64,
 }
 
-/// What the scheduler decides for one slot.
+/// Desired server power state carried by [`Action::Power`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PowerState {
+    /// Begin warm-up (Cold -> Warming).
+    On,
+    /// Power down (drops model residency).
+    Off,
+}
+
+/// One typed scheduling decision. The engine executes the stream in
+/// emission order; see `docs/API.md` for the execution semantics of each
+/// variant.
+#[derive(Clone, Debug)]
+#[allow(clippy::large_enum_variant)]
+pub enum Action {
+    /// Place `task` on `server` (index within `region`) this slot.
+    Assign { task: Task, region: usize, server: usize },
+    /// Defer `task` to the next slot's backlog.
+    Buffer { task: Task },
+    /// Move a queued-but-unstarted reservation between servers.
+    /// `from`/`to` are `(region, server)` pairs; `task_id` must name an
+    /// entry of the pending list the engine handed to `decide`.
+    Migrate { task_id: u64, from: (usize, usize), to: (usize, usize) },
+    /// Record of a server power transition decided this slot. The policy
+    /// applies the transition to the fleet at decision time (it plans
+    /// against the post-transition capacity); the stream entry is the
+    /// system of record the engine meters and echoes in the outcome.
+    Power { region: usize, server: usize, state: PowerState },
+}
+
+/// What the scheduler decides for one slot (action-stream API).
+#[derive(Clone, Debug)]
+pub struct SlotDecision {
+    /// Typed decision stream, executed in order by the engine.
+    pub actions: Vec<Action>,
+    /// Row-major R*R macro allocation matrix actually used this slot
+    /// (row-stochastic); feeds ||A_t - A_{t-1}||_F^2.
+    pub alloc: Vec<f64>,
+}
+
+/// Append a legacy (assignments, buffered) pair to `actions` in canonical
+/// execution order — assignments first, then buffers. The order contract
+/// lives here only; [`SlotDecision::from_plan`] and every native scheduler
+/// port share it.
+pub fn push_plan_actions(
+    actions: &mut Vec<Action>,
+    assignments: Vec<(Task, usize, usize)>,
+    buffered: Vec<Task>,
+) {
+    for (task, region, server) in assignments {
+        actions.push(Action::Assign { task, region, server });
+    }
+    for task in buffered {
+        actions.push(Action::Buffer { task });
+    }
+}
+
+impl SlotDecision {
+    /// Lift a legacy [`SlotPlan`] into the action-stream API (compat shim).
+    pub fn from_plan(plan: SlotPlan) -> SlotDecision {
+        let mut actions = Vec::with_capacity(plan.assignments.len() + plan.buffered.len());
+        push_plan_actions(&mut actions, plan.assignments, plan.buffered);
+        SlotDecision { actions, alloc: plan.alloc }
+    }
+
+    /// Project the stream back onto the legacy [`SlotPlan`] shape (compat
+    /// shim). `Migrate` and `Power` entries — inexpressible in the legacy
+    /// API — are dropped.
+    pub fn into_plan(self) -> SlotPlan {
+        let mut assignments = Vec::new();
+        let mut buffered = Vec::new();
+        for action in self.actions {
+            match action {
+                Action::Assign { task, region, server } => {
+                    assignments.push((task, region, server));
+                }
+                Action::Buffer { task } => buffered.push(task),
+                Action::Migrate { .. } | Action::Power { .. } => {}
+            }
+        }
+        SlotPlan { assignments, buffered, alloc: self.alloc }
+    }
+}
+
+/// Legacy per-slot plan (pre-action-stream API). Kept as a compatibility
+/// shim for schedulers and tests written against positional tuples.
 pub struct SlotPlan {
     /// (task, region, server index within region).
     pub assignments: Vec<(Task, usize, usize)>,
@@ -34,10 +131,108 @@ pub struct SlotPlan {
     pub alloc: Vec<f64>,
 }
 
+/// Read-only view of one queued-but-unstarted assignment owned by the
+/// engine — a migration candidate the scheduler may move with
+/// [`Action::Migrate`].
+#[derive(Clone, Copy, Debug)]
+pub struct PendingView {
+    pub task_id: u64,
+    /// Current placement (region, server index within region).
+    pub region: usize,
+    pub server: usize,
+    /// Scheduled start time (absolute seconds); once it passes the task is
+    /// no longer migratable.
+    pub start_secs: f64,
+    pub service_secs: f64,
+    pub origin: usize,
+    pub arrival_secs: f64,
+    pub deadline_secs: f64,
+}
+
+/// Realized result of one executed action (the engine's side of the loop).
+#[derive(Clone, Debug)]
+pub enum ActionResult {
+    /// Assignment admitted and executed.
+    Assigned {
+        task_id: u64,
+        region: usize,
+        server: usize,
+        wait_secs: f64,
+        network_secs: f64,
+        compute_secs: f64,
+        start_secs: f64,
+    },
+    /// Admission control dropped the task (projected wait above the client
+    /// timeout, or the deadline constraint was unmeetable).
+    Dropped { task_id: u64, wait_secs: f64 },
+    /// Assignment targeted a failed/invalid server; the task went back to
+    /// the backlog (it is retried until its deadline passes).
+    Rebuffered { task_id: u64, origin: usize },
+    /// Scheduler-requested deferral executed.
+    Buffered { task_id: u64, origin: usize },
+    /// Buffered task expired before it could be placed (client gave up);
+    /// `wait_secs` is the honest time it spent waiting.
+    Expired { task_id: u64, wait_secs: f64 },
+    /// Migration executed: the source reservation was refunded and the
+    /// task re-queued at the destination.
+    Migrated {
+        task_id: u64,
+        from: (usize, usize),
+        to: (usize, usize),
+        wait_secs: f64,
+    },
+    /// Migration was infeasible (unknown task, mismatched source, dead
+    /// destination, or the source lane already queued work behind it).
+    MigrateRejected { task_id: u64 },
+    /// Power-transition record echoed back.
+    Powered { region: usize, server: usize, state: PowerState },
+}
+
+/// Realized outcome of one slot's action stream, fed back to the
+/// scheduler via [`Scheduler::feedback`] before the next `decide` call —
+/// the reward signal the RL macro layer and predictor train against.
+#[derive(Clone, Debug, Default)]
+pub struct SlotOutcome {
+    pub slot: usize,
+    /// Per-action results in execution order.
+    pub results: Vec<ActionResult>,
+    /// The allocation matrix the engine executed (echo of the decision).
+    pub alloc: Vec<f64>,
+    /// Realized ||A_t - A_{t-1}||_F^2 increment for this slot.
+    pub switching_cost_frob: f64,
+    /// Operational seconds of migration machinery metered this slot.
+    pub migration_secs: f64,
+    // Aggregate counts (denormalized from `results` for cheap access).
+    pub assigned: usize,
+    pub dropped: usize,
+    pub buffered: usize,
+    pub migrated: usize,
+}
+
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
-    /// Plan one slot. `now` is the slot start in absolute seconds.
+    /// Plan one slot as a typed action stream. `now` is the slot start in
+    /// absolute seconds; `pending` lists queued-but-unstarted assignments
+    /// from earlier slots (migration candidates).
+    ///
+    /// Implementors must override `decide` or [`schedule`](Self::schedule)
+    /// (the two default to each other; overriding neither recurses).
+    fn decide(
+        &mut self,
+        ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        pending: &[PendingView],
+        slot: usize,
+        now: f64,
+    ) -> SlotDecision {
+        let _ = pending;
+        SlotDecision::from_plan(self.schedule(ctx, fleet, tasks, slot, now))
+    }
+
+    /// Legacy single-slot planning API (compat shim): the decision stream
+    /// projected onto positional tuples, with no migration input.
     fn schedule(
         &mut self,
         ctx: &Ctx,
@@ -45,7 +240,16 @@ pub trait Scheduler {
         tasks: Vec<Task>,
         slot: usize,
         now: f64,
-    ) -> SlotPlan;
+    ) -> SlotPlan {
+        self.decide(ctx, fleet, tasks, &[], slot, now).into_plan()
+    }
+
+    /// Closed-loop feedback: the realized outcome of the previous slot's
+    /// stream, delivered by the engine before the next `decide` call.
+    /// Default: ignore (stateless baselines).
+    fn feedback(&mut self, outcome: &SlotOutcome) {
+        let _ = outcome;
+    }
 }
 
 /// Empirical request distribution mu_t over regions (normalized; uniform
@@ -96,7 +300,10 @@ pub fn earliest_server(
     reg.servers
         .iter()
         .enumerate()
-        .filter(|(_, s)| s.accepting(now) || matches!(s.state, crate::cluster::ServerState::Warming { .. }))
+        .filter(|(_, s)| {
+            s.accepting(now)
+                || matches!(s.state, crate::cluster::ServerState::Warming { .. })
+        })
         .map(|(i, s)| (i, s.earliest_start(now)))
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
 }
@@ -165,5 +372,45 @@ mod tests {
         }
         // All mass flows to region 1 for rows that had tasks.
         assert!(a[0 * 3 + 1] == 1.0 || a[0 * 3 + 0] == 1.0);
+    }
+
+    #[test]
+    fn plan_decision_round_trip_preserves_order() {
+        let mut w = DiurnalWorkload::new(WorkloadConfig::default(), 3, 7);
+        let tasks = w.slot_tasks(0, 45.0);
+        let n = tasks.len();
+        let assignments: Vec<(Task, usize, usize)> = tasks
+            .iter()
+            .take(n / 2)
+            .cloned()
+            .map(|t| (t, 1, 0))
+            .collect();
+        let buffered: Vec<Task> = tasks.into_iter().skip(n / 2).collect();
+        let alloc = empirical_alloc(&assignments, 3);
+        let want_assign: Vec<u64> = assignments.iter().map(|(t, _, _)| t.id).collect();
+        let want_buf: Vec<u64> = buffered.iter().map(|t| t.id).collect();
+        let plan = SlotPlan { assignments, buffered, alloc: alloc.clone() };
+        let decision = SlotDecision::from_plan(plan);
+        assert_eq!(decision.actions.len(), n);
+        let back = decision.into_plan();
+        let got_assign: Vec<u64> = back.assignments.iter().map(|(t, _, _)| t.id).collect();
+        let got_buf: Vec<u64> = back.buffered.iter().map(|t| t.id).collect();
+        assert_eq!(got_assign, want_assign);
+        assert_eq!(got_buf, want_buf);
+        assert_eq!(back.alloc, alloc);
+    }
+
+    #[test]
+    fn into_plan_drops_migrate_and_power_records() {
+        let decision = SlotDecision {
+            actions: vec![
+                Action::Power { region: 0, server: 1, state: PowerState::On },
+                Action::Migrate { task_id: 9, from: (0, 0), to: (1, 1) },
+            ],
+            alloc: vec![1.0],
+        };
+        let plan = decision.into_plan();
+        assert!(plan.assignments.is_empty());
+        assert!(plan.buffered.is_empty());
     }
 }

@@ -3,17 +3,28 @@
 //! state constraints. No locality, no cost-awareness, reactive scaling
 //! only — the paper's performance lower bound.
 
-use super::{empirical_alloc, Ctx, Scheduler, SlotPlan};
+use super::{
+    empirical_alloc, push_plan_actions, Action, Ctx, PendingView, PowerState, Scheduler,
+    SlotDecision,
+};
 use crate::cluster::Fleet;
 use crate::workload::Task;
 
 /// Shared reactive autoscaling rule used by all baseline schedulers: power
 /// servers on only after observed pressure (the paper's "staircase" §II-A),
-/// and power idle servers off aggressively after load subsides.
-pub fn reactive_autoscale(fleet: &mut Fleet, region: usize, pending: usize, now: f64) {
+/// and power idle servers off aggressively after load subsides. Returns the
+/// transitions performed as `Action::Power` records for the decision
+/// stream (legacy callers may ignore them — the fleet is already mutated).
+pub fn reactive_autoscale(
+    fleet: &mut Fleet,
+    region: usize,
+    pending: usize,
+    now: f64,
+) -> Vec<Action> {
+    let mut log = Vec::new();
     let reg = &mut fleet.regions[region];
     if reg.failed {
-        return;
+        return log;
     }
     let active_lanes: usize =
         reg.servers.iter().filter(|s| s.is_active()).map(|s| s.lanes()).sum();
@@ -36,6 +47,7 @@ pub fn reactive_autoscale(fleet: &mut Fleet, region: usize, pending: usize, now:
             .min_by(|a, b| a.gpu.warmup_secs().partial_cmp(&b.gpu.warmup_secs()).unwrap())
         {
             s.power_on(now);
+            log.push(Action::Power { region, server: s.index, state: PowerState::On });
         }
     } else if mean_backlog < 5.0 && pending * 2 < active_lanes {
         // Scale down: power off up to two clearly-idle servers per slot
@@ -53,12 +65,14 @@ pub fn reactive_autoscale(fleet: &mut Fleet, region: usize, pending: usize, now:
             match victim {
                 Some(s) if s.idle_since(now) > 60.0 => {
                     s.power_off();
+                    log.push(Action::Power { region, server: s.index, state: PowerState::Off });
                     actives -= 1;
                 }
                 _ => break,
             }
         }
     }
+    log
 }
 
 pub struct RoundRobin {
@@ -95,21 +109,23 @@ impl Scheduler for RoundRobin {
         "rr"
     }
 
-    fn schedule(
+    fn decide(
         &mut self,
         _ctx: &Ctx,
         fleet: &mut Fleet,
         tasks: Vec<Task>,
+        _pending: &[PendingView],
         _slot: usize,
         now: f64,
-    ) -> SlotPlan {
+    ) -> SlotDecision {
         // Reactive scaling: one decision per region per slot.
         let mut per_region_pending = vec![0usize; self.r];
         for t in &tasks {
             per_region_pending[t.origin] += 1;
         }
+        let mut actions: Vec<Action> = Vec::with_capacity(tasks.len());
         for region in 0..self.r {
-            reactive_autoscale(fleet, region, per_region_pending[region], now);
+            actions.extend(reactive_autoscale(fleet, region, per_region_pending[region], now));
         }
 
         let mut assignments = Vec::with_capacity(tasks.len());
@@ -131,7 +147,8 @@ impl Scheduler for RoundRobin {
             }
         }
         let alloc = empirical_alloc(&assignments, self.r);
-        SlotPlan { assignments, buffered, alloc }
+        push_plan_actions(&mut actions, assignments, buffered);
+        SlotDecision { actions, alloc }
     }
 }
 
@@ -203,10 +220,34 @@ mod tests {
         for s in &mut fleet.regions[0].servers {
             s.power_off();
         }
-        reactive_autoscale(&mut fleet, 0, 100, 0.0);
+        let log = reactive_autoscale(&mut fleet, 0, 100, 0.0);
         assert!(fleet.regions[0]
             .servers
             .iter()
             .any(|s| matches!(s.state, crate::cluster::ServerState::Warming { .. })));
+        // The transition is recorded as a Power action for the stream.
+        assert!(log
+            .iter()
+            .any(|a| matches!(a, Action::Power { region: 0, state: PowerState::On, .. })));
+    }
+
+    #[test]
+    fn decide_emits_power_records_and_assignments() {
+        let (ctx, mut fleet, tasks) = setup();
+        let n = tasks.len();
+        let mut rr = RoundRobin::new(ctx.topo.n);
+        let decision = rr.decide(&ctx, &mut fleet, tasks, &[], 0, 0.0);
+        let assigns = decision
+            .actions
+            .iter()
+            .filter(|a| matches!(a, Action::Assign { .. }))
+            .count();
+        let buffers = decision
+            .actions
+            .iter()
+            .filter(|a| matches!(a, Action::Buffer { .. }))
+            .count();
+        assert_eq!(assigns + buffers, n);
+        assert!(assigns > 0);
     }
 }

@@ -13,7 +13,9 @@
 //! cost- or locality-awareness.
 
 use super::rr::reactive_autoscale;
-use super::{empirical_alloc, Ctx, Scheduler, SlotPlan};
+use super::{
+    empirical_alloc, push_plan_actions, Action, Ctx, PendingView, Scheduler, SlotDecision,
+};
 use crate::cluster::Fleet;
 use crate::workload::Task;
 
@@ -44,20 +46,22 @@ impl Scheduler for Sdib {
         "sdib"
     }
 
-    fn schedule(
+    fn decide(
         &mut self,
         _ctx: &Ctx,
         fleet: &mut Fleet,
         tasks: Vec<Task>,
+        _pending: &[PendingView],
         _slot: usize,
         now: f64,
-    ) -> SlotPlan {
+    ) -> SlotDecision {
         let mut pending = vec![0usize; self.r];
         for t in &tasks {
             pending[t.origin] += 1;
         }
+        let mut actions: Vec<Action> = Vec::with_capacity(tasks.len());
         for region in 0..self.r {
-            reactive_autoscale(fleet, region, pending[region], now);
+            actions.extend(reactive_autoscale(fleet, region, pending[region], now));
         }
 
         // Snapshot candidates once; maintain utilization estimates as we
@@ -83,11 +87,9 @@ impl Scheduler for Sdib {
         let mut assignments = Vec::with_capacity(tasks.len());
         let mut buffered = Vec::new();
         if cands.is_empty() {
-            return SlotPlan {
-                assignments,
-                buffered: tasks,
-                alloc: empirical_alloc(&[], self.r),
-            };
+            let alloc = empirical_alloc(&[], self.r);
+            actions.extend(tasks.into_iter().map(|task| Action::Buffer { task }));
+            return SlotDecision { actions, alloc };
         }
 
         // Running sums for O(1) variance deltas.
@@ -139,7 +141,8 @@ impl Scheduler for Sdib {
             }
         }
         let alloc = empirical_alloc(&assignments, self.r);
-        SlotPlan { assignments, buffered, alloc }
+        push_plan_actions(&mut actions, assignments, buffered);
+        SlotDecision { actions, alloc }
     }
 }
 

@@ -11,7 +11,9 @@
 use std::collections::HashMap;
 
 use super::rr::reactive_autoscale;
-use super::{empirical_alloc, Ctx, Scheduler, SlotPlan};
+use super::{
+    empirical_alloc, push_plan_actions, Action, Ctx, PendingView, Scheduler, SlotDecision,
+};
 use crate::cluster::Fleet;
 use crate::workload::Task;
 
@@ -70,20 +72,22 @@ impl Scheduler for SkyLb {
         "skylb"
     }
 
-    fn schedule(
+    fn decide(
         &mut self,
         _ctx: &Ctx,
         fleet: &mut Fleet,
         tasks: Vec<Task>,
+        _pending: &[PendingView],
         _slot: usize,
         now: f64,
-    ) -> SlotPlan {
+    ) -> SlotDecision {
         let mut pending = vec![0usize; self.r];
         for t in &tasks {
             pending[t.origin] += 1;
         }
+        let mut actions: Vec<Action> = Vec::with_capacity(tasks.len());
         for region in 0..self.r {
-            reactive_autoscale(fleet, region, pending[region], now);
+            actions.extend(reactive_autoscale(fleet, region, pending[region], now));
         }
         self.affinity.retain(|_, &mut (_, _, last)| now - last < AFFINITY_TTL_SECS);
 
@@ -128,7 +132,8 @@ impl Scheduler for SkyLb {
             }
         }
         let alloc = empirical_alloc(&assignments, self.r);
-        SlotPlan { assignments, buffered, alloc }
+        push_plan_actions(&mut actions, assignments, buffered);
+        SlotDecision { actions, alloc }
     }
 }
 

@@ -53,6 +53,8 @@ impl MicroAllocator {
     }
 
     /// Apply activation decisions for one region (§V-C1 gradual policy).
+    /// Transitions are recorded into `log` as `Action::Power` entries for
+    /// the decision stream.
     pub fn activate_region(
         &self,
         fleet: &mut Fleet,
@@ -60,6 +62,7 @@ impl MicroAllocator {
         queue_len: f64,
         predicted: f64,
         now: f64,
+        log: &mut Vec<crate::scheduler::Action>,
     ) {
         let reg = &mut fleet.regions[region];
         if reg.failed {
@@ -82,7 +85,7 @@ impl MicroAllocator {
         // errors *cost something* (Fig 12): an underestimate powers
         // servers off and the re-warm-up (1-3 min, Fig 3) stalls the
         // following slots.
-        super::state_mgr::apply(
+        super::state_mgr::apply_logged(
             fleet,
             region,
             target,
@@ -94,6 +97,7 @@ impl MicroAllocator {
                 protect_util: 0.9,
                 ..Default::default()
             },
+            log,
         );
     }
 
@@ -677,7 +681,9 @@ mod tests {
         for s in &mut f.regions[0].servers {
             s.power_off();
         }
-        m.activate_region(&mut f, 0, 0.0, 500.0, 0.0);
+        let mut log = Vec::new();
+        m.activate_region(&mut f, 0, 0.0, 500.0, 0.0, &mut log);
+        assert!(!log.is_empty(), "activation produced no Power records");
         let warming = f.regions[0]
             .servers
             .iter()

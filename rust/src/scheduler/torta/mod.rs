@@ -16,7 +16,10 @@ pub mod micro;
 pub mod predictor;
 pub mod state_mgr;
 
-use super::{request_distribution, Ctx, Scheduler, SlotPlan};
+use super::{
+    push_plan_actions, request_distribution, Action, ActionResult, Ctx, PendingView, Scheduler,
+    SlotDecision, SlotOutcome,
+};
 use crate::cluster::Fleet;
 use crate::config::TortaConfig;
 use crate::ot;
@@ -50,7 +53,16 @@ pub struct TortaScheduler {
     cost_matrix: Vec<f64>,
     rng: Rng,
     /// Per-region queue estimate (buffered backlog), for Eq. 6 and features.
+    /// Seeded from the scheduler's own buffering decisions and corrected by
+    /// the engine's realized outcome (`feedback`), which also sees
+    /// re-buffered failed-target assignments the scheduler cannot.
     queue_estimate: Vec<f64>,
+    /// Backlog-seconds threshold above which a queued reservation is
+    /// migrated off its server (`torta.migrate_backlog_secs`; 0 disables).
+    migrate_backlog_secs: f64,
+    /// EWMA of the realized per-slot switching cost fed back by the engine
+    /// (diagnostic / RL reward signal).
+    pub realized_switch_ewma: f64,
     name: &'static str,
 }
 
@@ -101,6 +113,8 @@ impl TortaScheduler {
             cost_matrix: ot::cost_matrix(&ctx.topo, &ctx.prices, cfg.cost_w_power, cfg.cost_w_net),
             rng: Rng::new(seed, 313),
             queue_estimate: vec![0.0; r],
+            migrate_backlog_secs: cfg.migrate_backlog_secs,
+            realized_switch_ewma: 0.0,
             name: match mode {
                 TortaMode::Full => "torta",
                 TortaMode::Native => "torta-nat",
@@ -167,6 +181,90 @@ impl TortaScheduler {
             .collect()
     }
 
+    /// DriftSched-style preemptive rebalancing: emit `Migrate` actions for
+    /// queued-but-unstarted reservations whose server backlog exceeds
+    /// `torta.migrate_backlog_secs`, or whose region failed (the rescue
+    /// window before the reservation would have started). Destinations are
+    /// chosen least-backlogged-first over a single accepting-server
+    /// snapshot, with a local estimate update so consecutive migrations do
+    /// not dogpile one server; a threshold-triggered move must be a strict
+    /// improvement (< half the source backlog after adding the task).
+    fn emit_migrations(
+        &self,
+        fleet: &Fleet,
+        pending: &[PendingView],
+        now: f64,
+        actions: &mut Vec<Action>,
+    ) {
+        let threshold = self.migrate_backlog_secs;
+        if threshold <= 0.0 || pending.is_empty() {
+            return;
+        }
+        // Trigger scan first — O(pending) source-server reads only. The
+        // full destination snapshot (a second fleet sweep on top of the
+        // prelude's single cached pass) is built lazily, so slots with no
+        // overloaded/failed source pay nothing extra (§Perf fleet caches).
+        let triggered: Vec<(&PendingView, bool, f64)> = pending
+            .iter()
+            .map(|p| {
+                let src_failed = fleet.regions[p.region].failed;
+                let src_backlog = if src_failed
+                    || p.server >= fleet.regions[p.region].servers.len()
+                {
+                    f64::INFINITY
+                } else {
+                    fleet.regions[p.region].servers[p.server].backlog_secs(now)
+                };
+                (p, src_failed, src_backlog)
+            })
+            .filter(|&(_, src_failed, src_backlog)| src_failed || src_backlog > threshold)
+            .collect();
+        if triggered.is_empty() {
+            return;
+        }
+        // (region, server, backlog estimate, lanes)
+        let mut cands: Vec<(usize, usize, f64, f64)> = Vec::new();
+        for (ri, reg) in fleet.regions.iter().enumerate() {
+            if reg.failed {
+                continue;
+            }
+            for (si, s) in reg.servers.iter().enumerate() {
+                if s.accepting(now) {
+                    cands.push((ri, si, s.backlog_secs(now), s.lanes() as f64));
+                }
+            }
+        }
+        if cands.is_empty() {
+            return;
+        }
+        for (p, src_failed, src_backlog) in triggered {
+            let mut best: Option<usize> = None;
+            for (ci, c) in cands.iter().enumerate() {
+                if c.0 == p.region && c.1 == p.server {
+                    continue;
+                }
+                if best.map_or(true, |b| c.2 < cands[b].2) {
+                    best = Some(ci);
+                }
+            }
+            let bi = match best {
+                Some(bi) => bi,
+                None => continue,
+            };
+            let added = p.service_secs / cands[bi].3;
+            let improves = src_failed || cands[bi].2 + added < src_backlog * 0.5;
+            if !improves {
+                continue;
+            }
+            actions.push(Action::Migrate {
+                task_id: p.task_id,
+                from: (p.region, p.server),
+                to: (cands[bi].0, cands[bi].1),
+            });
+            cands[bi].2 += added;
+        }
+    }
+
     /// Route a task's destination region by sampling A[origin, :],
     /// excluding failed regions (renormalized).
     fn route(&mut self, alloc: &[f64], origin: usize, fleet: &Fleet) -> usize {
@@ -193,15 +291,17 @@ impl Scheduler for TortaScheduler {
         self.name
     }
 
-    fn schedule(
+    fn decide(
         &mut self,
         _ctx: &Ctx,
         fleet: &mut Fleet,
         tasks: Vec<Task>,
+        pending: &[PendingView],
         slot: usize,
         now: f64,
-    ) -> SlotPlan {
+    ) -> SlotDecision {
         let r = self.r;
+        let mut actions: Vec<Action> = Vec::with_capacity(tasks.len());
 
         // One pass over the fleet computes every aggregate the read-mostly
         // prelude below needs (predictor utils, OT capacity marginal,
@@ -299,8 +399,16 @@ impl Scheduler for TortaScheduler {
                 (self.queue_estimate[region] + regional[region].len() as f64 * 0.1,
                  f_routed[region])
             };
-            self.micro.activate_region(fleet, region, queued, predicted, now);
+            self.micro.activate_region(fleet, region, queued, predicted, now, &mut actions);
         }
+
+        // Preemptive rebalancing: queued reservations on overloaded (or
+        // failed) servers are moved before this slot's new work lands.
+        // Emitted after the activation pass (so destinations reflect this
+        // slot's power decisions — a scale-down victim is no longer
+        // accepting) but ahead of the Assign stream, so the engine frees
+        // the source lanes first.
+        self.emit_migrations(fleet, pending, now, &mut actions);
 
         // Greedy matching per region; overflow re-routes once to the
         // region's best OT alternative, then buffers.
@@ -337,13 +445,37 @@ impl Scheduler for TortaScheduler {
             }
         }
 
-        // Queue estimate for next slot's features: buffered per origin.
+        // Queue estimate for next slot's features: buffered per origin
+        // (overwritten with engine truth when `feedback` arrives).
         self.queue_estimate = vec![0.0; r];
         for t in &buffered {
             self.queue_estimate[t.origin] += 1.0;
         }
 
-        SlotPlan { assignments, buffered, alloc }
+        push_plan_actions(&mut actions, assignments, buffered);
+        SlotDecision { actions, alloc }
+    }
+
+    fn feedback(&mut self, outcome: &SlotOutcome) {
+        // Engine-truth backlog per origin: everything that actually went
+        // back to the buffer — including assignments the engine
+        // re-buffered after hitting a failed target, which the
+        // decision-time estimate cannot see. In failure-free slots this
+        // equals the scheduler's own estimate exactly (the Buffer actions
+        // are its own), so closing the loop changes nothing there.
+        let mut q = vec![0.0; self.r];
+        for res in &outcome.results {
+            match res {
+                ActionResult::Buffered { origin, .. }
+                | ActionResult::Rebuffered { origin, .. } => q[*origin] += 1.0,
+                _ => {}
+            }
+        }
+        self.queue_estimate = q;
+        // Realized switching cost, smoothed — the macro layer's reward
+        // signal (negative latency/switching terms; see docs/API.md).
+        self.realized_switch_ewma =
+            0.9 * self.realized_switch_ewma + 0.1 * outcome.switching_cost_frob;
     }
 }
 

@@ -11,6 +11,7 @@
 //! * accounting of decisions for the operational-overhead metric.
 
 use crate::cluster::{Fleet, ServerState};
+use crate::scheduler::{Action, PowerState};
 
 #[derive(Clone, Copy, Debug)]
 pub struct StatePolicy {
@@ -53,6 +54,20 @@ pub fn apply(
     now: f64,
     policy: &StatePolicy,
 ) -> Transitions {
+    let mut log = Vec::new();
+    apply_logged(fleet, region, target, now, policy, &mut log)
+}
+
+/// [`apply`] that additionally records every transition as an
+/// [`Action::Power`] entry for the decision stream.
+pub fn apply_logged(
+    fleet: &mut Fleet,
+    region: usize,
+    target: usize,
+    now: f64,
+    policy: &StatePolicy,
+    log: &mut Vec<Action>,
+) -> Transitions {
     // Power events change the capacity/utilization aggregates the macro
     // layer reads; drop the per-slot cache before mutating (§Perf fleet
     // caches — the scheduler's read-mostly prelude has already consumed
@@ -83,6 +98,7 @@ pub fn apply(
         });
         for &i in cold.iter().take((target - active).min(policy.max_on_per_slot)) {
             reg.servers[i].power_on(now);
+            log.push(Action::Power { region, server: i, state: PowerState::On });
             out.powered_on += 1;
         }
     } else if target + policy.dead_zone < active {
@@ -105,6 +121,7 @@ pub fn apply(
             let dwell = now - s.active_edge;
             if s.utilization(now) < policy.protect_util && dwell >= policy.min_dwell_secs {
                 s.power_off();
+                log.push(Action::Power { region, server: i, state: PowerState::Off });
                 out.powered_off += 1;
                 remaining -= 1;
             }
@@ -142,6 +159,20 @@ mod tests {
         let t = apply(&mut f, 0, 4, 0.0, &StatePolicy::default());
         assert_eq!(t.powered_on, 4.min(f.regions[0].servers.len()));
         assert_eq!(actives(&f, 0), t.powered_on);
+    }
+
+    #[test]
+    fn apply_logged_records_power_actions() {
+        let mut f = fleet();
+        for s in &mut f.regions[0].servers {
+            s.power_off();
+        }
+        let mut log = Vec::new();
+        let t = apply_logged(&mut f, 0, 3, 0.0, &StatePolicy::default(), &mut log);
+        assert_eq!(log.len(), t.powered_on);
+        assert!(log
+            .iter()
+            .all(|a| matches!(a, Action::Power { region: 0, state: PowerState::On, .. })));
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! Real-time serving driver: leader + per-region workers over channels.
 //!
 //! Demonstrates the deployment shape of the coordinator (vLLM-router-like):
-//! a generator thread streams requests in (time-scaled) real time to the
-//! leader; the leader batches per time slot, runs the scheduler, and
-//! dispatches assignments to region worker threads, which acknowledge
-//! completion back over mpsc channels. Used by
-//! `examples/serving_realtime.rs`; the virtual-time engine in `sim/` is
-//! what the benches use.
+//! a generator streams requests in (time-scaled) real time to the leader;
+//! the leader batches per time slot, drives the shared
+//! [`ExecutionEngine`](crate::engine::ExecutionEngine) — the same engine
+//! the virtual-time simulator uses, so all task accounting is one code
+//! path — and dispatches the slot's executed assignments to region worker
+//! threads, which simulate residency and acknowledge completion back over
+//! mpsc channels. Used by `examples/serving_realtime.rs`; identical
+//! config/seed yields `RunMetrics` bit-identical to `sim` (tested).
 //!
 //! Built on std::thread + mpsc (the offline build has no tokio); the
 //! channel topology is identical to an async runtime's task graph.
@@ -16,22 +18,24 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::config::ExperimentConfig;
-use crate::metrics::{RunMetrics, TaskRecord};
-use crate::scheduler::Scheduler;
-use crate::sim::Simulation;
-use crate::workload::{ArrivalProcess, Task};
+use crate::engine::ExecutionEngine;
+use crate::metrics::RunMetrics;
+use crate::scheduler::{ActionResult, Scheduler};
+use crate::workload::ArrivalProcess;
 
 /// Messages from leader to a region worker.
 enum WorkerMsg {
-    /// Execute a committed assignment (timings precomputed by the leader's
-    /// fleet model); worker simulates the residency and acks.
-    Execute { record: TaskRecord },
+    /// Simulate the residency of one executed assignment and ack. All
+    /// accounting already happened in the engine; the worker only models
+    /// the deployment's execution/ack round-trip.
+    Execute { task_id: u64, compute_secs: f64 },
     Shutdown,
 }
 
 /// Completion acknowledgements back to the leader.
 struct Ack {
-    record: TaskRecord,
+    #[allow(dead_code)]
+    task_id: u64,
 }
 
 /// Run a real-time (scaled) serving session.
@@ -45,8 +49,8 @@ pub fn serve_realtime<W: ArrivalProcess>(
     slots: usize,
     time_scale: f64,
 ) -> anyhow::Result<RunMetrics> {
-    let mut sim = Simulation::new(cfg.clone())?;
-    let n_regions = sim.ctx.topo.n;
+    let mut engine = ExecutionEngine::new(cfg.clone())?;
+    let n_regions = engine.ctx.topo.n;
     let mut metrics = RunMetrics::new(scheduler.name(), &cfg.topology);
 
     // Spawn region workers.
@@ -60,11 +64,11 @@ pub fn serve_realtime<W: ArrivalProcess>(
         handles.push(thread::spawn(move || {
             while let Ok(msg) = rx.recv() {
                 match msg {
-                    WorkerMsg::Execute { record } => {
+                    WorkerMsg::Execute { task_id, compute_secs } => {
                         // Residency: the task's compute time, scaled.
-                        let dur = record.compute_secs / time_scale.max(1e-6);
+                        let dur = compute_secs / time_scale.max(1e-6);
                         thread::sleep(Duration::from_secs_f64(dur.min(0.05)));
-                        if ack.send(Ack { record }).is_err() {
+                        if ack.send(Ack { task_id }).is_err() {
                             break;
                         }
                     }
@@ -79,38 +83,31 @@ pub fn serve_realtime<W: ArrivalProcess>(
     let t0 = Instant::now();
     let mut inflight = 0usize;
     for slot in 0..slots {
-        let now = slot as f64 * cfg.slot_secs;
-        // Leader: collect this slot's arrivals (generator is pull-based
-        // here; a push generator thread behaves identically w.r.t. the
-        // scheduler because slot boundaries batch anyway).
-        let tasks: Vec<Task> = workload.slot_tasks(slot, cfg.slot_secs);
-        let plan = scheduler.schedule(&sim.ctx, &mut sim.fleet, tasks, slot, now);
-        metrics.record_alloc(&plan.alloc);
-
-        for (task, region, server_idx) in plan.assignments {
-            let reg = &mut sim.fleet.regions[region];
-            if reg.failed || server_idx >= reg.servers.len() {
-                continue;
+        // Leader: one engine slot (arrivals + backlog -> scheduler ->
+        // action execution -> metering), then dispatch the executed
+        // assignments to the region workers.
+        engine.step(slot, workload, scheduler, &mut metrics);
+        if let Some(outcome) = engine.last_outcome() {
+            for res in &outcome.results {
+                if let ActionResult::Assigned { task_id, region, compute_secs, .. } = res {
+                    // Count in-flight only on successful dispatch: a dead
+                    // worker must not leave phantom entries for the
+                    // shutdown drain to wait on.
+                    if worker_tx[*region]
+                        .send(WorkerMsg::Execute {
+                            task_id: *task_id,
+                            compute_secs: *compute_secs,
+                        })
+                        .is_ok()
+                    {
+                        inflight += 1;
+                    }
+                }
             }
-            let out = reg.servers[server_idx].assign(&task, now);
-            let record = TaskRecord {
-                task_id: task.id,
-                origin: task.origin,
-                served_region: region,
-                network_secs: sim.ctx.topo.network_secs(task.origin, region, task.payload_kb),
-                wait_secs: out.wait_secs,
-                compute_secs: out.service_secs,
-                met_deadline: out.finish_secs <= task.deadline_secs,
-                dropped: false,
-            };
-            worker_tx[region].send(WorkerMsg::Execute { record }).ok();
-            inflight += 1;
         }
-        metrics.record_slot_balance(&sim.fleet.utilization_snapshot(now + cfg.slot_secs));
 
         // Drain acks that completed during the slot.
-        while let Ok(ack) = ack_rx.try_recv() {
-            metrics.record_task(&ack.record);
+        while ack_rx.try_recv().is_ok() {
             inflight -= 1;
         }
         // Pace to real time.
@@ -120,16 +117,14 @@ pub fn serve_realtime<W: ArrivalProcess>(
             thread::sleep(target - elapsed);
         }
     }
+    engine.finish(&mut metrics);
     // Shutdown and drain the remainder.
     for tx in &worker_tx {
         tx.send(WorkerMsg::Shutdown).ok();
     }
     while inflight > 0 {
         match ack_rx.recv_timeout(Duration::from_secs(5)) {
-            Ok(ack) => {
-                metrics.record_task(&ack.record);
-                inflight -= 1;
-            }
+            Ok(_) => inflight -= 1,
             Err(_) => break,
         }
     }
@@ -143,6 +138,7 @@ pub fn serve_realtime<W: ArrivalProcess>(
 mod tests {
     use super::*;
     use crate::scheduler::rr::RoundRobin;
+    use crate::sim::Simulation;
     use crate::workload::DiurnalWorkload;
 
     #[test]
@@ -168,8 +164,47 @@ mod tests {
         let mut sched = RoundRobin::new(12);
         let m = serve_realtime(&cfg, &mut wl, &mut sched, 3, 450.0).unwrap();
         // Every assignment eventually produced a record (none lost in
-        // channels) — tasks_total counts acked records only.
+        // channels) — tasks_total counts engine records only.
         assert!(m.tasks_total > 0);
         assert_eq!(m.tasks_dropped, 0);
+    }
+
+    #[test]
+    fn realtime_matches_virtual_time_engine_bitwise() {
+        // Satellite: serve and sim are thin drivers over one
+        // ExecutionEngine, so the same config/seed must produce identical
+        // RunMetrics aggregates — bit-for-bit, not approximately.
+        let mut cfg = ExperimentConfig::default();
+        cfg.slots = 4;
+        cfg.workload.base_rate = 6.0;
+        cfg.scheduler = "rr".into();
+
+        let mut sim = Simulation::new(cfg.clone()).unwrap();
+        let mut wl_sim = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
+        let mut rr_sim = RoundRobin::new(sim.ctx.topo.n);
+        let a = sim.run(&mut wl_sim, &mut rr_sim);
+
+        let mut wl_srv = DiurnalWorkload::new(cfg.workload.clone(), 12, cfg.seed);
+        let mut rr_srv = RoundRobin::new(12);
+        let b = serve_realtime(&cfg, &mut wl_srv, &mut rr_srv, 4, 900.0).unwrap();
+
+        assert_eq!(a.tasks_total, b.tasks_total);
+        assert_eq!(a.tasks_dropped, b.tasks_dropped);
+        assert_eq!(a.deadline_misses, b.deadline_misses);
+        assert_eq!(a.model_switches, b.model_switches);
+        assert_eq!(a.server_activations, b.server_activations);
+        assert_eq!(a.response.len(), b.response.len());
+        assert_eq!(a.mean_response().to_bits(), b.mean_response().to_bits());
+        assert_eq!(a.waiting.mean().to_bits(), b.waiting.mean().to_bits());
+        assert_eq!(
+            a.power_cost_dollars.to_bits(),
+            b.power_cost_dollars.to_bits()
+        );
+        assert_eq!(
+            a.switching_cost_frob.to_bits(),
+            b.switching_cost_frob.to_bits()
+        );
+        assert_eq!(a.lb_per_slot.len(), b.lb_per_slot.len());
+        assert_eq!(a.mean_lb().to_bits(), b.mean_lb().to_bits());
     }
 }

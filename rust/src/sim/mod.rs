@@ -1,284 +1,19 @@
-//! Discrete-slot simulation engine (§VI-A: 480 slots x 45 s).
+//! Virtual-time simulation driver (§VI-A: 480 slots x 45 s).
 //!
-//! Per slot the engine: applies failure events, ticks server warm-ups,
-//! offers the slot's arrivals plus buffered backlog to the scheduler,
-//! executes the returned plan on the multi-lane servers (computing exact
-//! start/finish times), applies the drop policy, meters energy + Fig 3
-//! transition costs, and collects the paper's metrics.
-//!
-//! Power accounting treats each simulated server as a *server cluster*
-//! (Fig 1's units are clusters): `POWER_SCALE` physical boards per cluster,
-//! which puts 6-hour totals in the paper's $K range.
+//! Since the action-stream redesign the discrete-slot loop lives in the
+//! unified [`ExecutionEngine`](crate::engine::ExecutionEngine); this module
+//! is the virtual-time facade over it — `Simulation` *is* the engine, and
+//! the real-time driver (`crate::serve`) paces the same engine against the
+//! wall clock, so both surfaces share one task-accounting path (see
+//! `docs/API.md`).
 
-use crate::cluster::Fleet;
+pub use crate::engine::{
+    topo_salt, ExecutionEngine as Simulation, DROP_WAIT_SECS, MIGRATION_SECS, POWER_SCALE,
+    SWITCH_POWER_SCALE,
+};
+
 use crate::config::ExperimentConfig;
-use crate::metrics::{RunMetrics, TaskRecord};
-use crate::power::{joules_to_dollars, server_energy_j, PriceTable};
-use crate::scheduler::{Ctx, Scheduler};
-use crate::topology::Topology;
-use crate::workload::{ArrivalProcess, FailureEvent, Task};
-
-/// Physical GPUs represented by one simulated server (cluster).
-pub const POWER_SCALE: f64 = 650.0;
-
-/// Boards that actually reload on a model switch (one replica group of the
-/// cluster, not the whole cluster).
-pub const SWITCH_POWER_SCALE: f64 = 32.0;
-
-/// Tasks whose start would lag arrival by more than this are dropped
-/// (client-timeout model; drives the Fig 4 completion-rate differences).
-pub const DROP_WAIT_SECS: f64 = 240.0;
-
-/// Deterministic per-topology seed salt (FNV-1a over the name).
-pub fn topo_salt(name: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
-/// Engine owning the world state for one run.
-pub struct Simulation {
-    pub ctx: Ctx,
-    pub fleet: Fleet,
-    pub cfg: ExperimentConfig,
-    pub failures: Vec<FailureEvent>,
-    buffered: Vec<Task>,
-    /// Operational counters snapshot (for per-slot overhead deltas).
-    prev_switches: u64,
-    prev_activations: u64,
-}
-
-impl Simulation {
-    pub fn new(cfg: ExperimentConfig) -> anyhow::Result<Simulation> {
-        let topo = Topology::by_name(&cfg.topology)?;
-        // Fold the topology into the seed so equal-sized topologies still
-        // get distinct fleets/prices (Abilene and Polska are both R=12).
-        let seed = cfg.seed ^ topo_salt(&topo.name);
-        let prices = PriceTable::for_regions(topo.n, seed);
-        let fleet = Fleet::build(&topo, &prices, seed);
-        Ok(Simulation {
-            ctx: Ctx { topo, prices, slot_secs: cfg.slot_secs },
-            fleet,
-            cfg,
-            failures: Vec::new(),
-            buffered: Vec::new(),
-            prev_switches: 0,
-            prev_activations: 0,
-        })
-    }
-
-    pub fn with_failures(mut self, failures: Vec<FailureEvent>) -> Simulation {
-        self.failures = failures;
-        self
-    }
-
-    fn apply_failures(&mut self, slot: usize) {
-        for f in &self.failures {
-            let region = &mut self.fleet.regions[f.region];
-            let was = region.failed;
-            region.failed = f.active(slot);
-            if region.failed && !was {
-                // Knock servers cold: recovery requires re-warm-up.
-                for s in &mut region.servers {
-                    s.power_off();
-                }
-            }
-        }
-    }
-
-    fn counters(&self) -> (u64, u64) {
-        let mut switches = 0;
-        let mut activations = 0;
-        for r in &self.fleet.regions {
-            for s in &r.servers {
-                switches += s.model_switches;
-                activations += s.activations;
-            }
-        }
-        (switches, activations)
-    }
-
-    /// Run the full horizon with `scheduler` over `workload`.
-    pub fn run<W: ArrivalProcess>(
-        &mut self,
-        workload: &mut W,
-        scheduler: &mut dyn Scheduler,
-    ) -> RunMetrics {
-        let mut metrics = RunMetrics::new(scheduler.name(), &self.cfg.topology);
-        let slots = self.cfg.slots;
-        for slot in 0..slots {
-            self.step(slot, workload, scheduler, &mut metrics);
-        }
-        let (sw, act) = self.counters();
-        metrics.model_switches = sw;
-        metrics.server_activations = act;
-        metrics
-    }
-
-    /// One slot; public so examples can drive slot-by-slot (Fig 2/4).
-    pub fn step<W: ArrivalProcess>(
-        &mut self,
-        slot: usize,
-        workload: &mut W,
-        scheduler: &mut dyn Scheduler,
-        metrics: &mut RunMetrics,
-    ) {
-        let now = slot as f64 * self.ctx.slot_secs;
-        let slot_end = now + self.ctx.slot_secs;
-        self.apply_failures(slot);
-        for region in &mut self.fleet.regions {
-            for s in &mut region.servers {
-                s.tick_state(now);
-            }
-        }
-
-        // Offer arrivals + backlog.
-        let mut tasks = std::mem::take(&mut self.buffered);
-        tasks.extend(workload.slot_tasks(slot, self.ctx.slot_secs));
-        // Expired buffered tasks are dropped (client gave up).
-        tasks.retain(|t| {
-            if now > t.deadline_secs {
-                metrics.record_task(&TaskRecord {
-                    task_id: t.id,
-                    origin: t.origin,
-                    served_region: t.origin,
-                    network_secs: 0.0,
-                    wait_secs: now - t.arrival_secs,
-                    compute_secs: 0.0,
-                    met_deadline: false,
-                    dropped: true,
-                });
-                false
-            } else {
-                true
-            }
-        });
-
-        let plan = scheduler.schedule(&self.ctx, &mut self.fleet, tasks, slot, now);
-
-        // Execute assignments. Assignment mutates lane state, so any
-        // per-slot fleet aggregates cached during scheduling are stale.
-        self.fleet.invalidate_aggregates();
-        for (task, region, server_idx) in plan.assignments {
-            let reg = &mut self.fleet.regions[region];
-            if reg.failed || server_idx >= reg.servers.len() {
-                // Assignment to a dead/invalid target: task is lost.
-                metrics.record_task(&TaskRecord {
-                    task_id: task.id,
-                    origin: task.origin,
-                    served_region: region,
-                    network_secs: 0.0,
-                    wait_secs: 0.0,
-                    compute_secs: 0.0,
-                    met_deadline: false,
-                    dropped: true,
-                });
-                continue;
-            }
-            let server = &mut reg.servers[server_idx];
-            // Admission control: drop tasks whose projected completion
-            // cannot meet the deadline constraint d_i (the task tuple's
-            // third element, §V-A) or whose wait exceeds the client
-            // timeout — the paper's "task-dropping mechanism".
-            let projected_start = server.earliest_start(now.max(task.arrival_secs));
-            let projected_finish = projected_start + server.effective_service_secs(&task);
-            if projected_start - task.arrival_secs > DROP_WAIT_SECS
-                || projected_finish > task.deadline_secs + task.service_secs
-            {
-                metrics.record_task(&TaskRecord {
-                    task_id: task.id,
-                    origin: task.origin,
-                    served_region: region,
-                    network_secs: 0.0,
-                    wait_secs: projected_start - task.arrival_secs,
-                    compute_secs: 0.0,
-                    met_deadline: false,
-                    dropped: true,
-                });
-                continue;
-            }
-            let out = server.assign(&task, now);
-            let net = self.ctx.topo.network_secs(task.origin, region, task.payload_kb);
-            let price = reg.price_per_kwh;
-            if out.switch_energy_j > 0.0 {
-                metrics.add_power_dollars(joules_to_dollars(
-                    out.switch_energy_j * SWITCH_POWER_SCALE,
-                    price,
-                ));
-            }
-            metrics.record_task(&TaskRecord {
-                task_id: task.id,
-                origin: task.origin,
-                served_region: region,
-                network_secs: net,
-                wait_secs: out.wait_secs,
-                compute_secs: out.service_secs,
-                met_deadline: out.finish_secs + net <= task.deadline_secs,
-                dropped: false,
-            });
-        }
-        self.buffered = plan.buffered;
-
-        // Slot-level metrics + energy + operational counters in ONE pass
-        // over the fleet, using time-averaged (busy-lane-seconds)
-        // utilization for the slot. Folding the counter aggregation into
-        // this mandatory sweep removes the extra per-slot full-fleet
-        // `counters()` scan the engine used to make (§Perf incremental
-        // counters).
-        metrics.record_alloc(&plan.alloc);
-        let mut snapshot = Vec::new();
-        let mut dollars = 0.0;
-        let mut sw: u64 = 0;
-        let mut act: u64 = 0;
-        let slot_secs = self.ctx.slot_secs;
-        for region in &mut self.fleet.regions {
-            for s in &mut region.servers {
-                sw += s.model_switches;
-                act += s.activations;
-                let util_avg = s.drain_slot_utilization(slot_end, slot_secs);
-                let draw = match s.state {
-                    crate::cluster::ServerState::Cold => 0.0,
-                    crate::cluster::ServerState::Warming { .. } => {
-                        // Warm-up burns near-peak power (Fig 3.c).
-                        0.7 * s.gpu.active_watts() * slot_secs
-                    }
-                    crate::cluster::ServerState::Active => server_energy_j(
-                        s.gpu.idle_watts(),
-                        s.gpu.active_watts(),
-                        util_avg,
-                        slot_secs,
-                    ),
-                };
-                // LB snapshot: only servers active for the full window —
-                // a mid-window activation has partial capacity and would
-                // read as spurious imbalance.
-                if s.is_active() && !region.failed && s.active_edge <= now {
-                    snapshot.push(util_avg);
-                }
-                dollars += joules_to_dollars(draw * POWER_SCALE, region.price_per_kwh);
-            }
-        }
-        metrics.record_slot_balance(&snapshot);
-        metrics.add_power_dollars(dollars);
-
-        // Operational overhead from transition counters (Fig 9 right axis):
-        // model switches + activations, weighted by their Fig 3 stage time.
-        // `sw`/`act` were accumulated in the metering pass above.
-        let d_sw = (sw - self.prev_switches) as f64;
-        let d_act = (act - self.prev_activations) as f64;
-        self.prev_switches = sw;
-        self.prev_activations = act;
-        metrics.add_operational_secs(d_sw * 30.0 + d_act * 100.0);
-    }
-
-    /// Backlog currently buffered (Fig 2/4 queue-depth plots).
-    pub fn backlog_len(&self) -> usize {
-        self.buffered.len()
-    }
-}
+use crate::metrics::RunMetrics;
 
 /// Convenience: build scheduler by name and run the configured experiment.
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunMetrics> {
@@ -296,6 +31,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunMetrics> {
 mod tests {
     use super::*;
     use crate::scheduler::rr::RoundRobin;
+    use crate::workload::FailureEvent;
 
     fn small_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();

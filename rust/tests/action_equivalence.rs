@@ -1,0 +1,549 @@
+//! Action-stream redesign regression suite:
+//!
+//! * with migration disabled, the `ExecutionEngine`'s action-stream
+//!   execution must be bit-identical to the pre-redesign positional
+//!   `SlotPlan` execution (replicated here as the oracle, including this
+//!   PR's two engine bugfixes: FIFO backlog re-offer and failed-target
+//!   re-buffering) for all schedulers — decisions, drops, buffer
+//!   contents, alloc matrices, task metrics and fleet end state;
+//! * `Migrate` actions execute end-to-end: source reservation refunded,
+//!   destination queued, cost metered into `RunMetrics`;
+//! * TORTA emits migrations in a failure scenario once
+//!   `torta.migrate_backlog_secs` is set;
+//! * backlog re-offer is FIFO-stable by arrival (starvation regression);
+//! * assignments to failed targets are re-buffered, not silently dropped
+//!   with zero wait.
+
+use torta::cluster::Fleet;
+use torta::config::ExperimentConfig;
+use torta::metrics::{RunMetrics, TaskRecord};
+use torta::scheduler::{
+    empirical_alloc, Action, ActionResult, Ctx, PendingView, Scheduler, SlotDecision,
+};
+use torta::sim::{topo_salt, Simulation, DROP_WAIT_SECS, MIGRATION_SECS};
+use torta::workload::{ArrivalProcess, DiurnalWorkload, FailureEvent, Task};
+
+/// Per-slot execution fingerprint: every assignment decision in order
+/// (`Some((region, server))` = admitted, `None` = admission-dropped),
+/// buffer contents, expiry drops, and the alloc matrix bit pattern.
+#[derive(Debug, PartialEq, Eq)]
+struct SlotFp {
+    assigns: Vec<(u64, Option<(usize, usize)>)>,
+    buffered: Vec<u64>,
+    expired: Vec<u64>,
+    alloc_bits: Vec<u64>,
+}
+
+/// Stable fleet fingerprint (drain-independent state only).
+fn fleet_fp(fleet: &Fleet, t: f64) -> Vec<(u64, u64, u64)> {
+    let mut fp = Vec::new();
+    for region in &fleet.regions {
+        for s in &region.servers {
+            fp.push((s.tasks_served, s.model_switches, s.backlog_secs(t).to_bits()));
+        }
+    }
+    fp
+}
+
+fn test_cfg(name: &str, slots: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = name.into();
+    cfg.slots = slots;
+    cfg.torta.use_pjrt = false;
+    cfg
+}
+
+/// The pre-redesign execution loop, replicated verbatim as the oracle:
+/// offer FIFO-sorted backlog + arrivals, expire, `schedule()` (the compat
+/// shim over the ported schedulers), then positional-tuple execution with
+/// the legacy admission control.
+fn run_oracle(
+    cfg: &ExperimentConfig,
+    slots: usize,
+) -> (Vec<SlotFp>, RunMetrics, Vec<(u64, u64, u64)>) {
+    let holder = Simulation::new(cfg.clone()).unwrap();
+    let ctx = &holder.ctx;
+    let mut fleet = holder.fleet.clone();
+    let mut wl = DiurnalWorkload::new(
+        cfg.workload.clone(),
+        ctx.topo.n,
+        cfg.seed ^ topo_salt(&cfg.topology),
+    );
+    let mut sched = torta::scheduler::build(&cfg.scheduler, ctx, cfg).unwrap();
+    let mut metrics = RunMetrics::new(&cfg.scheduler, &cfg.topology);
+    let mut buffered: Vec<Task> = Vec::new();
+    let mut fps = Vec::with_capacity(slots);
+    for slot in 0..slots {
+        let now = slot as f64 * cfg.slot_secs;
+        for region in &mut fleet.regions {
+            for s in &mut region.servers {
+                s.tick_state(now);
+            }
+        }
+        let mut fp = SlotFp {
+            assigns: Vec::new(),
+            buffered: Vec::new(),
+            expired: Vec::new(),
+            alloc_bits: Vec::new(),
+        };
+        let mut tasks = std::mem::take(&mut buffered);
+        tasks.sort_by(|a, b| {
+            a.arrival_secs
+                .partial_cmp(&b.arrival_secs)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        tasks.extend(wl.slot_tasks(slot, cfg.slot_secs));
+        tasks.retain(|t| {
+            if now > t.deadline_secs {
+                metrics.record_task(&TaskRecord {
+                    task_id: t.id,
+                    origin: t.origin,
+                    served_region: t.origin,
+                    network_secs: 0.0,
+                    wait_secs: now - t.arrival_secs,
+                    compute_secs: 0.0,
+                    met_deadline: false,
+                    dropped: true,
+                });
+                fp.expired.push(t.id);
+                false
+            } else {
+                true
+            }
+        });
+        let plan = sched.schedule(ctx, &mut fleet, tasks, slot, now);
+        fleet.invalidate_aggregates();
+        for (task, region, server_idx) in plan.assignments {
+            let reg = &mut fleet.regions[region];
+            assert!(!reg.failed && server_idx < reg.servers.len(), "no failures here");
+            let server = &mut reg.servers[server_idx];
+            let projected_start = server.earliest_start(now.max(task.arrival_secs));
+            let projected_finish = projected_start + server.effective_service_secs(&task);
+            if projected_start - task.arrival_secs > DROP_WAIT_SECS
+                || projected_finish > task.deadline_secs + task.service_secs
+            {
+                metrics.record_task(&TaskRecord {
+                    task_id: task.id,
+                    origin: task.origin,
+                    served_region: region,
+                    network_secs: 0.0,
+                    wait_secs: projected_start - task.arrival_secs,
+                    compute_secs: 0.0,
+                    met_deadline: false,
+                    dropped: true,
+                });
+                fp.assigns.push((task.id, None));
+                continue;
+            }
+            let out = server.assign(&task, now);
+            let net = ctx.topo.network_secs(task.origin, region, task.payload_kb);
+            metrics.record_task(&TaskRecord {
+                task_id: task.id,
+                origin: task.origin,
+                served_region: region,
+                network_secs: net,
+                wait_secs: out.wait_secs,
+                compute_secs: out.service_secs,
+                met_deadline: out.finish_secs + net <= task.deadline_secs,
+                dropped: false,
+            });
+            fp.assigns.push((task.id, Some((region, server_idx))));
+        }
+        fp.buffered = plan.buffered.iter().map(|t| t.id).collect();
+        fp.alloc_bits = plan.alloc.iter().map(|x| x.to_bits()).collect();
+        buffered = plan.buffered;
+        fps.push(fp);
+    }
+    let end = slots as f64 * cfg.slot_secs;
+    let ffp = fleet_fp(&fleet, end);
+    (fps, metrics, ffp)
+}
+
+/// The same scenario through the action-stream engine.
+fn run_engine(
+    cfg: &ExperimentConfig,
+    slots: usize,
+) -> (Vec<SlotFp>, RunMetrics, Vec<(u64, u64, u64)>) {
+    let mut engine = Simulation::new(cfg.clone()).unwrap();
+    let mut wl = DiurnalWorkload::new(
+        cfg.workload.clone(),
+        engine.ctx.topo.n,
+        cfg.seed ^ topo_salt(&cfg.topology),
+    );
+    let mut sched = torta::scheduler::build(&cfg.scheduler, &engine.ctx, cfg).unwrap();
+    let mut metrics = RunMetrics::new(&cfg.scheduler, &cfg.topology);
+    let mut fps = Vec::with_capacity(slots);
+    for slot in 0..slots {
+        engine.step(slot, &mut wl, sched.as_mut(), &mut metrics);
+        let out = engine.last_outcome().expect("outcome after step");
+        let mut fp = SlotFp {
+            assigns: Vec::new(),
+            buffered: Vec::new(),
+            expired: Vec::new(),
+            alloc_bits: out.alloc.iter().map(|x| x.to_bits()).collect(),
+        };
+        for res in &out.results {
+            match res {
+                ActionResult::Assigned { task_id, region, server, .. } => {
+                    fp.assigns.push((*task_id, Some((*region, *server))));
+                }
+                ActionResult::Dropped { task_id, .. } => fp.assigns.push((*task_id, None)),
+                ActionResult::Buffered { task_id, .. } => fp.buffered.push(*task_id),
+                ActionResult::Expired { task_id, .. } => fp.expired.push(*task_id),
+                ActionResult::Rebuffered { .. } => {
+                    panic!("rebuffer impossible without failures")
+                }
+                ActionResult::Migrated { .. } | ActionResult::MigrateRejected { .. } => {
+                    panic!("migration disabled")
+                }
+                ActionResult::Powered { .. } => {}
+            }
+        }
+        fps.push(fp);
+    }
+    let end = slots as f64 * cfg.slot_secs;
+    let ffp = fleet_fp(&engine.fleet, end);
+    (fps, metrics, ffp)
+}
+
+#[test]
+fn action_stream_bit_identical_to_slotplan_execution() {
+    for name in ["rr", "sdib", "skylb", "torta-native", "reactive"] {
+        let slots = 8;
+        let cfg = test_cfg(name, slots);
+        assert!(cfg.torta.migrate_backlog_secs == 0.0, "migration must be off");
+        let (fp_a, m_a, fleet_a) = run_oracle(&cfg, slots);
+        let (fp_b, m_b, fleet_b) = run_engine(&cfg, slots);
+        for (slot, (a, b)) in fp_a.iter().zip(fp_b.iter()).enumerate() {
+            assert_eq!(a, b, "{name}: fingerprint diverged at slot {slot}");
+        }
+        assert_eq!(m_a.tasks_total, m_b.tasks_total, "{name}");
+        assert_eq!(m_a.tasks_dropped, m_b.tasks_dropped, "{name}");
+        assert_eq!(m_a.deadline_misses, m_b.deadline_misses, "{name}");
+        assert_eq!(m_a.response.len(), m_b.response.len(), "{name}");
+        assert_eq!(
+            m_a.mean_response().to_bits(),
+            m_b.mean_response().to_bits(),
+            "{name}: response means diverge"
+        );
+        assert_eq!(
+            m_a.waiting.mean().to_bits(),
+            m_b.waiting.mean().to_bits(),
+            "{name}: waiting means diverge"
+        );
+        assert_eq!(
+            m_a.network.mean().to_bits(),
+            m_b.network.mean().to_bits(),
+            "{name}: network means diverge"
+        );
+        assert_eq!(fleet_a, fleet_b, "{name}: fleet end state diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Migration execution mechanics (scripted, deterministic).
+// ---------------------------------------------------------------------------
+
+/// Slot 0: pile every task onto one server of region 0 (creates queued
+/// reservations). Later slots: migrate the most recent pending
+/// reservation to region 1 and buffer all new arrivals.
+struct MigrationScript {
+    r: usize,
+    migrated: Vec<u64>,
+}
+
+impl Scheduler for MigrationScript {
+    fn name(&self) -> &'static str {
+        "migration-script"
+    }
+
+    fn decide(
+        &mut self,
+        _ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        pending: &[PendingView],
+        slot: usize,
+        now: f64,
+    ) -> SlotDecision {
+        let mut actions: Vec<Action> = Vec::new();
+        if slot == 0 {
+            let server = fleet.regions[0]
+                .servers
+                .iter()
+                .position(|s| s.accepting(now))
+                .expect("region 0 has an accepting server");
+            let assignments: Vec<(Task, usize, usize)> =
+                tasks.into_iter().map(|t| (t, 0usize, server)).collect();
+            let alloc = empirical_alloc(&assignments, self.r);
+            for (task, region, sv) in assignments {
+                actions.push(Action::Assign { task, region, server: sv });
+            }
+            return SlotDecision { actions, alloc };
+        }
+        if let Some(p) = pending.last() {
+            let dest = fleet.regions[1]
+                .servers
+                .iter()
+                .position(|s| s.accepting(now))
+                .expect("region 1 has an accepting server");
+            self.migrated.push(p.task_id);
+            actions.push(Action::Migrate {
+                task_id: p.task_id,
+                from: (p.region, p.server),
+                to: (1, dest),
+            });
+        }
+        for task in tasks {
+            actions.push(Action::Buffer { task });
+        }
+        SlotDecision { actions, alloc: empirical_alloc(&[], self.r) }
+    }
+}
+
+#[test]
+fn migrate_action_executes_and_meters_cost() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.slots = 2;
+    cfg.workload.base_rate = 10.0;
+    cfg.torta.migrate_backlog_secs = 1.0; // enables pending tracking
+    let mut engine = Simulation::new(cfg.clone()).unwrap();
+    let mut wl = DiurnalWorkload::new(
+        cfg.workload.clone(),
+        engine.ctx.topo.n,
+        cfg.seed ^ topo_salt(&cfg.topology),
+    );
+    let mut sched = MigrationScript { r: engine.ctx.topo.n, migrated: Vec::new() };
+    let mut metrics = RunMetrics::new("migration-script", &cfg.topology);
+
+    engine.step(0, &mut wl, &mut sched, &mut metrics);
+    assert!(
+        engine.pending_len() >= 1,
+        "piling one server must leave queued-but-unstarted reservations"
+    );
+
+    engine.step(1, &mut wl, &mut sched, &mut metrics);
+    let out = engine.last_outcome().unwrap().clone();
+    let migrated: Vec<&ActionResult> = out
+        .results
+        .iter()
+        .filter(|r| matches!(r, ActionResult::Migrated { .. }))
+        .collect();
+    assert_eq!(migrated.len(), 1, "the scripted migration must execute");
+    assert_eq!(out.migrated, 1);
+    assert!((out.migration_secs - MIGRATION_SECS).abs() < 1e-12);
+    if let ActionResult::Migrated { task_id, from, to, .. } = migrated[0] {
+        assert_eq!(*task_id, sched.migrated[0]);
+        assert_eq!(from.0, 0);
+        assert_eq!(to.0, 1);
+    }
+
+    engine.finish(&mut metrics);
+    assert_eq!(metrics.migrations, 1);
+    assert!((metrics.migration_secs - MIGRATION_SECS).abs() < 1e-12);
+    assert!(metrics.operational_overhead > 0.0);
+    // The migrated task is recorded exactly once, served in region 1.
+    assert!(metrics.tasks_total > 0);
+}
+
+#[test]
+fn torta_migrates_under_failure_pressure() {
+    // Acceptance scenario: high load + the three wealthiest regions
+    // failing mid-run. With `torta.migrate_backlog_secs` set, TORTA's
+    // micro layer must rescue/rebalance at least one queued reservation,
+    // and RunMetrics must report the metered cost.
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = "torta-native".into();
+    cfg.slots = 14;
+    cfg.workload.base_rate = 240.0;
+    cfg.torta.use_pjrt = false;
+    cfg.torta.migrate_backlog_secs = 1.0;
+    let mut engine = Simulation::new(cfg.clone()).unwrap();
+    let mut by_size: Vec<usize> = (0..engine.fleet.n_regions()).collect();
+    by_size.sort_by_key(|&r| std::cmp::Reverse(engine.fleet.regions[r].servers.len()));
+    let failures: Vec<FailureEvent> = by_size[..3]
+        .iter()
+        .map(|&region| FailureEvent { region, start_slot: 2, duration_slots: 6 })
+        .collect();
+    engine = engine.with_failures(failures);
+    let mut wl = DiurnalWorkload::new(
+        cfg.workload.clone(),
+        engine.ctx.topo.n,
+        cfg.seed ^ topo_salt(&cfg.topology),
+    );
+    let mut sched = torta::scheduler::build("torta-native", &engine.ctx, &cfg).unwrap();
+    let m = engine.run(&mut wl, sched.as_mut());
+    assert!(
+        m.migrations >= 1,
+        "failure scenario executed no migrations (pending never formed?)"
+    );
+    assert!(m.migration_secs >= MIGRATION_SECS);
+    assert!(m.operational_overhead > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Backlog FIFO stability + failed-target re-buffering (engine bugfixes).
+// ---------------------------------------------------------------------------
+
+/// Buffers everything, in *reverse* offer order, and records what it was
+/// offered — the engine's FIFO re-sort must undo the scrambling.
+struct ReverseBufferProbe {
+    offered: Vec<Vec<(u64, f64)>>,
+}
+
+impl Scheduler for ReverseBufferProbe {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn decide(
+        &mut self,
+        ctx: &Ctx,
+        _fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        _pending: &[PendingView],
+        _slot: usize,
+        _now: f64,
+    ) -> SlotDecision {
+        self.offered.push(tasks.iter().map(|t| (t.id, t.arrival_secs)).collect());
+        let mut actions: Vec<Action> = Vec::new();
+        for task in tasks.into_iter().rev() {
+            actions.push(Action::Buffer { task });
+        }
+        SlotDecision { actions, alloc: empirical_alloc(&[], ctx.topo.n) }
+    }
+}
+
+#[test]
+fn backlog_reoffer_is_fifo_by_arrival_and_expiry_has_honest_wait() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.slots = 6;
+    cfg.workload.base_rate = 8.0;
+    let mut engine = Simulation::new(cfg.clone()).unwrap();
+    let mut wl = DiurnalWorkload::new(
+        cfg.workload.clone(),
+        engine.ctx.topo.n,
+        cfg.seed ^ topo_salt(&cfg.topology),
+    );
+    let mut probe = ReverseBufferProbe { offered: Vec::new() };
+    let mut metrics = RunMetrics::new("probe", &cfg.topology);
+    let mut expired_waits: Vec<f64> = Vec::new();
+    for slot in 0..cfg.slots {
+        engine.step(slot, &mut wl, &mut probe, &mut metrics);
+        for res in &engine.last_outcome().unwrap().results {
+            if let ActionResult::Expired { wait_secs, .. } = res {
+                expired_waits.push(*wait_secs);
+            }
+        }
+    }
+    // Starvation regression: despite the probe buffering in reverse order
+    // every slot, the re-offered backlog prefix must be a contiguous,
+    // arrival-sorted block ahead of the new arrivals.
+    for slot in 1..cfg.slots {
+        let now = slot as f64 * cfg.slot_secs;
+        let offered = &probe.offered[slot];
+        let backlog_len = offered.iter().take_while(|(_, a)| *a < now).count();
+        assert!(backlog_len > 0, "slot {slot}: backlog vanished");
+        for rest in &offered[backlog_len..] {
+            assert!(rest.1 >= now, "slot {slot}: backlog not a contiguous prefix");
+        }
+        for w in offered[..backlog_len].windows(2) {
+            assert!(
+                w[0].1 < w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0),
+                "slot {slot}: backlog not FIFO by arrival: {:?} before {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+    // Buffered tasks eventually expire — with their honest waiting time,
+    // never a silent zero.
+    assert!(metrics.tasks_dropped > 0, "nothing expired in 6 slots");
+    assert_eq!(expired_waits.len(), metrics.tasks_dropped as usize);
+    assert!(expired_waits.iter().all(|&w| w > 0.0), "expiry wait must be honest");
+}
+
+/// Assigns every task to a (failed) fixed region, recording offers.
+struct FailedTargeter {
+    target: usize,
+    offered: Vec<Vec<u64>>,
+}
+
+impl Scheduler for FailedTargeter {
+    fn name(&self) -> &'static str {
+        "failed-targeter"
+    }
+
+    fn decide(
+        &mut self,
+        ctx: &Ctx,
+        _fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        _pending: &[PendingView],
+        _slot: usize,
+        _now: f64,
+    ) -> SlotDecision {
+        self.offered.push(tasks.iter().map(|t| t.id).collect());
+        let assignments: Vec<(Task, usize, usize)> =
+            tasks.into_iter().map(|t| (t, self.target, 0usize)).collect();
+        let alloc = empirical_alloc(&assignments, ctx.topo.n);
+        let mut actions: Vec<Action> = Vec::new();
+        for (task, region, server) in assignments {
+            actions.push(Action::Assign { task, region, server });
+        }
+        SlotDecision { actions, alloc }
+    }
+}
+
+#[test]
+fn failed_target_assignments_are_rebuffered_not_lost() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.slots = 3;
+    cfg.workload.base_rate = 6.0;
+    let mut engine = Simulation::new(cfg.clone()).unwrap();
+    engine = engine.with_failures(vec![FailureEvent {
+        region: 0,
+        start_slot: 0,
+        duration_slots: 3,
+    }]);
+    let mut wl = DiurnalWorkload::new(
+        cfg.workload.clone(),
+        engine.ctx.topo.n,
+        cfg.seed ^ topo_salt(&cfg.topology),
+    );
+    let mut sched = FailedTargeter { target: 0, offered: Vec::new() };
+    let mut metrics = RunMetrics::new("failed-targeter", &cfg.topology);
+
+    engine.step(0, &mut wl, &mut sched, &mut metrics);
+    let out0 = engine.last_outcome().unwrap().clone();
+    let rebuffered = out0
+        .results
+        .iter()
+        .filter(|r| matches!(r, ActionResult::Rebuffered { .. }))
+        .count();
+    assert_eq!(rebuffered, sched.offered[0].len(), "every assignment re-buffered");
+    assert_eq!(metrics.tasks_dropped, 0, "slot 0 must drop nothing");
+    assert_eq!(engine.backlog_len(), sched.offered[0].len());
+
+    engine.step(1, &mut wl, &mut sched, &mut metrics);
+    // Every slot-0 task that survived expiry was re-offered at slot 1.
+    let out1 = engine.last_outcome().unwrap().clone();
+    let expired1: Vec<u64> = out1
+        .results
+        .iter()
+        .filter_map(|r| match r {
+            ActionResult::Expired { task_id, wait_secs } => {
+                assert!(*wait_secs > 0.0, "expiry wait must be honest");
+                Some(*task_id)
+            }
+            _ => None,
+        })
+        .collect();
+    for id in &sched.offered[0] {
+        assert!(
+            sched.offered[1].contains(id) || expired1.contains(id),
+            "task {id} vanished without a drop record"
+        );
+    }
+}
