@@ -10,7 +10,7 @@ use torta::scheduler::torta::{TortaMode, TortaScheduler};
 use torta::sim::Simulation;
 use torta::util::bench::BenchSuite;
 use torta::util::pool::parallel_map;
-use torta::workload::{ArrivalProcess, DiurnalWorkload};
+use torta::workload::DiurnalWorkload;
 
 const SLOTS: usize = 240;
 const SEEDS: [u64; 3] = [42, 43, 44];
@@ -21,9 +21,11 @@ fn torta_run(pa: f64, seed: u64) -> (f64, f64, f64) {
     cfg.seed = seed;
     let mut sim = Simulation::new(cfg.clone()).unwrap();
     let mut wl = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
+    // Oracle: a twin source's DemandForecast view gives true next-slot
+    // rates through the unified forecast interface.
     let twin = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
     let mut sched = TortaScheduler::new(&sim.ctx, &cfg.torta, TortaMode::Full, seed)
-        .with_oracle(pa, Box::new(move |slot| twin.expected_rate(slot)), seed);
+        .with_oracle(pa, Box::new(twin), seed);
     let m = sim.run(&mut wl, &mut sched);
     let realized = sched.predictor.realized_accuracy();
     (m.response.mean(), m.compute.mean(), realized)

@@ -7,7 +7,8 @@ use torta::metrics::RunMetrics;
 use torta::sim::Simulation;
 use torta::util::bench::BenchSuite;
 use torta::util::stats::Histogram;
-use torta::workload::{DiurnalWorkload, SurgeWorkload};
+use torta::workload::combinators::Surge;
+use torta::workload::{DiurnalWorkload, SurgeWindow};
 
 const SLOTS: usize = 90;
 const SURGE_START: usize = 30;
@@ -19,7 +20,13 @@ fn run(scheduler: &str) -> (Vec<f64>, Vec<f64>, Histogram, RunMetrics) {
     cfg.scheduler = scheduler.into();
     let mut sim = Simulation::new(cfg.clone()).unwrap();
     let base = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
-    let mut wl = SurgeWorkload::new(base, vec![(SURGE_START, SURGE_END, 2.5, None)]);
+    let window = SurgeWindow {
+        start_slot: SURGE_START,
+        end_slot: SURGE_END,
+        factor: 2.5,
+        region: None,
+    };
+    let mut wl = Surge::wrap(base, vec![window]);
     let mut sched = torta::scheduler::build(scheduler, &sim.ctx, &cfg).unwrap();
     let mut metrics = RunMetrics::new(scheduler, &cfg.topology);
 

@@ -11,7 +11,7 @@ use torta::cluster::transition::{
 use torta::cluster::{GpuType, Server};
 use torta::config::WorkloadConfig;
 use torta::util::bench::{BenchSuite, Bencher};
-use torta::workload::{ArrivalProcess, DiurnalWorkload};
+use torta::workload::{DiurnalWorkload, WorkloadSource};
 
 fn main() {
     let mut suite = BenchSuite::new("Fig 3 — task migration / model switch overhead");

@@ -25,7 +25,7 @@ use torta::sim::Simulation;
 use torta::topology::Topology;
 use torta::util::bench::{BenchSuite, Bencher};
 use torta::util::rng::Rng;
-use torta::workload::{ArrivalProcess, DiurnalWorkload};
+use torta::workload::{DiurnalWorkload, WorkloadSource};
 
 fn main() {
     // `--max-r N` caps the fleet-scale sweep (CI smoke runs R<=32 to keep
@@ -228,6 +228,24 @@ fn main() {
             for slot in 0..cfg.slots {
                 sim.step(slot, &mut w, s.as_mut(), &mut m);
             }
+            std::hint::black_box(m.tasks_total);
+        });
+    }
+
+    // ---- Scenario dimension: decision cost across the registry ----------
+    // Same scheduler, only the workload scenario varies — shows how the
+    // combinator stacks (surge windows, flash crowds, weekly seasonality
+    // + drift, failure rescue) move the per-slot cost. 48 slots cover the
+    // active event windows (surge 30-50, flash crowd 24..39, the failure
+    // window 2-8), so each row actually pays its scenario's events.
+    for name in torta::scenario::REGISTRY {
+        let mut cfg = ExperimentConfig::default();
+        cfg.slots = 48;
+        cfg.scheduler = "torta-native".into();
+        cfg.torta.use_pjrt = false;
+        cfg.scenario = torta::scenario::Scenario::by_name(name).unwrap();
+        suite.time(&format!("scenario {name}: 48 slots (torta-native)"), &Bencher::quick(), || {
+            let m = torta::sim::run_experiment(&cfg).unwrap();
             std::hint::black_box(m.tasks_total);
         });
     }

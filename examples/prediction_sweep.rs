@@ -1,30 +1,38 @@
 //! Fig 12 mini-sweep: response time as a function of demand-prediction
-//! accuracy (Eq. 12).
+//! accuracy (Eq. 12), built on the Scenario API.
 //!
 //!     cargo run --release --example prediction_sweep
 //!
-//! TORTA runs with a noisy-oracle predictor at accuracies 0.1..0.9 while
-//! the prediction-free baselines stay constant; the crossover where TORTA
-//! overtakes the best baseline is printed (paper: PA ~ 0.4-0.5).
+//! The workload comes from the scenario registry (diurnal baseline), and
+//! the noisy oracle is a twin source's `DemandForecast` view — the same
+//! interface the TORTA predictor consumes in every mode, so generator
+//! and forecast cannot drift apart. TORTA runs at accuracies 0.1..0.9
+//! while the prediction-free baselines stay constant; the crossover
+//! where TORTA overtakes the best baseline is printed (paper: PA ~
+//! 0.4-0.5).
 
 use torta::config::ExperimentConfig;
+use torta::scenario::Scenario;
 use torta::scheduler::torta::{TortaMode, TortaScheduler};
-use torta::sim::Simulation;
-use torta::workload::{ArrivalProcess, DiurnalWorkload};
+use torta::sim::{topo_salt, Simulation};
 
 const SLOTS: usize = 120;
 
 fn torta_at_accuracy(pa: f64) -> anyhow::Result<f64> {
     let mut cfg = ExperimentConfig::default();
     cfg.slots = SLOTS;
+    cfg.scenario = Scenario::by_name("diurnal")?;
     cfg.torta.prediction_accuracy = pa;
     let mut sim = Simulation::new(cfg.clone())?;
-    let mut wl = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
-    // Oracle: an identical twin generator provides true next-slot rates.
-    let twin = DiurnalWorkload::new(cfg.workload.clone(), sim.ctx.topo.n, cfg.seed);
+    let seed = cfg.seed ^ topo_salt(&sim.ctx.topo.name);
+    let n = sim.ctx.topo.n;
+    let mut wl = cfg.scenario.build_workload(&cfg.workload, n, seed, cfg.slot_secs)?;
+    // Oracle: an identical twin of the scenario stack provides the true
+    // next-slot rates through the unified DemandForecast interface.
+    let twin = cfg.scenario.build_workload(&cfg.workload, n, seed, cfg.slot_secs)?;
     let mut sched = TortaScheduler::new(&sim.ctx, &cfg.torta, TortaMode::Full, cfg.seed)
-        .with_oracle(pa, Box::new(move |slot| twin.expected_rate(slot)), cfg.seed);
-    let m = sim.run(&mut wl, &mut sched);
+        .with_oracle(pa, Box::new(twin), cfg.seed);
+    let m = sim.run(wl.as_mut(), &mut sched);
     Ok(m.response.mean())
 }
 

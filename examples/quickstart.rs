@@ -1,23 +1,33 @@
-//! Quickstart: run TORTA on the Abilene topology for 10 minutes of
-//! simulated time and print the paper's three evaluation metrics.
+//! Quickstart: pick a scenario from the registry, run TORTA on the
+//! Abilene topology for an hour of simulated time, and print the paper's
+//! three evaluation metrics.
 //!
-//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart [scenario]
 //!
-//! Uses the PJRT artifacts (policy/predictor/sinkhorn HLO) when
-//! `make artifacts` has produced them, and falls back to the native
-//! OT-with-smoothing path otherwise.
+//! `scenario` is any registry name — `diurnal` (default), `surge`,
+//! `flash-crowd`, `regional-failure`, `weekly` — or `trace:<path>` for a
+//! recorded trace (see docs/SCENARIOS.md). Uses the PJRT artifacts
+//! (policy/predictor/sinkhorn HLO) when `make artifacts` has produced
+//! them, and falls back to the native OT-with-smoothing path otherwise.
 
 use torta::config::ExperimentConfig;
+use torta::scenario::Scenario;
 use torta::sim::run_experiment;
 
 fn main() -> anyhow::Result<()> {
+    let scenario = std::env::args().nth(1).unwrap_or_else(|| "diurnal".to_string());
+
     let mut cfg = ExperimentConfig::default();
     cfg.topology = "abilene".into();
     cfg.scheduler = "torta".into();
     cfg.slots = 80; // 80 x 45 s = 1 h of simulated serving
+    cfg.scenario = Scenario::by_name(&scenario)?;
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
-    println!("TORTA quickstart: {} slots on {}", cfg.slots, cfg.topology);
+    println!(
+        "TORTA quickstart: scenario {:?}, {} slots on {}",
+        cfg.scenario.name, cfg.slots, cfg.topology
+    );
     let mut metrics = run_experiment(&cfg)?;
 
     println!("\n== results ==");

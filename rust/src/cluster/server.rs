@@ -317,7 +317,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::config::WorkloadConfig;
-    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+    use crate::workload::{DiurnalWorkload, WorkloadSource};
 
     fn task_at(arrival: f64, model: u32) -> Task {
         let mut w = DiurnalWorkload::new(WorkloadConfig::default(), 1, 1);

@@ -1,9 +1,11 @@
 //! Typed configuration system on top of the TOML-subset parser.
 //!
 //! A single [`ExperimentConfig`] describes one simulator run: topology,
-//! scheduler, horizon, workload shape, TORTA hyper-parameters. Configs load
-//! from files (`configs/*.toml`), can be overridden from the CLI, and every
-//! field has a paper-faithful default (Table I / §VI-A).
+//! scheduler, horizon, workload shape, scenario spec, TORTA
+//! hyper-parameters. Configs load from files (`configs/*.toml`), can be
+//! overridden from the CLI, and every field has a paper-faithful default
+//! (Table I / §VI-A). The scenario half (named registry entries, custom
+//! `[scenario]` sections) is documented in `docs/SCENARIOS.md`.
 
 pub mod parser;
 
@@ -137,6 +139,9 @@ pub struct ExperimentConfig {
     pub slot_secs: f64,
     pub seed: u64,
     pub workload: WorkloadConfig,
+    /// Declarative workload scenario (source stack + failure events); the
+    /// default is the plain §VI-A diurnal baseline.
+    pub scenario: crate::scenario::Scenario,
     pub torta: TortaConfig,
 }
 
@@ -149,17 +154,18 @@ impl Default for ExperimentConfig {
             slot_secs: 45.0,
             seed: 42,
             workload: WorkloadConfig::default(),
+            scenario: crate::scenario::Scenario::diurnal(),
             torta: TortaConfig::default(),
         }
     }
 }
 
 impl ExperimentConfig {
-    pub fn from_table(t: &Table) -> Self {
+    pub fn from_table(t: &Table) -> anyhow::Result<Self> {
         let d = ExperimentConfig::default();
         let wd = WorkloadConfig::default();
         let td = TortaConfig::default();
-        ExperimentConfig {
+        Ok(ExperimentConfig {
             topology: t.str_or("topology", &d.topology),
             scheduler: t.str_or("scheduler", &d.scheduler),
             slots: t.usize_or("slots", d.slots),
@@ -178,6 +184,7 @@ impl ExperimentConfig {
                 model_catalog: t.usize_or("workload.model_catalog", wd.model_catalog),
                 users: t.usize_or("workload.users", wd.users),
             },
+            scenario: crate::scenario::Scenario::from_config_table(t)?,
             torta: TortaConfig {
                 use_pjrt: t.bool_or("torta.use_pjrt", td.use_pjrt),
                 artifacts_dir: t.str_or("torta.artifacts_dir", &td.artifacts_dir),
@@ -201,11 +208,11 @@ impl ExperimentConfig {
                     td.migrate_backlog_secs,
                 ),
             },
-        }
+        })
     }
 
     pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
-        Ok(Self::from_table(&Table::from_file(path)?))
+        Self::from_table(&Table::from_file(path)?)
     }
 
     /// Validate semantic constraints; returns a human-readable error list.
@@ -236,6 +243,9 @@ impl ExperimentConfig {
         }
         if self.torta.migrate_backlog_secs < 0.0 {
             errs.push("torta.migrate_backlog_secs must be >= 0".to_string());
+        }
+        if let Err(e) = self.scenario.validate() {
+            errs.push(e);
         }
         if errs.is_empty() {
             Ok(())
@@ -273,7 +283,7 @@ mod tests {
             "#,
         )
         .unwrap();
-        let c = ExperimentConfig::from_table(&t);
+        let c = ExperimentConfig::from_table(&t).unwrap();
         assert_eq!(c.topology, "cost2");
         assert_eq!(c.scheduler, "skylb");
         assert_eq!(c.slots, 100);
@@ -282,6 +292,22 @@ mod tests {
         assert!((c.torta.prediction_accuracy - 0.5).abs() < 1e-12);
         assert!((c.torta.migrate_backlog_secs - 30.0).abs() < 1e-12);
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn scenario_parses_from_config() {
+        let t = Table::parse("scenario = \"flash-crowd\"").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.scenario.name, "flash-crowd");
+        assert!(c.validate().is_ok());
+
+        let t = Table::parse("[scenario]\nbase = \"constant\"\nrate = 12.5").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.scenario.name, "custom");
+        assert!(c.validate().is_ok());
+
+        let t = Table::parse("scenario = \"nope\"").unwrap();
+        assert!(ExperimentConfig::from_table(&t).is_err());
     }
 
     #[test]

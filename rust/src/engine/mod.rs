@@ -25,7 +25,7 @@ use crate::metrics::{RunMetrics, TaskRecord};
 use crate::power::{joules_to_dollars, server_energy_j, PriceTable};
 use crate::scheduler::{Action, ActionResult, Ctx, PendingView, Scheduler, SlotOutcome};
 use crate::topology::Topology;
-use crate::workload::{ArrivalProcess, FailureEvent, Task};
+use crate::workload::{FailureEvent, Task, WorkloadSource};
 
 /// Physical GPUs represented by one simulated server (cluster).
 pub const POWER_SCALE: f64 = 650.0;
@@ -114,11 +114,15 @@ impl ExecutionEngine {
         let prices = PriceTable::for_regions(topo.n, seed);
         let fleet = Fleet::build(&topo, &prices, seed);
         let migration_enabled = cfg.torta.migrate_backlog_secs > 0.0;
+        // Scenario-declared failure events resolve here against the same
+        // salted seed the fleet/demand profile uses, so `regional-failure`
+        // runs are reproducible from the config alone.
+        let failures = cfg.scenario.build_failures(topo.n, seed);
         Ok(ExecutionEngine {
             ctx: Ctx { topo, prices, slot_secs: cfg.slot_secs },
             fleet,
             cfg,
-            failures: Vec::new(),
+            failures,
             buffered: Vec::new(),
             pending: Vec::new(),
             migration_enabled,
@@ -128,6 +132,8 @@ impl ExecutionEngine {
         })
     }
 
+    /// Replace the failure events (overrides whatever the scenario spec
+    /// resolved in [`ExecutionEngine::new`]).
     pub fn with_failures(mut self, failures: Vec<FailureEvent>) -> ExecutionEngine {
         self.failures = failures;
         self
@@ -160,12 +166,13 @@ impl ExecutionEngine {
     }
 
     /// Run the full horizon with `scheduler` over `workload`.
-    pub fn run<W: ArrivalProcess>(
+    pub fn run(
         &mut self,
-        workload: &mut W,
+        workload: &mut dyn WorkloadSource,
         scheduler: &mut dyn Scheduler,
     ) -> RunMetrics {
         let mut metrics = RunMetrics::new(scheduler.name(), &self.cfg.topology);
+        metrics.scenario = self.cfg.scenario.name.clone();
         let slots = self.cfg.slots;
         for slot in 0..slots {
             self.step(slot, workload, scheduler, &mut metrics);
@@ -192,10 +199,10 @@ impl ExecutionEngine {
     }
 
     /// One slot; public so examples can drive slot-by-slot (Fig 2/4).
-    pub fn step<W: ArrivalProcess>(
+    pub fn step(
         &mut self,
         slot: usize,
-        workload: &mut W,
+        workload: &mut dyn WorkloadSource,
         scheduler: &mut dyn Scheduler,
         metrics: &mut RunMetrics,
     ) {

@@ -27,6 +27,7 @@ pub mod ot;
 pub mod power;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod serve;
 pub mod sim;

@@ -69,6 +69,7 @@ fn base_cli(name: &'static str) -> Cli {
         .opt("slots", "480", "time slots (45 s each)")
         .opt("seed", "42", "workload/fleet seed")
         .opt("config", "", "optional TOML config file")
+        .opt("scenario", "", "registry scenario name or trace:<path> (docs/SCENARIOS.md)")
         .opt("artifacts", "artifacts", "AOT artifact directory")
         .flag("no-pjrt", "force the native (non-PJRT) path")
 }
@@ -89,6 +90,10 @@ fn load_cfg(cli: &Cli) -> anyhow::Result<ExperimentConfig> {
     cfg.torta.artifacts_dir = cli.str("artifacts");
     if cli.has_flag("no-pjrt") {
         cfg.torta.use_pjrt = false;
+    }
+    let scenario = cli.str("scenario");
+    if !scenario.is_empty() {
+        cfg.scenario = torta::scenario::Scenario::by_name(&scenario)?;
     }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -158,14 +163,17 @@ fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
         .parse(args)?;
     let cfg = load_cfg(&cli)?;
     let topo = torta::topology::Topology::by_name(&cfg.topology)?;
-    let mut wl =
-        torta::workload::DiurnalWorkload::new(cfg.workload.clone(), topo.n, cfg.seed);
+    let seed = cfg.seed ^ torta::sim::topo_salt(&topo.name);
+    let mut wl = cfg.scenario.build_workload(&cfg.workload, topo.n, seed, cfg.slot_secs)?;
     let out = std::path::PathBuf::from(cli.str("out"));
     if let Some(dir) = out.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let n = torta::workload::trace::record(&mut wl, cfg.slots, cfg.slot_secs, &out)?;
-    println!("recorded {n} tasks over {} slots to {out:?}", cfg.slots);
+    let n = torta::workload::trace::record(wl.as_mut(), cfg.slots, cfg.slot_secs, &out)?;
+    println!(
+        "recorded {n} tasks ({} scenario) over {} slots to {out:?}",
+        cfg.scenario.name, cfg.slots
+    );
     Ok(())
 }
 
@@ -175,13 +183,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .parse(args)?;
     let cfg = load_cfg(&cli)?;
     let topo = torta::topology::Topology::by_name(&cfg.topology)?;
-    let prices = torta::power::PriceTable::for_regions(topo.n, cfg.seed);
+    // Same salted seed as the engine inside serve_realtime: the
+    // scheduler's price/cost view must match what the engine bills.
+    let seed = cfg.seed ^ torta::sim::topo_salt(&topo.name);
+    let prices = torta::power::PriceTable::for_regions(topo.n, seed);
     let ctx = torta::scheduler::Ctx { topo, prices, slot_secs: cfg.slot_secs };
-    let mut wl =
-        torta::workload::DiurnalWorkload::new(cfg.workload.clone(), ctx.topo.n, cfg.seed);
+    let mut wl = cfg.scenario.build_workload(&cfg.workload, ctx.topo.n, seed, cfg.slot_secs)?;
     let mut sched = torta::scheduler::build(&cfg.scheduler, &ctx, &cfg)?;
     let scale = cli.f64("time-scale")?;
-    let mut m = torta::serve::serve_realtime(&cfg, &mut wl, sched.as_mut(), cfg.slots, scale)?;
+    let mut m =
+        torta::serve::serve_realtime(&cfg, wl.as_mut(), sched.as_mut(), cfg.slots, scale)?;
     println!("{}", m.row());
     Ok(())
 }

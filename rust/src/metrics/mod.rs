@@ -29,6 +29,8 @@ impl TaskRecord {
 pub struct RunMetrics {
     pub scheduler: String,
     pub topology: String,
+    /// Scenario name the run executed (empty for ad-hoc driver loops).
+    pub scenario: String,
     // -- response time ----------------------------------------------------
     pub response: Samples,
     pub waiting: Samples,
@@ -144,11 +146,17 @@ impl RunMetrics {
         self.lb_per_slot.mean()
     }
 
-    /// One-line paper-style row.
+    /// One-line paper-style row. Non-default scenarios are tagged so
+    /// `simulate --scenario` output is self-describing.
     pub fn row(&mut self) -> String {
+        let scenario = if self.scenario.is_empty() || self.scenario == "diurnal" {
+            String::new()
+        } else {
+            format!(" scenario={}", self.scenario)
+        };
         format!(
             "{:<10} {:<8} resp={:>6.2}s (wait {:>5.2} / inf {:>5.2} / net {:>5.3}) \
-             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}% mig={}",
+             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}% mig={}{}",
             self.scheduler,
             self.topology,
             self.response.mean(),
@@ -159,7 +167,8 @@ impl RunMetrics {
             self.power_cost_dollars,
             self.operational_overhead,
             100.0 * self.drop_rate(),
-            self.migrations
+            self.migrations,
+            scenario
         )
     }
 }
@@ -239,6 +248,16 @@ mod tests {
         m.record_slot_balance(&[]);
         assert_eq!(m.lb_per_slot.len(), 2);
         assert!(m.mean_lb() < 1.0);
+    }
+
+    #[test]
+    fn row_tags_non_default_scenarios() {
+        let mut m = RunMetrics::new("torta", "abilene");
+        assert!(!m.row().contains("scenario="));
+        m.scenario = "diurnal".into();
+        assert!(!m.row().contains("scenario="));
+        m.scenario = "flash-crowd".into();
+        assert!(m.row().contains("scenario=flash-crowd"));
     }
 
     #[test]

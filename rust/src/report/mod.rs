@@ -64,6 +64,7 @@ pub fn run_to_json(m: &mut RunMetrics) -> Json {
     let mut j = Json::obj();
     j.set("scheduler", m.scheduler.as_str())
         .set("topology", m.topology.as_str())
+        .set("scenario", m.scenario.as_str())
         .set("mean_response_s", m.response.mean())
         .set("p50_response_s", m.response.percentile(0.5))
         .set("p95_response_s", m.response.percentile(0.95))

@@ -1,0 +1,656 @@
+//! Declarative scenario specs: one structure that unifies the workload
+//! source stack, failure events and a named registry, parseable from the
+//! experiment config format (see `docs/SCENARIOS.md`).
+//!
+//! A [`Scenario`] is data, not behavior: a base source spec plus an
+//! ordered list of combinator layers plus failure specs. Building it
+//! materializes a `Box<dyn WorkloadSource>` (via
+//! [`crate::workload::combinators`]) and the concrete
+//! [`FailureEvent`]s for a topology, so every run — `torta simulate
+//! --scenario <name>`, a config file, a bench — is reproducible from one
+//! spec. The registry covers the paper's motivation scenarios; `trace:
+//! <path>` replays a recorded CSV trace.
+
+use crate::config::{Table, Value, WorkloadConfig};
+use crate::workload::combinators::{
+    FlashCrowd, Mix, RateScale, RegionalDrift, Surge, SurgeWindow, WeeklySeasonal,
+};
+use crate::workload::{Constant, Diurnal, FailureEvent, TraceReplay, WorkloadSource};
+
+/// Registry scenario names (`trace:<path>` is additionally accepted).
+pub const REGISTRY: [&str; 5] = ["diurnal", "surge", "flash-crowd", "regional-failure", "weekly"];
+
+/// Base workload source of a scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BaseSpec {
+    /// Diurnal + Poisson generator (§VI-A baseline).
+    Diurnal,
+    /// Flat per-region rate (tasks/slot).
+    Constant { rate: f64 },
+    /// Replay a recorded CSV trace.
+    Trace { path: String },
+}
+
+/// One combinator layer; layers are applied base-outward in list order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    RateScale { factor: f64 },
+    WeeklySeasonal { day_slots: usize, weekend_factor: f64 },
+    RegionalDrift { period: f64, amp: f64 },
+    Surge { windows: Vec<SurgeWindow> },
+    FlashCrowd {
+        at: usize,
+        ramp: usize,
+        hold: usize,
+        decay: usize,
+        factor: f64,
+        region: Option<usize>,
+    },
+}
+
+/// Failure events carried by the scenario (Fig 4 runs reproducible from
+/// one config file instead of ad-hoc CLI plumbing).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FailureSpec {
+    /// A fixed region goes dark.
+    Region { region: usize, start_slot: usize, duration_slots: usize },
+    /// The `count` highest-demand regions go dark — resolved against the
+    /// run's demand profile at build time (the fig4-style worst case).
+    TopDemand { count: usize, start_slot: usize, duration_slots: usize },
+}
+
+/// A declarative, reproducible experiment scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Display / registry name (reported in `RunMetrics`).
+    pub name: String,
+    pub base: BaseSpec,
+    /// Combinator layers, applied base-outward in order.
+    pub layers: Vec<LayerSpec>,
+    pub failures: Vec<FailureSpec>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario::diurnal()
+    }
+}
+
+impl Scenario {
+    /// The §VI-A baseline: plain diurnal workload, no layers, no failures.
+    pub fn diurnal() -> Scenario {
+        Scenario {
+            name: "diurnal".into(),
+            base: BaseSpec::Diurnal,
+            layers: Vec::new(),
+            failures: Vec::new(),
+        }
+    }
+
+    /// Look up a registry scenario (or `trace:<path>`).
+    pub fn by_name(name: &str) -> anyhow::Result<Scenario> {
+        if let Some(path) = name.strip_prefix("trace:") {
+            anyhow::ensure!(!path.is_empty(), "trace scenario needs a path: trace:<path>");
+            return Ok(Scenario {
+                name: name.to_string(),
+                base: BaseSpec::Trace { path: path.to_string() },
+                layers: Vec::new(),
+                failures: Vec::new(),
+            });
+        }
+        Ok(match name {
+            "diurnal" => Scenario::diurnal(),
+            // Fig 2's periodic traffic peaks: fleet-wide 2.5x windows.
+            "surge" => Scenario {
+                name: "surge".into(),
+                base: BaseSpec::Diurnal,
+                layers: vec![LayerSpec::Surge {
+                    windows: vec![
+                        SurgeWindow { start_slot: 30, end_slot: 50, factor: 2.5, region: None },
+                        SurgeWindow { start_slot: 110, end_slot: 130, factor: 2.5, region: None },
+                    ],
+                }],
+                failures: Vec::new(),
+            },
+            // Viral event in one region: 4x peak, sharp ramp, slow decay.
+            "flash-crowd" => Scenario {
+                name: "flash-crowd".into(),
+                base: BaseSpec::Diurnal,
+                layers: vec![LayerSpec::FlashCrowd {
+                    at: 24,
+                    ramp: 3,
+                    hold: 6,
+                    decay: 6,
+                    factor: 4.0,
+                    region: Some(0),
+                }],
+                failures: Vec::new(),
+            },
+            // Fig 4's critical regional failure: the three highest-demand
+            // regions go dark early in the run.
+            "regional-failure" => Scenario {
+                name: "regional-failure".into(),
+                base: BaseSpec::Diurnal,
+                layers: Vec::new(),
+                failures: vec![FailureSpec::TopDemand {
+                    count: 3,
+                    start_slot: 2,
+                    duration_slots: 6,
+                }],
+            },
+            // Weekly seasonality stacked with rotating regional drift —
+            // a two-layer combinator stack.
+            "weekly" => Scenario {
+                name: "weekly".into(),
+                base: BaseSpec::Diurnal,
+                layers: vec![
+                    LayerSpec::WeeklySeasonal { day_slots: 48, weekend_factor: 0.5 },
+                    LayerSpec::RegionalDrift { period: 160.0, amp: 0.3 },
+                ],
+                failures: Vec::new(),
+            },
+            other => anyhow::bail!(
+                "unknown scenario {other:?}; expected one of {REGISTRY:?} or trace:<path>"
+            ),
+        })
+    }
+
+    /// Parse the scenario out of an experiment config table. Accepted
+    /// forms (see `docs/SCENARIOS.md` for the full key reference):
+    ///
+    /// * `scenario = "<registry name or trace:<path>>"` at top level;
+    /// * a `[scenario]` section with `name = "<registry name>"`;
+    /// * a `[scenario]` section declaring a custom stack: `base`
+    ///   (`diurnal|constant|trace`) plus layer keys (`rate_scale`,
+    ///   `weekly`, `drift`, `surge`, `flash_crowd`) and failure keys
+    ///   (`failures`, `fail_top`). Layers apply in the canonical order
+    ///   rate_scale → weekly → drift → surge → flash_crowd. When `name`
+    ///   resolves in the registry, the custom keys EXTEND that scenario
+    ///   (base overrides, layers/failures append after the registry's) —
+    ///   a registry stack is never silently dropped; any other `name` is
+    ///   just the run's label.
+    ///
+    /// Absent all of these, the diurnal default applies.
+    pub fn from_config_table(t: &Table) -> anyhow::Result<Scenario> {
+        if let Some(v) = t.get("scenario") {
+            let name = v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("scenario must be a string (registry name or trace:<path>)")
+            })?;
+            return Scenario::by_name(name);
+        }
+        let custom_keys = [
+            "base",
+            "rate",
+            "trace",
+            "rate_scale",
+            "weekly",
+            "drift",
+            "surge",
+            "flash_crowd",
+            "failures",
+            "fail_top",
+        ];
+        let has_custom = custom_keys.iter().any(|k| t.get(&format!("scenario.{k}")).is_some());
+        let named = t.get("scenario.name").and_then(Value::as_str);
+        let seeded = named.and_then(|n| Scenario::by_name(n).ok());
+        if !has_custom {
+            return match (seeded, named) {
+                (Some(sc), _) => Ok(sc),
+                (None, Some(n)) => Scenario::by_name(n), // surface the lookup error
+                (None, None) => Ok(Scenario::diurnal()),
+            };
+        }
+
+        let mut sc = seeded.unwrap_or_else(|| Scenario {
+            name: named.unwrap_or("custom").to_string(),
+            base: BaseSpec::Diurnal,
+            layers: Vec::new(),
+            failures: Vec::new(),
+        });
+        if t.get("scenario.base").is_some() {
+            sc.base = match t.str_or("scenario.base", "diurnal").as_str() {
+                "diurnal" => BaseSpec::Diurnal,
+                "constant" => BaseSpec::Constant { rate: t.f64_or("scenario.rate", 40.0) },
+                "trace" => {
+                    let path = t.str_or("scenario.trace", "");
+                    anyhow::ensure!(
+                        !path.is_empty(),
+                        "scenario.base = \"trace\" requires scenario.trace = \"<path>\""
+                    );
+                    BaseSpec::Trace { path }
+                }
+                other => anyhow::bail!(
+                    "unknown scenario.base {other:?}; expected diurnal|constant|trace"
+                ),
+            };
+        }
+
+        let mut layers = Vec::new();
+        if let Some(v) = t.get("scenario.rate_scale") {
+            let factor = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("scenario.rate_scale must be a number"))?;
+            layers.push(LayerSpec::RateScale { factor });
+        }
+        if let Some(v) = t.get("scenario.weekly") {
+            let xs = nums(v, "weekly")?;
+            anyhow::ensure!(xs.len() == 2, "scenario.weekly = [day_slots, weekend_factor]");
+            layers.push(LayerSpec::WeeklySeasonal {
+                day_slots: xs[0].max(0.0) as usize,
+                weekend_factor: xs[1],
+            });
+        }
+        if let Some(v) = t.get("scenario.drift") {
+            let xs = nums(v, "drift")?;
+            anyhow::ensure!(xs.len() == 2, "scenario.drift = [period_slots, amplitude]");
+            layers.push(LayerSpec::RegionalDrift { period: xs[0], amp: xs[1] });
+        }
+        if let Some(v) = t.get("scenario.surge") {
+            let rows = v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("scenario.surge must be an array of windows"))?;
+            let mut windows = Vec::new();
+            for row in rows {
+                let xs = nums(row, "surge")?;
+                anyhow::ensure!(
+                    xs.len() == 4,
+                    "scenario.surge window = [start, end, factor, region (-1 = all)]"
+                );
+                windows.push(SurgeWindow {
+                    start_slot: xs[0].max(0.0) as usize,
+                    end_slot: xs[1].max(0.0) as usize,
+                    factor: xs[2],
+                    region: region_opt(xs[3]),
+                });
+            }
+            layers.push(LayerSpec::Surge { windows });
+        }
+        if let Some(v) = t.get("scenario.flash_crowd") {
+            let xs = nums(v, "flash_crowd")?;
+            anyhow::ensure!(
+                xs.len() == 6,
+                "scenario.flash_crowd = [at, ramp, hold, decay, factor, region (-1 = all)]"
+            );
+            layers.push(LayerSpec::FlashCrowd {
+                at: xs[0].max(0.0) as usize,
+                ramp: xs[1].max(0.0) as usize,
+                hold: xs[2].max(0.0) as usize,
+                decay: xs[3].max(0.0) as usize,
+                factor: xs[4],
+                region: region_opt(xs[5]),
+            });
+        }
+
+        let mut failures = Vec::new();
+        if let Some(v) = t.get("scenario.failures") {
+            let rows = v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("scenario.failures must be an array"))?;
+            for row in rows {
+                let xs = nums(row, "failures")?;
+                anyhow::ensure!(
+                    xs.len() == 3,
+                    "scenario.failures entry = [region, start_slot, duration_slots]"
+                );
+                failures.push(FailureSpec::Region {
+                    region: xs[0].max(0.0) as usize,
+                    start_slot: xs[1].max(0.0) as usize,
+                    duration_slots: xs[2].max(0.0) as usize,
+                });
+            }
+        }
+        if let Some(v) = t.get("scenario.fail_top") {
+            let xs = nums(v, "fail_top")?;
+            anyhow::ensure!(
+                xs.len() == 3,
+                "scenario.fail_top = [count, start_slot, duration_slots]"
+            );
+            failures.push(FailureSpec::TopDemand {
+                count: xs[0].max(0.0) as usize,
+                start_slot: xs[1].max(0.0) as usize,
+                duration_slots: xs[2].max(0.0) as usize,
+            });
+        }
+
+        sc.layers.extend(layers);
+        sc.failures.extend(failures);
+        Ok(sc)
+    }
+
+    /// Semantic validation; composes into `ExperimentConfig::validate`.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        match &self.base {
+            BaseSpec::Constant { rate } => {
+                if *rate <= 0.0 {
+                    errs.push("scenario constant rate must be > 0".to_string());
+                }
+            }
+            BaseSpec::Trace { path } => {
+                if path.is_empty() {
+                    errs.push("scenario trace path must be non-empty".to_string());
+                }
+            }
+            BaseSpec::Diurnal => {}
+        }
+        for layer in &self.layers {
+            match layer {
+                LayerSpec::RateScale { factor } => {
+                    if *factor <= 0.0 {
+                        errs.push("scenario rate_scale factor must be > 0".to_string());
+                    }
+                }
+                LayerSpec::WeeklySeasonal { day_slots, weekend_factor } => {
+                    if *day_slots == 0 {
+                        errs.push("scenario weekly day_slots must be > 0".to_string());
+                    }
+                    if *weekend_factor <= 0.0 {
+                        errs.push("scenario weekly weekend_factor must be > 0".to_string());
+                    }
+                }
+                LayerSpec::RegionalDrift { period, amp } => {
+                    if *period <= 0.0 {
+                        errs.push("scenario drift period must be > 0".to_string());
+                    }
+                    if !(0.0..=1.0).contains(amp) {
+                        errs.push("scenario drift amplitude must lie in [0,1]".to_string());
+                    }
+                }
+                LayerSpec::Surge { windows } => {
+                    for w in windows {
+                        if w.end_slot <= w.start_slot {
+                            errs.push("scenario surge window must have end > start".to_string());
+                        }
+                        if w.factor <= 0.0 {
+                            errs.push("scenario surge factor must be > 0".to_string());
+                        }
+                    }
+                }
+                LayerSpec::FlashCrowd { factor, .. } => {
+                    if *factor < 1.0 {
+                        errs.push("scenario flash_crowd factor must be >= 1".to_string());
+                    }
+                }
+            }
+        }
+        for f in &self.failures {
+            let duration = match f {
+                FailureSpec::Region { duration_slots, .. } => *duration_slots,
+                FailureSpec::TopDemand { duration_slots, .. } => *duration_slots,
+            };
+            if duration == 0 {
+                errs.push("scenario failure duration_slots must be > 0".to_string());
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Materialize the workload source stack for a topology of
+    /// `n_regions`. `seed` is the run's topology-salted seed, matching
+    /// the fleet / demand-weight profile of the same run; `slot_secs` is
+    /// the run's slot duration (trace replays bin their forecast with it).
+    pub fn build_workload(
+        &self,
+        wl: &WorkloadConfig,
+        n_regions: usize,
+        seed: u64,
+        slot_secs: f64,
+    ) -> anyhow::Result<Box<dyn WorkloadSource>> {
+        let mut src: Box<dyn WorkloadSource> = match &self.base {
+            BaseSpec::Diurnal => Box::new(Diurnal::new(wl.clone(), n_regions, seed)),
+            BaseSpec::Constant { rate } => {
+                Box::new(Constant::new(wl.clone(), n_regions, seed, *rate))
+            }
+            BaseSpec::Trace { path } => {
+                let replay = TraceReplay::load(std::path::Path::new(path), n_regions)?;
+                Box::new(replay.with_slot_secs(slot_secs))
+            }
+        };
+        for layer in &self.layers {
+            src = match layer {
+                LayerSpec::RateScale { factor } => Box::new(RateScale::wrap(src, *factor)),
+                LayerSpec::WeeklySeasonal { day_slots, weekend_factor } => {
+                    Box::new(WeeklySeasonal::wrap(src, *day_slots, *weekend_factor))
+                }
+                LayerSpec::RegionalDrift { period, amp } => {
+                    Box::new(RegionalDrift::wrap(src, *period, *amp))
+                }
+                LayerSpec::Surge { windows } => Box::new(Surge::wrap(src, windows.clone())),
+                LayerSpec::FlashCrowd { at, ramp, hold, decay, factor, region } => {
+                    Box::new(FlashCrowd::wrap(src, *at, *ramp, *hold, *decay, *factor, *region))
+                }
+            };
+        }
+        Ok(src)
+    }
+
+    /// Resolve the failure specs against a topology: fixed regions pass
+    /// through (out-of-range ones are dropped), `TopDemand` ranks the
+    /// run's demand weights. At least one region is always left alive.
+    pub fn build_failures(&self, n_regions: usize, seed: u64) -> Vec<FailureEvent> {
+        let mut out = Vec::new();
+        for f in &self.failures {
+            match f {
+                FailureSpec::Region { region, start_slot, duration_slots } => {
+                    if *region < n_regions {
+                        out.push(FailureEvent {
+                            region: *region,
+                            start_slot: *start_slot,
+                            duration_slots: *duration_slots,
+                        });
+                    }
+                }
+                FailureSpec::TopDemand { count, start_slot, duration_slots } => {
+                    let w = crate::geo::demand_weights(n_regions, seed);
+                    let mut idx: Vec<usize> = (0..n_regions).collect();
+                    idx.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+                    let take = (*count).min(n_regions.saturating_sub(1));
+                    for &region in idx.iter().take(take) {
+                        out.push(FailureEvent {
+                            region,
+                            start_slot: *start_slot,
+                            duration_slots: *duration_slots,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Build both halves of the scenario in one call.
+    pub fn build(
+        &self,
+        wl: &WorkloadConfig,
+        n_regions: usize,
+        seed: u64,
+        slot_secs: f64,
+    ) -> anyhow::Result<(Box<dyn WorkloadSource>, Vec<FailureEvent>)> {
+        let workload = self.build_workload(wl, n_regions, seed, slot_secs)?;
+        Ok((workload, self.build_failures(n_regions, seed)))
+    }
+
+    /// Combine several already-built sources into one (declarative specs
+    /// cover single stacks; programmatic mixes use this).
+    pub fn mix(sources: Vec<Box<dyn WorkloadSource>>) -> anyhow::Result<Box<dyn WorkloadSource>> {
+        Ok(Box::new(Mix::new(sources)?))
+    }
+}
+
+fn nums(v: &Value, key: &str) -> anyhow::Result<Vec<f64>> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| anyhow::anyhow!("scenario.{key} must be an array"))?;
+    arr.iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("scenario.{key}: non-numeric entry")))
+        .collect()
+}
+
+fn region_opt(x: f64) -> Option<usize> {
+    if x < 0.0 {
+        None
+    } else {
+        Some(x as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DemandForecast;
+
+    #[test]
+    fn registry_names_all_resolve_and_validate() {
+        for name in REGISTRY {
+            let sc = Scenario::by_name(name).unwrap();
+            assert_eq!(sc.name, name);
+            sc.validate().unwrap();
+        }
+        assert!(Scenario::by_name("nope").is_err());
+        assert!(Scenario::by_name("trace:").is_err());
+        let tr = Scenario::by_name("trace:results/t.csv").unwrap();
+        assert_eq!(tr.base, BaseSpec::Trace { path: "results/t.csv".into() });
+    }
+
+    #[test]
+    fn default_is_diurnal() {
+        let sc = Scenario::default();
+        assert_eq!(sc, Scenario::diurnal());
+        assert!(sc.layers.is_empty() && sc.failures.is_empty());
+    }
+
+    #[test]
+    fn top_level_string_key_parses() {
+        let t = Table::parse("scenario = \"surge\"").unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert_eq!(sc.name, "surge");
+        assert_eq!(sc.layers.len(), 1);
+    }
+
+    #[test]
+    fn section_name_key_parses() {
+        let t = Table::parse("[scenario]\nname = \"weekly\"").unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert_eq!(sc.name, "weekly");
+        assert_eq!(sc.layers.len(), 2);
+    }
+
+    #[test]
+    fn custom_section_parses_layers_and_failures() {
+        let t = Table::parse(
+            r#"
+            [scenario]
+            name = "mixed"
+            base = "constant"
+            rate = 25.0
+            rate_scale = 1.5
+            weekly = [48, 0.5]
+            drift = [160.0, 0.3]
+            surge = [[10, 20, 2.0, -1], [15, 25, 3.0, 2]]
+            flash_crowd = [30, 3, 5, 5, 4.0, 0]
+            failures = [[1, 4, 3]]
+            fail_top = [2, 8, 4]
+            "#,
+        )
+        .unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert_eq!(sc.name, "mixed");
+        assert_eq!(sc.base, BaseSpec::Constant { rate: 25.0 });
+        assert_eq!(sc.layers.len(), 5);
+        assert!(matches!(sc.layers[0], LayerSpec::RateScale { .. }));
+        assert!(matches!(sc.layers[4], LayerSpec::FlashCrowd { region: Some(0), .. }));
+        match &sc.layers[3] {
+            LayerSpec::Surge { windows } => {
+                assert_eq!(windows.len(), 2);
+                assert_eq!(windows[0].region, None);
+                assert_eq!(windows[1].region, Some(2));
+            }
+            other => panic!("expected surge layer, got {other:?}"),
+        }
+        assert_eq!(sc.failures.len(), 2);
+        sc.validate().unwrap();
+    }
+
+    #[test]
+    fn registry_name_with_custom_keys_extends_registry_stack() {
+        // `name = "surge"` + failure keys must keep the surge windows —
+        // the registry stack is extended, never silently dropped.
+        let t = Table::parse("[scenario]\nname = \"surge\"\nfail_top = [2, 8, 4]").unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert_eq!(sc.name, "surge");
+        assert!(matches!(sc.layers[0], LayerSpec::Surge { .. }), "registry layers dropped");
+        assert_eq!(sc.failures.len(), 1);
+        // base override still wins over the seeded registry base.
+        let t = Table::parse("[scenario]\nname = \"surge\"\nbase = \"constant\"\nrate = 9.0")
+            .unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert_eq!(sc.base, BaseSpec::Constant { rate: 9.0 });
+        assert_eq!(sc.layers.len(), 1, "surge layers kept alongside base override");
+    }
+
+    #[test]
+    fn absent_scenario_defaults_to_diurnal() {
+        let t = Table::parse("slots = 8").unwrap();
+        assert_eq!(Scenario::from_config_table(&t).unwrap(), Scenario::diurnal());
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let mut sc = Scenario::by_name("surge").unwrap();
+        sc.layers.push(LayerSpec::RateScale { factor: 0.0 });
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("rate_scale"));
+        let mut sc = Scenario::diurnal();
+        sc.failures.push(FailureSpec::Region { region: 0, start_slot: 1, duration_slots: 0 });
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn build_workload_stacks_layers() {
+        let sc = Scenario::by_name("weekly").unwrap();
+        let wl = WorkloadConfig::default();
+        let src = sc.build_workload(&wl, 6, 7, 45.0).unwrap();
+        assert_eq!(src.n_regions(), 6);
+        // Weekend slots (day 5 with day_slots = 48) dip below the plain
+        // diurnal curve scaled only by the drift envelope.
+        let plain = Diurnal::new(wl, 6, 7);
+        let weekend_slot = 5 * 48;
+        let composed: f64 = src.rate_at(weekend_slot).iter().sum();
+        let base: f64 = plain.rate_at(weekend_slot).iter().sum();
+        assert!(composed < base, "composed {composed} vs base {base}");
+    }
+
+    #[test]
+    fn top_demand_failures_resolve_against_demand_weights() {
+        let sc = Scenario::by_name("regional-failure").unwrap();
+        let failures = sc.build_failures(12, 42);
+        assert_eq!(failures.len(), 3);
+        let w = crate::geo::demand_weights(12, 42);
+        for f in &failures {
+            // Every failed region is among the top-3 by demand weight.
+            let higher = w.iter().filter(|&&x| x > w[f.region]).count();
+            assert!(higher < 3, "region {} is not top-demand", f.region);
+            assert_eq!(f.start_slot, 2);
+            assert_eq!(f.duration_slots, 6);
+        }
+        // Never fails everything.
+        let tiny = sc.build_failures(2, 1);
+        assert_eq!(tiny.len(), 1);
+    }
+
+    #[test]
+    fn registry_scenarios_build_for_small_fleets() {
+        let wl = WorkloadConfig::default();
+        for name in REGISTRY {
+            let sc = Scenario::by_name(name).unwrap();
+            let mut src = sc.build_workload(&wl, 4, 3, 45.0).unwrap();
+            let tasks = src.slot_tasks(0, 45.0);
+            assert_eq!(src.n_regions(), 4, "{name}");
+            assert!(!tasks.is_empty(), "{name}");
+        }
+    }
+}

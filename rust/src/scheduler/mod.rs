@@ -343,7 +343,7 @@ pub fn build(
 mod tests {
     use super::*;
     use crate::config::WorkloadConfig;
-    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+    use crate::workload::{DiurnalWorkload, WorkloadSource};
 
     #[test]
     fn request_distribution_normalizes() {

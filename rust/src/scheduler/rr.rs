@@ -158,7 +158,7 @@ mod tests {
     use crate::config::{ExperimentConfig, WorkloadConfig};
     use crate::power::PriceTable;
     use crate::topology::Topology;
-    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+    use crate::workload::{DiurnalWorkload, WorkloadSource};
 
     fn setup() -> (Ctx, Fleet, Vec<Task>) {
         let topo = Topology::abilene();

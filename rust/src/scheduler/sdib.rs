@@ -152,7 +152,7 @@ mod tests {
     use crate::config::WorkloadConfig;
     use crate::power::PriceTable;
     use crate::topology::Topology;
-    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+    use crate::workload::{DiurnalWorkload, WorkloadSource};
 
     fn setup() -> (Ctx, Fleet, Vec<Task>) {
         let topo = Topology::abilene();

@@ -520,7 +520,7 @@ mod tests {
     use crate::config::WorkloadConfig;
     use crate::power::PriceTable;
     use crate::topology::Topology;
-    use crate::workload::{ArrivalProcess, DiurnalWorkload, TaskClass};
+    use crate::workload::{DiurnalWorkload, TaskClass, WorkloadSource};
 
     fn micro() -> MicroAllocator {
         MicroAllocator::new(1.0, 0.4, 0.4, 0.2)

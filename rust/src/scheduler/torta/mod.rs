@@ -25,7 +25,7 @@ use crate::config::TortaConfig;
 use crate::ot;
 use crate::runtime::TortaArtifacts;
 use crate::util::rng::Rng;
-use crate::workload::Task;
+use crate::workload::{DemandForecast, Task};
 
 use macro_alloc::MacroAllocator;
 use micro::MicroAllocator;
@@ -123,11 +123,15 @@ impl TortaScheduler {
         }
     }
 
-    /// Install a noisy-oracle predictor (Fig 12 accuracy sweep).
+    /// Install a noisy-oracle predictor (Fig 12 accuracy sweep). The
+    /// oracle is any [`DemandForecast`] — typically a twin of the run's
+    /// workload source, so the predictor consumes the exact same demand
+    /// view the generator produces (closures adapt via
+    /// [`crate::workload::FnForecast`]).
     pub fn with_oracle(
         mut self,
         accuracy: f64,
-        oracle: Box<dyn Fn(usize) -> Vec<f64>>,
+        oracle: Box<dyn DemandForecast>,
         seed: u64,
     ) -> TortaScheduler {
         self.predictor =
@@ -485,7 +489,7 @@ mod tests {
     use crate::config::{ExperimentConfig, WorkloadConfig};
     use crate::power::PriceTable;
     use crate::topology::Topology;
-    use crate::workload::{ArrivalProcess, DiurnalWorkload};
+    use crate::workload::{DiurnalWorkload, WorkloadSource};
 
     fn setup(mode: TortaMode) -> (Ctx, Fleet, TortaScheduler) {
         let topo = Topology::abilene();
@@ -564,7 +568,8 @@ mod tests {
     #[test]
     fn oracle_sweep_installs() {
         let (ctx, mut fleet, s) = setup(TortaMode::Native);
-        let mut s = s.with_oracle(0.5, Box::new(|_| vec![10.0; 12]), 3);
+        let oracle = crate::workload::FnForecast::new(12, |_| vec![10.0; 12]);
+        let mut s = s.with_oracle(0.5, Box::new(oracle), 3);
         let ts = tasks(ctx.topo.n, 2);
         let plan = s.schedule(&ctx, &mut fleet, ts, 0, 0.0);
         assert!(!plan.assignments.is_empty());

@@ -3,20 +3,25 @@
 //! * **Learned** — the trained MLP artifact executed via PJRT on the K=5
 //!   history window; its distribution output is scaled by recent volume.
 //! * **Ema** — native exponential-moving-average fallback (no artifacts).
-//! * **OracleNoise** — ground-truth next-slot rates perturbed to a target
-//!   prediction accuracy PA (Eq. 12); drives the Fig 12 sweep. Noise is
-//!   multiplicative log-normal-ish with E|rel.err| = -ln(PA), making the
-//!   realized PA land on the target in expectation.
+//! * **OracleNoise** — a [`DemandForecast`] (typically the run's own
+//!   workload source — the unified forecast interface, no duplicated
+//!   expected-rate logic) perturbed to a target prediction accuracy PA
+//!   (Eq. 12); drives the Fig 12 sweep. Noise is multiplicative
+//!   log-normal-ish with E|rel.err| = -ln(PA), making the realized PA
+//!   land on the target in expectation.
 
 use super::features::HistoryWindow;
 use crate::runtime::TortaArtifacts;
 use crate::util::rng::Rng;
+use crate::workload::DemandForecast;
 
 pub enum PredictorMode {
     Learned,
     Ema,
-    /// (target accuracy, oracle giving true expected rates for slot+1)
-    OracleNoise { accuracy: f64, oracle: Box<dyn Fn(usize) -> Vec<f64>> },
+    /// Target accuracy plus the ground-truth forecast (the workload's
+    /// [`DemandForecast`] view; `rate_at(slot + 1)` is what a perfect
+    /// predictor would return).
+    OracleNoise { accuracy: f64, oracle: Box<dyn DemandForecast> },
 }
 
 pub struct DemandPredictor {
@@ -67,11 +72,16 @@ impl DemandPredictor {
         self.volume_ema = alpha * total + (1.0 - alpha) * self.volume_ema;
     }
 
-    /// Predict next-slot arrivals per region (task counts).
-    pub fn predict(&mut self, slot: usize, artifacts: Option<&TortaArtifacts>) -> Vec<f64> {
-        let pred = match &self.mode {
+    /// One forecast for `slot + 1 + ahead` without Eq. 12 bookkeeping.
+    fn raw_predict(
+        &mut self,
+        slot: usize,
+        ahead: usize,
+        artifacts: Option<&TortaArtifacts>,
+    ) -> Vec<f64> {
+        match &self.mode {
             PredictorMode::OracleNoise { accuracy, oracle } => {
-                let truth = oracle(slot + 1);
+                let truth = oracle.rate_at(slot + 1 + ahead);
                 debug_assert_eq!(truth.len(), self.r);
                 // E|rel err| = -ln(PA)  (Eq. 12 inverted); half-normal noise
                 // with that mean => sigma = mean * sqrt(pi/2).
@@ -102,9 +112,29 @@ impl DemandPredictor {
                 }
             }
             PredictorMode::Ema => self.ema.clone(),
-        };
+        }
+    }
+
+    /// Predict next-slot arrivals per region (task counts).
+    pub fn predict(&mut self, slot: usize, artifacts: Option<&TortaArtifacts>) -> Vec<f64> {
+        let pred = self.raw_predict(slot, 0, artifacts);
         self.last_pred = Some(pred.clone());
         pred
+    }
+
+    /// Horizon forecast: per-region rates for slots `slot + 1 ..=
+    /// slot + horizon`, mirroring [`DemandForecast::rate_horizon`]. The
+    /// oracle mode reads (and perturbs) the forecast at each step; the
+    /// learned/EMA modes extend flat beyond one slot (persistence
+    /// forecast). Unlike [`predict`](Self::predict) this registers no
+    /// prediction for Eq. 12 scoring.
+    pub fn predict_horizon(
+        &mut self,
+        slot: usize,
+        horizon: usize,
+        artifacts: Option<&TortaArtifacts>,
+    ) -> Vec<Vec<f64>> {
+        (0..horizon).map(|k| self.raw_predict(slot, k, artifacts)).collect()
     }
 
     /// Realized prediction accuracy PA = exp(-mean |F_pred-F_act|/F_act)
@@ -120,6 +150,8 @@ impl DemandPredictor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::{Diurnal, FnForecast};
 
     #[test]
     fn ema_tracks_constant_load() {
@@ -134,7 +166,7 @@ mod tests {
 
     #[test]
     fn oracle_perfect_accuracy_is_nearly_exact() {
-        let oracle = Box::new(|_slot: usize| vec![20.0, 40.0]);
+        let oracle = Box::new(FnForecast::new(2, |_slot| vec![20.0, 40.0]));
         let mut p = DemandPredictor::new(
             2,
             PredictorMode::OracleNoise { accuracy: 0.9999, oracle },
@@ -146,9 +178,42 @@ mod tests {
     }
 
     #[test]
+    fn oracle_consumes_workload_forecast_interface() {
+        // The oracle IS the workload's DemandForecast view — same values,
+        // no duplicated expected-rate logic.
+        let twin = Diurnal::new(WorkloadConfig::default(), 12, 7);
+        let truth = twin.rate_at(6);
+        let mut p = DemandPredictor::new(
+            12,
+            PredictorMode::OracleNoise { accuracy: 0.9999, oracle: Box::new(twin) },
+            1,
+        );
+        let f = p.predict(5, None); // forecasts slot 5 + 1
+        for (a, b) in f.iter().zip(truth.iter()) {
+            assert!((a - b).abs() < 0.05 * b.max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn horizon_forecast_tracks_oracle_curve() {
+        let oracle = Box::new(FnForecast::new(1, |slot| vec![slot as f64]));
+        let mut p = DemandPredictor::new(
+            1,
+            PredictorMode::OracleNoise { accuracy: 0.9999, oracle },
+            3,
+        );
+        let h = p.predict_horizon(10, 3, None);
+        assert_eq!(h.len(), 3);
+        for (k, rates) in h.iter().enumerate() {
+            let want = (10 + 1 + k) as f64;
+            assert!((rates[0] - want).abs() < 0.5, "{} vs {want}", rates[0]);
+        }
+    }
+
+    #[test]
     fn oracle_noise_grows_as_accuracy_drops() {
         let mk = |acc: f64| {
-            let oracle = Box::new(|_s: usize| vec![100.0; 4]);
+            let oracle = Box::new(FnForecast::new(4, |_s| vec![100.0; 4]));
             let mut p =
                 DemandPredictor::new(4, PredictorMode::OracleNoise { accuracy: acc, oracle }, 7);
             let mut err = 0.0;
@@ -165,7 +230,7 @@ mod tests {
 
     #[test]
     fn realized_accuracy_matches_target_roughly() {
-        let oracle = Box::new(|_s: usize| vec![50.0; 3]);
+        let oracle = Box::new(FnForecast::new(3, |_s| vec![50.0; 3]));
         let target = 0.6;
         let mut p = DemandPredictor::new(
             3,

@@ -21,7 +21,7 @@ use crate::config::ExperimentConfig;
 use crate::engine::ExecutionEngine;
 use crate::metrics::RunMetrics;
 use crate::scheduler::{ActionResult, Scheduler};
-use crate::workload::ArrivalProcess;
+use crate::workload::WorkloadSource;
 
 /// Messages from leader to a region worker.
 enum WorkerMsg {
@@ -42,9 +42,9 @@ struct Ack {
 ///
 /// `time_scale` compresses wall time: 45 s slots run in 45/time_scale
 /// seconds. Returns the same RunMetrics as the virtual-time engine.
-pub fn serve_realtime<W: ArrivalProcess>(
+pub fn serve_realtime(
     cfg: &ExperimentConfig,
-    workload: &mut W,
+    workload: &mut dyn WorkloadSource,
     scheduler: &mut dyn Scheduler,
     slots: usize,
     time_scale: f64,
@@ -52,6 +52,7 @@ pub fn serve_realtime<W: ArrivalProcess>(
     let mut engine = ExecutionEngine::new(cfg.clone())?;
     let n_regions = engine.ctx.topo.n;
     let mut metrics = RunMetrics::new(scheduler.name(), &cfg.topology);
+    metrics.scenario = cfg.scenario.name.clone();
 
     // Spawn region workers.
     let (ack_tx, ack_rx) = mpsc::channel::<Ack>();

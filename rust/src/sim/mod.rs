@@ -15,16 +15,20 @@ pub use crate::engine::{
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
 
-/// Convenience: build scheduler by name and run the configured experiment.
+/// Convenience: build the scenario workload + scheduler by name and run
+/// the configured experiment. The scenario spec drives both the workload
+/// source stack and (via the engine) the failure events, so the default
+/// config reproduces the pre-scenario diurnal run bit-for-bit.
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunMetrics> {
     let mut sim = Simulation::new(cfg.clone())?;
-    let mut workload = crate::workload::DiurnalWorkload::new(
-        cfg.workload.clone(),
-        sim.ctx.topo.n,
-        cfg.seed ^ topo_salt(&cfg.topology),
-    );
+    // Salt with the canonical topology name (by_name lowercases), matching
+    // the engine's fleet/failure seed even when cfg.topology differs in
+    // case.
+    let seed = cfg.seed ^ topo_salt(&sim.ctx.topo.name);
+    let n = sim.ctx.topo.n;
+    let mut workload = cfg.scenario.build_workload(&cfg.workload, n, seed, cfg.slot_secs)?;
     let mut sched = crate::scheduler::build(&cfg.scheduler, &sim.ctx, cfg)?;
-    Ok(sim.run(&mut workload, sched.as_mut()))
+    Ok(sim.run(workload.as_mut(), sched.as_mut()))
 }
 
 #[cfg(test)]

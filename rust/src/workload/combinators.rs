@@ -1,0 +1,460 @@
+//! Composable rate-combinator layers over workload base sources.
+//!
+//! Each combinator multiplies the wrapped source's expected-rate curve by
+//! a deterministic shape and delegates task generation back to the base
+//! through [`WorkloadSource::gen_at_rates`], so a composed stack draws the
+//! exact same random sequence a hard-coded generator would — the property
+//! the legacy-equivalence oracle in `rust/tests/scenario_equivalence.rs`
+//! pins down. Layers nest freely (`Surge` over `WeeklySeasonal` over
+//! `Diurnal`, …) and stack dynamically through `Box<dyn WorkloadSource>`;
+//! the declarative way to build stacks is a
+//! [`crate::scenario::Scenario`] spec (see `docs/SCENARIOS.md`).
+
+use super::{DemandForecast, Task, WorkloadSource};
+
+/// Deterministic multiplicative rate modulation: `factor(slot, region)`
+/// scales the wrapped source's expected rate.
+pub trait RateShape {
+    fn factor(&self, slot: usize, region: usize) -> f64;
+}
+
+/// A source wrapped by one rate-modulation layer.
+pub struct Modulated<S, M> {
+    base: S,
+    shape: M,
+}
+
+impl<S: WorkloadSource, M: RateShape> Modulated<S, M> {
+    pub fn new(base: S, shape: M) -> Modulated<S, M> {
+        Modulated { base, shape }
+    }
+
+    /// Read access to the wrapped base (tests / diagnostics).
+    pub fn base(&self) -> &S {
+        &self.base
+    }
+}
+
+impl<S: WorkloadSource, M: RateShape> DemandForecast for Modulated<S, M> {
+    fn n_regions(&self) -> usize {
+        self.base.n_regions()
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        self.base
+            .rate_at(slot)
+            .iter()
+            .enumerate()
+            .map(|(r, &x)| x * self.shape.factor(slot, r))
+            .collect()
+    }
+}
+
+impl<S: WorkloadSource, M: RateShape> WorkloadSource for Modulated<S, M> {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let rates = self.rate_at(slot);
+        self.base.gen_at_rates(slot, slot_secs, &rates)
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        // An outer layer has already fixed the final rates: pass through.
+        self.base.gen_at_rates(slot, slot_secs, rates)
+    }
+}
+
+/// One multiplicative surge window; overlapping windows compound.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SurgeWindow {
+    pub start_slot: usize,
+    /// Exclusive end slot.
+    pub end_slot: usize,
+    pub factor: f64,
+    /// Affected region, or `None` for fleet-wide.
+    pub region: Option<usize>,
+}
+
+impl SurgeWindow {
+    fn applies(&self, slot: usize, region: usize) -> bool {
+        let in_window = slot >= self.start_slot && slot < self.end_slot;
+        let on_region = match self.region {
+            Some(r) => r == region,
+            None => true,
+        };
+        in_window && on_region
+    }
+}
+
+/// Shape behind [`Surge`]: periodic/one-off traffic peaks (Fig 2).
+pub struct SurgeShape {
+    windows: Vec<SurgeWindow>,
+}
+
+impl RateShape for SurgeShape {
+    fn factor(&self, slot: usize, region: usize) -> f64 {
+        let mut m = 1.0;
+        for w in &self.windows {
+            if w.applies(slot, region) {
+                m *= w.factor;
+            }
+        }
+        m
+    }
+}
+
+/// Multiplicative surge windows — the composable replacement for the
+/// legacy `SurgeWorkload` (bit-identical task streams, oracle-tested).
+pub type Surge<S> = Modulated<S, SurgeShape>;
+
+impl<S: WorkloadSource> Modulated<S, SurgeShape> {
+    pub fn wrap(base: S, windows: Vec<SurgeWindow>) -> Surge<S> {
+        Modulated::new(base, SurgeShape { windows })
+    }
+}
+
+/// Shape behind [`FlashCrowd`]: a sharp ramp to `factor`x, a hold, and a
+/// linear decay back to baseline — the viral-event profile.
+pub struct FlashCrowdShape {
+    pub at: usize,
+    pub ramp: usize,
+    pub hold: usize,
+    pub decay: usize,
+    pub factor: f64,
+    /// Affected region, or `None` for fleet-wide.
+    pub region: Option<usize>,
+}
+
+impl RateShape for FlashCrowdShape {
+    fn factor(&self, slot: usize, region: usize) -> f64 {
+        let on_region = match self.region {
+            Some(r) => r == region,
+            None => true,
+        };
+        if !on_region || slot < self.at {
+            return 1.0;
+        }
+        let peak = self.factor.max(1.0);
+        let since = slot - self.at;
+        if since < self.ramp {
+            return 1.0 + (peak - 1.0) * (since + 1) as f64 / self.ramp as f64;
+        }
+        let since = since - self.ramp;
+        if since < self.hold {
+            return peak;
+        }
+        let since = since - self.hold;
+        if since < self.decay {
+            return peak - (peak - 1.0) * (since + 1) as f64 / self.decay as f64;
+        }
+        1.0
+    }
+}
+
+/// Flash-crowd event: ramp / hold / decay around one region (or all).
+pub type FlashCrowd<S> = Modulated<S, FlashCrowdShape>;
+
+impl<S: WorkloadSource> Modulated<S, FlashCrowdShape> {
+    pub fn wrap(
+        base: S,
+        at: usize,
+        ramp: usize,
+        hold: usize,
+        decay: usize,
+        factor: f64,
+        region: Option<usize>,
+    ) -> FlashCrowd<S> {
+        Modulated::new(base, FlashCrowdShape { at, ramp, hold, decay, factor, region })
+    }
+}
+
+/// Shape behind [`RegionalDrift`]: a demand wave that rotates across
+/// regions over `period` slots, modelling geographic follow-the-sun
+/// drift on top of each region's own curve.
+pub struct RegionalDriftShape {
+    pub period: f64,
+    pub amp: f64,
+    pub n_regions: usize,
+}
+
+impl RateShape for RegionalDriftShape {
+    fn factor(&self, slot: usize, region: usize) -> f64 {
+        let cycle = slot as f64 / self.period.max(1.0);
+        let offset = region as f64 / self.n_regions.max(1) as f64;
+        let phase = 2.0 * std::f64::consts::PI * (cycle - offset);
+        (1.0 + self.amp * phase.sin()).max(0.05)
+    }
+}
+
+/// Rotating regional demand drift.
+pub type RegionalDrift<S> = Modulated<S, RegionalDriftShape>;
+
+impl<S: WorkloadSource> Modulated<S, RegionalDriftShape> {
+    pub fn wrap(base: S, period: f64, amp: f64) -> RegionalDrift<S> {
+        let n_regions = base.n_regions();
+        Modulated::new(base, RegionalDriftShape { period, amp, n_regions })
+    }
+}
+
+/// Weekday demand profile (Mon..Fri): mild mid-week peak.
+const WEEKDAY_PROFILE: [f64; 5] = [1.0, 1.06, 1.12, 1.06, 1.0];
+
+/// Shape behind [`WeeklySeasonal`]: a 7-"day" cycle of `day_slots` slots
+/// per day — weekday profile, then two weekend days at `weekend_factor`.
+pub struct WeeklyShape {
+    pub day_slots: usize,
+    pub weekend_factor: f64,
+}
+
+impl RateShape for WeeklyShape {
+    fn factor(&self, slot: usize, _region: usize) -> f64 {
+        let day = (slot / self.day_slots.max(1)) % 7;
+        if day < 5 {
+            WEEKDAY_PROFILE[day]
+        } else {
+            self.weekend_factor
+        }
+    }
+}
+
+/// Weekly seasonality layer.
+pub type WeeklySeasonal<S> = Modulated<S, WeeklyShape>;
+
+impl<S: WorkloadSource> Modulated<S, WeeklyShape> {
+    pub fn wrap(base: S, day_slots: usize, weekend_factor: f64) -> WeeklySeasonal<S> {
+        Modulated::new(base, WeeklyShape { day_slots, weekend_factor })
+    }
+}
+
+/// Shape behind [`RateScale`]: a uniform multiplier (load knob).
+pub struct ScaleShape {
+    pub factor: f64,
+}
+
+impl RateShape for ScaleShape {
+    fn factor(&self, _slot: usize, _region: usize) -> f64 {
+        self.factor
+    }
+}
+
+/// Uniform rate scaling.
+pub type RateScale<S> = Modulated<S, ScaleShape>;
+
+impl<S: WorkloadSource> Modulated<S, ScaleShape> {
+    pub fn wrap(base: S, factor: f64) -> RateScale<S> {
+        Modulated::new(base, ScaleShape { factor })
+    }
+}
+
+/// Superposition of several sources over the same region set: rates add,
+/// task streams interleave by arrival time. Task ids are namespaced by
+/// source index (`id * k + i` for `k` sources) so merged streams keep
+/// globally unique, deterministic ids.
+pub struct Mix {
+    sources: Vec<Box<dyn WorkloadSource>>,
+}
+
+impl Mix {
+    pub fn new(sources: Vec<Box<dyn WorkloadSource>>) -> anyhow::Result<Mix> {
+        anyhow::ensure!(!sources.is_empty(), "Mix needs at least one source");
+        let n = sources[0].n_regions();
+        anyhow::ensure!(
+            sources.iter().all(|s| s.n_regions() == n),
+            "Mix sources must cover the same region set"
+        );
+        Ok(Mix { sources })
+    }
+
+    fn merge(&self, streams: Vec<Vec<Task>>) -> Vec<Task> {
+        let k = self.sources.len() as u64;
+        let mut out = Vec::new();
+        for (i, stream) in streams.into_iter().enumerate() {
+            for mut t in stream {
+                t.id = t.id * k + i as u64;
+                out.push(t);
+            }
+        }
+        out.sort_by(|a, b| {
+            a.arrival_secs
+                .partial_cmp(&b.arrival_secs)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        out
+    }
+}
+
+impl DemandForecast for Mix {
+    fn n_regions(&self) -> usize {
+        self.sources[0].n_regions()
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        let mut total = vec![0.0; self.n_regions()];
+        for s in &self.sources {
+            for (acc, x) in total.iter_mut().zip(s.rate_at(slot)) {
+                *acc += x;
+            }
+        }
+        total
+    }
+}
+
+impl WorkloadSource for Mix {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let streams = self
+            .sources
+            .iter_mut()
+            .map(|s| s.slot_tasks(slot, slot_secs))
+            .collect();
+        self.merge(streams)
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        // Split the target rates across sources proportionally to each
+        // source's own share of the mix at this slot.
+        let own = self.rate_at(slot);
+        let streams = self
+            .sources
+            .iter_mut()
+            .map(|s| {
+                let sub = s.rate_at(slot);
+                let scaled: Vec<f64> = sub
+                    .iter()
+                    .zip(own.iter())
+                    .zip(rates.iter())
+                    .map(|((&x, &o), &r)| if o > 1e-12 { x * r / o } else { 0.0 })
+                    .collect();
+                s.gen_at_rates(slot, slot_secs, &scaled)
+            })
+            .collect();
+        self.merge(streams)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::{Constant, Diurnal};
+
+    fn diurnal(n: usize, seed: u64) -> Diurnal {
+        Diurnal::new(WorkloadConfig::default(), n, seed)
+    }
+
+    #[test]
+    fn rate_scale_multiplies_uniformly() {
+        let s = RateScale::wrap(diurnal(3, 1), 2.0);
+        let base = diurnal(3, 1);
+        for slot in [0, 7, 40] {
+            for (a, b) in s.rate_at(slot).iter().zip(base.rate_at(slot)) {
+                assert!((a - 2.0 * b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn flash_crowd_ramps_holds_decays() {
+        let shape = FlashCrowdShape {
+            at: 10,
+            ramp: 2,
+            hold: 3,
+            decay: 2,
+            factor: 4.0,
+            region: Some(1),
+        };
+        assert_eq!(shape.factor(9, 1), 1.0);
+        assert!(shape.factor(10, 1) > 1.0 && shape.factor(10, 1) < 4.0);
+        assert_eq!(shape.factor(12, 1), 4.0);
+        assert_eq!(shape.factor(14, 1), 4.0);
+        assert!(shape.factor(15, 1) < 4.0);
+        assert_eq!(shape.factor(17, 1), 1.0);
+        // Other regions untouched.
+        assert_eq!(shape.factor(12, 0), 1.0);
+    }
+
+    #[test]
+    fn weekly_dips_on_weekend() {
+        let shape = WeeklyShape { day_slots: 4, weekend_factor: 0.5 };
+        assert_eq!(shape.factor(0, 0), 1.0); // day 0
+        assert_eq!(shape.factor(8, 0), 1.12); // day 2 (mid-week peak)
+        assert_eq!(shape.factor(20, 0), 0.5); // day 5 (weekend)
+        assert_eq!(shape.factor(24, 0), 0.5); // day 6
+        assert_eq!(shape.factor(28, 0), 1.0); // next week wraps
+    }
+
+    #[test]
+    fn regional_drift_rotates_and_stays_positive() {
+        let d = RegionalDrift::wrap(diurnal(4, 3), 40.0, 0.5);
+        for slot in 0..80 {
+            for rate in d.rate_at(slot) {
+                assert!(rate > 0.0);
+            }
+        }
+        // The drift peak visits different regions at different slots.
+        let shape = RegionalDriftShape { period: 40.0, amp: 0.5, n_regions: 4 };
+        assert!(shape.factor(10, 0) != shape.factor(10, 2));
+    }
+
+    #[test]
+    fn stacked_layers_compose_rates() {
+        let stacked = RateScale::wrap(WeeklySeasonal::wrap(diurnal(2, 5), 4, 0.5), 3.0);
+        let base = diurnal(2, 5);
+        let weekend_slot = 20; // day 5 with day_slots = 4
+        for (a, b) in stacked.rate_at(weekend_slot).iter().zip(base.rate_at(weekend_slot)) {
+            assert!((a - 3.0 * 0.5 * b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn stacked_layers_generate_sorted_unique_tasks() {
+        let mut stacked = Surge::wrap(
+            WeeklySeasonal::wrap(diurnal(3, 9), 4, 0.6),
+            vec![SurgeWindow { start_slot: 1, end_slot: 3, factor: 2.0, region: None }],
+        );
+        let mut seen = std::collections::HashSet::new();
+        for slot in 0..6 {
+            let tasks = stacked.slot_tasks(slot, 45.0);
+            for pair in tasks.windows(2) {
+                assert!(pair[0].arrival_secs <= pair[1].arrival_secs);
+            }
+            for t in &tasks {
+                assert!(seen.insert(t.id));
+            }
+        }
+    }
+
+    #[test]
+    fn mix_sums_rates_and_keeps_unique_ids() {
+        let cfg = WorkloadConfig::default();
+        let mut mix = Mix::new(vec![
+            Box::new(Constant::new(cfg.clone(), 2, 1, 10.0)),
+            Box::new(Constant::new(cfg, 2, 2, 5.0)),
+        ])
+        .unwrap();
+        assert_eq!(mix.rate_at(0), vec![15.0, 15.0]);
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0usize;
+        for slot in 0..30 {
+            let tasks = mix.slot_tasks(slot, 45.0);
+            for pair in tasks.windows(2) {
+                assert!(pair[0].arrival_secs <= pair[1].arrival_secs);
+            }
+            for t in &tasks {
+                assert!(seen.insert(t.id), "duplicate id {}", t.id);
+            }
+            total += tasks.len();
+        }
+        let ratio = total as f64 / (30.0 * 2.0 * 15.0);
+        assert!((0.9..1.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn mix_rejects_mismatched_regions() {
+        let cfg = WorkloadConfig::default();
+        assert!(Mix::new(vec![
+            Box::new(Constant::new(cfg.clone(), 2, 1, 10.0)),
+            Box::new(Constant::new(cfg, 3, 2, 5.0)),
+        ])
+        .is_err());
+        assert!(Mix::new(vec![]).is_err());
+    }
+}

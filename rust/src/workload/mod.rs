@@ -1,12 +1,36 @@
-//! Workload model: LLM inference tasks and arrival-process generators.
+//! Workload model: LLM inference tasks, composable workload sources and
+//! the shared demand-forecast interface.
 //!
 //! Tasks follow §VI-A: heterogeneous classes (compute-/memory-intensive,
 //! lightweight — Table I.b), uniform service-time distribution, per-region
-//! diurnal load with Poisson noise, plus the motivation scenarios: periodic
-//! surges (Fig 2) and regional critical failures (Fig 4). Traces can be
-//! recorded and replayed byte-identically (CSV) for A/B scheduler runs.
+//! diurnal load with Poisson noise. Since the scenario redesign (see
+//! `docs/SCENARIOS.md`) the module is organized around two traits:
+//!
+//! * [`DemandForecast`] — the noise-free expected-rate view of a workload,
+//!   queryable per slot and over a horizon. The TORTA demand predictor's
+//!   oracle mode consumes exactly this interface, so generators and
+//!   forecasts speak one language.
+//! * [`WorkloadSource`] — a streaming per-slot task generator that carries
+//!   its own forecast. Base sources ([`Diurnal`], [`Constant`],
+//!   [`trace::TraceReplay`]) are wrapped by the rate combinators in
+//!   [`combinators`] (`Surge`, `FlashCrowd`, `RegionalDrift`,
+//!   `WeeklySeasonal`, `RateScale`, `Mix`) to express the motivation
+//!   scenarios: periodic surges (Fig 2), flash crowds, weekly seasonality
+//!   and regional demand drift. Regional critical failures (Fig 4) ride
+//!   along as [`FailureEvent`]s inside a [`crate::scenario::Scenario`]
+//!   spec.
+//!
+//! Traces can be recorded and replayed bit-identically (CSV) for A/B
+//! scheduler runs.
 
+pub mod combinators;
 pub mod trace;
+
+pub use combinators::{
+    FlashCrowd, Mix, Modulated, RateScale, RateShape, RegionalDrift, Surge, SurgeWindow,
+    WeeklySeasonal,
+};
+pub use trace::TraceReplay;
 
 use crate::config::WorkloadConfig;
 use crate::util::rng::Rng;
@@ -75,18 +99,100 @@ impl Task {
     }
 }
 
-/// Per-slot arrivals for every region.
-pub trait ArrivalProcess {
+/// Read-only demand view of a workload: the expected (noise-free)
+/// per-region arrival rate — the "ground truth" a perfect demand
+/// predictor would know. Every [`WorkloadSource`] carries one, and the
+/// TORTA [`DemandPredictor`](crate::scheduler::torta::predictor) consumes
+/// this interface directly (oracle mode), so there is exactly one
+/// definition of expected demand per scenario.
+pub trait DemandForecast {
     fn n_regions(&self) -> usize;
-    /// Generate the tasks arriving during `slot` (absolute slot index).
-    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task>;
-    /// Expected (noise-free) arrival rate per region for this slot — the
-    /// "ground truth" a perfect demand predictor would know.
-    fn expected_rate(&self, slot: usize) -> Vec<f64>;
+
+    /// Expected per-region arrival rate (tasks/slot) at absolute `slot`.
+    fn rate_at(&self, slot: usize) -> Vec<f64>;
+
+    /// Horizon query: expected rates for slots `slot .. slot + horizon`.
+    /// The default materializes [`rate_at`](Self::rate_at) per slot;
+    /// sources with cheaper batch access may override.
+    fn rate_horizon(&self, slot: usize, horizon: usize) -> Vec<Vec<f64>> {
+        (slot..slot + horizon).map(|s| self.rate_at(s)).collect()
+    }
 }
 
-/// Diurnal + Poisson workload (§VI-A baseline for all main experiments).
-pub struct DiurnalWorkload {
+/// A streaming workload: per-slot task batches plus the demand-forecast
+/// view. Base sources generate tasks; combinator layers
+/// ([`combinators`]) reshape the expected-rate curve and delegate actual
+/// generation to the wrapped base via
+/// [`gen_at_rates`](Self::gen_at_rates), which keeps composed stacks
+/// bit-identical to the legacy hard-coded generators (oracle-tested in
+/// `rust/tests/scenario_equivalence.rs`).
+pub trait WorkloadSource: DemandForecast {
+    /// Generate the tasks arriving during `slot` (absolute slot index).
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task>;
+
+    /// Generate this slot's tasks at externally modulated `rates` (one
+    /// per region) instead of the source's own curve — the hook rate
+    /// combinators drive. The default ignores `rates` and replays
+    /// [`slot_tasks`](Self::slot_tasks): correct for sources that cannot
+    /// re-sample (trace replay), where a rate layer reshapes only the
+    /// forecast. Generative bases override it.
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        let _ = rates;
+        self.slot_tasks(slot, slot_secs)
+    }
+}
+
+impl<T: DemandForecast + ?Sized> DemandForecast for Box<T> {
+    fn n_regions(&self) -> usize {
+        (**self).n_regions()
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        (**self).rate_at(slot)
+    }
+
+    fn rate_horizon(&self, slot: usize, horizon: usize) -> Vec<Vec<f64>> {
+        (**self).rate_horizon(slot, horizon)
+    }
+}
+
+impl<T: WorkloadSource + ?Sized> WorkloadSource for Box<T> {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        (**self).slot_tasks(slot, slot_secs)
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        (**self).gen_at_rates(slot, slot_secs, rates)
+    }
+}
+
+/// Closure adapter: a `Fn(slot) -> rates` plus a region count, viewed as
+/// a [`DemandForecast`]. Bridges hand-written oracles (tests, sweeps)
+/// into the unified forecast interface.
+pub struct FnForecast<F: Fn(usize) -> Vec<f64>> {
+    n_regions: usize,
+    f: F,
+}
+
+impl<F: Fn(usize) -> Vec<f64>> FnForecast<F> {
+    pub fn new(n_regions: usize, f: F) -> FnForecast<F> {
+        FnForecast { n_regions, f }
+    }
+}
+
+impl<F: Fn(usize) -> Vec<f64>> DemandForecast for FnForecast<F> {
+    fn n_regions(&self) -> usize {
+        self.n_regions
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        (self.f)(slot)
+    }
+}
+
+/// Diurnal + Poisson base source (§VI-A baseline for all main
+/// experiments).
+pub struct Diurnal {
     cfg: WorkloadConfig,
     n_regions: usize,
     rng: Rng,
@@ -101,7 +207,10 @@ pub struct DiurnalWorkload {
     model_weights: Vec<f64>,
 }
 
-impl DiurnalWorkload {
+/// Legacy name for [`Diurnal`] (pre-scenario API).
+pub type DiurnalWorkload = Diurnal;
+
+impl Diurnal {
     pub fn new(cfg: WorkloadConfig, n_regions: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed, 101);
         let region_weight = crate::geo::demand_weights(n_regions, seed);
@@ -120,7 +229,7 @@ impl DiurnalWorkload {
         let model_weights = (0..cfg.model_catalog.max(1))
             .map(|k| 1.0 / ((k + 1) as f64).powf(1.5))
             .collect();
-        DiurnalWorkload {
+        Diurnal {
             cfg,
             n_regions,
             rng,
@@ -190,12 +299,12 @@ impl DiurnalWorkload {
     }
 }
 
-impl ArrivalProcess for DiurnalWorkload {
+impl DemandForecast for Diurnal {
     fn n_regions(&self) -> usize {
         self.n_regions
     }
 
-    fn expected_rate(&self, slot: usize) -> Vec<f64> {
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
         (0..self.n_regions)
             .map(|r| {
                 let wave = 1.0
@@ -208,9 +317,15 @@ impl ArrivalProcess for DiurnalWorkload {
             })
             .collect()
     }
+}
 
+impl WorkloadSource for Diurnal {
     fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
-        let rates = self.expected_rate(slot);
+        let rates = self.rate_at(slot);
+        self.gen_at_rates(slot, slot_secs, &rates)
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
         let mut tasks = Vec::new();
         for (region, &rate) in rates.iter().enumerate() {
             let n = self.rng.poisson(rate);
@@ -223,16 +338,59 @@ impl ArrivalProcess for DiurnalWorkload {
     }
 }
 
-/// Wraps a base workload with multiplicative surge windows (Fig 2's
-/// "periodic traffic peaks" and flash-crowd events).
+/// Flat-rate base source: every region receives `rate` expected arrivals
+/// per slot, no diurnal wave, no regional imbalance. Shares the diurnal
+/// generator's task machinery (classes, models, embeddings), so only the
+/// rate curve differs.
+pub struct Constant {
+    generator: Diurnal,
+    rate: f64,
+}
+
+impl Constant {
+    pub fn new(cfg: WorkloadConfig, n_regions: usize, seed: u64, rate: f64) -> Constant {
+        Constant { generator: Diurnal::new(cfg, n_regions, seed), rate }
+    }
+}
+
+impl DemandForecast for Constant {
+    fn n_regions(&self) -> usize {
+        self.generator.n_regions
+    }
+
+    fn rate_at(&self, _slot: usize) -> Vec<f64> {
+        vec![self.rate.max(0.0); self.generator.n_regions]
+    }
+}
+
+impl WorkloadSource for Constant {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let rates = self.rate_at(slot);
+        self.generator.gen_at_rates(slot, slot_secs, &rates)
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        self.generator.gen_at_rates(slot, slot_secs, rates)
+    }
+}
+
+/// Legacy hard-coded surge wrapper (Fig 2's "periodic traffic peaks").
+///
+/// Superseded by the composable
+/// [`Surge`](combinators::Surge) combinator —
+/// `Surge::wrap(diurnal, windows)` reproduces this struct's task stream
+/// bit-for-bit (oracle-tested in `rust/tests/scenario_equivalence.rs`;
+/// this verbatim legacy implementation is retained as that oracle).
+#[deprecated(note = "use workload::combinators::Surge::wrap (see docs/SCENARIOS.md)")]
 pub struct SurgeWorkload {
-    base: DiurnalWorkload,
+    base: Diurnal,
     /// (start_slot, end_slot, multiplier, affected region or None for all)
     surges: Vec<(usize, usize, f64, Option<usize>)>,
 }
 
+#[allow(deprecated)]
 impl SurgeWorkload {
-    pub fn new(base: DiurnalWorkload, surges: Vec<(usize, usize, f64, Option<usize>)>) -> Self {
+    pub fn new(base: Diurnal, surges: Vec<(usize, usize, f64, Option<usize>)>) -> Self {
         SurgeWorkload { base, surges }
     }
 
@@ -247,22 +405,26 @@ impl SurgeWorkload {
     }
 }
 
-impl ArrivalProcess for SurgeWorkload {
+#[allow(deprecated)]
+impl DemandForecast for SurgeWorkload {
     fn n_regions(&self) -> usize {
         self.base.n_regions()
     }
 
-    fn expected_rate(&self, slot: usize) -> Vec<f64> {
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
         self.base
-            .expected_rate(slot)
+            .rate_at(slot)
             .iter()
             .enumerate()
             .map(|(r, &x)| x * self.multiplier(slot, r))
             .collect()
     }
+}
 
+#[allow(deprecated)]
+impl WorkloadSource for SurgeWorkload {
     fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
-        let rates = self.expected_rate(slot);
+        let rates = self.rate_at(slot);
         let mut tasks = Vec::new();
         for (region, &rate) in rates.iter().enumerate() {
             let n = self.base.rng.poisson(rate);
@@ -276,8 +438,10 @@ impl ArrivalProcess for SurgeWorkload {
 }
 
 /// Regional critical-failure scenario (Fig 4): the region's servers go
-/// offline for `[start_slot, start_slot + duration_slots)`.
-#[derive(Clone, Copy, Debug)]
+/// offline for `[start_slot, start_slot + duration_slots)`. Declared via
+/// a [`crate::scenario::Scenario`] spec (or programmatically through
+/// `ExecutionEngine::with_failures`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FailureEvent {
     pub region: usize,
     pub start_slot: usize,
@@ -294,8 +458,8 @@ impl FailureEvent {
 mod tests {
     use super::*;
 
-    fn mk(n: usize) -> DiurnalWorkload {
-        DiurnalWorkload::new(WorkloadConfig::default(), n, 7)
+    fn mk(n: usize) -> Diurnal {
+        Diurnal::new(WorkloadConfig::default(), n, 7)
     }
 
     #[test]
@@ -333,12 +497,22 @@ mod tests {
     }
 
     #[test]
-    fn expected_rate_positive_and_diurnal() {
+    fn rate_positive_and_diurnal() {
         let w = mk(3);
-        let r0 = w.expected_rate(0);
-        let r40 = w.expected_rate(40);
+        let r0 = w.rate_at(0);
+        let r40 = w.rate_at(40);
         assert!(r0.iter().all(|&x| x > 0.0));
         assert_ne!(r0, r40); // the wave moves
+    }
+
+    #[test]
+    fn rate_horizon_matches_per_slot_queries() {
+        let w = mk(3);
+        let h = w.rate_horizon(4, 3);
+        assert_eq!(h.len(), 3);
+        for (k, rates) in h.iter().enumerate() {
+            assert_eq!(rates, &w.rate_at(4 + k));
+        }
     }
 
     #[test]
@@ -347,7 +521,7 @@ mod tests {
         let mut total = 0usize;
         let mut expected = 0.0;
         for slot in 0..50 {
-            expected += w.expected_rate(slot).iter().sum::<f64>();
+            expected += w.rate_at(slot).iter().sum::<f64>();
             total += w.slot_tasks(slot, 45.0).len();
         }
         let ratio = total as f64 / expected;
@@ -357,15 +531,63 @@ mod tests {
     #[test]
     fn surge_multiplies_rate_only_in_window() {
         let base = mk(2);
-        let s = SurgeWorkload::new(base, vec![(10, 20, 3.0, Some(1))]);
-        let inside = s.expected_rate(15);
-        let outside = s.expected_rate(25);
+        let s = Surge::wrap(
+            base,
+            vec![SurgeWindow { start_slot: 10, end_slot: 20, factor: 3.0, region: Some(1) }],
+        );
+        let inside = s.rate_at(15);
+        let outside = s.rate_at(25);
         let base2 = mk(2);
-        let raw_inside = base2.expected_rate(15);
+        let raw_inside = base2.rate_at(15);
         assert!((inside[1] / raw_inside[1] - 3.0).abs() < 1e-9);
         assert!((inside[0] / raw_inside[0] - 1.0).abs() < 1e-9);
-        let raw_outside = base2.expected_rate(25);
+        let raw_outside = base2.rate_at(25);
         assert!((outside[1] / raw_outside[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn surge_shim_matches_combinator_bitwise() {
+        let mut legacy = SurgeWorkload::new(mk(3), vec![(2, 6, 2.5, None), (4, 8, 1.5, Some(1))]);
+        let mut composed = Surge::wrap(
+            mk(3),
+            vec![
+                SurgeWindow { start_slot: 2, end_slot: 6, factor: 2.5, region: None },
+                SurgeWindow { start_slot: 4, end_slot: 8, factor: 1.5, region: Some(1) },
+            ],
+        );
+        for slot in 0..10 {
+            assert_eq!(legacy.rate_at(slot), composed.rate_at(slot), "rates slot {slot}");
+            let a = legacy.slot_tasks(slot, 45.0);
+            let b = composed.slot_tasks(slot, 45.0);
+            assert_eq!(a.len(), b.len(), "len slot {slot}");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+                assert_eq!(x.embed, y.embed);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_rate_is_flat_and_volume_tracks() {
+        let mut w = Constant::new(WorkloadConfig::default(), 3, 5, 20.0);
+        assert_eq!(w.rate_at(0), vec![20.0; 3]);
+        assert_eq!(w.rate_at(99), vec![20.0; 3]);
+        let mut total = 0usize;
+        for slot in 0..40 {
+            total += w.slot_tasks(slot, 45.0).len();
+        }
+        let ratio = total as f64 / (40.0 * 3.0 * 20.0);
+        assert!((0.9..1.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn fn_forecast_adapts_closures() {
+        let f = FnForecast::new(2, |slot| vec![slot as f64, 2.0 * slot as f64]);
+        assert_eq!(f.n_regions(), 2);
+        assert_eq!(f.rate_at(3), vec![3.0, 6.0]);
+        assert_eq!(f.rate_horizon(1, 2), vec![vec![1.0, 2.0], vec![2.0, 4.0]]);
     }
 
     #[test]

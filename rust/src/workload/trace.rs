@@ -1,18 +1,25 @@
-//! Trace recording / replay (CSV) — byte-identical workloads across
+//! Trace recording / replay (CSV) — bit-identical workloads across
 //! scheduler A/B runs and a substitute for the production request traces
 //! the paper's authors used (DESIGN.md §Substitutions).
+//!
+//! Floats are serialized with Rust's shortest round-trip formatting
+//! (`{:?}`), so record → replay reproduces every `f64`/`f32` field
+//! bit-for-bit (regression-tested here and in
+//! `rust/tests/scenario_equivalence.rs`). Replay is a base
+//! [`WorkloadSource`]; `trace:<path>` in a scenario spec builds one (see
+//! `docs/SCENARIOS.md`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
-use super::{ArrivalProcess, Task, TaskClass, EMBED_DIM};
+use super::{DemandForecast, Task, TaskClass, WorkloadSource, EMBED_DIM};
 
 const HEADER: &str = "id,origin,class,model,user,service_secs,arrival_secs,\
 deadline_secs,compute_tflops,memory_gb,payload_kb,embed";
 
 /// Record every slot of `process` into a CSV trace file.
-pub fn record<P: ArrivalProcess>(
-    process: &mut P,
+pub fn record(
+    process: &mut dyn WorkloadSource,
     slots: usize,
     slot_secs: f64,
     path: &Path,
@@ -25,12 +32,12 @@ pub fn record<P: ArrivalProcess>(
             let embed = t
                 .embed
                 .iter()
-                .map(|x| format!("{x:.5}"))
+                .map(|x| format!("{x:?}"))
                 .collect::<Vec<_>>()
                 .join(";");
             writeln!(
                 out,
-                "{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{}",
+                "{},{},{},{},{},{:?},{:?},{:?},{:?},{:?},{:?},{}",
                 t.id,
                 t.origin,
                 t.class.name(),
@@ -51,14 +58,21 @@ pub fn record<P: ArrivalProcess>(
 }
 
 /// Replays a recorded trace slot by slot.
-pub struct TraceWorkload {
+pub struct TraceReplay {
     n_regions: usize,
     /// Tasks sorted by arrival, partitioned lazily per slot.
     tasks: Vec<Task>,
     cursor: usize,
+    /// Slot duration assumed by the forecast view (`rate_at` bins the
+    /// trace into windows of this length); `slot_tasks` always uses the
+    /// caller's actual slot length.
+    slot_secs: f64,
 }
 
-impl TraceWorkload {
+/// Legacy name for [`TraceReplay`] (pre-scenario API).
+pub type TraceWorkload = TraceReplay;
+
+impl TraceReplay {
     pub fn load(path: &Path, n_regions: usize) -> anyhow::Result<Self> {
         let file = std::fs::File::open(path)?;
         let mut lines = BufReader::new(file).lines();
@@ -75,7 +89,14 @@ impl TraceWorkload {
             })?);
         }
         tasks.sort_by(|a, b| a.arrival_secs.partial_cmp(&b.arrival_secs).unwrap());
-        Ok(TraceWorkload { n_regions, tasks, cursor: 0 })
+        Ok(TraceReplay { n_regions, tasks, cursor: 0, slot_secs: 45.0 })
+    }
+
+    /// Override the slot duration the forecast view bins with (the system
+    /// default is 45 s).
+    pub fn with_slot_secs(mut self, slot_secs: f64) -> Self {
+        self.slot_secs = slot_secs.max(1e-9);
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -118,27 +139,29 @@ fn parse_line(line: &str) -> Result<Task, String> {
     })
 }
 
-impl ArrivalProcess for TraceWorkload {
+impl DemandForecast for TraceReplay {
     fn n_regions(&self) -> usize {
         self.n_regions
     }
 
-    fn expected_rate(&self, slot: usize) -> Vec<f64> {
-        // Empirical per-region counts in the slot window (a replay's ground
-        // truth is the trace itself). Slot duration is inferred at replay
-        // time by slot_tasks; here we use 45 s, the system default.
-        let slot_secs = 45.0;
-        let lo = slot as f64 * slot_secs;
-        let hi = lo + slot_secs;
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        // Empirical per-region counts in the slot window (a replay's
+        // ground truth is the trace itself). Tasks are arrival-sorted, so
+        // the window is two binary searches, not a full scan — keeps
+        // `rate_horizon` cheap on long traces.
+        let lo = slot as f64 * self.slot_secs;
+        let hi = lo + self.slot_secs;
+        let start = self.tasks.partition_point(|t| t.arrival_secs < lo);
+        let end = self.tasks.partition_point(|t| t.arrival_secs < hi);
         let mut rates = vec![0.0; self.n_regions];
-        for t in &self.tasks {
-            if t.arrival_secs >= lo && t.arrival_secs < hi {
-                rates[t.origin] += 1.0;
-            }
+        for t in &self.tasks[start..end] {
+            rates[t.origin] += 1.0;
         }
         rates
     }
+}
 
+impl WorkloadSource for TraceReplay {
     fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
         let hi = (slot + 1) as f64 * slot_secs;
         let mut out = Vec::new();
@@ -154,22 +177,22 @@ impl ArrivalProcess for TraceWorkload {
 mod tests {
     use super::*;
     use crate::config::WorkloadConfig;
-    use crate::workload::DiurnalWorkload;
+    use crate::workload::Diurnal;
 
     #[test]
-    fn record_and_replay_roundtrip() {
+    fn record_and_replay_roundtrip_bit_identical() {
         let dir = std::env::temp_dir().join("torta_trace_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("trace.csv");
 
-        let mut gen = DiurnalWorkload::new(WorkloadConfig::default(), 3, 99);
+        let mut gen = Diurnal::new(WorkloadConfig::default(), 3, 99);
         let n = record(&mut gen, 4, 45.0, &path).unwrap();
         assert!(n > 0);
 
-        let mut replay = TraceWorkload::load(&path, 3).unwrap();
+        let mut replay = TraceReplay::load(&path, 3).unwrap();
         assert_eq!(replay.len(), n);
 
-        let mut gen2 = DiurnalWorkload::new(WorkloadConfig::default(), 3, 99);
+        let mut gen2 = Diurnal::new(WorkloadConfig::default(), 3, 99);
         let mut total = 0;
         for slot in 0..4 {
             let want = gen2.slot_tasks(slot, 45.0);
@@ -177,13 +200,45 @@ mod tests {
             assert_eq!(want.len(), got.len(), "slot {slot}");
             for (w, g) in want.iter().zip(got.iter()) {
                 assert_eq!(w.id, g.id);
+                assert_eq!(w.origin, g.origin);
                 assert_eq!(w.class, g.class);
-                assert!((w.arrival_secs - g.arrival_secs).abs() < 1e-4);
-                assert!((w.service_secs - g.service_secs).abs() < 1e-4);
+                assert_eq!(w.model, g.model);
+                assert_eq!(w.user, g.user);
+                assert_eq!(w.service_secs.to_bits(), g.service_secs.to_bits());
+                assert_eq!(w.arrival_secs.to_bits(), g.arrival_secs.to_bits());
+                assert_eq!(w.deadline_secs.to_bits(), g.deadline_secs.to_bits());
+                assert_eq!(
+                    w.compute_demand_tflops.to_bits(),
+                    g.compute_demand_tflops.to_bits()
+                );
+                assert_eq!(w.memory_demand_gb.to_bits(), g.memory_demand_gb.to_bits());
+                assert_eq!(w.payload_kb.to_bits(), g.payload_kb.to_bits());
+                for (we, ge) in w.embed.iter().zip(g.embed.iter()) {
+                    assert_eq!(we.to_bits(), ge.to_bits());
+                }
             }
             total += got.len();
         }
         assert_eq!(total, n);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_forecast_counts_trace_arrivals() {
+        let dir = std::env::temp_dir().join("torta_trace_test_rates");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        let mut gen = Diurnal::new(WorkloadConfig::default(), 3, 5);
+        record(&mut gen, 3, 45.0, &path).unwrap();
+        let mut replay = TraceReplay::load(&path, 3).unwrap();
+        let rates = replay.rate_at(1);
+        let _slot0 = replay.slot_tasks(0, 45.0);
+        let tasks = replay.slot_tasks(1, 45.0);
+        let mut counts = vec![0.0; 3];
+        for t in &tasks {
+            counts[t.origin] += 1.0;
+        }
+        assert_eq!(rates, counts);
         std::fs::remove_file(&path).ok();
     }
 
@@ -193,7 +248,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.csv");
         std::fs::write(&path, "nope\n1,2,3\n").unwrap();
-        assert!(TraceWorkload::load(&path, 2).is_err());
+        assert!(TraceReplay::load(&path, 2).is_err());
         std::fs::remove_file(&path).ok();
     }
 

@@ -21,7 +21,7 @@ use torta::scheduler::{
     empirical_alloc, Action, ActionResult, Ctx, PendingView, Scheduler, SlotDecision,
 };
 use torta::sim::{topo_salt, Simulation, DROP_WAIT_SECS, MIGRATION_SECS};
-use torta::workload::{ArrivalProcess, DiurnalWorkload, FailureEvent, Task};
+use torta::workload::{DiurnalWorkload, FailureEvent, Task, WorkloadSource};
 
 /// Per-slot execution fingerprint: every assignment decision in order
 /// (`Some((region, server))` = admitted, `None` = admission-dropped),

@@ -5,7 +5,7 @@ use torta::config::ExperimentConfig;
 use torta::milp::{solve_bnb, solve_greedy, validate, AssignmentProblem};
 use torta::sim::Simulation;
 use torta::util::prop;
-use torta::workload::{ArrivalProcess, DiurnalWorkload};
+use torta::workload::{DiurnalWorkload, WorkloadSource};
 
 fn random_cfg(rng: &mut torta::util::rng::Rng) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();

@@ -18,7 +18,7 @@ use torta::sim::{topo_salt, Simulation};
 use torta::topology::Topology;
 use torta::util::prop;
 use torta::util::rng::Rng;
-use torta::workload::{ArrivalProcess, DiurnalWorkload, Task};
+use torta::workload::{DiurnalWorkload, Task, WorkloadSource};
 
 /// Deterministic drifting marginal: a base simplex nudged by a smooth
 /// per-slot perturbation, renormalized.

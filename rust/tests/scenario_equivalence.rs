@@ -1,0 +1,293 @@
+//! Scenario-API oracle tests.
+//!
+//! The scenario redesign must not move a single bit of the legacy
+//! behavior it replaces:
+//!
+//! * composed `WorkloadSource` stacks reproduce the legacy hard-coded
+//!   generators' task streams bit-for-bit (`Surge::wrap(Diurnal)` vs the
+//!   retained `SurgeWorkload` reference, scenario-built diurnal vs a
+//!   directly constructed `Diurnal`);
+//! * `run_experiment` through the default scenario yields `RunMetrics`
+//!   bit-identical to the pre-refactor explicit-workload path for every
+//!   scheduler;
+//! * every registry scenario yields deterministic, arrival-sorted,
+//!   unique-id streams and runs all four schedulers end-to-end;
+//! * trace record -> replay round-trips bit-identically and drives a
+//!   full run via the `trace:<path>` scenario.
+
+use torta::config::{ExperimentConfig, WorkloadConfig};
+use torta::scenario::{Scenario, REGISTRY};
+use torta::sim::{run_experiment, topo_salt, Simulation};
+use torta::workload::combinators::Surge;
+use torta::workload::{DemandForecast, Diurnal, SurgeWindow, WorkloadSource};
+
+fn small_cfg(scheduler: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.slots = 10;
+    cfg.scheduler = scheduler.into();
+    cfg.torta.use_pjrt = false;
+    cfg
+}
+
+const SCHEDULERS: [&str; 4] = ["torta", "skylb", "sdib", "rr"];
+
+#[test]
+#[allow(deprecated)]
+fn surge_wrap_reproduces_legacy_surge_bitwise() {
+    use torta::workload::SurgeWorkload;
+    let windows = [(5usize, 12usize, 2.5f64, None), (8, 20, 1.5, Some(3))];
+    let mk = || Diurnal::new(WorkloadConfig::default(), 6, 11);
+    let mut legacy = SurgeWorkload::new(mk(), windows.to_vec());
+    let mut composed = Surge::wrap(
+        mk(),
+        windows
+            .iter()
+            .map(|&(s, e, f, r)| SurgeWindow { start_slot: s, end_slot: e, factor: f, region: r })
+            .collect(),
+    );
+    for slot in 0..24 {
+        let ra = legacy.rate_at(slot);
+        let rb = composed.rate_at(slot);
+        for (a, b) in ra.iter().zip(rb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "rate bits differ at slot {slot}");
+        }
+        let ta = legacy.slot_tasks(slot, 45.0);
+        let tb = composed.slot_tasks(slot, 45.0);
+        assert_eq!(ta.len(), tb.len(), "stream length differs at slot {slot}");
+        for (a, b) in ta.iter().zip(tb.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.origin, b.origin);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.user, b.user);
+            assert_eq!(a.service_secs.to_bits(), b.service_secs.to_bits());
+            assert_eq!(a.arrival_secs.to_bits(), b.arrival_secs.to_bits());
+            assert_eq!(a.deadline_secs.to_bits(), b.deadline_secs.to_bits());
+            for (x, y) in a.embed.iter().zip(b.embed.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn scenario_diurnal_reproduces_direct_diurnal_bitwise() {
+    let wl_cfg = WorkloadConfig::default();
+    let mut direct = Diurnal::new(wl_cfg.clone(), 12, 99);
+    let mut built = Scenario::diurnal().build_workload(&wl_cfg, 12, 99, 45.0).unwrap();
+    for slot in 0..8 {
+        assert_eq!(direct.rate_at(slot), built.rate_at(slot));
+        let a = direct.slot_tasks(slot, 45.0);
+        let b = built.slot_tasks(slot, 45.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+            assert_eq!(x.service_secs.to_bits(), y.service_secs.to_bits());
+        }
+    }
+}
+
+#[test]
+fn default_scenario_metrics_match_prerefactor_path() {
+    // The pre-refactor run_experiment built the diurnal workload
+    // explicitly and never applied failures; the scenario path must be
+    // bit-identical for every scheduler.
+    for sched in SCHEDULERS {
+        let cfg = small_cfg(sched);
+        let a = run_experiment(&cfg).unwrap();
+
+        let mut sim = Simulation::new(cfg.clone()).unwrap();
+        assert!(sim.failures.is_empty(), "{sched}: default scenario added failures");
+        let mut wl = Diurnal::new(
+            cfg.workload.clone(),
+            sim.ctx.topo.n,
+            cfg.seed ^ topo_salt(&cfg.topology),
+        );
+        let mut s = torta::scheduler::build(sched, &sim.ctx, &cfg).unwrap();
+        let b = sim.run(&mut wl, s.as_mut());
+
+        assert_eq!(a.tasks_total, b.tasks_total, "{sched}");
+        assert_eq!(a.tasks_dropped, b.tasks_dropped, "{sched}");
+        assert_eq!(a.deadline_misses, b.deadline_misses, "{sched}");
+        assert_eq!(a.model_switches, b.model_switches, "{sched}");
+        assert_eq!(a.server_activations, b.server_activations, "{sched}");
+        assert_eq!(a.mean_response().to_bits(), b.mean_response().to_bits(), "{sched}");
+        assert_eq!(a.waiting.mean().to_bits(), b.waiting.mean().to_bits(), "{sched}");
+        assert_eq!(a.power_cost_dollars.to_bits(), b.power_cost_dollars.to_bits(), "{sched}");
+        assert_eq!(a.switching_cost_frob.to_bits(), b.switching_cost_frob.to_bits(), "{sched}");
+        assert_eq!(a.mean_lb().to_bits(), b.mean_lb().to_bits(), "{sched}");
+    }
+}
+
+#[test]
+fn registry_event_windows_reshape_rates() {
+    // The surge windows (slots 30-50) and the flash crowd (at slot 24)
+    // must actually move the expected-rate curve relative to the diurnal
+    // baseline inside their windows — and leave it untouched outside.
+    let wl_cfg = WorkloadConfig::default();
+    let base = Diurnal::new(wl_cfg.clone(), 12, 7);
+    let surge = Scenario::by_name("surge")
+        .unwrap()
+        .build_workload(&wl_cfg, 12, 7, 45.0)
+        .unwrap();
+    assert_eq!(surge.rate_at(10), base.rate_at(10), "outside surge window");
+    for (s, b) in surge.rate_at(40).iter().zip(base.rate_at(40).iter()) {
+        assert!((s / b - 2.5).abs() < 1e-9, "inside surge window: {s} vs {b}");
+    }
+    let flash = Scenario::by_name("flash-crowd")
+        .unwrap()
+        .build_workload(&wl_cfg, 12, 7, 45.0)
+        .unwrap();
+    assert_eq!(flash.rate_at(10), base.rate_at(10), "before flash crowd");
+    let peak = flash.rate_at(30);
+    let calm = base.rate_at(30);
+    assert!((peak[0] / calm[0] - 4.0).abs() < 1e-9, "flash-crowd peak in region 0");
+    assert_eq!(peak[1..], calm[1..], "flash crowd is region-local");
+}
+
+#[test]
+fn registry_streams_deterministic_sorted_unique() {
+    // Slots 0..6 cover the calm baseline; 28..36 sit inside the surge /
+    // flash-crowd event windows so the modulated generation path is
+    // exercised, not just the identity path.
+    let slots: Vec<usize> = (0..6).chain(28..36).collect();
+    for name in REGISTRY {
+        let sc = Scenario::by_name(name).unwrap();
+        let wl_cfg = WorkloadConfig::default();
+        let mut a = sc.build_workload(&wl_cfg, 12, 7, 45.0).unwrap();
+        let mut b = sc.build_workload(&wl_cfg, 12, 7, 45.0).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for &slot in &slots {
+            let ta = a.slot_tasks(slot, 45.0);
+            let tb = b.slot_tasks(slot, 45.0);
+            assert_eq!(ta.len(), tb.len(), "{name}: nondeterministic length, slot {slot}");
+            for (x, y) in ta.iter().zip(tb.iter()) {
+                assert_eq!(x.id, y.id, "{name}");
+                assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits(), "{name}");
+            }
+            for pair in ta.windows(2) {
+                assert!(pair[0].arrival_secs <= pair[1].arrival_secs, "{name}: unsorted");
+            }
+            for t in &ta {
+                assert!(t.origin < 12, "{name}: origin out of range");
+                assert!(seen.insert(t.id), "{name}: duplicate id {}", t.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn registry_scenarios_run_all_schedulers_end_to_end() {
+    for name in REGISTRY {
+        for sched in SCHEDULERS {
+            let mut cfg = small_cfg(sched);
+            // 40 slots cover the surge window (30-50) and the full
+            // flash-crowd ramp/hold/decay (24..39), so every scheduler
+            // runs through the active event windows, not just calm slots.
+            cfg.slots = 40;
+            cfg.workload.base_rate = 20.0; // keep the 20-run matrix quick
+            cfg.scenario = Scenario::by_name(name).unwrap();
+            let a = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{sched} on {name} failed: {e}"));
+            assert!(a.tasks_total > 0, "{sched} on {name}: no tasks");
+            assert_eq!(a.scenario, name, "{sched}: scenario tag missing");
+            // Deterministic across runs.
+            let b = run_experiment(&cfg).unwrap();
+            assert_eq!(a.tasks_total, b.tasks_total, "{sched} on {name}");
+            assert_eq!(
+                a.mean_response().to_bits(),
+                b.mean_response().to_bits(),
+                "{sched} on {name}"
+            );
+        }
+    }
+}
+
+#[test]
+fn regional_failure_scenario_applies_failures_from_spec() {
+    let mut cfg = small_cfg("rr");
+    cfg.scenario = Scenario::by_name("regional-failure").unwrap();
+    let sim = Simulation::new(cfg.clone()).unwrap();
+    assert_eq!(sim.failures.len(), 3, "spec failures not resolved by the engine");
+    // The failure window actually bites: some region is down at slot 3.
+    let mut sim = sim;
+    let seed = cfg.seed ^ topo_salt(&cfg.topology);
+    let mut wl = cfg
+        .scenario
+        .build_workload(&cfg.workload, sim.ctx.topo.n, seed, cfg.slot_secs)
+        .unwrap();
+    let mut sched = torta::scheduler::build("rr", &sim.ctx, &cfg).unwrap();
+    let mut metrics = torta::metrics::RunMetrics::new("rr", &cfg.topology);
+    for slot in 0..4 {
+        sim.step(slot, wl.as_mut(), sched.as_mut(), &mut metrics);
+    }
+    let down = sim.fleet.regions.iter().filter(|r| r.failed).count();
+    assert_eq!(down, 3, "failure window not active");
+}
+
+#[test]
+fn trace_scenario_replays_bit_identically_and_runs() {
+    let dir = std::env::temp_dir().join("torta_scenario_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenario.csv");
+
+    let cfg = small_cfg("rr");
+    let seed = cfg.seed ^ topo_salt(&cfg.topology);
+    let mut gen = Diurnal::new(cfg.workload.clone(), 12, seed);
+    let n = torta::workload::trace::record(&mut gen, cfg.slots, cfg.slot_secs, &path).unwrap();
+    assert!(n > 0);
+
+    // Replay through the scenario registry: stream equals the generator
+    // bit-for-bit.
+    let name = format!("trace:{}", path.display());
+    let sc = Scenario::by_name(&name).unwrap();
+    let mut replay = sc.build_workload(&cfg.workload, 12, seed, cfg.slot_secs).unwrap();
+    let mut twin = Diurnal::new(cfg.workload.clone(), 12, seed);
+    for slot in 0..cfg.slots {
+        let want = twin.slot_tasks(slot, cfg.slot_secs);
+        let got = replay.slot_tasks(slot, cfg.slot_secs);
+        assert_eq!(want.len(), got.len(), "slot {slot}");
+        for (w, g) in want.iter().zip(got.iter()) {
+            assert_eq!(w.id, g.id);
+            assert_eq!(w.arrival_secs.to_bits(), g.arrival_secs.to_bits());
+            assert_eq!(w.service_secs.to_bits(), g.service_secs.to_bits());
+            assert_eq!(w.deadline_secs.to_bits(), g.deadline_secs.to_bits());
+            assert_eq!(w.payload_kb.to_bits(), g.payload_kb.to_bits());
+        }
+    }
+
+    // And the trace scenario drives a full experiment end-to-end.
+    let mut run_cfg = cfg.clone();
+    run_cfg.scenario = Scenario::by_name(&name).unwrap();
+    let m = run_experiment(&run_cfg).unwrap();
+    assert!(m.tasks_total > 0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn custom_config_scenario_runs_end_to_end() {
+    // A declarative [scenario] section (layers + failures) drives a full
+    // run from config alone — the fig4-style reproducibility fix.
+    let table = torta::config::Table::parse(
+        r#"
+        scheduler = "rr"
+        slots = 8
+        [torta]
+        use_pjrt = false
+        [scenario]
+        name = "custom-smoke"
+        rate_scale = 1.2
+        surge = [[2, 5, 2.0, -1]]
+        fail_top = [1, 3, 2]
+        "#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_table(&table).unwrap();
+    assert_eq!(cfg.scenario.name, "custom-smoke");
+    assert_eq!(cfg.scenario.layers.len(), 2);
+    assert_eq!(cfg.scenario.failures.len(), 1);
+    let m = run_experiment(&cfg).unwrap();
+    assert!(m.tasks_total > 0);
+    assert_eq!(m.scenario, "custom-smoke");
+}

@@ -5,7 +5,7 @@ use torta::config::ExperimentConfig;
 use torta::metrics::RunMetrics;
 use torta::sim::Simulation;
 use torta::workload::trace::{record, TraceWorkload};
-use torta::workload::{ArrivalProcess, DiurnalWorkload};
+use torta::workload::{DiurnalWorkload, WorkloadSource};
 
 #[test]
 fn same_trace_two_schedulers_identical_task_sets() {
