@@ -249,5 +249,43 @@ fn main() {
             std::hint::black_box(m.tasks_total);
         });
     }
+
+    // ---- RL: native policy-gradient training learning curve -------------
+    // Train-in-Rust throughput plus the before/after learning signal: the
+    // per-episode REINFORCE loop over the full engine (docs/RL.md), on the
+    // surge scenario at the paper's R=12. Both the smoothed-return delta
+    // and the greedy-eval delta are recorded so a regression in either
+    // training speed or training *effect* shows in the bench diff.
+    {
+        let mut cfg = ExperimentConfig::default();
+        cfg.slots = 40;
+        cfg.scheduler = "torta".into();
+        cfg.torta.use_pjrt = false;
+        cfg.scenario = torta::scenario::Scenario::by_name("surge").unwrap();
+        let tc = torta::rl::TrainConfig { episodes: 10, lr: 0.1, ..Default::default() };
+        let weights = torta::rl::RewardWeights::default();
+        let init = torta::rl::NativePolicy::init(12, tc.seed);
+        let before = torta::rl::eval(&cfg, &init, &weights).unwrap();
+        let t0 = Instant::now();
+        let (policy, report) = torta::rl::train(&cfg, &tc).unwrap();
+        let train_secs = t0.elapsed().as_secs_f64();
+        let after = torta::rl::eval(&cfg, &policy, &weights).unwrap();
+        let smoothed = report.smoothed();
+        suite.metric(
+            "rl train throughput (surge, R=12, 40 slots)",
+            tc.episodes as f64 / train_secs.max(1e-12),
+            "episodes/s",
+        );
+        suite.metric(
+            "rl learning curve: smoothed return delta (last - first)",
+            smoothed.last().unwrap() - smoothed.first().unwrap(),
+            "",
+        );
+        suite.metric(
+            "rl greedy eval: return delta (trained - init)",
+            after.total_reward - before.total_reward,
+            "",
+        );
+    }
     suite.save("perf_hotpath");
 }

@@ -73,6 +73,12 @@ pub struct TortaConfig {
     /// the "TORTA-native" ablation and when artifacts are absent).
     pub use_pjrt: bool,
     pub artifacts_dir: String,
+    /// Path to a natively trained macro-policy artifact
+    /// (`rl::NativePolicy` JSON, produced by `torta train`; see
+    /// `docs/RL.md`). Non-empty installs it as the scheduler's
+    /// `PolicyProvider`, taking precedence over the PJRT policy head;
+    /// empty (default) keeps the artifact/native fallback chain.
+    pub policy_path: String,
     /// Max Frobenius deviation of A_t from the OT plan (eps_max, Eq. 19).
     pub eps_max: f64,
     /// Temporal smoothing weight toward A_{t-1} for the native fallback.
@@ -112,6 +118,7 @@ impl Default for TortaConfig {
         TortaConfig {
             use_pjrt: true,
             artifacts_dir: "artifacts".into(),
+            policy_path: String::new(),
             eps_max: 0.6,
             smoothing: 0.5,
             sinkhorn_eps: 0.05,
@@ -188,6 +195,7 @@ impl ExperimentConfig {
             torta: TortaConfig {
                 use_pjrt: t.bool_or("torta.use_pjrt", td.use_pjrt),
                 artifacts_dir: t.str_or("torta.artifacts_dir", &td.artifacts_dir),
+                policy_path: t.str_or("torta.policy_path", &td.policy_path),
                 eps_max: t.f64_or("torta.eps_max", td.eps_max),
                 smoothing: t.f64_or("torta.smoothing", td.smoothing),
                 sinkhorn_eps: t.f64_or("torta.sinkhorn_eps", td.sinkhorn_eps),
@@ -291,6 +299,16 @@ mod tests {
         assert!(!c.torta.use_pjrt);
         assert!((c.torta.prediction_accuracy - 0.5).abs() < 1e-12);
         assert!((c.torta.migrate_backlog_secs - 30.0).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn policy_path_parses_and_defaults_empty() {
+        assert!(ExperimentConfig::default().torta.policy_path.is_empty());
+        let t = Table::parse("[torta]\npolicy_path = \"artifacts/policy_r12.native.json\"")
+            .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.torta.policy_path, "artifacts/policy_r12.native.json");
         assert!(c.validate().is_ok());
     }
 

@@ -9,7 +9,9 @@
 //!   `python/compile/kernels/`, lowered AOT into HLO text.
 //! * **L2** — JAX policy / value / demand-predictor networks trained with
 //!   PPO + OT supervision (`python/compile/`), weights baked into the same
-//!   HLO artifacts.
+//!   HLO artifacts — or, since the native RL subsystem (`rl/`,
+//!   `docs/RL.md`), a pure-Rust policy trained in-process against the
+//!   simulator and loaded through the `PolicyProvider` seam.
 //! * **L3** — this crate: discrete-slot simulator, real-time serving
 //!   driver, the TORTA two-layer scheduler (macro OT+RL / micro matching),
 //!   baselines (SkyLB, SDIB, RR, reactive-OT), a branch-and-bound MILP
@@ -26,6 +28,7 @@ pub mod milp;
 pub mod ot;
 pub mod power;
 pub mod report;
+pub mod rl;
 pub mod runtime;
 pub mod scenario;
 pub mod scheduler;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   simulate  — run one experiment (topology x scheduler) and print the row
 //!   suite     — run all schedulers on one/all topologies (Fig 8-11 table)
+//!   train     — train the native macro RL policy in-process (docs/RL.md)
 //!   milp      — Fig 5 MILP solve-time scaling demo
 //!   trace     — record a workload trace to CSV
 //!   serve     — real-time (time-scaled) serving session
@@ -20,6 +21,7 @@ fn main() {
     let rest: Vec<String> = args.iter().skip(1).cloned().collect();
     let result = match cmd {
         "simulate" => cmd_simulate(&rest),
+        "train" => cmd_train(&rest),
         "fleet" => cmd_fleet(&rest),
         "validate-artifacts" => cmd_validate_artifacts(&rest),
         "suite" => cmd_suite(&rest),
@@ -52,6 +54,7 @@ fn print_help() {
         "torta — Temporal Optimal Resource scheduling via Two-layer Architecture\n\n\
          Commands:\n\
          \x20 simulate   run one experiment and print its metrics row\n\
+         \x20 train      train the native macro RL policy (docs/RL.md)\n\
          \x20 fleet      inspect a topology's regional supply/demand/prices\n\
          \x20 validate-artifacts  check AOT artifacts against runtime dims\n\
          \x20 suite      all schedulers x topologies comparison table\n\
@@ -71,6 +74,7 @@ fn base_cli(name: &'static str) -> Cli {
         .opt("config", "", "optional TOML config file")
         .opt("scenario", "", "registry scenario name or trace:<path> (docs/SCENARIOS.md)")
         .opt("artifacts", "artifacts", "AOT artifact directory")
+        .opt("policy", "", "NativePolicy JSON artifact for the macro layer (docs/RL.md)")
         .flag("no-pjrt", "force the native (non-PJRT) path")
 }
 
@@ -88,6 +92,10 @@ fn load_cfg(cli: &Cli) -> anyhow::Result<ExperimentConfig> {
     cfg.slots = cli.usize("slots")?;
     cfg.seed = cli.u64("seed")?;
     cfg.torta.artifacts_dir = cli.str("artifacts");
+    let policy = cli.str("policy");
+    if !policy.is_empty() {
+        cfg.torta.policy_path = policy;
+    }
     if cli.has_flag("no-pjrt") {
         cfg.torta.use_pjrt = false;
     }
@@ -107,6 +115,106 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
     println!("{}", metrics.row());
     println!("(wall time {:?})", t0.elapsed());
     report::save_runs(&format!("simulate_{}_{}", cfg.scheduler, cfg.topology), &mut [metrics]);
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("torta train", "train the native macro RL policy against the simulator")
+        .opt("topology", "abilene", "abilene|polska|gabriel|cost2|synthetic-<n>")
+        .opt("scenario", "", "registry scenario or trace:<path> (default: surge / config's)")
+        .opt("slots", "48", "slots per training episode")
+        .opt("episodes", "40", "training episodes")
+        .opt("lr", "0.05", "learning rate")
+        .opt("gamma", "0.9", "per-slot reward discount")
+        .opt("seed", "42", "workload/fleet/init/exploration seed")
+        .opt("out", "artifacts", "output directory for the policy artifact")
+        .opt("config", "", "optional TOML config file")
+        .flag("vary-workload", "reseed the episode env (arrivals, fleet, prices) each episode")
+        .flag("no-eval", "skip the post-training trained-vs-fallback comparison")
+        .parse(args)?;
+    let mut cfg = {
+        let path = cli.str("config");
+        if path.is_empty() {
+            ExperimentConfig::default()
+        } else {
+            ExperimentConfig::from_file(std::path::Path::new(&path))?
+        }
+    };
+    cfg.topology = cli.str("topology");
+    cfg.scheduler = "torta".into();
+    cfg.slots = cli.usize("slots")?;
+    cfg.seed = cli.u64("seed")?;
+    cfg.torta.use_pjrt = false;
+    // The policy being trained must not be shadowed by a pre-existing
+    // artifact from the config — neither in training nor in the printed
+    // fallback comparison row.
+    cfg.torta.policy_path = String::new();
+    // Same convention as the other subcommands: an explicit --scenario
+    // wins, a config-file scenario is preserved, and only a bare
+    // `torta train` falls back to the surge default.
+    let scenario = cli.str("scenario");
+    if !scenario.is_empty() {
+        cfg.scenario = torta::scenario::Scenario::by_name(&scenario)?;
+    } else if cli.str("config").is_empty() {
+        cfg.scenario = torta::scenario::Scenario::by_name("surge")?;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let tc = torta::rl::TrainConfig {
+        episodes: cli.usize("episodes")?,
+        lr: cli.f64("lr")?,
+        gamma: cli.f64("gamma")?,
+        seed: cfg.seed,
+        vary_workload: cli.has_flag("vary-workload"),
+        ..Default::default()
+    };
+    println!(
+        "training native policy: {} x {} scenario, {} episodes x {} slots, lr {} gamma {}",
+        cfg.topology, cfg.scenario.name, tc.episodes, cfg.slots, tc.lr, tc.gamma
+    );
+    let t0 = std::time::Instant::now();
+    let (policy, report) = torta::rl::train(&cfg, &tc)?;
+    let wall = t0.elapsed();
+    let smoothed = report.smoothed();
+    println!("{:>8} {:>14} {:>14}", "episode", "return", "smoothed");
+    for (i, (ret, sm)) in report.episode_returns.iter().zip(&smoothed).enumerate() {
+        println!("{i:>8} {ret:>14.2} {sm:>14.2}");
+    }
+    println!(
+        "learning curve: first smoothed {:.2} -> last smoothed {:.2} ({} episodes in {wall:?})",
+        smoothed.first().copied().unwrap_or(0.0),
+        smoothed.last().copied().unwrap_or(0.0),
+        tc.episodes
+    );
+    let out = torta::rl::NativePolicy::default_path(
+        std::path::Path::new(&cli.str("out")),
+        policy.r,
+    );
+    policy.save(&out)?;
+    println!("saved native policy artifact to {out:?}");
+    if !cli.has_flag("no-eval") {
+        // Deterministic (softmax-mean) eval of the trained policy against
+        // the no-policy native fallback on the training scenario.
+        let trained = torta::rl::eval(&cfg, &policy, &tc.weights)?;
+        let ctx = torta::rl::scheduler_ctx(&cfg)?;
+        let mut fallback_sched = torta::scheduler::torta::TortaScheduler::new(
+            &ctx,
+            &cfg.torta,
+            torta::scheduler::torta::TortaMode::Native,
+            cfg.seed,
+        );
+        let fallback = torta::rl::run_episode(&cfg, &mut fallback_sched, &tc.weights)?;
+        let mut tm = trained.metrics;
+        let mut fm = fallback.metrics;
+        println!("eval (return {:>10.2}): {}", trained.total_reward, tm.row());
+        println!("fallback (return {:>10.2}): {}", fallback.total_reward, fm.row());
+    }
+    println!(
+        "evaluate anywhere with: torta simulate --scheduler torta --policy {} --topology {} \
+         --scenario {}",
+        out.display(),
+        cfg.topology,
+        cfg.scenario.name
+    );
     Ok(())
 }
 

@@ -1,0 +1,64 @@
+//! Native RL training subsystem for the macro allocation policy.
+//!
+//! The paper's macro layer is "reinforcement learning + optimal
+//! transport"; before this subsystem the repo could only *consume* an RL
+//! policy through pre-baked PJRT/HLO artifacts
+//! ([`TortaArtifacts`](crate::runtime::TortaArtifacts), stubbed offline).
+//! This module closes the loop natively — no Python, no XLA:
+//!
+//! * [`PolicyProvider`] — the seam the TORTA scheduler consumes instead
+//!   of a hard-coded artifact path. Two implementations: the pure-Rust
+//!   [`NativePolicy`] (linear softmax head, JSON artifact) and the
+//!   PJRT-backed `TortaArtifacts` (implemented here so `runtime` stays
+//!   backend-only).
+//! * [`env`] — the episode runner: drives the real
+//!   [`ExecutionEngine`](crate::engine::ExecutionEngine) over Scenario-API
+//!   workloads and reads the paper's reward (response time + realized
+//!   switching cost + operational cost) off each slot's
+//!   [`SlotOutcome`](crate::scheduler::SlotOutcome).
+//! * [`train`] — REINFORCE with a per-episode baseline over the exact
+//!   production path (state featurization from
+//!   `scheduler/torta/features.rs`, allocation through the
+//!   `MacroAllocator` trust-region projection).
+//!
+//! CLI: `torta train` produces a policy artifact; `torta simulate
+//! --policy <path>` (also `suite` / `serve`) evaluates it. See
+//! `docs/RL.md` for the environment/state/reward definitions and the
+//! artifact format.
+
+pub mod env;
+pub mod policy;
+pub mod train;
+
+pub use env::{run_episode, scheduler_ctx, EpisodeTrace, RewardWeights};
+pub use policy::NativePolicy;
+pub use train::{eval, smoothed, train, TrainConfig, TrainReport};
+
+use crate::runtime::TortaArtifacts;
+
+/// A macro-policy backend: featurized state in, row-stochastic R x R
+/// allocation matrix out. `None` means "no usable output this slot" and
+/// sends the scheduler down the native OT + smoothing fallback — exactly
+/// the pre-provider artifact-failure semantics.
+pub trait PolicyProvider {
+    fn name(&self) -> &'static str;
+
+    /// Map the featurized state (`features::state_dim(r)` f32 entries) to
+    /// a row-major, row-stochastic `r*r` allocation matrix.
+    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>>;
+}
+
+/// The PJRT artifact bundle doubles as a policy provider: identical math
+/// to the pre-provider hard-coded call (`policy_alloc` + f32 -> f64
+/// widening), so artifact-backed runs are bit-identical through the seam.
+impl PolicyProvider for TortaArtifacts {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>> {
+        self.policy_alloc(state)
+            .ok()
+            .map(|v| v.iter().map(|&x| x as f64).collect())
+    }
+}

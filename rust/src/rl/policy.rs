@@ -1,0 +1,261 @@
+//! Native macro-policy head: a linear softmax over the TORTA state vector.
+//!
+//! [`NativePolicy`] maps the featurized state (`features::featurize`,
+//! `D = 4R + R^2`) to an R x R row-stochastic allocation matrix: one
+//! linear logit per (origin, destination) pair followed by a per-origin
+//! softmax. That is exactly the head shape the JAX policy network ends in
+//! (`python/compile/model.py`), small enough to train in-process against
+//! the simulator with REINFORCE (`rl::train`) and to serialize as a plain
+//! JSON artifact (`util::json` — no serde, shortest-round-trip f64 text,
+//! so save -> load -> alloc is bit-identical; tested in
+//! `rust/tests/rl.rs`).
+
+use std::path::{Path, PathBuf};
+
+use crate::scheduler::torta::features;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Artifact format tag (bumped on breaking layout changes).
+pub const FORMAT: &str = "torta-native-policy";
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Pure-Rust macro allocation policy: logits `W s + b` reshaped to R rows
+/// of R destinations, row-softmaxed. Weights are f64 end-to-end; the f32
+/// state produced by `features::featurize` is widened on entry.
+#[derive(Clone, Debug)]
+pub struct NativePolicy {
+    pub r: usize,
+    /// State dimensionality `4R + R^2` (checked on load and on alloc).
+    pub d: usize,
+    /// Seed the weights were initialized (and trained) under.
+    pub seed: u64,
+    /// Training provenance: episodes applied, scenario name, learning
+    /// rate. Zero / empty for a freshly initialized policy.
+    pub episodes: u64,
+    pub scenario: String,
+    pub lr: f64,
+    /// Row-major `(R*R) x D` weight matrix.
+    pub w: Vec<f64>,
+    /// Per-logit bias, length `R*R`.
+    pub b: Vec<f64>,
+}
+
+impl NativePolicy {
+    /// Deterministic seeded init: small centered normal weights, zero
+    /// bias — near-uniform routing rows, so an untrained policy degrades
+    /// gracefully toward the OT anchor it is blended with.
+    pub fn init(r: usize, seed: u64) -> NativePolicy {
+        let d = features::state_dim(r);
+        let mut rng = Rng::new(seed, 0x52AC);
+        let w = (0..r * r * d).map(|_| 0.01 * rng.normal()).collect();
+        NativePolicy {
+            r,
+            d,
+            seed,
+            episodes: 0,
+            scenario: String::new(),
+            lr: 0.0,
+            w,
+            b: vec![0.0; r * r],
+        }
+    }
+
+    /// Row-stochastic allocation matrix for `state` (length `d`).
+    pub fn alloc_probs(&self, state: &[f64]) -> Vec<f64> {
+        assert_eq!(state.len(), self.d, "state dim {} != {}", state.len(), self.d);
+        let r = self.r;
+        let mut out = vec![0.0; r * r];
+        for k in 0..r * r {
+            let mut z = self.b[k];
+            for (wk, sk) in self.w[k * self.d..(k + 1) * self.d].iter().zip(state) {
+                z += wk * sk;
+            }
+            out[k] = z;
+        }
+        for i in 0..r {
+            let row = &mut out[i * r..(i + 1) * r];
+            let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut s = 0.0;
+            for x in row.iter_mut() {
+                *x = (*x - m).exp();
+                s += *x;
+            }
+            for x in row.iter_mut() {
+                *x /= s;
+            }
+        }
+        out
+    }
+
+    /// Canonical artifact path inside a directory (parallel to the PJRT
+    /// naming scheme `policy_r{R}.hlo.txt`, distinct extension).
+    pub fn default_path(dir: &Path, r: usize) -> PathBuf {
+        dir.join(format!("policy_r{r}.native.json"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format", FORMAT)
+            .set("version", FORMAT_VERSION)
+            .set("r", self.r)
+            .set("state_dim", self.d)
+            .set("seed", format!("{}", self.seed))
+            .set("episodes", self.episodes)
+            .set("scenario", self.scenario.as_str())
+            .set("lr", self.lr)
+            .set("w", self.w.as_slice())
+            .set("b", self.b.as_slice());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<NativePolicy> {
+        let format = j.get("format").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(format == FORMAT, "not a native policy artifact (format {format:?})");
+        let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported native policy version {version} (expected {FORMAT_VERSION})"
+        );
+        let r = j.get("r").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+        anyhow::ensure!(r >= 2, "native policy r must be >= 2");
+        let d = j.get("state_dim").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+        anyhow::ensure!(
+            d == features::state_dim(r),
+            "state_dim {d} inconsistent with r={r} (expected {})",
+            features::state_dim(r)
+        );
+        let nums = |key: &str, want: usize| -> anyhow::Result<Vec<f64>> {
+            let arr = j
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("native policy: missing array {key:?}"))?;
+            anyhow::ensure!(arr.len() == want, "{key} has {} entries, want {want}", arr.len());
+            arr.iter()
+                .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("{key}: non-numeric entry")))
+                .collect()
+        };
+        Ok(NativePolicy {
+            r,
+            d,
+            seed: j
+                .get("seed")
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0),
+            episodes: j.get("episodes").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            scenario: j
+                .get("scenario")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            lr: j.get("lr").and_then(Json::as_f64).unwrap_or(0.0),
+            w: nums("w", r * r * d)?,
+            b: nums("b", r * r)?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing native policy {path:?}: {e}"))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<NativePolicy> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading native policy {path:?}: {e}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing native policy {path:?}: {e}"))?;
+        NativePolicy::from_json(&j)
+    }
+}
+
+impl super::PolicyProvider for NativePolicy {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>> {
+        if state.len() != self.d {
+            return None;
+        }
+        let s: Vec<f64> = state.iter().map(|&x| x as f64).collect();
+        Some(self.alloc_probs(&s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::PolicyProvider;
+    use crate::util::prop;
+
+    #[test]
+    fn init_is_seed_deterministic_and_row_stochastic() {
+        let a = NativePolicy::init(5, 9);
+        let b = NativePolicy::init(5, 9);
+        assert_eq!(a.w.len(), b.w.len());
+        for (x, y) in a.w.iter().zip(&b.w) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let c = NativePolicy::init(5, 10);
+        assert!(a.w.iter().zip(&c.w).any(|(x, y)| x != y));
+        prop::check(20, |rng, _| {
+            let p = NativePolicy::init(4, 3);
+            let state: Vec<f64> = (0..p.d).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let a = p.alloc_probs(&state);
+            for i in 0..4 {
+                let s: f64 = a[i * 4..(i + 1) * 4].iter().sum();
+                assert!((s - 1.0).abs() < 1e-12, "row {i} sums {s}");
+                assert!(a[i * 4..(i + 1) * 4].iter().all(|&x| x > 0.0));
+            }
+        });
+    }
+
+    #[test]
+    fn provider_rejects_wrong_state_dim() {
+        let p = NativePolicy::init(4, 1);
+        let short = vec![0.1f32; 3];
+        let full = vec![0.1f32; p.d];
+        assert!(p.alloc(&short).is_none());
+        assert!(p.alloc(&full).is_some());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_weights_bitwise() {
+        let mut p = NativePolicy::init(3, 77);
+        p.episodes = 12;
+        p.scenario = "surge".into();
+        p.lr = 0.05;
+        let back = NativePolicy::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.r, 3);
+        assert_eq!(back.seed, 77);
+        assert_eq!(back.episodes, 12);
+        assert_eq!(back.scenario, "surge");
+        for (x, y) in p.w.iter().zip(&back.w) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in p.b.iter().zip(&back.b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_artifacts() {
+        assert!(NativePolicy::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = NativePolicy::init(3, 1).to_json();
+        j.set("state_dim", 7usize);
+        assert!(NativePolicy::from_json(&j).is_err());
+        let mut j = NativePolicy::init(3, 1).to_json();
+        j.set("w", vec![1.0, 2.0]);
+        assert!(NativePolicy::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let p = std::env::temp_dir().join("torta_rl_missing/policy.json");
+        assert!(NativePolicy::load(&p).is_err());
+    }
+}

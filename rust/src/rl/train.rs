@@ -1,0 +1,291 @@
+//! In-process policy-gradient training for the native macro policy.
+//!
+//! REINFORCE with a per-episode baseline over the production scheduling
+//! path: every episode builds a fresh [`TortaScheduler`] (native mode)
+//! whose [`PolicyProvider`] is a sampling wrapper around the
+//! [`NativePolicy`] being trained, and runs it through the real
+//! [`ExecutionEngine`](crate::engine::ExecutionEngine) via
+//! [`run_episode`]. During training each state's row distributions are
+//! *sampled* (one destination per origin row, recorded with its
+//! probabilities), so the executed allocation feeds through the exact
+//! trust-region projection and temporal smoothing the deployed policy
+//! sees; at eval time the softmax mean is used unperturbed.
+//!
+//! Update rule per episode (gradient *ascent* on expected return):
+//!
+//! ```text
+//! G_t  = sum_{k>=t} gamma^{k-t} r_k          (discounted return)
+//! A_t  = (G_t - mean(G)) / std(G)            (normalized advantage)
+//! dlogits_i = onehot(a_i) - softmax_i        (per origin row i)
+//! W += lr/T * sum_t A_t * dlogits ⊗ s_t ;  b += lr/T * sum_t A_t * dlogits
+//! ```
+//!
+//! Everything is seeded (init, exploration, workload, scheduler), so a
+//! training run is bit-reproducible: same seed, same weights (tested in
+//! `rust/tests/rl.rs`).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::config::ExperimentConfig;
+use crate::scheduler::torta::{TortaMode, TortaScheduler};
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+use super::env::{run_episode, scheduler_ctx, EpisodeTrace, RewardWeights};
+use super::{NativePolicy, PolicyProvider};
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub episodes: usize,
+    pub lr: f64,
+    /// Per-slot reward discount.
+    pub gamma: f64,
+    /// Seeds weight init and exploration sampling (the workload/fleet
+    /// seed comes from the `ExperimentConfig`).
+    pub seed: u64,
+    pub weights: RewardWeights,
+    /// Resample the whole episode environment — arrival stream, fleet
+    /// layout, prices, failure draws — by shifting the run seed every
+    /// episode (domain-randomization style; returns are then not directly
+    /// comparable across episodes). Default off: a fixed, deterministic
+    /// environment is the lowest-variance REINFORCE setup and what the
+    /// learning-curve tests pin down.
+    pub vary_workload: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            episodes: 40,
+            lr: 0.05,
+            gamma: 0.9,
+            seed: 42,
+            weights: RewardWeights::default(),
+            vary_workload: false,
+        }
+    }
+}
+
+/// Learning-curve record returned by [`train`].
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Undiscounted episode returns, in training order.
+    pub episode_returns: Vec<f64>,
+    /// Moving-average window used by [`TrainReport::smoothed`].
+    pub window: usize,
+}
+
+impl TrainReport {
+    /// Trailing moving average of the episode returns (window clamped to
+    /// the prefix length at the start of training).
+    pub fn smoothed(&self) -> Vec<f64> {
+        smoothed(&self.episode_returns, self.window)
+    }
+}
+
+/// Trailing moving average with window `w` (>=1).
+pub fn smoothed(xs: &[f64], w: usize) -> Vec<f64> {
+    let w = w.max(1);
+    (0..xs.len())
+        .map(|i| {
+            let lo = (i + 1).saturating_sub(w);
+            let win = &xs[lo..=i];
+            win.iter().sum::<f64>() / win.len() as f64
+        })
+        .collect()
+}
+
+/// One recorded policy invocation: the state it saw, the row softmax it
+/// computed, and the destination sampled per origin row.
+struct StepSample {
+    state: Vec<f64>,
+    probs: Vec<f64>,
+    dests: Vec<usize>,
+}
+
+struct TrainCell {
+    policy: NativePolicy,
+    rng: Rng,
+    traj: Vec<StepSample>,
+}
+
+/// Shared sampling handle: the scheduler owns one clone as its
+/// [`PolicyProvider`], the trainer keeps the other to read trajectories
+/// and apply updates between episodes. Single-threaded by construction
+/// (training drives one engine at a time), hence `Rc<RefCell>`.
+#[derive(Clone)]
+pub struct SamplingPolicy {
+    cell: Rc<RefCell<TrainCell>>,
+}
+
+impl PolicyProvider for SamplingPolicy {
+    fn name(&self) -> &'static str {
+        "native-sampling"
+    }
+
+    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>> {
+        let mut cell = self.cell.borrow_mut();
+        let cell = &mut *cell;
+        if state.len() != cell.policy.d {
+            return None;
+        }
+        let s: Vec<f64> = state.iter().map(|&x| x as f64).collect();
+        let probs = cell.policy.alloc_probs(&s);
+        let r = cell.policy.r;
+        let mut a = vec![0.0; r * r];
+        let mut dests = Vec::with_capacity(r);
+        for i in 0..r {
+            let j = cell.rng.categorical(&probs[i * r..(i + 1) * r]);
+            a[i * r + j] = 1.0;
+            dests.push(j);
+        }
+        cell.traj.push(StepSample { state: s, probs, dests });
+        Some(a)
+    }
+}
+
+/// REINFORCE update from one episode's trajectory + rewards.
+fn apply_update(cell: &mut TrainCell, rewards: &[f64], tc: &TrainConfig) {
+    let traj = std::mem::take(&mut cell.traj);
+    let n = traj.len().min(rewards.len());
+    if n == 0 {
+        return;
+    }
+    let mut g = vec![0.0; n];
+    let mut acc = 0.0;
+    for t in (0..n).rev() {
+        acc = rewards[t] + tc.gamma * acc;
+        g[t] = acc;
+    }
+    let mean = g.iter().sum::<f64>() / n as f64;
+    let var = g.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let std = var.sqrt().max(1e-6);
+    let policy = &mut cell.policy;
+    let (r, d) = (policy.r, policy.d);
+    for (t, samp) in traj.iter().take(n).enumerate() {
+        let scale = tc.lr * (g[t] - mean) / std / n as f64;
+        for i in 0..r {
+            let row = &samp.probs[i * r..(i + 1) * r];
+            for j in 0..r {
+                let grad_logit = (if samp.dests[i] == j { 1.0 } else { 0.0 }) - row[j];
+                let coef = scale * grad_logit;
+                let k = i * r + j;
+                policy.b[k] += coef;
+                for (wk, sk) in policy.w[k * d..(k + 1) * d].iter_mut().zip(&samp.state) {
+                    *wk += coef * sk;
+                }
+            }
+        }
+    }
+}
+
+/// Train a [`NativePolicy`] for `cfg`'s topology against `cfg`'s scenario.
+/// Returns the trained policy (provenance fields stamped) and the
+/// learning curve.
+pub fn train(
+    cfg: &ExperimentConfig,
+    tc: &TrainConfig,
+) -> anyhow::Result<(NativePolicy, TrainReport)> {
+    anyhow::ensure!(tc.episodes > 0, "train: episodes must be > 0");
+    anyhow::ensure!(tc.lr > 0.0, "train: lr must be > 0");
+    anyhow::ensure!((0.0..=1.0).contains(&tc.gamma), "train: gamma must lie in [0,1]");
+    let topo = Topology::by_name(&cfg.topology)?;
+    let r = topo.n;
+    let cell = Rc::new(RefCell::new(TrainCell {
+        policy: NativePolicy::init(r, tc.seed),
+        rng: Rng::new(tc.seed, 0x5A3F),
+        traj: Vec::new(),
+    }));
+    let mut episode_returns = Vec::with_capacity(tc.episodes);
+    for ep in 0..tc.episodes {
+        cell.borrow_mut().traj.clear();
+        let mut ecfg = cfg.clone();
+        ecfg.torta.use_pjrt = false;
+        // The provider is installed explicitly below; a configured
+        // policy_path must not shadow the policy being trained.
+        ecfg.torta.policy_path = String::new();
+        if tc.vary_workload {
+            ecfg.seed = cfg.seed.wrapping_add(0x9E37 * ep as u64);
+        }
+        let ctx = scheduler_ctx(&ecfg)?;
+        let mut sched = TortaScheduler::new(&ctx, &ecfg.torta, TortaMode::Native, ecfg.seed)
+            .with_policy(Box::new(SamplingPolicy { cell: cell.clone() }));
+        let trace = run_episode(&ecfg, &mut sched, &tc.weights)?;
+        episode_returns.push(trace.total_reward);
+        apply_update(&mut cell.borrow_mut(), &trace.rewards, tc);
+    }
+    let mut policy = cell.borrow().policy.clone();
+    policy.episodes = tc.episodes as u64;
+    policy.scenario = cfg.scenario.name.clone();
+    policy.lr = tc.lr;
+    Ok((policy, TrainReport { episode_returns, window: 5 }))
+}
+
+/// Deterministic (softmax-mean) evaluation of a policy on `cfg`: builds a
+/// native TORTA scheduler with the policy installed and runs one episode.
+pub fn eval(
+    cfg: &ExperimentConfig,
+    policy: &NativePolicy,
+    weights: &RewardWeights,
+) -> anyhow::Result<EpisodeTrace> {
+    let ctx = scheduler_ctx(cfg)?;
+    anyhow::ensure!(
+        policy.r == ctx.topo.n,
+        "policy trained for R={} cannot evaluate on {} (R={})",
+        policy.r,
+        cfg.topology,
+        ctx.topo.n
+    );
+    let mut ecfg = cfg.clone();
+    ecfg.torta.use_pjrt = false;
+    ecfg.torta.policy_path = String::new();
+    let mut sched = TortaScheduler::new(&ctx, &ecfg.torta, TortaMode::Native, ecfg.seed)
+        .with_policy(Box::new(policy.clone()));
+    run_episode(&ecfg, &mut sched, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothed_is_trailing_mean() {
+        let xs = [1.0, 3.0, 5.0, 7.0];
+        let s = smoothed(&xs, 2);
+        assert_eq!(s, vec![1.0, 2.0, 4.0, 6.0]);
+        assert_eq!(smoothed(&xs, 1), xs.to_vec());
+        assert!(smoothed(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn train_rejects_bad_hyperparameters() {
+        let cfg = ExperimentConfig::default();
+        let mut tc = TrainConfig { episodes: 0, ..Default::default() };
+        assert!(train(&cfg, &tc).is_err());
+        tc.episodes = 1;
+        tc.lr = 0.0;
+        assert!(train(&cfg, &tc).is_err());
+        tc.lr = 0.1;
+        tc.gamma = 1.5;
+        assert!(train(&cfg, &tc).is_err());
+    }
+
+    #[test]
+    fn one_episode_records_full_trajectory_and_updates_weights() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology = "synthetic-4".into();
+        cfg.slots = 5;
+        cfg.workload.base_rate = 6.0;
+        cfg.torta.use_pjrt = false;
+        let tc = TrainConfig { episodes: 1, ..Default::default() };
+        let (policy, report) = train(&cfg, &tc).unwrap();
+        assert_eq!(report.episode_returns.len(), 1);
+        assert_eq!(policy.episodes, 1);
+        assert_eq!(policy.scenario, "diurnal");
+        // Weights moved off the seeded init.
+        let init = NativePolicy::init(4, tc.seed);
+        assert!(policy.w.iter().zip(&init.w).any(|(a, b)| a != b));
+    }
+}

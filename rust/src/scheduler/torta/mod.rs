@@ -4,8 +4,11 @@
 //! 1. mu/nu normalization from this slot's demand and live capacity;
 //! 2. OT plan P* (PJRT Sinkhorn artifact or native solver);
 //! 3. demand prediction F_t (PJRT MLP artifact / EMA / noisy oracle);
-//! 4. allocation matrix A_t from the RL policy artifact, trust-region
-//!    projected around Prob(P*) and temporally smoothed (macro layer);
+//! 4. allocation matrix A_t from the RL macro policy — any
+//!    [`crate::rl::PolicyProvider`]: a natively trained
+//!    `rl::NativePolicy` (`torta.policy_path`, see `docs/RL.md`) or the
+//!    PJRT policy artifact — trust-region projected around Prob(P*) and
+//!    temporally smoothed (macro layer);
 //! 5. per-task regional routing by sampling A_t[origin, :];
 //! 6. micro layer per region: Eq. 6 activation (proactive, fed by F_t) and
 //!    Eqs. 7-10 greedy task-server matching, with overflow buffering.
@@ -23,6 +26,7 @@ use super::{
 use crate::cluster::Fleet;
 use crate::config::TortaConfig;
 use crate::ot;
+use crate::rl::{NativePolicy, PolicyProvider};
 use crate::runtime::TortaArtifacts;
 use crate::util::rng::Rng;
 use crate::workload::{DemandForecast, Task};
@@ -50,6 +54,12 @@ pub struct TortaScheduler {
     micro: MicroAllocator,
     pub predictor: DemandPredictor,
     artifacts: Option<TortaArtifacts>,
+    /// Explicit macro-policy backend (`torta.policy_path` or
+    /// [`with_policy`](Self::with_policy)). Takes precedence over the
+    /// artifact bundle's policy head; `None` + no artifacts is the native
+    /// OT + smoothing fallback, bit-identical to the pre-provider path.
+    /// See `docs/RL.md`.
+    policy: Option<Box<dyn PolicyProvider>>,
     cost_matrix: Vec<f64>,
     rng: Rng,
     /// Per-region queue estimate (buffered backlog), for Eq. 6 and features.
@@ -94,6 +104,27 @@ impl TortaScheduler {
         } else {
             None
         };
+        let policy: Option<Box<dyn PolicyProvider>> =
+            if !cfg.policy_path.is_empty() && mode != TortaMode::Reactive {
+                let path = std::path::PathBuf::from(&cfg.policy_path);
+                match NativePolicy::load(&path) {
+                    Ok(p) if p.r == r => Some(Box::new(p)),
+                    Ok(p) => {
+                        eprintln!(
+                            "torta: native policy {path:?} is R={} but topology is R={r}; \
+                             native fallback",
+                            p.r
+                        );
+                        None
+                    }
+                    Err(e) => {
+                        eprintln!("torta: native policy load failed ({e}); native fallback");
+                        None
+                    }
+                }
+            } else {
+                None
+            };
         let pred_mode = if mode == TortaMode::Reactive {
             PredictorMode::Ema // unused for activation; reactive scales lazily
         } else if cfg.prediction_accuracy >= 1.0 {
@@ -110,6 +141,7 @@ impl TortaScheduler {
             micro: MicroAllocator::new(cfg.activation_sigma, cfg.w_hw, cfg.w_load, cfg.w_locality),
             predictor: DemandPredictor::new(r, pred_mode, seed),
             artifacts,
+            policy,
             cost_matrix: ot::cost_matrix(&ctx.topo, &ctx.prices, cfg.cost_w_power, cfg.cost_w_net),
             rng: Rng::new(seed, 313),
             queue_estimate: vec![0.0; r],
@@ -141,6 +173,19 @@ impl TortaScheduler {
 
     pub fn has_artifacts(&self) -> bool {
         self.artifacts.is_some()
+    }
+
+    /// Install an explicit macro-policy backend (overrides both the
+    /// artifact bundle's policy head and `torta.policy_path`). This is
+    /// how the RL trainer injects its sampling wrapper and how tests
+    /// install trained [`NativePolicy`] instances programmatically.
+    pub fn with_policy(mut self, policy: Box<dyn PolicyProvider>) -> TortaScheduler {
+        self.policy = Some(policy);
+        self
+    }
+
+    pub fn has_policy(&self) -> bool {
+        self.policy.is_some()
     }
 
     /// Largest-remainder quota split of `n` tasks from `origin` over
@@ -334,22 +379,33 @@ impl Scheduler for TortaScheduler {
             self.predictor.predict(slot, self.artifacts.as_ref())
         };
 
-        let policy_out = match (&self.artifacts, self.mode) {
-            (Some(art), TortaMode::Full) => {
-                let state = features::featurize(
-                    fleet,
-                    &_ctx.prices,
-                    &self.queue_estimate,
-                    &f_pred,
-                    &self.macro_alloc.prev_alloc,
-                    now,
-                );
-                art.policy_alloc(&state)
-                    .ok()
-                    .map(|v| v.iter().map(|&x| x as f64).collect::<Vec<f64>>())
-            }
-            _ => None,
+        // Macro-policy backend through the PolicyProvider seam: an
+        // explicitly installed provider (NativePolicy via
+        // `torta.policy_path` / `with_policy`, or the trainer's sampling
+        // wrapper) wins; otherwise Full mode falls back to the artifact
+        // bundle's policy head; otherwise — and whenever the provider
+        // declines — the native OT + smoothing path runs, bit-identical
+        // to the pre-provider behaviour.
+        let provider: Option<&dyn PolicyProvider> = if self.mode == TortaMode::Reactive {
+            None
+        } else if let Some(p) = &self.policy {
+            Some(p.as_ref())
+        } else if self.mode == TortaMode::Full {
+            self.artifacts.as_ref().map(|a| a as &dyn PolicyProvider)
+        } else {
+            None
         };
+        let policy_out = provider.and_then(|p| {
+            let state = features::featurize(
+                fleet,
+                &_ctx.prices,
+                &self.queue_estimate,
+                &f_pred,
+                &self.macro_alloc.prev_alloc,
+                now,
+            );
+            p.alloc(&state)
+        });
         let alloc = self.macro_alloc.allocate(&ot_prob, policy_out);
 
         // --- Phase 2: micro (Algorithm 1 lines 9-19) --------------------
@@ -579,5 +635,24 @@ mod tests {
     fn no_artifacts_in_native_mode() {
         let (_, _, s) = setup(TortaMode::Native);
         assert!(!s.has_artifacts());
+        assert!(!s.has_policy());
+    }
+
+    #[test]
+    fn with_policy_drives_macro_allocation() {
+        let (ctx, mut fleet, s) = setup(TortaMode::Native);
+        let r = ctx.topo.n;
+        let mut s = s.with_policy(Box::new(crate::rl::NativePolicy::init(r, 7)));
+        assert!(s.has_policy());
+        for slot in 0..3 {
+            let ts = tasks(r, 40 + slot as u64);
+            let n = ts.len();
+            let plan = s.schedule(&ctx, &mut fleet, ts, slot, slot as f64 * 45.0);
+            assert_eq!(plan.assignments.len() + plan.buffered.len(), n);
+            for i in 0..r {
+                let sum: f64 = plan.alloc[i * r..(i + 1) * r].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "slot {slot} row {i} sums {sum}");
+            }
+        }
     }
 }

@@ -11,9 +11,63 @@ fn help_lists_commands() {
     let out = torta().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["simulate", "suite", "milp", "trace", "serve"] {
+    for cmd in ["simulate", "suite", "train", "milp", "trace", "serve"] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+}
+
+#[test]
+fn train_produces_artifact_that_simulate_loads() {
+    // The acceptance loop through the real binary: `train` writes a
+    // NativePolicy artifact, `simulate --scheduler torta --policy <path>`
+    // runs with it (tiny topology/horizon so tier-1 stays fast).
+    let dir = std::env::temp_dir().join("torta_cli_train");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = torta()
+        .args([
+            "train",
+            "--topology",
+            "synthetic-4",
+            "--scenario",
+            "surge",
+            "--slots",
+            "4",
+            "--episodes",
+            "2",
+            "--seed",
+            "7",
+            "--no-eval",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("saved native policy artifact"), "got: {text}");
+    let artifact = dir.join("policy_r4.native.json");
+    assert!(artifact.exists(), "missing {artifact:?}");
+    let out = torta()
+        .args([
+            "simulate",
+            "--topology",
+            "synthetic-4",
+            "--scheduler",
+            "torta",
+            "--slots",
+            "4",
+            "--no-pjrt",
+            "--policy",
+            artifact.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    // A load failure would print a "native fallback" warning on stderr.
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!stderr.contains("native fallback"), "policy did not load: {stderr}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("torta"));
+    std::fs::remove_file(&artifact).ok();
 }
 
 #[test]

@@ -1,0 +1,129 @@
+//! Golden-metrics regression: key `RunMetrics` fields for all four suite
+//! schedulers x three registry scenarios at a short horizon, compared
+//! BIT-FOR-BIT against a committed fixture — so future refactors diff
+//! against bits, not vibes.
+//!
+//! Fixture: `rust/tests/golden/metrics.json`.
+//!
+//! Regenerate (after an *intentional* behaviour change) with:
+//!
+//! ```text
+//! GOLDEN_REGEN=1 cargo test --test golden_metrics -- --nocapture
+//! git add rust/tests/golden/metrics.json
+//! ```
+//!
+//! Bootstrap: when the fixture does not exist yet (fresh environment),
+//! the test writes it, self-checks determinism by re-running one cell
+//! and comparing bits, and passes with a notice — the guard is UNARMED
+//! until the generated file is committed (the CI build-test job uploads
+//! it as the `golden-metrics-fixture` artifact so a maintainer can
+//! commit it without a local toolchain). Comparisons are on
+//! `f64::to_bits` of the shortest-round-trip JSON values, i.e. exact.
+
+use std::path::PathBuf;
+
+use torta::config::ExperimentConfig;
+use torta::sim::run_experiment;
+use torta::util::json::Json;
+
+const SCHEDULERS: [&str; 4] = ["torta", "skylb", "sdib", "rr"];
+/// Scenarios chosen so their event windows fire inside [`SLOTS`]:
+/// regional-failure is dark over slots 2-8, flash-crowd ramps at 24.
+const SCENARIOS: [&str; 3] = ["diurnal", "regional-failure", "flash-crowd"];
+const SLOTS: usize = 28;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/metrics.json")
+}
+
+fn run_one(scheduler: &str, scenario: &str) -> Json {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = scheduler.into();
+    cfg.slots = SLOTS;
+    cfg.torta.use_pjrt = false; // hermetic: no artifact dependence
+    cfg.scenario = torta::scenario::Scenario::by_name(scenario).unwrap();
+    let m = run_experiment(&cfg).unwrap_or_else(|e| panic!("{scheduler}@{scenario} failed: {e}"));
+    let mut row = Json::obj();
+    row.set("response_mean", m.response.mean())
+        .set("waiting_mean", m.waiting.mean())
+        .set("switching_cost_frob", m.switching_cost_frob)
+        .set("power_cost_dollars", m.power_cost_dollars)
+        .set("operational_overhead", m.operational_overhead)
+        .set("migrations", m.migrations)
+        .set("tasks_total", m.tasks_total)
+        .set("tasks_dropped", m.tasks_dropped);
+    row
+}
+
+fn run_all() -> Json {
+    let mut root = Json::obj();
+    for scenario in SCENARIOS {
+        for scheduler in SCHEDULERS {
+            root.set(&format!("{scheduler}@{scenario}"), run_one(scheduler, scenario));
+        }
+    }
+    root
+}
+
+#[test]
+fn metrics_match_golden_fixture() {
+    let path = fixture_path();
+    let current = run_all();
+    let regen = std::env::var("GOLDEN_REGEN").is_ok();
+    if regen || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, current.to_string_pretty()).unwrap();
+        // Self-check: what we wrote parses back to the same values.
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, current, "fixture does not round-trip through JSON");
+        // Self-check: a second run of one cell reproduces the fixture
+        // bits, so bootstrap at least guards run-to-run determinism.
+        let rerun = run_one("torta", "regional-failure");
+        assert_eq!(
+            current.get("torta@regional-failure"),
+            Some(&rerun),
+            "torta@regional-failure is not deterministic across runs"
+        );
+        eprintln!(
+            "golden_metrics: {} fixture {path:?} — UNARMED until committed \
+             (CI uploads it as the golden-metrics-fixture artifact)",
+            if regen { "regenerated" } else { "bootstrapped" }
+        );
+        return;
+    }
+    let want = Json::parse(&std::fs::read_to_string(&path).unwrap())
+        .unwrap_or_else(|e| panic!("fixture {path:?} unparseable: {e}"));
+    let keys: Vec<String> = SCENARIOS
+        .iter()
+        .flat_map(|sc| SCHEDULERS.iter().map(move |s| format!("{s}@{sc}")))
+        .collect();
+    for key in &keys {
+        let got = current.get(key).unwrap_or_else(|| panic!("run missing key {key}"));
+        let exp = want
+            .get(key)
+            .unwrap_or_else(|| panic!("fixture missing key {key} — regenerate (see header)"));
+        for field in [
+            "response_mean",
+            "waiting_mean",
+            "switching_cost_frob",
+            "power_cost_dollars",
+            "operational_overhead",
+            "migrations",
+            "tasks_total",
+            "tasks_dropped",
+        ] {
+            let g = got.get(field).and_then(Json::as_f64);
+            let e = exp.get(field).and_then(Json::as_f64);
+            let (g, e) = match (g, e) {
+                (Some(g), Some(e)) => (g, e),
+                _ => panic!("{key}.{field}: missing in run ({g:?}) or fixture ({e:?})"),
+            };
+            assert!(
+                g.to_bits() == e.to_bits(),
+                "{key}.{field} drifted: got {g:?}, fixture {e:?}\n\
+                 If this change is intentional, regenerate with:\n\
+                 GOLDEN_REGEN=1 cargo test --test golden_metrics"
+            );
+        }
+    }
+}

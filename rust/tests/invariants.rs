@@ -1,11 +1,16 @@
 //! Property-based cross-module invariants: random configurations through
 //! the full engine must preserve conservation, bounds, and determinism.
 
-use torta::config::ExperimentConfig;
+use torta::config::{ExperimentConfig, WorkloadConfig};
 use torta::milp::{solve_bnb, solve_greedy, validate, AssignmentProblem};
+use torta::ot;
+use torta::scheduler::torta::macro_alloc::{normalize_rows, project_to_trust_region};
 use torta::sim::Simulation;
 use torta::util::prop;
-use torta::workload::{DiurnalWorkload, WorkloadSource};
+use torta::workload::{
+    Constant, DemandForecast, Diurnal, DiurnalWorkload, FlashCrowd, Mix, RateScale, Surge,
+    SurgeWindow, WorkloadSource,
+};
 
 fn random_cfg(rng: &mut torta::util::rng::Rng) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -75,6 +80,213 @@ fn milp_solutions_always_feasible_and_ordered() {
                 exact.cost,
                 greedy.cost
             );
+        }
+    });
+}
+
+// ---- OT / macro-allocator invariants (random R, costs, seeds) ----------
+
+#[test]
+fn sinkhorn_plan_marginals_match_within_tol() {
+    prop::check(25, |rng, size| {
+        let r = 2 + rng.below(size.min(16));
+        let mu = prop::simplex(rng, r);
+        let nu = prop::simplex(rng, r);
+        let cost = prop::matrix(rng, r, r, 0.0, 1.0);
+        let tol = 1e-6;
+        let mut solver = ot::SinkhornSolver::new(&cost, r, 0.05, tol, 20_000);
+        let plan = solver.solve(&mu, &nu).to_vec();
+        assert!(
+            solver.last_marginal_err <= tol,
+            "R={r}: solver stopped at marginal err {} > tol {tol}",
+            solver.last_marginal_err
+        );
+        for i in 0..r {
+            let row: f64 = plan[i * r..(i + 1) * r].iter().sum();
+            assert!((row - mu[i]).abs() <= tol, "R={r} row {i}: {row} vs {}", mu[i]);
+        }
+        for j in 0..r {
+            // Column marginals are satisfied exactly by the final v-update
+            // (up to rounding).
+            let col: f64 = (0..r).map(|i| plan[i * r + j]).sum();
+            assert!((col - nu[j]).abs() <= 1e-9, "R={r} col {j}: {col} vs {}", nu[j]);
+        }
+        assert!(plan.iter().all(|&x| x >= 0.0));
+    });
+}
+
+#[test]
+fn trust_region_projection_bounded_and_row_stochastic() {
+    prop::check(50, |rng, size| {
+        let r = 2 + rng.below(size.min(14));
+        let mut anchor = prop::matrix(rng, r, r, 0.0, 1.0);
+        normalize_rows(&mut anchor, r);
+        let mut a = prop::matrix(rng, r, r, 0.0, 1.0);
+        normalize_rows(&mut a, r);
+        let eps = rng.uniform(0.02, 1.2);
+        project_to_trust_region(&mut a, &anchor, eps, r);
+        let dist = a
+            .iter()
+            .zip(&anchor)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist <= eps + 1e-9, "R={r}: dist {dist} > eps {eps}");
+        for i in 0..r {
+            let row = &a[i * r..(i + 1) * r];
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "R={r} row {i} sums {s} after projection");
+            assert!(row.iter().all(|&x| x >= -1e-12));
+        }
+    });
+}
+
+#[test]
+fn normalize_rows_is_idempotent() {
+    prop::check(50, |rng, size| {
+        let r = 1 + rng.below(size.min(14));
+        let mut a = prop::matrix(rng, r, r, -0.4, 1.0);
+        if rng.chance(0.3) {
+            // Exercise the degenerate all-non-positive row path too.
+            let i = rng.below(r);
+            for x in &mut a[i * r..(i + 1) * r] {
+                *x = if rng.chance(0.5) { 0.0 } else { -rng.f64() };
+            }
+        }
+        normalize_rows(&mut a, r);
+        let once = a.clone();
+        normalize_rows(&mut a, r);
+        for (x, y) in once.iter().zip(&a) {
+            assert!((x - y).abs() <= 1e-12, "normalize_rows not idempotent: {x} vs {y}");
+        }
+        for i in 0..r {
+            let s: f64 = a[i * r..(i + 1) * r].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    });
+}
+
+// ---- Workload-combinator invariants (random stacks and horizons) --------
+
+#[test]
+fn combinator_stacks_superpose_rates_over_base() {
+    use torta::workload::combinators::{FlashCrowdShape, RateShape, WeeklyShape};
+    use torta::workload::WeeklySeasonal;
+    prop::check(16, |rng, size| {
+        let n = 2 + rng.below(5);
+        let seed = rng.next_u64();
+        let reference = Diurnal::new(WorkloadConfig::default(), n, seed);
+        let mut src: Box<dyn WorkloadSource> =
+            Box::new(Diurnal::new(WorkloadConfig::default(), n, seed));
+        // Mirror each layer's documented multiplicative shape with a
+        // closure; the composed stack's rate must equal base * product.
+        let mut layers: Vec<Box<dyn Fn(usize, usize) -> f64>> = Vec::new();
+        let depth = 1 + rng.below(size.min(3));
+        for _ in 0..depth {
+            match rng.below(4) {
+                0 => {
+                    let f = rng.uniform(0.3, 3.0);
+                    src = Box::new(RateScale::wrap(src, f));
+                    layers.push(Box::new(move |_, _| f));
+                }
+                1 => {
+                    let start_slot = rng.below(20);
+                    let end_slot = start_slot + 1 + rng.below(15);
+                    let factor = rng.uniform(1.1, 4.0);
+                    let region = if rng.chance(0.5) { Some(rng.below(n)) } else { None };
+                    src = Box::new(Surge::wrap(
+                        src,
+                        vec![SurgeWindow { start_slot, end_slot, factor, region }],
+                    ));
+                    layers.push(Box::new(move |slot, reg| {
+                        let hit = slot >= start_slot
+                            && slot < end_slot
+                            && region.map_or(true, |r| r == reg);
+                        if hit {
+                            factor
+                        } else {
+                            1.0
+                        }
+                    }));
+                }
+                2 => {
+                    let at = rng.below(12);
+                    let ramp = 1 + rng.below(3);
+                    let hold = 1 + rng.below(4);
+                    let decay = 1 + rng.below(4);
+                    let factor = rng.uniform(1.5, 5.0);
+                    let region = if rng.chance(0.5) { Some(rng.below(n)) } else { None };
+                    src = Box::new(FlashCrowd::wrap(src, at, ramp, hold, decay, factor, region));
+                    let shape = FlashCrowdShape { at, ramp, hold, decay, factor, region };
+                    layers.push(Box::new(move |slot, reg| shape.factor(slot, reg)));
+                }
+                _ => {
+                    let day_slots = 2 + rng.below(6);
+                    let weekend_factor = rng.uniform(0.2, 0.9);
+                    src = Box::new(WeeklySeasonal::wrap(src, day_slots, weekend_factor));
+                    let shape = WeeklyShape { day_slots, weekend_factor };
+                    layers.push(Box::new(move |slot, reg| shape.factor(slot, reg)));
+                }
+            }
+        }
+        for slot in [0usize, 3, 11, 26] {
+            let got = src.rate_at(slot);
+            let base_rates = reference.rate_at(slot);
+            for reg in 0..n {
+                let want: f64 =
+                    base_rates[reg] * layers.iter().map(|f| f(slot, reg)).product::<f64>();
+                assert!(
+                    (got[reg] - want).abs() <= 1e-9 * want.max(1.0),
+                    "slot {slot} region {reg}: {} vs {want}",
+                    got[reg]
+                );
+            }
+        }
+        // Horizon contract: rate_horizon == slotwise rate_at, bitwise.
+        let slot = rng.below(30);
+        let horizon = 1 + rng.below(8);
+        let h = src.rate_horizon(slot, horizon);
+        assert_eq!(h.len(), horizon);
+        for (k, rates) in h.iter().enumerate() {
+            assert_eq!(rates, &src.rate_at(slot + k), "horizon slot {}", slot + k);
+        }
+    });
+}
+
+#[test]
+fn mix_superposes_member_rates() {
+    prop::check(16, |rng, _size| {
+        let n = 2 + rng.below(4);
+        let k = 2 + rng.below(3);
+        let mut members: Vec<Box<dyn WorkloadSource>> = Vec::new();
+        let mut twins: Vec<Box<dyn WorkloadSource>> = Vec::new();
+        for _ in 0..k {
+            let seed = rng.next_u64();
+            if rng.chance(0.5) {
+                let rate = rng.uniform(2.0, 30.0);
+                members.push(Box::new(Constant::new(WorkloadConfig::default(), n, seed, rate)));
+                twins.push(Box::new(Constant::new(WorkloadConfig::default(), n, seed, rate)));
+            } else {
+                members.push(Box::new(Diurnal::new(WorkloadConfig::default(), n, seed)));
+                twins.push(Box::new(Diurnal::new(WorkloadConfig::default(), n, seed)));
+            }
+        }
+        let mix = Mix::new(members).unwrap();
+        for slot in [0usize, 5, 17] {
+            let got = mix.rate_at(slot);
+            for reg in 0..n {
+                let want: f64 = twins.iter().map(|t| t.rate_at(slot)[reg]).sum();
+                assert!(
+                    (got[reg] - want).abs() < 1e-9,
+                    "slot {slot} region {reg}: {} vs {want}",
+                    got[reg]
+                );
+            }
+        }
+        let slot = rng.below(20);
+        let horizon = 1 + rng.below(6);
+        for (kk, rates) in mix.rate_horizon(slot, horizon).iter().enumerate() {
+            assert_eq!(rates, &mix.rate_at(slot + kk));
         }
     });
 }
