@@ -1,9 +1,12 @@
 //! Performance benches for the coordinator hot paths (§Perf deliverable):
 //! micro-matching throughput (lazy bound-heap matcher vs the reference
 //! full-rescan), native Sinkhorn cold vs warm-started steady state, PJRT
-//! policy / predictor inference latency, end-to-end slot stepping, and the
+//! policy / predictor inference latency, end-to-end slot stepping, the
 //! fleet-scale sweep (synthetic R=32/64/128 topologies at up to 10x the
-//! Table I fleet under the high-rate workload preset).
+//! Table I fleet under the high-rate workload preset), and the shard
+//! pipeline's threads x R speedup rows (parallel engine + matching vs the
+//! sequential legacy path at R=32/64/128/256 — docs/PERF.md, "Shard
+//! pipeline").
 //!
 //! `suite.save("perf_hotpath")` maintains `BENCH_perf_hotpath.json` in the
 //! working directory: re-running prints a delta column against the
@@ -26,6 +29,36 @@ use torta::topology::Topology;
 use torta::util::bench::{BenchSuite, Bencher};
 use torta::util::rng::Rng;
 use torta::workload::{DiurnalWorkload, WorkloadSource};
+
+/// One full engine run for the shard-pipeline rows: scaled synthetic
+/// fleet, high-rate workload, torta-native, worker count pinned. Returns
+/// (wall seconds, server count, tasks recorded).
+fn shard_pipeline_run(
+    r: usize,
+    fleet_scale: f64,
+    slots: usize,
+    threads: usize,
+) -> (f64, usize, u64) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology = format!("synthetic-{r}");
+    cfg.scheduler = "torta-native".into();
+    cfg.slots = slots;
+    cfg.seed = 7;
+    cfg.torta.use_pjrt = false;
+    cfg.torta.threads = threads;
+    cfg.workload = WorkloadConfig::high_rate();
+    let mut engine = Simulation::new(cfg.clone()).unwrap();
+    // Swap in the scaled fleet (same salted seed the engine used, so
+    // prices and demand stay aligned).
+    let seed = cfg.seed ^ torta::sim::topo_salt(&engine.ctx.topo.name);
+    engine.fleet = Fleet::build_scaled(&engine.ctx.topo, &engine.ctx.prices, seed, fleet_scale);
+    let n_servers = engine.fleet.total_servers();
+    let mut wl = DiurnalWorkload::new(cfg.workload.clone(), r, 11);
+    let mut sched = torta::scheduler::build("torta-native", &engine.ctx, &cfg).unwrap();
+    let t0 = Instant::now();
+    let m = engine.run(&mut wl, sched.as_mut());
+    (t0.elapsed().as_secs_f64(), n_servers, m.tasks_total)
+}
 
 fn main() {
     // `--max-r N` caps the fleet-scale sweep (CI smoke runs R<=32 to keep
@@ -212,6 +245,39 @@ fn main() {
             &format!("scale R={r} ({n_servers} servers): throughput"),
             total_tasks as f64 / decision_secs.max(1e-12),
             "tasks/s",
+        );
+    }
+
+    // ---- Shard pipeline: parallel-over-sequential speedup, threads x R --
+    // Full engine slots (TORTA decide with parallel micro matching +
+    // action execution + metering sweep) on scaled synthetic fleets,
+    // measured at `--threads 1` (the exact sequential legacy path) vs 4
+    // workers. The two runs are bit-identical by the determinism contract
+    // (tests/shard_equivalence.rs); these rows record what the
+    // parallelism buys in wall clock, and land in BENCH_perf_hotpath.json
+    // so CI's bench-smoke can assert the metric is emitted (the R=32 row
+    // survives `--max-r 32`).
+    let pipeline_threads = 4usize;
+    for (r, fleet_scale, slots) in
+        [(32usize, 2.0f64, 8usize), (64, 4.0, 8), (128, 8.0, 6), (256, 12.0, 4)]
+    {
+        if r > max_r {
+            suite.note(&format!("shard pipeline R={r} skipped (--max-r {max_r})"));
+            continue;
+        }
+        let (seq_secs, n_servers, seq_tasks) = shard_pipeline_run(r, fleet_scale, slots, 1);
+        let par = shard_pipeline_run(r, fleet_scale, slots, pipeline_threads);
+        let (par_secs, _, par_tasks) = par;
+        assert_eq!(seq_tasks, par_tasks, "shard pipeline changed task accounting at R={r}");
+        suite.metric(
+            &format!("shard pipeline speedup R={r} ({pipeline_threads}T over 1T)"),
+            seq_secs / par_secs.max(1e-12),
+            "x",
+        );
+        suite.metric(
+            &format!("shard pipeline slot latency R={r} ({n_servers} servers)"),
+            par_secs / slots as f64 * 1e3,
+            "ms/slot",
         );
     }
 

@@ -1,5 +1,14 @@
 //! GPU cluster substrate: hardware catalog, Fig 3 transition cost model,
-//! multi-lane servers, regions and fleet construction.
+//! multi-lane servers, region shards and fleet construction.
+//!
+//! Since the region-sharding refactor the fleet is a vector of
+//! [`RegionShard`]s — one per topology node, each owning its servers and
+//! its own per-slot aggregate cache — so the per-slot hot paths (TORTA
+//! micro matching, the engine's action execution and metering sweep) can
+//! fan out shard-by-shard over a scoped thread pool and merge back in
+//! fixed region order with bit-identical results for any worker count.
+//! The pipeline, its determinism contract and thread-count guidance are
+//! documented in `docs/PERF.md` ("Shard pipeline").
 
 pub mod gpu;
 pub mod server;
@@ -12,18 +21,45 @@ use crate::power::PriceTable;
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 
-/// A geographical region: co-located GPU servers + electricity price.
+/// One region of the deployment — the unit of parallelism in the shard
+/// pipeline: co-located GPU servers + electricity price + the shard's own
+/// per-slot aggregate cache. A shard's lane/backlog state is touched only
+/// by actions targeting it, which is what makes per-shard fan-out safe.
 #[derive(Clone, Debug)]
-pub struct Region {
+pub struct RegionShard {
     pub id: usize,
     pub name: String,
     pub servers: Vec<Server>,
     pub price_per_kwh: f64,
     /// Regional failure flag (Fig 4): offline regions accept no work.
     pub failed: bool,
+    /// Per-shard aggregate snapshot; `None` = dirty (see
+    /// [`Fleet::refresh_aggregates`]).
+    agg: Option<ShardAgg>,
 }
 
-impl Region {
+/// Pre-sharding name for the per-region type, kept as a compatibility
+/// alias — `RegionShard` is the same struct.
+pub type Region = RegionShard;
+
+/// One shard's cached per-slot aggregates (§Perf fleet caches, now held
+/// shard-local so invalidation is per-region): the raw free-capacity input
+/// to the OT column marginal nu_t and the mean active-server utilization,
+/// both computed in ONE pass over the shard's servers.
+#[derive(Clone, Copy, Debug)]
+struct ShardAgg {
+    /// Timestamp the snapshot was taken at; reads at a different `now`
+    /// bypass the cache and compute directly.
+    now: f64,
+    /// Un-normalized free capacity (normalization across shards happens at
+    /// read time in [`Fleet::resource_distribution`] — O(R)).
+    free_raw: f64,
+    /// Mean active-server utilization (see
+    /// [`RegionShard::mean_utilization`]).
+    mean_util: f64,
+}
+
+impl RegionShard {
     pub fn active_servers(&self) -> usize {
         self.servers.iter().filter(|s| s.is_active()).count()
     }
@@ -51,33 +87,68 @@ impl Region {
         }
         active.iter().map(|s| s.utilization(now)).sum::<f64>() / active.len() as f64
     }
+
+    /// Drop this shard's aggregate cache (any power/assign event on one of
+    /// its servers makes it stale). Mutations to *other* shards do not
+    /// require touching this one — that is the point of per-shard caches.
+    pub fn invalidate(&mut self) {
+        self.agg = None;
+    }
+
+    /// Recompute this shard's aggregate snapshot in a single pass over its
+    /// servers (each server's lane array scanned exactly once via
+    /// [`Server::lane_stats`]).
+    fn refresh_agg(&mut self, now: f64) {
+        let mut free = 0.0;
+        let mut util_sum = 0.0;
+        let mut active = 0usize;
+        for s in &self.servers {
+            let is_active = s.is_active();
+            let accepting = s.accepting(now);
+            if !is_active && !accepting {
+                continue; // cold / still-warming: no aggregate input
+            }
+            let (util, backlog) = s.lane_stats(now);
+            if is_active {
+                util_sum += util;
+                active += 1;
+            }
+            if accepting && !self.failed {
+                // Forward-looking free share of the next window:
+                // queued lane-seconds eat into lane-capacity.
+                let backlog_frac = (backlog / 45.0).min(1.0);
+                free += s.lanes() as f64 * (1.0 - backlog_frac).max(0.05);
+            }
+        }
+        self.agg = Some(ShardAgg {
+            now,
+            free_raw: if self.failed { 0.0 } else { free },
+            mean_util: if active == 0 { 0.0 } else { util_sum / active as f64 },
+        });
+    }
+
+    /// Cache-bypassing free-capacity computation (the legacy direct path;
+    /// arithmetically identical to [`refresh_agg`](Self::refresh_agg)'s
+    /// `free_raw` — same per-server terms accumulated in the same order).
+    fn free_capacity_direct(&self, now: f64) -> f64 {
+        if self.failed {
+            return 0.0;
+        }
+        self.servers
+            .iter()
+            .filter(|s| s.accepting(now))
+            .map(|s| {
+                let backlog_frac = (s.backlog_secs(now) / 45.0).min(1.0);
+                s.lanes() as f64 * (1.0 - backlog_frac).max(0.05)
+            })
+            .sum()
+    }
 }
 
-/// Per-slot cached fleet aggregates (§Perf fleet caches): everything the
-/// scheduler's read-mostly prelude consumes — the OT capacity marginal and
-/// per-region mean utilization — computed in ONE pass over the fleet by
-/// [`Fleet::refresh_aggregates`] instead of one sweep per consumer.
-/// Invalidated by power events (the state manager) and by plan execution
-/// (the engine), both of which mutate the quantities below.
-#[derive(Clone, Debug)]
-pub struct SlotAggregates {
-    /// Timestamp the snapshot was taken at; reads at a different `now`
-    /// bypass the cache and compute directly.
-    pub now: f64,
-    /// Normalized free-capacity distribution nu_t (see
-    /// [`Fleet::resource_distribution`]).
-    pub nu: Vec<f64>,
-    /// Mean active-server utilization per region (see
-    /// [`Region::mean_utilization`]).
-    pub mean_util: Vec<f64>,
-}
-
-/// The full deployment: one region per topology node.
+/// The full deployment: one shard per topology node.
 #[derive(Clone, Debug)]
 pub struct Fleet {
-    pub regions: Vec<Region>,
-    /// Cached per-slot aggregates; `None` when stale.
-    agg: Option<SlotAggregates>,
+    pub regions: Vec<RegionShard>,
 }
 
 impl Fleet {
@@ -102,13 +173,14 @@ impl Fleet {
         let wealth: Vec<f64> = crate::geo::wealth(n, seed);
         let wealth_sum: f64 = wealth.iter().sum();
 
-        let mut regions: Vec<Region> = (0..n)
-            .map(|id| Region {
+        let mut regions: Vec<RegionShard> = (0..n)
+            .map(|id| RegionShard {
                 id,
                 name: topo.node_names[id].clone(),
                 servers: Vec::new(),
                 price_per_kwh: prices.price(id),
                 failed: false,
+                agg: None,
             })
             .collect();
 
@@ -158,7 +230,7 @@ impl Fleet {
                 regions[r].servers[0].state = ServerState::Active;
             }
         }
-        Fleet { regions, agg: None }
+        Fleet { regions }
     }
 
     pub fn n_regions(&self) -> usize {
@@ -169,90 +241,66 @@ impl Fleet {
         self.regions.iter().map(|r| r.servers.len()).sum()
     }
 
-    /// Recompute the per-slot aggregate cache in a single pass over every
-    /// server (each server's lane array is scanned exactly once via
-    /// [`Server::lane_stats`]). Call at the top of a scheduling slot,
-    /// before any power/assign mutation; subsequent same-`now` reads of
+    /// Refresh every shard whose aggregate cache is dirty or stamped with a
+    /// different `now` — O(dirty shards), not O(fleet): a power event or
+    /// plan execution that touched only region `r` (which invalidates only
+    /// shard `r`, see [`invalidate_region`](Self::invalidate_region))
+    /// leaves every other shard's snapshot valid for same-`now` re-reads.
+    /// Call at the top of a scheduling slot, before any power/assign
+    /// mutation; subsequent same-`now` reads of
     /// [`resource_distribution`](Self::resource_distribution) and
     /// [`mean_utilizations`](Self::mean_utilizations) hit the cache.
     pub fn refresh_aggregates(&mut self, now: f64) {
-        let n = self.regions.len();
-        let mut nu_raw = Vec::with_capacity(n);
-        let mut mean_util = Vec::with_capacity(n);
-        for region in &self.regions {
-            let mut free = 0.0;
-            let mut util_sum = 0.0;
-            let mut active = 0usize;
-            for s in &region.servers {
-                let is_active = s.is_active();
-                let accepting = s.accepting(now);
-                if !is_active && !accepting {
-                    continue; // cold / still-warming: no aggregate input
-                }
-                let (util, backlog) = s.lane_stats(now);
-                if is_active {
-                    util_sum += util;
-                    active += 1;
-                }
-                if accepting && !region.failed {
-                    // Forward-looking free share of the next window:
-                    // queued lane-seconds eat into lane-capacity.
-                    let backlog_frac = (backlog / 45.0).min(1.0);
-                    free += s.lanes() as f64 * (1.0 - backlog_frac).max(0.05);
-                }
+        for shard in &mut self.regions {
+            let fresh = matches!(&shard.agg, Some(a) if a.now == now);
+            if !fresh {
+                shard.refresh_agg(now);
             }
-            nu_raw.push(if region.failed { 0.0 } else { free });
-            mean_util.push(if active == 0 { 0.0 } else { util_sum / active as f64 });
         }
-        let sum: f64 = nu_raw.iter().sum::<f64>().max(1e-9);
-        let nu = nu_raw.iter().map(|c| c / sum).collect();
-        self.agg = Some(SlotAggregates { now, nu, mean_util });
     }
 
-    /// Drop the aggregate cache (any power/assign event makes it stale).
+    /// Drop every shard's aggregate cache (coarse invalidation — kept for
+    /// callers that mutate servers across the whole fleet).
     pub fn invalidate_aggregates(&mut self) {
-        self.agg = None;
+        for shard in &mut self.regions {
+            shard.invalidate();
+        }
     }
 
-    /// Mean active-server utilization per region; served from the slot
-    /// cache when fresh, recomputed directly otherwise.
-    pub fn mean_utilizations(&self, now: f64) -> Vec<f64> {
-        if let Some(a) = &self.agg {
-            if a.now == now {
-                return a.mean_util.clone();
-            }
+    /// Drop one shard's aggregate cache: the granular form used by power
+    /// events (`state_mgr`) and the engine's action execution, so a slot
+    /// that touches k regions re-aggregates k shards instead of the fleet.
+    pub fn invalidate_region(&mut self, region: usize) {
+        if let Some(shard) = self.regions.get_mut(region) {
+            shard.invalidate();
         }
-        self.regions.iter().map(|r| r.mean_utilization(now)).collect()
+    }
+
+    /// Mean active-server utilization per region; each shard served from
+    /// its cache when fresh, recomputed directly otherwise.
+    pub fn mean_utilizations(&self, now: f64) -> Vec<f64> {
+        self.regions
+            .iter()
+            .map(|shard| match shard.agg {
+                Some(a) if a.now == now => a.mean_util,
+                _ => shard.mean_utilization(now),
+            })
+            .collect()
     }
 
     /// Normalized resource distribution nu_t over regions (the OT column
     /// marginal): *free* capacity — accepting lanes discounted by current
     /// busyness — so the macro flow self-equalizes utilization across
-    /// regions. Failed regions contribute 0. Served from the slot cache
-    /// when fresh.
+    /// regions. Failed regions contribute 0. Per-shard raw values come
+    /// from each shard's cache when fresh; normalization across shards is
+    /// O(R) at read time.
     pub fn resource_distribution(&self, now: f64) -> Vec<f64> {
-        if let Some(a) = &self.agg {
-            if a.now == now {
-                return a.nu.clone();
-            }
-        }
         let caps: Vec<f64> = self
             .regions
             .iter()
-            .map(|r| {
-                if r.failed {
-                    return 0.0;
-                }
-                r.servers
-                    .iter()
-                    .filter(|s| s.accepting(now))
-                    .map(|s| {
-                        // Forward-looking free share of the next window:
-                        // queued lane-seconds eat into lane-capacity.
-                        let backlog_frac = (s.backlog_secs(now) / 45.0).min(1.0);
-                        s.lanes() as f64 * (1.0 - backlog_frac).max(0.05)
-                    })
-                    .sum()
+            .map(|shard| match shard.agg {
+                Some(a) if a.now == now => a.free_raw,
+                _ => shard.free_capacity_direct(now),
             })
             .collect();
         let sum: f64 = caps.iter().sum::<f64>().max(1e-9);
@@ -383,6 +431,54 @@ mod tests {
         let after = f.resource_distribution(0.0);
         assert_eq!(after[0], 0.0);
         assert!(before[0] > 0.0);
+    }
+
+    #[test]
+    fn granular_invalidation_recomputes_only_dirty_shards() {
+        let (mut f, _) = fleet();
+        f.refresh_aggregates(0.0);
+        let before = f.resource_distribution(0.0);
+        // Mutate region 0 WITHOUT invalidating: a same-`now` refresh must
+        // not recompute clean shards, so the stale snapshot survives —
+        // this is the observable proof that refresh is O(dirty regions).
+        for s in &mut f.regions[0].servers {
+            s.power_off();
+        }
+        f.refresh_aggregates(0.0);
+        assert_eq!(
+            f.resource_distribution(0.0),
+            before,
+            "clean shard was recomputed on a same-now refresh"
+        );
+        // Granular invalidation of exactly the touched shard exposes the
+        // change; other shards' raw inputs are untouched.
+        f.invalidate_region(0);
+        f.refresh_aggregates(0.0);
+        let after = f.resource_distribution(0.0);
+        assert_eq!(after[0], 0.0);
+        assert!(before[0] > 0.0);
+        // Out-of-range invalidation is a no-op, not a panic.
+        let n = f.n_regions();
+        f.invalidate_region(n + 10);
+    }
+
+    #[test]
+    fn per_shard_invalidate_matches_fleetwide() {
+        let (mut f, _) = fleet();
+        f.refresh_aggregates(5.0);
+        let mut g = f.clone();
+        for s in &mut f.regions[2].servers {
+            s.power_off();
+        }
+        for s in &mut g.regions[2].servers {
+            s.power_off();
+        }
+        f.invalidate_region(2);
+        g.invalidate_aggregates();
+        f.refresh_aggregates(5.0);
+        g.refresh_aggregates(5.0);
+        assert_eq!(f.resource_distribution(5.0), g.resource_distribution(5.0));
+        assert_eq!(f.mean_utilizations(5.0), g.mean_utilizations(5.0));
     }
 
     #[test]

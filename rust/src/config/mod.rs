@@ -111,6 +111,12 @@ pub struct TortaConfig {
     /// the engine then accounts at assignment time, bit-identical to the
     /// pre-action-stream engine.
     pub migrate_backlog_secs: f64,
+    /// Worker count for the shard pipeline (parallel micro matching and
+    /// engine action execution/metering; see docs/PERF.md "Shard
+    /// pipeline"). `0` (default) = auto: the `TORTA_THREADS` env override,
+    /// else available parallelism. `1` = the exact sequential legacy
+    /// path. Results are bit-identical for every value.
+    pub threads: usize,
 }
 
 impl Default for TortaConfig {
@@ -132,6 +138,7 @@ impl Default for TortaConfig {
             cost_w_net: 0.15,
             prediction_accuracy: 1.0,
             migrate_backlog_secs: 0.0,
+            threads: 0,
         }
     }
 }
@@ -215,6 +222,7 @@ impl ExperimentConfig {
                     "torta.migrate_backlog_secs",
                     td.migrate_backlog_secs,
                 ),
+                threads: t.usize_or("torta.threads", td.threads),
             },
         })
     }
@@ -299,6 +307,15 @@ mod tests {
         assert!(!c.torta.use_pjrt);
         assert!((c.torta.prediction_accuracy - 0.5).abs() < 1e-12);
         assert!((c.torta.migrate_backlog_secs - 30.0).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn threads_parses_and_defaults_auto() {
+        assert_eq!(ExperimentConfig::default().torta.threads, 0);
+        let t = Table::parse("[torta]\nthreads = 4").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.torta.threads, 4);
         assert!(c.validate().is_ok());
     }
 

@@ -15,16 +15,30 @@
 //! buffering, migrations), meters energy + Fig 3 transition costs, and
 //! collects the paper's metrics. See `docs/API.md` for the lifecycle.
 //!
+//! Since the region-sharding refactor the per-slot hot paths — action
+//! execution and the energy/counter metering sweep — run as a
+//! fan-out/fan-in pipeline over the fleet's [`RegionShard`]s
+//! (`torta.threads` workers; `1` = the exact sequential legacy path).
+//! Shard workers only touch their own region's servers; every run-level
+//! side effect (metrics, backlog, pending reservations, results) is
+//! applied by the fan-in in original stream order, so `RunMetrics` and
+//! the fleet end-state are bit-identical for any worker count. The
+//! determinism contract is documented in `docs/PERF.md` ("Shard
+//! pipeline") and enforced by `rust/tests/shard_equivalence.rs`.
+//!
 //! Power accounting treats each simulated server as a *server cluster*
 //! (Fig 1's units are clusters): `POWER_SCALE` physical boards per cluster,
 //! which puts 6-hour totals in the paper's $K range.
 
-use crate::cluster::Fleet;
+use crate::cluster::{Fleet, RegionShard, Server, ServerState};
 use crate::config::ExperimentConfig;
 use crate::metrics::{RunMetrics, TaskRecord};
 use crate::power::{joules_to_dollars, server_energy_j, PriceTable};
-use crate::scheduler::{Action, ActionResult, Ctx, PendingView, Scheduler, SlotOutcome};
+use crate::scheduler::{
+    Action, ActionResult, Ctx, PendingView, PowerState, Scheduler, SlotDecision, SlotOutcome,
+};
 use crate::topology::Topology;
+use crate::util::pool;
 use crate::workload::{FailureEvent, Task, WorkloadSource};
 
 /// Physical GPUs represented by one simulated server (cluster).
@@ -87,6 +101,169 @@ struct PendingEntry {
     record: TaskRecord,
 }
 
+/// Outcome of one shard-executed `Assign`, produced on a worker thread and
+/// applied to the run-level accumulators (metrics, results, backlog,
+/// pending list) by the deterministic fan-in — in original stream order,
+/// so every float accumulation matches the sequential path bit-for-bit.
+enum AssignEffect {
+    /// Admitted (record immediate, or deferred inside the pending
+    /// reservation) or admission-dropped (record carries the drop).
+    Done {
+        result: ActionResult,
+        record: Option<TaskRecord>,
+        pending: Option<PendingEntry>,
+        /// Priced model-switch energy (0 when no switch stage ran).
+        switch_dollars: f64,
+    },
+    /// Failed/invalid target with a live deadline: back to the backlog.
+    Rebuffer { result: ActionResult, task: Task },
+}
+
+/// Stream entries that touch no shard lane state (or name no valid
+/// shard): held aside during a parallel segment and executed by the
+/// fan-in at their original stream positions.
+enum Residue {
+    Buffer(Task),
+    /// `Assign` whose region index is out of range.
+    InvalidAssign(Task),
+    Power { region: usize, server: usize, state: PowerState },
+}
+
+/// Fan-in work item: a shard effect or a residue entry, keyed by the
+/// original stream index.
+enum MergeItem {
+    Assign(AssignEffect),
+    Residue(Residue),
+}
+
+/// Shard-side execution of one `Assign` targeting a *valid* region index:
+/// admission control, the lane reservation, and the per-assignment
+/// metering inputs — touching only `shard`. Mirrors the sequential
+/// [`ExecutionEngine::exec_assign`] exactly; the run-level side effects
+/// are returned as an [`AssignEffect`] for the ordered fan-in.
+fn exec_assign_shard(
+    shard: &mut RegionShard,
+    topo: &Topology,
+    region: usize,
+    task: Task,
+    server_idx: usize,
+    now: f64,
+    migration_enabled: bool,
+) -> AssignEffect {
+    if shard.failed || server_idx >= shard.servers.len() {
+        // Failed/invalid target: the task is not silently lost — it
+        // returns to the backlog and is retried until its deadline passes.
+        if task.deadline_secs >= now {
+            let result = ActionResult::Rebuffered { task_id: task.id, origin: task.origin };
+            return AssignEffect::Rebuffer { result, task };
+        }
+        let wait = now - task.arrival_secs;
+        return AssignEffect::Done {
+            result: ActionResult::Dropped { task_id: task.id, wait_secs: wait },
+            record: Some(drop_record(&task, region, wait)),
+            pending: None,
+            switch_dollars: 0.0,
+        };
+    }
+    let server = &mut shard.servers[server_idx];
+    // Admission control: drop tasks whose projected completion cannot
+    // meet the deadline constraint d_i (§V-A) or whose wait exceeds the
+    // client timeout — the paper's "task-dropping mechanism".
+    let projected_start = server.earliest_start(now.max(task.arrival_secs));
+    let projected_finish = projected_start + server.effective_service_secs(&task);
+    if projected_start - task.arrival_secs > DROP_WAIT_SECS
+        || projected_finish > task.deadline_secs + task.service_secs
+    {
+        let wait = projected_start - task.arrival_secs;
+        return AssignEffect::Done {
+            result: ActionResult::Dropped { task_id: task.id, wait_secs: wait },
+            record: Some(drop_record(&task, region, wait)),
+            pending: None,
+            switch_dollars: 0.0,
+        };
+    }
+    let out = server.assign(&task, now);
+    let net = topo.network_secs(task.origin, region, task.payload_kb);
+    let switch_dollars = if out.switch_energy_j > 0.0 {
+        joules_to_dollars(out.switch_energy_j * SWITCH_POWER_SCALE, shard.price_per_kwh)
+    } else {
+        0.0
+    };
+    let record = TaskRecord {
+        task_id: task.id,
+        origin: task.origin,
+        served_region: region,
+        network_secs: net,
+        wait_secs: out.wait_secs,
+        compute_secs: out.service_secs,
+        met_deadline: out.finish_secs + net <= task.deadline_secs,
+        dropped: false,
+    };
+    let result = ActionResult::Assigned {
+        task_id: task.id,
+        region,
+        server: server_idx,
+        wait_secs: out.wait_secs,
+        network_secs: net,
+        compute_secs: out.service_secs,
+        start_secs: out.start_secs,
+    };
+    if migration_enabled && out.start_secs > now {
+        AssignEffect::Done {
+            result,
+            record: None,
+            pending: Some(PendingEntry {
+                task,
+                region,
+                server: server_idx,
+                lane: out.lane,
+                start: out.start_secs,
+                finish: out.finish_secs,
+                prev_lane_free: out.lane_prev_free,
+                record,
+            }),
+            switch_dollars,
+        }
+    } else {
+        AssignEffect::Done { result, record: Some(record), pending: None, switch_dollars }
+    }
+}
+
+/// Per-server slot metering: drains the busy-seconds attribution, prices
+/// the energy draw, and reports the LB-snapshot sample (`None` when the
+/// server must not enter the snapshot). Shared by the sequential and
+/// shard-parallel metering sweeps so both paths run the exact same
+/// arithmetic per server.
+fn meter_server(
+    s: &mut Server,
+    region_failed: bool,
+    price_per_kwh: f64,
+    now: f64,
+    slot_end: f64,
+    slot_secs: f64,
+) -> (f64, Option<f64>) {
+    let util_avg = s.drain_slot_utilization(slot_end, slot_secs);
+    let draw = match s.state {
+        ServerState::Cold => 0.0,
+        ServerState::Warming { .. } => {
+            // Warm-up burns near-peak power (Fig 3.c).
+            0.7 * s.gpu.active_watts() * slot_secs
+        }
+        ServerState::Active => {
+            server_energy_j(s.gpu.idle_watts(), s.gpu.active_watts(), util_avg, slot_secs)
+        }
+    };
+    // LB snapshot: only servers active for the full window — a mid-window
+    // activation has partial capacity and would read as spurious
+    // imbalance.
+    let snapshot = if s.is_active() && !region_failed && s.active_edge <= now {
+        Some(util_avg)
+    } else {
+        None
+    };
+    (joules_to_dollars(draw * POWER_SCALE, price_per_kwh), snapshot)
+}
+
 /// Engine owning the world state for one run.
 pub struct ExecutionEngine {
     pub ctx: Ctx,
@@ -99,6 +276,10 @@ pub struct ExecutionEngine {
     /// > 0). When off, the engine records at assignment time and exposes
     /// no migration candidates — bit-identical to the legacy engine.
     migration_enabled: bool,
+    /// Shard-pipeline worker count (`torta.threads` via
+    /// `util::pool::resolve_threads`; `1` = the exact sequential legacy
+    /// path — same results, one code path fewer).
+    threads: usize,
     last_outcome: Option<SlotOutcome>,
     /// Operational counters snapshot (for per-slot overhead deltas).
     prev_switches: u64,
@@ -114,6 +295,7 @@ impl ExecutionEngine {
         let prices = PriceTable::for_regions(topo.n, seed);
         let fleet = Fleet::build(&topo, &prices, seed);
         let migration_enabled = cfg.torta.migrate_backlog_secs > 0.0;
+        let threads = pool::resolve_threads(cfg.torta.threads);
         // Scenario-declared failure events resolve here against the same
         // salted seed the fleet/demand profile uses, so `regional-failure`
         // runs are reproducible from the config alone.
@@ -126,6 +308,7 @@ impl ExecutionEngine {
             buffered: Vec::new(),
             pending: Vec::new(),
             migration_enabled,
+            threads,
             last_outcome: None,
             prev_switches: 0,
             prev_activations: 0,
@@ -137,6 +320,11 @@ impl ExecutionEngine {
     pub fn with_failures(mut self, failures: Vec<FailureEvent>) -> ExecutionEngine {
         self.failures = failures;
         self
+    }
+
+    /// Resolved shard-pipeline worker count for this engine.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     fn apply_failures(&mut self, slot: usize) {
@@ -209,6 +397,11 @@ impl ExecutionEngine {
         let now = slot as f64 * self.ctx.slot_secs;
         let slot_end = now + self.ctx.slot_secs;
         self.apply_failures(slot);
+        // Warm-up promotion sweep. Deliberately NOT fanned out: tick_state
+        // is one enum branch per server, far below the scoped-pool
+        // spawn/join cost at any realistic fleet size — the pipeline's
+        // workers are spent where the work is (action execution and the
+        // metering sweep below).
         for region in &mut self.fleet.regions {
             for s in &mut region.servers {
                 s.tick_state(now);
@@ -279,72 +472,125 @@ impl ExecutionEngine {
         let decision =
             scheduler.decide(&self.ctx, &mut self.fleet, tasks, &pending_views, slot, now);
 
-        // Execute the stream in order. Assignment mutates lane state, so
-        // any per-slot fleet aggregates cached during scheduling are stale.
-        self.fleet.invalidate_aggregates();
-        let mut migration_secs = 0.0;
-        for action in decision.actions {
+        // Assignment and migration mutate lane state, so the shards the
+        // stream actually touches have stale per-slot aggregates. Power
+        // transitions are invalidated granularly at decision time by the
+        // state manager, but streams from non-TORTA policies may carry
+        // `Power` records without it, so those shards are dropped here
+        // too. Untouched shards keep their snapshots — invalidation stays
+        // O(touched regions), not O(fleet) (§Perf shard caches).
+        for action in &decision.actions {
             match action {
-                Action::Assign { task, region, server } => {
-                    self.exec_assign(task, region, server, now, metrics, &mut results);
+                Action::Assign { region, .. } | Action::Power { region, .. } => {
+                    self.fleet.invalidate_region(*region);
                 }
-                Action::Buffer { task } => {
-                    results.push(ActionResult::Buffered {
-                        task_id: task.id,
-                        origin: task.origin,
-                    });
-                    self.buffered.push(task);
+                Action::Migrate { from, to, .. } => {
+                    self.fleet.invalidate_region(from.0);
+                    self.fleet.invalidate_region(to.0);
                 }
-                Action::Migrate { task_id, from, to } => {
-                    migration_secs +=
-                        self.exec_migrate(task_id, from, to, now, metrics, &mut results);
-                }
-                Action::Power { region, server, state } => {
-                    // Applied by the policy at decision time (it plans
-                    // against the post-transition fleet); the stream entry
-                    // is the record the engine echoes back.
-                    results.push(ActionResult::Powered { region, server, state });
+                Action::Buffer { .. } => {}
+            }
+        }
+
+        // Execute the stream in order: sequentially at `threads = 1` (the
+        // exact legacy path), otherwise through the shard fan-out — which
+        // produces bit-identical metrics, backlog, pending list and fleet
+        // state (tests/shard_equivalence.rs).
+        let SlotDecision { actions, alloc } = decision;
+        let mut migration_secs = 0.0;
+        if self.threads <= 1 {
+            for action in actions {
+                match action {
+                    Action::Assign { task, region, server } => {
+                        self.exec_assign(task, region, server, now, metrics, &mut results);
+                    }
+                    Action::Buffer { task } => {
+                        results.push(ActionResult::Buffered {
+                            task_id: task.id,
+                            origin: task.origin,
+                        });
+                        self.buffered.push(task);
+                    }
+                    Action::Migrate { task_id, from, to } => {
+                        migration_secs +=
+                            self.exec_migrate(task_id, from, to, now, metrics, &mut results);
+                    }
+                    Action::Power { region, server, state } => {
+                        // Applied by the policy at decision time (it plans
+                        // against the post-transition fleet); the stream
+                        // entry is the record the engine echoes back.
+                        results.push(ActionResult::Powered { region, server, state });
+                    }
                 }
             }
+        } else {
+            migration_secs = self.exec_actions_parallel(actions, now, metrics, &mut results);
         }
 
         // Slot-level metrics + energy + operational counters in ONE pass
         // over the fleet, using time-averaged (busy-lane-seconds)
-        // utilization for the slot. Folding the counter aggregation into
-        // this mandatory sweep removes the extra per-slot full-fleet
-        // `counters()` scan the engine used to make (§Perf incremental
-        // counters).
-        let switch_delta = metrics.record_alloc(&decision.alloc);
+        // utilization for the slot; shard-parallel when the pipeline has
+        // workers. Folding the counter aggregation into this mandatory
+        // sweep removes the extra per-slot full-fleet `counters()` scan
+        // (§Perf incremental counters). The parallel fan-in folds the
+        // per-SERVER dollar values in region/server order — the same
+        // left-to-right float accumulation as the sequential sweep, so
+        // the slot total is bit-identical.
+        let switch_delta = metrics.record_alloc(&alloc);
         let mut snapshot = Vec::new();
         let mut dollars = 0.0;
         let mut sw: u64 = 0;
         let mut act: u64 = 0;
         let slot_secs = self.ctx.slot_secs;
-        for region in &mut self.fleet.regions {
-            for s in &mut region.servers {
-                sw += s.model_switches;
-                act += s.activations;
-                let util_avg = s.drain_slot_utilization(slot_end, slot_secs);
-                let draw = match s.state {
-                    crate::cluster::ServerState::Cold => 0.0,
-                    crate::cluster::ServerState::Warming { .. } => {
-                        // Warm-up burns near-peak power (Fig 3.c).
-                        0.7 * s.gpu.active_watts() * slot_secs
-                    }
-                    crate::cluster::ServerState::Active => server_energy_j(
-                        s.gpu.idle_watts(),
-                        s.gpu.active_watts(),
-                        util_avg,
-                        slot_secs,
-                    ),
+        if self.threads > 1 {
+            struct MeterOut {
+                sw: u64,
+                act: u64,
+                dollars: Vec<f64>,
+                snapshot: Vec<f64>,
+            }
+            let shards: Vec<&mut RegionShard> = self.fleet.regions.iter_mut().collect();
+            let outs = pool::parallel_map(shards, self.threads, |shard| {
+                let failed = shard.failed;
+                let price = shard.price_per_kwh;
+                let mut out = MeterOut {
+                    sw: 0,
+                    act: 0,
+                    dollars: Vec::with_capacity(shard.servers.len()),
+                    snapshot: Vec::new(),
                 };
-                // LB snapshot: only servers active for the full window —
-                // a mid-window activation has partial capacity and would
-                // read as spurious imbalance.
-                if s.is_active() && !region.failed && s.active_edge <= now {
-                    snapshot.push(util_avg);
+                for s in &mut shard.servers {
+                    out.sw += s.model_switches;
+                    out.act += s.activations;
+                    let (d, snap) = meter_server(s, failed, price, now, slot_end, slot_secs);
+                    if let Some(u) = snap {
+                        out.snapshot.push(u);
+                    }
+                    out.dollars.push(d);
                 }
-                dollars += joules_to_dollars(draw * POWER_SCALE, region.price_per_kwh);
+                out
+            });
+            for o in outs {
+                sw += o.sw;
+                act += o.act;
+                for d in o.dollars {
+                    dollars += d;
+                }
+                snapshot.extend(o.snapshot);
+            }
+        } else {
+            for region in &mut self.fleet.regions {
+                let failed = region.failed;
+                let price = region.price_per_kwh;
+                for s in &mut region.servers {
+                    sw += s.model_switches;
+                    act += s.activations;
+                    let (d, snap) = meter_server(s, failed, price, now, slot_end, slot_secs);
+                    if let Some(u) = snap {
+                        snapshot.push(u);
+                    }
+                    dollars += d;
+                }
             }
         }
         metrics.record_slot_balance(&snapshot);
@@ -376,7 +622,7 @@ impl ExecutionEngine {
         self.last_outcome = Some(SlotOutcome {
             slot,
             results,
-            alloc: decision.alloc,
+            alloc,
             switching_cost_frob: switch_delta,
             migration_secs,
             assigned,
@@ -386,10 +632,185 @@ impl ExecutionEngine {
         });
     }
 
+    /// Execute the decision stream through the shard fan-out. Contiguous
+    /// runs of shard-local actions (`Assign` to a valid region, `Buffer`,
+    /// `Power`, out-of-range `Assign`) form a *segment*: the segment's
+    /// assignments fan out per target region (each worker mutates only its
+    /// own shard, preserving the stream's relative order within the
+    /// shard), and the fan-in applies every effect sorted by original
+    /// stream index — bit-identical to the sequential path. A `Migrate`
+    /// crosses shard boundaries, so it is a barrier: the open segment
+    /// flushes, then the migration executes sequentially with exclusive
+    /// fleet access. In-tree schedulers emit migrations ahead of their
+    /// Assign stream, so the common case is one short sequential prefix
+    /// followed by one large parallel segment. Returns the metered
+    /// migration seconds.
+    fn exec_actions_parallel(
+        &mut self,
+        actions: Vec<Action>,
+        now: f64,
+        metrics: &mut RunMetrics,
+        results: &mut Vec<ActionResult>,
+    ) -> f64 {
+        let n_regions = self.fleet.regions.len();
+        let mut per_region: Vec<Vec<(usize, Task, usize)>> =
+            (0..n_regions).map(|_| Vec::new()).collect();
+        let mut residue: Vec<(usize, Residue)> = Vec::new();
+        let mut seg_len = 0usize;
+        let mut migration_secs = 0.0;
+        for (idx, action) in actions.into_iter().enumerate() {
+            match action {
+                Action::Migrate { task_id, from, to } => {
+                    self.flush_segment(
+                        &mut per_region,
+                        &mut residue,
+                        &mut seg_len,
+                        now,
+                        metrics,
+                        results,
+                    );
+                    let secs = self.exec_migrate(task_id, from, to, now, metrics, results);
+                    migration_secs += secs;
+                }
+                Action::Assign { task, region, server } => {
+                    if region < n_regions {
+                        per_region[region].push((idx, task, server));
+                    } else {
+                        residue.push((idx, Residue::InvalidAssign(task)));
+                    }
+                    seg_len += 1;
+                }
+                Action::Buffer { task } => {
+                    residue.push((idx, Residue::Buffer(task)));
+                    seg_len += 1;
+                }
+                Action::Power { region, server, state } => {
+                    residue.push((idx, Residue::Power { region, server, state }));
+                    seg_len += 1;
+                }
+            }
+        }
+        self.flush_segment(&mut per_region, &mut residue, &mut seg_len, now, metrics, results);
+        migration_secs
+    }
+
+    /// Fan out the open segment's assignments across shard workers, then
+    /// fan in: apply every [`AssignEffect`] and [`Residue`] entry in
+    /// original stream order (see [`exec_actions_parallel`]).
+    fn flush_segment(
+        &mut self,
+        per_region: &mut [Vec<(usize, Task, usize)>],
+        residue: &mut Vec<(usize, Residue)>,
+        seg_len: &mut usize,
+        now: f64,
+        metrics: &mut RunMetrics,
+        results: &mut Vec<ActionResult>,
+    ) {
+        if *seg_len == 0 {
+            return;
+        }
+        *seg_len = 0;
+        let migration_enabled = self.migration_enabled;
+        let threads = self.threads;
+        let topo = &self.ctx.topo;
+        let jobs: Vec<(usize, &mut RegionShard, Vec<(usize, Task, usize)>)> = self
+            .fleet
+            .regions
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(r, shard)| {
+                let items = std::mem::take(&mut per_region[r]);
+                if items.is_empty() {
+                    None
+                } else {
+                    Some((r, shard, items))
+                }
+            })
+            .collect();
+        let effects = pool::parallel_map(jobs, threads, |(region, shard, items)| {
+            let mut out = Vec::with_capacity(items.len());
+            for (idx, task, server_idx) in items {
+                out.push((
+                    idx,
+                    exec_assign_shard(
+                        &mut *shard,
+                        topo,
+                        region,
+                        task,
+                        server_idx,
+                        now,
+                        migration_enabled,
+                    ),
+                ));
+            }
+            out
+        });
+        let mut merged: Vec<(usize, MergeItem)> = Vec::new();
+        for shard_out in effects {
+            for (idx, eff) in shard_out {
+                merged.push((idx, MergeItem::Assign(eff)));
+            }
+        }
+        for (idx, res) in residue.drain(..) {
+            merged.push((idx, MergeItem::Residue(res)));
+        }
+        merged.sort_unstable_by_key(|&(idx, _)| idx);
+        for (_, item) in merged {
+            match item {
+                MergeItem::Assign(AssignEffect::Done {
+                    result,
+                    record,
+                    pending,
+                    switch_dollars,
+                }) => {
+                    if switch_dollars > 0.0 {
+                        metrics.add_power_dollars(switch_dollars);
+                    }
+                    if let Some(rec) = record {
+                        metrics.record_task(&rec);
+                    }
+                    results.push(result);
+                    if let Some(entry) = pending {
+                        self.pending.push(entry);
+                    }
+                }
+                MergeItem::Assign(AssignEffect::Rebuffer { result, task }) => {
+                    results.push(result);
+                    self.buffered.push(task);
+                }
+                MergeItem::Residue(Residue::Buffer(task)) => {
+                    results.push(ActionResult::Buffered {
+                        task_id: task.id,
+                        origin: task.origin,
+                    });
+                    self.buffered.push(task);
+                }
+                MergeItem::Residue(Residue::InvalidAssign(task)) => {
+                    if task.deadline_secs >= now {
+                        results.push(ActionResult::Rebuffered {
+                            task_id: task.id,
+                            origin: task.origin,
+                        });
+                        self.buffered.push(task);
+                    } else {
+                        let wait = now - task.arrival_secs;
+                        metrics.record_task(&drop_record(&task, task.origin, wait));
+                        let id = task.id;
+                        results.push(ActionResult::Dropped { task_id: id, wait_secs: wait });
+                    }
+                }
+                MergeItem::Residue(Residue::Power { region, server, state }) => {
+                    results.push(ActionResult::Powered { region, server, state });
+                }
+            }
+        }
+    }
+
     /// Execute one `Assign` action: admission control, the lane
     /// reservation, and metering. Accepted assignments whose start lies
     /// beyond `now` become migratable pending entries when migration is
-    /// enabled.
+    /// enabled. (Sequential path; the shard pipeline runs the same logic
+    /// through [`exec_assign_shard`].)
     fn exec_assign(
         &mut self,
         task: Task,

@@ -75,6 +75,11 @@ fn base_cli(name: &'static str) -> Cli {
         .opt("scenario", "", "registry scenario name or trace:<path> (docs/SCENARIOS.md)")
         .opt("artifacts", "artifacts", "AOT artifact directory")
         .opt("policy", "", "NativePolicy JSON artifact for the macro layer (docs/RL.md)")
+        .opt(
+            "threads",
+            "0",
+            "shard-pipeline workers (0 = auto/TORTA_THREADS, 1 = sequential; docs/PERF.md)",
+        )
         .flag("no-pjrt", "force the native (non-PJRT) path")
 }
 
@@ -92,6 +97,12 @@ fn load_cfg(cli: &Cli) -> anyhow::Result<ExperimentConfig> {
     cfg.slots = cli.usize("slots")?;
     cfg.seed = cli.u64("seed")?;
     cfg.torta.artifacts_dir = cli.str("artifacts");
+    // Like --policy: an explicit flag wins, a config-file value survives
+    // the CLI default (0 = auto).
+    let threads = cli.usize("threads")?;
+    if threads > 0 {
+        cfg.torta.threads = threads;
+    }
     let policy = cli.str("policy");
     if !policy.is_empty() {
         cfg.torta.policy_path = policy;

@@ -12,7 +12,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::cluster::{Fleet, GpuType, Region, Server, ALL_GPUS, N_GPU_TYPES};
+use crate::cluster::{Fleet, GpuType, RegionShard, Server, ALL_GPUS, N_GPU_TYPES};
 use crate::workload::{Task, EMBED_DIM};
 
 /// Locality decay rate lambda (Eq. 10) per second.
@@ -288,6 +288,30 @@ impl MicroAllocator {
         (assignments, overflow)
     }
 
+    /// Shard fan-out over [`match_region`](Self::match_region): match
+    /// several regions' batches concurrently on `threads` workers and
+    /// return per-region results in the caller's job order (ascending
+    /// region, by convention). Once the macro layer has routed tasks to
+    /// regions, matching is independent per region — each job reads only
+    /// its own shard's servers — so the fan-out is data-race-free by
+    /// construction, and the order-preserving fan-in makes the output
+    /// bit-identical to a sequential [`match_region`] loop over the same
+    /// jobs for ANY worker count (`threads <= 1` runs inline on the
+    /// caller's thread — the exact legacy path). See docs/PERF.md,
+    /// "Shard pipeline".
+    pub fn match_regions(
+        &self,
+        fleet: &Fleet,
+        jobs: Vec<(usize, Vec<Task>)>,
+        now: f64,
+        threads: usize,
+    ) -> Vec<(usize, Vec<(Task, usize, usize)>, Vec<Task>)> {
+        crate::util::pool::parallel_map(jobs, threads, |(region, batch)| {
+            let (done, overflow) = self.match_region(fleet, region, batch, now);
+            (region, done, overflow)
+        })
+    }
+
     /// Reference full-rescan matcher: the pre-optimization algorithm,
     /// kept as the equivalence oracle for [`match_region`] and as the
     /// bench baseline (`benches/perf_hotpath.rs` reports the speedup).
@@ -362,7 +386,7 @@ struct Cand {
     centroid_norm: f64,
 }
 
-fn snapshot_candidates(reg: &Region, now: f64) -> Vec<Cand> {
+fn snapshot_candidates(reg: &RegionShard, now: f64) -> Vec<Cand> {
     reg.servers
         .iter()
         .enumerate()
@@ -669,6 +693,51 @@ mod tests {
                 }
                 for (x, y) in o1.iter().zip(o2.iter()) {
                     assert_eq!(x.id, y.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn match_regions_fanout_equals_sequential_loop() {
+        // The shard fan-out must reproduce a sequential match_region loop
+        // exactly — same assignments, same order, same overflow — for any
+        // worker count (determinism contract, docs/PERF.md).
+        let m = micro();
+        let f = fleet();
+        let mut wl = DiurnalWorkload::new(WorkloadConfig::default(), 12, 9);
+        let ts = wl.slot_tasks(0, 45.0);
+        let jobs = |r_max: usize| -> Vec<(usize, Vec<Task>)> {
+            (0..r_max)
+                .map(|region| {
+                    let batch: Vec<Task> =
+                        ts.iter().filter(|t| t.origin == region).cloned().collect();
+                    (region, batch)
+                })
+                .filter(|(_, b)| !b.is_empty())
+                .collect()
+        };
+        let seq: Vec<(usize, Vec<(Task, usize, usize)>, Vec<Task>)> = jobs(12)
+            .into_iter()
+            .map(|(region, batch)| {
+                let (done, overflow) = m.match_region(&f, region, batch, 0.0);
+                (region, done, overflow)
+            })
+            .collect();
+        for threads in [1usize, 2, 4, 8] {
+            let par = m.match_regions(&f, jobs(12), 0.0, threads);
+            assert_eq!(par.len(), seq.len(), "threads={threads}");
+            for ((ra, da, oa), (rb, db, ob)) in par.iter().zip(seq.iter()) {
+                assert_eq!(ra, rb, "threads={threads}: region order diverged");
+                assert_eq!(da.len(), db.len());
+                assert_eq!(oa.len(), ob.len());
+                for ((ta, rga, sa), (tb, rgb, sb)) in da.iter().zip(db.iter()) {
+                    assert_eq!(ta.id, tb.id, "threads={threads}");
+                    assert_eq!(rga, rgb);
+                    assert_eq!(sa, sb);
+                }
+                for (x, y) in oa.iter().zip(ob.iter()) {
+                    assert_eq!(x.id, y.id, "threads={threads}");
                 }
             }
         }

@@ -73,6 +73,11 @@ pub struct TortaScheduler {
     /// EWMA of the realized per-slot switching cost fed back by the engine
     /// (diagnostic / RL reward signal).
     pub realized_switch_ewma: f64,
+    /// Shard-pipeline worker count for the per-region matching fan-out
+    /// (`torta.threads`, resolved through `util::pool::resolve_threads`;
+    /// `1` = the exact sequential legacy path). Bit-identical results for
+    /// any value — see docs/PERF.md, "Shard pipeline".
+    threads: usize,
     name: &'static str,
 }
 
@@ -147,6 +152,7 @@ impl TortaScheduler {
             queue_estimate: vec![0.0; r],
             migrate_backlog_secs: cfg.migrate_backlog_secs,
             realized_switch_ewma: 0.0,
+            threads: crate::util::pool::resolve_threads(cfg.threads),
             name: match mode {
                 TortaMode::Full => "torta",
                 TortaMode::Native => "torta-nat",
@@ -470,17 +476,24 @@ impl Scheduler for TortaScheduler {
         // the source lanes first.
         self.emit_migrations(fleet, pending, now, &mut actions);
 
-        // Greedy matching per region; overflow re-routes once to the
-        // region's best OT alternative, then buffers.
+        // Greedy matching per region — the shard fan-out (docs/PERF.md,
+        // "Shard pipeline"): with the OT plan fixed, matching is
+        // independent per region, so the per-region jobs run concurrently
+        // and merge in ascending region order, bit-identical to the
+        // sequential loop for any worker count. Overflow re-routes once to
+        // the region's best OT alternative (sequential: it reads
+        // cross-region capacity), then buffers.
         let mut assignments = Vec::new();
         let mut buffered = Vec::new();
         let mut reroute: Vec<(usize, Vec<Task>)> = Vec::new();
-        for region in 0..r {
-            let batch = std::mem::take(&mut regional[region]);
-            if batch.is_empty() {
-                continue;
-            }
-            let (done, overflow) = self.micro.match_region(fleet, region, batch, now);
+        let jobs: Vec<(usize, Vec<Task>)> = regional
+            .iter_mut()
+            .enumerate()
+            .filter(|(_, batch)| !batch.is_empty())
+            .map(|(region, batch)| (region, std::mem::take(batch)))
+            .collect();
+        let matched = self.micro.match_regions(fleet, jobs, now, self.threads);
+        for (region, done, overflow) in matched {
             assignments.extend(done);
             if !overflow.is_empty() {
                 reroute.push((region, overflow));

@@ -69,10 +69,12 @@ pub fn apply_logged(
     log: &mut Vec<Action>,
 ) -> Transitions {
     // Power events change the capacity/utilization aggregates the macro
-    // layer reads; drop the per-slot cache before mutating (§Perf fleet
-    // caches — the scheduler's read-mostly prelude has already consumed
-    // it by the time activation runs).
-    fleet.invalidate_aggregates();
+    // layer reads; drop the touched shard's per-slot cache before
+    // mutating (§Perf fleet caches — the scheduler's read-mostly prelude
+    // has already consumed it by the time activation runs). Only this
+    // region's servers change state here, so the other shards' snapshots
+    // stay valid and a same-slot refresh is O(dirty regions).
+    fleet.invalidate_region(region);
     let reg = &mut fleet.regions[region];
     if reg.failed {
         return Transitions::default();

@@ -12,6 +12,13 @@
 //!
 //! Built on std::thread + mpsc (the offline build has no tokio); the
 //! channel topology is identical to an async runtime's task graph.
+//!
+//! The engine underneath runs the region-sharded slot pipeline
+//! (`torta.threads` workers — docs/PERF.md, "Shard pipeline"), so the
+//! leader's per-slot step itself fans out across shards; its determinism
+//! contract (bit-identical results for any worker count) is what keeps
+//! the serve-vs-sim `RunMetrics` parity test below exact regardless of
+//! the deployment's thread configuration.
 
 use std::sync::mpsc;
 use std::thread;

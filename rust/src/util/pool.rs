@@ -17,6 +17,21 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Resolve the shard-pipeline worker count from a config value
+/// (`torta.threads` / `--threads`): an explicit positive value pins the
+/// count (tests and the equivalence oracles rely on this to force the
+/// sequential path with `1`); `0` defers to [`default_workers`] — the
+/// `TORTA_THREADS` env override, else available parallelism. Results are
+/// bit-identical for every count by construction (docs/PERF.md, "Shard
+/// pipeline"); this only chooses how much hardware works on them.
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured > 0 {
+        configured
+    } else {
+        default_workers()
+    }
+}
+
 /// Apply `f` to every item on a scoped thread pool, preserving input order.
 pub fn parallel_map<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Vec<U>
 where

@@ -304,47 +304,65 @@ impl Scheduler for MigrationScript {
 
 #[test]
 fn migrate_action_executes_and_meters_cost() {
-    let mut cfg = ExperimentConfig::default();
-    cfg.slots = 2;
-    cfg.workload.base_rate = 10.0;
-    cfg.torta.migrate_backlog_secs = 1.0; // enables pending tracking
-    let mut engine = Simulation::new(cfg.clone()).unwrap();
-    let mut wl = DiurnalWorkload::new(
-        cfg.workload.clone(),
-        engine.ctx.topo.n,
-        cfg.seed ^ topo_salt(&cfg.topology),
-    );
-    let mut sched = MigrationScript { r: engine.ctx.topo.n, migrated: Vec::new() };
-    let mut metrics = RunMetrics::new("migration-script", &cfg.topology);
+    // Runs once per shard-pipeline width: the scripted cross-shard
+    // migration (region 0 -> region 1) must execute and meter identically
+    // through the sequential path (threads = 1) and the parallel fan-out.
+    let mut per_width: Vec<(f64, u64, u64, f64)> = Vec::new();
+    for threads in [1usize, 4] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.slots = 2;
+        cfg.workload.base_rate = 10.0;
+        cfg.torta.migrate_backlog_secs = 1.0; // enables pending tracking
+        cfg.torta.threads = threads;
+        let mut engine = Simulation::new(cfg.clone()).unwrap();
+        let mut wl = DiurnalWorkload::new(
+            cfg.workload.clone(),
+            engine.ctx.topo.n,
+            cfg.seed ^ topo_salt(&cfg.topology),
+        );
+        let mut sched = MigrationScript { r: engine.ctx.topo.n, migrated: Vec::new() };
+        let mut metrics = RunMetrics::new("migration-script", &cfg.topology);
 
-    engine.step(0, &mut wl, &mut sched, &mut metrics);
-    assert!(
-        engine.pending_len() >= 1,
-        "piling one server must leave queued-but-unstarted reservations"
-    );
+        engine.step(0, &mut wl, &mut sched, &mut metrics);
+        assert!(
+            engine.pending_len() >= 1,
+            "piling one server must leave queued-but-unstarted reservations"
+        );
 
-    engine.step(1, &mut wl, &mut sched, &mut metrics);
-    let out = engine.last_outcome().unwrap().clone();
-    let migrated: Vec<&ActionResult> = out
-        .results
-        .iter()
-        .filter(|r| matches!(r, ActionResult::Migrated { .. }))
-        .collect();
-    assert_eq!(migrated.len(), 1, "the scripted migration must execute");
-    assert_eq!(out.migrated, 1);
-    assert!((out.migration_secs - MIGRATION_SECS).abs() < 1e-12);
-    if let ActionResult::Migrated { task_id, from, to, .. } = migrated[0] {
-        assert_eq!(*task_id, sched.migrated[0]);
-        assert_eq!(from.0, 0);
-        assert_eq!(to.0, 1);
+        engine.step(1, &mut wl, &mut sched, &mut metrics);
+        let out = engine.last_outcome().unwrap().clone();
+        let migrated: Vec<&ActionResult> = out
+            .results
+            .iter()
+            .filter(|r| matches!(r, ActionResult::Migrated { .. }))
+            .collect();
+        assert_eq!(migrated.len(), 1, "the scripted migration must execute");
+        assert_eq!(out.migrated, 1);
+        assert!((out.migration_secs - MIGRATION_SECS).abs() < 1e-12);
+        if let ActionResult::Migrated { task_id, from, to, .. } = migrated[0] {
+            assert_eq!(*task_id, sched.migrated[0]);
+            assert_eq!(from.0, 0);
+            assert_eq!(to.0, 1);
+        }
+
+        engine.finish(&mut metrics);
+        assert_eq!(metrics.migrations, 1);
+        assert!((metrics.migration_secs - MIGRATION_SECS).abs() < 1e-12);
+        assert!(metrics.operational_overhead > 0.0);
+        // The migrated task is recorded exactly once, served in region 1.
+        assert!(metrics.tasks_total > 0);
+        per_width.push((
+            metrics.mean_response(),
+            metrics.tasks_total,
+            metrics.migrations,
+            metrics.power_cost_dollars,
+        ));
     }
-
-    engine.finish(&mut metrics);
-    assert_eq!(metrics.migrations, 1);
-    assert!((metrics.migration_secs - MIGRATION_SECS).abs() < 1e-12);
-    assert!(metrics.operational_overhead > 0.0);
-    // The migrated task is recorded exactly once, served in region 1.
-    assert!(metrics.tasks_total > 0);
+    let (a, b) = (&per_width[0], &per_width[1]);
+    assert_eq!(a.0.to_bits(), b.0.to_bits(), "response mean diverged across widths");
+    assert_eq!(a.1, b.1, "tasks_total diverged across widths");
+    assert_eq!(a.2, b.2, "migration count diverged across widths");
+    assert_eq!(a.3.to_bits(), b.3.to_bits(), "power dollars diverged across widths");
 }
 
 #[test]
@@ -352,34 +370,68 @@ fn torta_migrates_under_failure_pressure() {
     // Acceptance scenario: high load + the three wealthiest regions
     // failing mid-run. With `torta.migrate_backlog_secs` set, TORTA's
     // micro layer must rescue/rebalance at least one queued reservation,
-    // and RunMetrics must report the metered cost.
-    let mut cfg = ExperimentConfig::default();
-    cfg.scheduler = "torta-native".into();
-    cfg.slots = 14;
-    cfg.workload.base_rate = 240.0;
-    cfg.torta.use_pjrt = false;
-    cfg.torta.migrate_backlog_secs = 1.0;
-    let mut engine = Simulation::new(cfg.clone()).unwrap();
-    let mut by_size: Vec<usize> = (0..engine.fleet.n_regions()).collect();
-    by_size.sort_by_key(|&r| std::cmp::Reverse(engine.fleet.regions[r].servers.len()));
-    let failures: Vec<FailureEvent> = by_size[..3]
-        .iter()
-        .map(|&region| FailureEvent { region, start_slot: 2, duration_slots: 6 })
-        .collect();
-    engine = engine.with_failures(failures);
-    let mut wl = DiurnalWorkload::new(
-        cfg.workload.clone(),
-        engine.ctx.topo.n,
-        cfg.seed ^ topo_salt(&cfg.topology),
-    );
-    let mut sched = torta::scheduler::build("torta-native", &engine.ctx, &cfg).unwrap();
-    let m = engine.run(&mut wl, sched.as_mut());
+    // and RunMetrics must report the metered cost. Run at shard-pipeline
+    // widths 1 and 4: the failed-region rescue routes source -> dest
+    // across shard boundaries, and its metering must be identical to the
+    // sequential path bit-for-bit.
+    let run = |threads: usize| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = "torta-native".into();
+        cfg.slots = 14;
+        cfg.workload.base_rate = 240.0;
+        cfg.torta.use_pjrt = false;
+        cfg.torta.migrate_backlog_secs = 1.0;
+        cfg.torta.threads = threads;
+        let mut engine = Simulation::new(cfg.clone()).unwrap();
+        let mut by_size: Vec<usize> = (0..engine.fleet.n_regions()).collect();
+        by_size.sort_by_key(|&r| std::cmp::Reverse(engine.fleet.regions[r].servers.len()));
+        let failures: Vec<FailureEvent> = by_size[..3]
+            .iter()
+            .map(|&region| FailureEvent { region, start_slot: 2, duration_slots: 6 })
+            .collect();
+        engine = engine.with_failures(failures);
+        let mut wl = DiurnalWorkload::new(
+            cfg.workload.clone(),
+            engine.ctx.topo.n,
+            cfg.seed ^ topo_salt(&cfg.topology),
+        );
+        let mut sched = torta::scheduler::build("torta-native", &engine.ctx, &cfg).unwrap();
+        let m = engine.run(&mut wl, sched.as_mut());
+        let end = cfg.slots as f64 * cfg.slot_secs;
+        let ffp = fleet_fp(&engine.fleet, end);
+        (m, ffp)
+    };
+    let (m, f1) = run(1);
     assert!(
         m.migrations >= 1,
         "failure scenario executed no migrations (pending never formed?)"
     );
     assert!(m.migration_secs >= MIGRATION_SECS);
     assert!(m.operational_overhead > 0.0);
+    let (m4, f4) = run(4);
+    assert_eq!(m.migrations, m4.migrations, "migration count diverged across widths");
+    assert_eq!(
+        m.migration_secs.to_bits(),
+        m4.migration_secs.to_bits(),
+        "migration metering diverged across widths"
+    );
+    assert_eq!(m.tasks_total, m4.tasks_total);
+    assert_eq!(
+        m.mean_response().to_bits(),
+        m4.mean_response().to_bits(),
+        "response mean diverged across widths"
+    );
+    assert_eq!(
+        m.power_cost_dollars.to_bits(),
+        m4.power_cost_dollars.to_bits(),
+        "power dollars diverged across widths"
+    );
+    assert_eq!(
+        m.operational_overhead.to_bits(),
+        m4.operational_overhead.to_bits(),
+        "operational overhead diverged across widths"
+    );
+    assert_eq!(f1, f4, "fleet end state diverged across widths");
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,287 @@
+//! Shard-pipeline determinism oracle (docs/PERF.md, "Shard pipeline"):
+//! the region-sharded fan-out/fan-in in `ExecutionEngine::step` and
+//! TORTA's parallel micro matching must produce BIT-identical
+//! `RunMetrics` and fleet end-state for every worker count — `--threads
+//! 1` (the exact sequential legacy path) vs 2 vs 4 — for all four suite
+//! schedulers on registry scenarios, including cross-shard migration
+//! routing and a scripted stream that interleaves `Migrate` barriers
+//! between `Assign` segments.
+//!
+//! Style follows `perf_equivalence.rs` / `action_equivalence.rs`: the
+//! sequential path is the oracle, float comparisons are on `to_bits`.
+
+use torta::cluster::{Fleet, ServerState};
+use torta::config::ExperimentConfig;
+use torta::metrics::RunMetrics;
+use torta::scheduler::{empirical_alloc, Action, Ctx, PendingView, Scheduler, SlotDecision};
+use torta::sim::{topo_salt, Simulation};
+use torta::workload::Task;
+
+const SCHEDULERS: [&str; 4] = ["torta", "skylb", "sdib", "rr"];
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// Fleet end-state fingerprint: every server's counters, lane backlog and
+/// utilization bits, power state and model residency, in region/server
+/// order.
+fn fleet_fp(fleet: &Fleet, t: f64) -> Vec<(u64, u64, u64, u64, u64, u64, u32)> {
+    let mut fp = Vec::new();
+    for shard in &fleet.regions {
+        for s in &shard.servers {
+            let state = match s.state {
+                ServerState::Cold => 0u64,
+                ServerState::Warming { .. } => 1,
+                ServerState::Active => 2,
+            };
+            fp.push((
+                s.tasks_served,
+                s.model_switches,
+                s.activations,
+                s.backlog_secs(t).to_bits(),
+                s.utilization(t).to_bits(),
+                state,
+                s.loaded_model.unwrap_or(u32::MAX),
+            ));
+        }
+    }
+    fp
+}
+
+/// Bit-level fingerprint of every `RunMetrics` field the determinism
+/// contract covers (floats compared on `to_bits`, i.e. exactly).
+fn metrics_fp(m: &RunMetrics) -> Vec<(&'static str, u64)> {
+    vec![
+        ("tasks_total", m.tasks_total),
+        ("tasks_dropped", m.tasks_dropped),
+        ("deadline_misses", m.deadline_misses),
+        ("model_switches", m.model_switches),
+        ("server_activations", m.server_activations),
+        ("migrations", m.migrations),
+        ("migration_secs", m.migration_secs.to_bits()),
+        ("response_count", m.response.len() as u64),
+        ("response_mean", m.mean_response().to_bits()),
+        ("waiting_mean", m.waiting.mean().to_bits()),
+        ("network_mean", m.network.mean().to_bits()),
+        ("power_dollars", m.power_cost_dollars.to_bits()),
+        ("switching_frob", m.switching_cost_frob.to_bits()),
+        ("operational", m.operational_overhead.to_bits()),
+        ("lb_slots", m.lb_per_slot.len() as u64),
+        ("lb_mean", m.mean_lb().to_bits()),
+    ]
+}
+
+fn assert_metrics_bits(a: &RunMetrics, b: &RunMetrics, label: &str) {
+    for ((name, x), (_, y)) in metrics_fp(a).into_iter().zip(metrics_fp(b)) {
+        assert_eq!(x, y, "{label}: {name} diverged");
+    }
+}
+
+/// One full engine run with the worker count pinned; returns the metrics
+/// and the fleet end-state fingerprint.
+fn run_cell(
+    scheduler: &str,
+    scenario: &str,
+    slots: usize,
+    threads: usize,
+) -> (RunMetrics, Vec<(u64, u64, u64, u64, u64, u64, u32)>) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = scheduler.into();
+    cfg.slots = slots;
+    cfg.torta.use_pjrt = false;
+    cfg.torta.threads = threads;
+    cfg.scenario = torta::scenario::Scenario::by_name(scenario).unwrap();
+    let mut engine = Simulation::new(cfg.clone()).unwrap();
+    assert_eq!(engine.threads(), threads, "explicit torta.threads must pin the count");
+    let seed = cfg.seed ^ topo_salt(&engine.ctx.topo.name);
+    let n = engine.ctx.topo.n;
+    let mut wl = cfg
+        .scenario
+        .build_workload(&cfg.workload, n, seed, cfg.slot_secs)
+        .unwrap();
+    let mut sched = torta::scheduler::build(&cfg.scheduler, &engine.ctx, &cfg).unwrap();
+    let m = engine.run(wl.as_mut(), sched.as_mut());
+    let end = slots as f64 * cfg.slot_secs;
+    (m, fleet_fp(&engine.fleet, end))
+}
+
+fn assert_cell_equivalent(scheduler: &str, scenario: &str, slots: usize) {
+    let (m1, f1) = run_cell(scheduler, scenario, slots, THREADS[0]);
+    assert!(m1.tasks_total > 0, "{scheduler}@{scenario}: empty run proves nothing");
+    for &threads in &THREADS[1..] {
+        let (mt, ft) = run_cell(scheduler, scenario, slots, threads);
+        let label = format!("{scheduler}@{scenario} threads={threads}");
+        assert_metrics_bits(&m1, &mt, &label);
+        assert_eq!(f1, ft, "{label}: fleet end state diverged");
+    }
+}
+
+/// Acceptance: RunMetrics + fleet end-state bit-identical across
+/// `--threads 1/2/4` for all four schedulers — registry scenario #1
+/// (regional-failure exercises the failed-region sweep, rebuffering and
+/// the rescue paths under sharding).
+#[test]
+fn bit_identical_across_thread_counts_regional_failure() {
+    for scheduler in SCHEDULERS {
+        assert_cell_equivalent(scheduler, "regional-failure", 14);
+    }
+}
+
+/// Acceptance: same contract on registry scenario #2 (flash-crowd's
+/// one-region hotspot skews the per-shard batch sizes, stressing the
+/// fan-in merge order rather than balanced shards).
+#[test]
+fn bit_identical_across_thread_counts_flash_crowd() {
+    for scheduler in SCHEDULERS {
+        assert_cell_equivalent(scheduler, "flash-crowd", 26);
+    }
+}
+
+/// Cross-shard migrations under the parallel pipeline: TORTA's
+/// `emit_migrations` rescue path (failed sources, overloaded servers)
+/// must route source -> dest across shard boundaries with identical
+/// metering for any worker count — and the scenario must actually
+/// migrate, otherwise the equivalence is vacuous.
+#[test]
+fn migration_rescue_bit_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = "torta-native".into();
+        cfg.slots = 14;
+        cfg.workload.base_rate = 240.0;
+        cfg.torta.use_pjrt = false;
+        cfg.torta.migrate_backlog_secs = 1.0;
+        cfg.torta.threads = threads;
+        cfg.scenario = torta::scenario::Scenario::by_name("regional-failure").unwrap();
+        let mut engine = Simulation::new(cfg.clone()).unwrap();
+        let seed = cfg.seed ^ topo_salt(&engine.ctx.topo.name);
+        let n = engine.ctx.topo.n;
+        let mut wl = cfg
+            .scenario
+            .build_workload(&cfg.workload, n, seed, cfg.slot_secs)
+            .unwrap();
+        let mut sched = torta::scheduler::build(&cfg.scheduler, &engine.ctx, &cfg).unwrap();
+        let m = engine.run(wl.as_mut(), sched.as_mut());
+        let end = cfg.slots as f64 * cfg.slot_secs;
+        (m, fleet_fp(&engine.fleet, end))
+    };
+    let (m1, f1) = run(1);
+    assert!(
+        m1.migrations >= 1,
+        "failure scenario executed no migrations — the cross-shard path went untested"
+    );
+    for threads in [2usize, 4] {
+        let (mt, ft) = run(threads);
+        let label = format!("torta-native+migration threads={threads}");
+        assert_metrics_bits(&m1, &mt, &label);
+        assert_eq!(f1, ft, "{label}: fleet end state diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scripted interleaved stream: Migrate barriers between Assign segments.
+// ---------------------------------------------------------------------------
+
+/// Slot 0: pile every task onto one region-0 server (creates queued
+/// reservations). Slot 1+: emit `Assign -> Migrate -> Assign -> Buffer...`
+/// so the parallel engine must flush its open segment mid-stream — the
+/// worst case for the segmented fan-out, impossible to reorder silently.
+struct InterleavedScript {
+    r: usize,
+}
+
+impl Scheduler for InterleavedScript {
+    fn name(&self) -> &'static str {
+        "interleave-script"
+    }
+
+    fn decide(
+        &mut self,
+        _ctx: &Ctx,
+        fleet: &mut Fleet,
+        tasks: Vec<Task>,
+        pending: &[PendingView],
+        slot: usize,
+        now: f64,
+    ) -> SlotDecision {
+        let mut actions: Vec<Action> = Vec::new();
+        if slot == 0 {
+            let server = fleet.regions[0]
+                .servers
+                .iter()
+                .position(|s| s.accepting(now))
+                .expect("region 0 has an accepting server");
+            let assignments: Vec<(Task, usize, usize)> =
+                tasks.into_iter().map(|t| (t, 0usize, server)).collect();
+            let alloc = empirical_alloc(&assignments, self.r);
+            for (task, region, sv) in assignments {
+                actions.push(Action::Assign { task, region, server: sv });
+            }
+            return SlotDecision { actions, alloc };
+        }
+        let dest = fleet.regions[1]
+            .servers
+            .iter()
+            .position(|s| s.accepting(now))
+            .expect("region 1 has an accepting server");
+        let mut it = tasks.into_iter();
+        if let Some(task) = it.next() {
+            actions.push(Action::Assign { task, region: 1, server: dest });
+        }
+        if let Some(p) = pending.last() {
+            actions.push(Action::Migrate {
+                task_id: p.task_id,
+                from: (p.region, p.server),
+                to: (1, dest),
+            });
+        }
+        if let Some(task) = it.next() {
+            actions.push(Action::Assign { task, region: 1, server: dest });
+        }
+        for task in it {
+            actions.push(Action::Buffer { task });
+        }
+        SlotDecision { actions, alloc: empirical_alloc(&[], self.r) }
+    }
+}
+
+#[test]
+fn interleaved_migrate_stream_is_barrier_safe() {
+    let run = |threads: usize| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.slots = 2;
+        cfg.workload.base_rate = 10.0;
+        cfg.torta.migrate_backlog_secs = 1.0; // enables pending tracking
+        cfg.torta.threads = threads;
+        let mut engine = Simulation::new(cfg.clone()).unwrap();
+        let seed = cfg.seed ^ topo_salt(&cfg.topology);
+        let n = engine.ctx.topo.n;
+        let mut wl = torta::workload::DiurnalWorkload::new(cfg.workload.clone(), n, seed);
+        let mut sched = InterleavedScript { r: n };
+        let mut metrics = RunMetrics::new("interleave-script", &cfg.topology);
+        engine.step(0, &mut wl, &mut sched, &mut metrics);
+        assert!(engine.pending_len() >= 1, "slot 0 must leave queued reservations");
+        engine.step(1, &mut wl, &mut sched, &mut metrics);
+        // Results carry every executed action in stream order; the Debug
+        // rendering round-trips floats, so string equality is bit
+        // equality.
+        let results_dbg = format!("{:?}", engine.last_outcome().unwrap().results);
+        let backlog = engine.backlog_len();
+        let pending = engine.pending_len();
+        engine.finish(&mut metrics);
+        let end = 2.0 * cfg.slot_secs;
+        (results_dbg, backlog, pending, metrics, fleet_fp(&engine.fleet, end))
+    };
+    let (r1, b1, p1, m1, f1) = run(1);
+    assert!(
+        r1.contains("Migrated"),
+        "the scripted cross-shard migration must execute: {r1}"
+    );
+    for threads in [2usize, 4] {
+        let (rt, bt, pt, mt, ft) = run(threads);
+        let label = format!("interleaved threads={threads}");
+        assert_eq!(r1, rt, "{label}: per-action results diverged");
+        assert_eq!(b1, bt, "{label}: backlog depth diverged");
+        assert_eq!(p1, pt, "{label}: pending depth diverged");
+        assert_metrics_bits(&m1, &mt, &label);
+        assert_eq!(f1, ft, "{label}: fleet end state diverged");
+    }
+}
