@@ -77,6 +77,16 @@ pub struct Server {
     pub model_switches: u64,
     pub activations: u64,
     pub tasks_served: u64,
+    /// Chaos layer (docs/FAULTS.md): crashed and awaiting repair. A down
+    /// server accepts nothing and cannot be powered on.
+    pub down: bool,
+    /// Service-time inflation while degraded (1.0 = healthy straggler-free).
+    pub fault_slowdown: f64,
+    /// Excluded from candidate sets until this absolute time (health-aware
+    /// quarantine; `NEG_INFINITY` = never quarantined).
+    pub quarantined_until: f64,
+    /// EWMA health score in [0, 1], updated by the engine's fault sweep.
+    pub health: f64,
 }
 
 impl Server {
@@ -94,6 +104,10 @@ impl Server {
             model_switches: 0,
             activations: 0,
             tasks_served: 0,
+            down: false,
+            fault_slowdown: 1.0,
+            quarantined_until: f64::NEG_INFINITY,
+            health: 1.0,
         }
     }
 
@@ -106,7 +120,12 @@ impl Server {
     }
 
     /// Can the server accept work at `now` (Active, or Warming and ready)?
+    /// Crashed and quarantined servers refuse uniformly — every scheduler,
+    /// the micro matcher and the capacity aggregates filter through here.
     pub fn accepting(&self, now: f64) -> bool {
+        if self.down || now < self.quarantined_until {
+            return false;
+        }
         match self.state {
             ServerState::Active => true,
             ServerState::Warming { ready_at } => ready_at <= now,
@@ -124,8 +143,11 @@ impl Server {
         }
     }
 
-    /// Begin warming a Cold server at `now`.
+    /// Begin warming a Cold server at `now` (no-op while crashed).
     pub fn power_on(&mut self, now: f64) {
+        if self.down {
+            return;
+        }
         if matches!(self.state, ServerState::Cold) {
             self.state = ServerState::Warming { ready_at: now + self.gpu.warmup_secs() };
             self.activations += 1;
@@ -178,10 +200,12 @@ impl Server {
         (busy as f64 / n, queued / n)
     }
 
-    /// Effective execution seconds of `task` on this hardware.
+    /// Effective execution seconds of `task` on this hardware, including
+    /// any active straggler degradation (`fault_slowdown` is 1.0 outside
+    /// chaos runs, so the product is bit-identical to the undegraded one).
     pub fn effective_service_secs(&self, task: &Task) -> f64 {
         let penalty = if self.gpu.optimal_for(task.class) { 1.0 } else { 1.25 };
-        task.service_secs * self.gpu.speed_factor(task.class) * penalty
+        task.service_secs * self.gpu.speed_factor(task.class) * penalty * self.fault_slowdown
     }
 
     /// Assign a task: picks the earliest-free lane, charges model-switch
@@ -310,6 +334,39 @@ impl Server {
     pub fn idle_since(&self, now: f64) -> f64 {
         let last = self.lanes_free_at.iter().cloned().fold(0.0, f64::max);
         (now - last).max(0.0)
+    }
+
+    /// Chaos-layer crash at `now`: the server goes down Cold, loses model
+    /// residency and its locality window, and every queued lane reservation
+    /// vaporizes (work intervals are truncated at the crash instant so the
+    /// utilization attribution of already-run seconds stays honest). The
+    /// engine re-queues the lost tasks through its retry path.
+    pub fn crash(&mut self, now: f64) {
+        self.down = true;
+        self.state = ServerState::Cold;
+        self.loaded_model = None;
+        self.recent.clear();
+        for lane in &mut self.lanes_free_at {
+            *lane = lane.min(now);
+        }
+        self.work_intervals.retain_mut(|iv| {
+            iv.1 = iv.1.min(now);
+            iv.0 < iv.1
+        });
+    }
+
+    /// Repair a crashed server at `now`: it leaves the down state and
+    /// immediately begins rebooting (Cold -> Warming), so recovery does not
+    /// depend on a scheduler noticing the repair.
+    pub fn repair(&mut self, now: f64) {
+        self.down = false;
+        self.power_on(now);
+    }
+
+    /// Quarantine until `until` (monotone: an existing longer quarantine
+    /// is never shortened).
+    pub fn quarantine(&mut self, until: f64) {
+        self.quarantined_until = self.quarantined_until.max(until);
     }
 }
 
@@ -479,6 +536,58 @@ mod tests {
         assert!((b1 - service).abs() < 1e-9);
         // Nothing left for the second window.
         assert_eq!(s.drain_busy_secs(90.0, 45.0), 0.0);
+    }
+
+    #[test]
+    fn crash_vaporizes_queue_and_blocks_power_on() {
+        let mut s = Server::new(0, 0, GpuType::T4, true);
+        s.loaded_model = Some(0);
+        let mut t = task_at(0.0, 0);
+        t.service_secs = 100.0;
+        for _ in 0..4 {
+            s.assign(&t, 0.0);
+        }
+        assert!(s.backlog_secs(10.0) > 0.0);
+        s.crash(10.0);
+        assert!(s.down);
+        assert!(!s.accepting(10.0));
+        assert_eq!(s.backlog_secs(10.0), 0.0, "queued lane work must vaporize");
+        assert_eq!(s.loaded_model, None);
+        // Work that ran before the crash still counts as busy time...
+        assert!(s.drain_busy_secs(45.0, 45.0) > 0.0);
+        // ...but nothing extends past the crash instant.
+        assert_eq!(s.drain_busy_secs(90.0, 45.0), 0.0);
+        // Down servers refuse power-on until repaired.
+        s.power_on(20.0);
+        assert!(matches!(s.state, ServerState::Cold));
+        s.repair(30.0);
+        assert!(!s.down);
+        assert!(matches!(s.state, ServerState::Warming { .. }));
+        assert!(s.accepting(30.0 + s.gpu.warmup_secs()));
+    }
+
+    #[test]
+    fn quarantine_excludes_then_expires() {
+        let mut s = Server::new(0, 0, GpuType::A100, true);
+        assert!(s.accepting(0.0));
+        s.quarantine(100.0);
+        assert!(!s.accepting(50.0));
+        assert!(s.accepting(100.0), "quarantine is half-open");
+        // Monotone: a shorter quarantine never truncates a longer one.
+        s.quarantine(50.0);
+        assert!(!s.accepting(99.0));
+    }
+
+    #[test]
+    fn fault_slowdown_inflates_service() {
+        let mut s = Server::new(0, 0, GpuType::A100, true);
+        let mut t = task_at(0.0, 0);
+        t.service_secs = 10.0;
+        let base = s.effective_service_secs(&t);
+        s.fault_slowdown = 3.0;
+        assert!((s.effective_service_secs(&t) - 3.0 * base).abs() < 1e-12);
+        s.fault_slowdown = 1.0;
+        assert_eq!(s.effective_service_secs(&t).to_bits(), base.to_bits());
     }
 
     #[test]

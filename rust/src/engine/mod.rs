@@ -26,12 +26,29 @@
 //! determinism contract is documented in `docs/PERF.md` ("Shard
 //! pipeline") and enforced by `rust/tests/shard_equivalence.rs`.
 //!
+//! The chaos layer (docs/FAULTS.md) rides the same contract: a scenario
+//! carrying a [`FaultProfile`](crate::faults::FaultProfile) resolves into
+//! a precomputed [`FaultSchedule`](crate::faults::FaultSchedule) in
+//! [`ExecutionEngine::new`], and every per-slot fault effect — server
+//! crashes/repairs, straggler slowdowns, link degradation, health/
+//! quarantine updates, in-flight-work harvesting and retry release — is
+//! applied by the sequential `apply_faults` sweep *before* the shard
+//! fan-out, so chaos runs stay bit-identical for any worker count. In
+//! chaos mode task records are deferred into an in-flight list until the
+//! work actually completes, which is what lets a crash send unfinished
+//! tasks back to the backlog (bounded retry budget, deadline-aware
+//! exponential backoff) with their partial progress metered as
+//! `lost_work_secs`.
+//!
 //! Power accounting treats each simulated server as a *server cluster*
 //! (Fig 1's units are clusters): `POWER_SCALE` physical boards per cluster,
 //! which puts 6-hour totals in the paper's $K range.
 
+use std::collections::HashMap;
+
 use crate::cluster::{Fleet, RegionShard, Server, ServerState};
 use crate::config::ExperimentConfig;
+use crate::faults::FaultSchedule;
 use crate::metrics::{RunMetrics, TaskRecord};
 use crate::power::{joules_to_dollars, server_energy_j, PriceTable};
 use crate::scheduler::{
@@ -58,6 +75,17 @@ pub const DROP_WAIT_SECS: f64 = 240.0;
 /// energy the destination incurs is charged through the ordinary
 /// assignment path.
 pub const MIGRATION_SECS: f64 = 20.0;
+
+/// Network-seconds multiplier for the `a -> b` hop under the current
+/// link-degradation matrix (empty matrix = chaos off = 1.0).
+#[inline]
+fn link_mult(links: &[f64], n: usize, a: usize, b: usize) -> f64 {
+    if links.is_empty() {
+        1.0
+    } else {
+        links[a * n + b]
+    }
+}
 
 /// Deterministic per-topology seed salt (FNV-1a over the name).
 pub fn topo_salt(name: &str) -> u64 {
@@ -149,9 +177,11 @@ fn exec_assign_shard(
     server_idx: usize,
     now: f64,
     migration_enabled: bool,
+    chaos: bool,
+    links: &[f64],
 ) -> AssignEffect {
-    if shard.failed || server_idx >= shard.servers.len() {
-        // Failed/invalid target: the task is not silently lost — it
+    if shard.failed || server_idx >= shard.servers.len() || shard.servers[server_idx].down {
+        // Failed/invalid/crashed target: the task is not silently lost — it
         // returns to the backlog and is retried until its deadline passes.
         if task.deadline_secs >= now {
             let result = ActionResult::Rebuffered { task_id: task.id, origin: task.origin };
@@ -183,7 +213,8 @@ fn exec_assign_shard(
         };
     }
     let out = server.assign(&task, now);
-    let net = topo.network_secs(task.origin, region, task.payload_kb);
+    let net = link_mult(links, topo.n, task.origin, region)
+        * topo.network_secs(task.origin, region, task.payload_kb);
     let switch_dollars = if out.switch_energy_j > 0.0 {
         joules_to_dollars(out.switch_energy_j * SWITCH_POWER_SCALE, shard.price_per_kwh)
     } else {
@@ -208,7 +239,11 @@ fn exec_assign_shard(
         compute_secs: out.service_secs,
         start_secs: out.start_secs,
     };
-    if migration_enabled && out.start_secs > now {
+    // Chaos mode defers EVERY record until the work completes (the
+    // fan-in routes entries already started into the in-flight list), so
+    // a crash can void it; otherwise only still-migratable reservations
+    // are deferred, exactly as before.
+    if (migration_enabled && out.start_secs > now) || chaos {
         AssignEffect::Done {
             result,
             record: None,
@@ -264,6 +299,13 @@ fn meter_server(
     (joules_to_dollars(draw * POWER_SCALE, price_per_kwh), snapshot)
 }
 
+/// A crash-voided task waiting out its backoff before re-entering the
+/// backlog.
+struct RetryEntry {
+    release: f64,
+    task: Task,
+}
+
 /// Engine owning the world state for one run.
 pub struct ExecutionEngine {
     pub ctx: Ctx,
@@ -284,6 +326,27 @@ pub struct ExecutionEngine {
     /// Operational counters snapshot (for per-slot overhead deltas).
     prev_switches: u64,
     prev_activations: u64,
+    /// Chaos layer (docs/FAULTS.md): the precomputed fault timeline, or
+    /// `None` for a chaos-free run (every fault path then compiles down
+    /// to the legacy engine bit-for-bit).
+    faults: Option<FaultSchedule>,
+    /// Started-but-unfinished work whose records are deferred so a crash
+    /// can void them (chaos mode only; drained as finish times pass).
+    inflight: Vec<PendingEntry>,
+    /// Crash-voided tasks waiting out their retry backoff.
+    retry_queue: Vec<RetryEntry>,
+    /// Retry attempts consumed per task id (bounded by the profile's
+    /// retry budget; entries are removed when the task completes).
+    retry_counts: HashMap<u64, u32>,
+    /// `n x n` network multipliers for the current slot (empty = healthy).
+    link_now: Vec<f64>,
+    /// Servers under repair: `(region, server, fault_start)`; resolved
+    /// into a time-to-recover sample when the server accepts work again.
+    repairing: Vec<(usize, usize, f64)>,
+    /// Degraded servers this slot (down, unhealthy or quarantined) for
+    /// the `SlotOutcome` health feed — populated only in health-aware
+    /// mode.
+    degraded: Vec<(usize, usize)>,
 }
 
 impl ExecutionEngine {
@@ -300,6 +363,14 @@ impl ExecutionEngine {
         // salted seed the fleet/demand profile uses, so `regional-failure`
         // runs are reproducible from the config alone.
         let failures = cfg.scenario.build_failures(topo.n, seed);
+        // The chaos layer's fault schedule resolves up front too — before
+        // any fan-out ever happens — so chaos runs inherit the shard
+        // pipeline's thread-count determinism (docs/FAULTS.md).
+        let faults = cfg.scenario.faults.as_ref().map(|profile| {
+            let shape: Vec<usize> = fleet.regions.iter().map(|r| r.servers.len()).collect();
+            let horizon = cfg.slots as f64 * cfg.slot_secs;
+            FaultSchedule::generate(profile, &shape, horizon, seed)
+        });
         Ok(ExecutionEngine {
             ctx: Ctx { topo, prices, slot_secs: cfg.slot_secs },
             fleet,
@@ -312,13 +383,32 @@ impl ExecutionEngine {
             last_outcome: None,
             prev_switches: 0,
             prev_activations: 0,
+            faults,
+            inflight: Vec::new(),
+            retry_queue: Vec::new(),
+            retry_counts: HashMap::new(),
+            link_now: Vec::new(),
+            repairing: Vec::new(),
+            degraded: Vec::new(),
         })
     }
 
-    /// Replace the failure events (overrides whatever the scenario spec
-    /// resolved in [`ExecutionEngine::new`]).
+    /// Layer explicit failure events on top of whatever the scenario spec
+    /// resolved in [`ExecutionEngine::new`] — the sets COMPOSE: a region
+    /// is failed in any slot covered by *any* event from either source
+    /// (scenario-resolved fault schedules are likewise unaffected). This
+    /// replaced the old replace-the-vector behavior, which silently threw
+    /// away the scenario's failures when a caller added an override. To
+    /// fully replace, call [`clear_failures`](Self::clear_failures) first.
     pub fn with_failures(mut self, failures: Vec<FailureEvent>) -> ExecutionEngine {
-        self.failures = failures;
+        self.failures.extend(failures);
+        self
+    }
+
+    /// Drop every scenario-resolved failure event (see
+    /// [`with_failures`](Self::with_failures) for the precedence rules).
+    pub fn clear_failures(mut self) -> ExecutionEngine {
+        self.failures.clear();
         self
     }
 
@@ -328,11 +418,16 @@ impl ExecutionEngine {
     }
 
     fn apply_failures(&mut self, slot: usize) {
-        for f in &self.failures {
-            let region = &mut self.fleet.regions[f.region];
+        // Union semantics per region: failed while ANY event covers the
+        // slot — required for `with_failures` composition, where two
+        // sources may declare overlapping events for the same region
+        // (with the old last-event-wins loop, an inactive later event
+        // silently resurrected a region another event had failed).
+        for (r, region) in self.fleet.regions.iter_mut().enumerate() {
+            let active = self.failures.iter().any(|f| f.region == r && f.active(slot));
             let was = region.failed;
-            region.failed = f.active(slot);
-            if region.failed && !was {
+            region.failed = active;
+            if active && !was {
                 // Knock servers cold: recovery requires re-warm-up.
                 for s in &mut region.servers {
                     s.power_off();
@@ -369,9 +464,10 @@ impl ExecutionEngine {
         metrics
     }
 
-    /// Finalize a run: flush still-pending reservations into `metrics` and
-    /// snapshot the operational counters. `run` calls this; slot-by-slot
-    /// drivers (serve, benches) call it after their last `step`.
+    /// Finalize a run: flush still-pending reservations and in-flight
+    /// work into `metrics` and snapshot the operational counters. `run`
+    /// calls this; slot-by-slot drivers (serve, benches) call it after
+    /// their last `step`.
     pub fn finish(&mut self, metrics: &mut RunMetrics) {
         self.flush_pending(metrics);
         let (sw, act) = self.counters();
@@ -379,11 +475,187 @@ impl ExecutionEngine {
         metrics.server_activations = act;
     }
 
-    /// Record every still-pending reservation (end-of-run flush).
+    /// Record every still-pending reservation and every in-flight chaos
+    /// record (end-of-run flush): work the horizon cut off completes as
+    /// planned, so each admitted task is recorded exactly once.
     pub fn flush_pending(&mut self, metrics: &mut RunMetrics) {
         for e in self.pending.drain(..) {
             metrics.record_task(&e.record);
         }
+        for e in self.inflight.drain(..) {
+            metrics.record_task(&e.record);
+            if self.retry_counts.remove(&e.task.id).unwrap_or(0) > 0 {
+                metrics.recovered_tasks += 1;
+            }
+        }
+    }
+
+    /// Commit in-flight chaos records whose work completed by `now` —
+    /// they survived every crash window between start and finish. A task
+    /// that completes after being crash-voided at least once counts as
+    /// recovered.
+    fn drain_inflight(&mut self, now: f64, metrics: &mut RunMetrics) {
+        if self.inflight.is_empty() {
+            return;
+        }
+        let mut keep = Vec::with_capacity(self.inflight.len());
+        for e in self.inflight.drain(..) {
+            if e.finish <= now {
+                metrics.record_task(&e.record);
+                if self.retry_counts.remove(&e.task.id).unwrap_or(0) > 0 {
+                    metrics.recovered_tasks += 1;
+                }
+            } else {
+                keep.push(e);
+            }
+        }
+        self.inflight = keep;
+    }
+
+    /// The chaos sweep (docs/FAULTS.md), run SEQUENTIALLY right after the
+    /// failure-event sweep and before any shard fan-out: applies the slot's
+    /// crash/repair transitions and straggler factors, harvests work lost
+    /// on crashed servers into the retry queue (bounded budget,
+    /// deadline-aware exponential backoff), releases due retries back to
+    /// the backlog, updates per-server health EWMAs + quarantine, rebuilds
+    /// the link-degradation matrix, and meters availability/TTR. Every
+    /// mutation here is a pure function of the precomputed schedule and
+    /// engine state, so thread counts cannot affect it.
+    fn apply_faults(&mut self, now: f64, metrics: &mut RunMetrics) {
+        let Some(sched) = self.faults.take() else {
+            return;
+        };
+        let profile = &sched.profile;
+        sched.fill_links(now, self.ctx.topo.n, &mut self.link_now);
+
+        self.degraded.clear();
+        let mut crashed: Vec<(usize, usize)> = Vec::new();
+        let mut touched_regions: Vec<usize> = Vec::new();
+        for (r, region) in self.fleet.regions.iter_mut().enumerate() {
+            let mut touched = false;
+            for (si, s) in region.servers.iter_mut().enumerate() {
+                let sf = &sched.servers[r][si];
+                match (s.down, sf.crash_at(now)) {
+                    (false, Some(w)) => {
+                        s.crash(now);
+                        metrics.faults_injected += 1;
+                        self.repairing.push((r, si, w.start.min(now)));
+                        crashed.push((r, si));
+                        touched = true;
+                    }
+                    (true, None) => {
+                        // Repaired: immediately reboots (Cold -> Warming),
+                        // so recovery does not wait on a scheduler.
+                        s.repair(now);
+                        touched = true;
+                    }
+                    _ => {}
+                }
+                let slowdown = sf.slowdown_at(now);
+                if slowdown != s.fault_slowdown {
+                    s.fault_slowdown = slowdown;
+                    touched = true;
+                }
+                // Health EWMA: observation is 0 while down, otherwise the
+                // inverse of the service inflation (a 3x straggler reads
+                // 0.33). Pure schedule+state, hence thread-independent.
+                let signal = if s.down { 0.0 } else { 1.0 / s.fault_slowdown };
+                s.health += profile.health_alpha * (signal - s.health);
+                if profile.health_aware
+                    && !s.down
+                    && s.health < profile.health_floor
+                    && now >= s.quarantined_until
+                {
+                    s.quarantine(now + profile.quarantine_secs);
+                    metrics.quarantine_events += 1;
+                    touched = true;
+                }
+                if profile.health_aware
+                    && (s.down || now < s.quarantined_until || s.health < profile.health_floor)
+                {
+                    self.degraded.push((r, si));
+                }
+                metrics.server_slots += 1;
+                if s.down {
+                    metrics.server_down_slots += 1;
+                }
+            }
+            if touched {
+                touched_regions.push(r);
+            }
+        }
+        for r in touched_regions {
+            self.fleet.invalidate_region(r);
+        }
+
+        // Time-to-recover: from fault onset until the server accepts work
+        // again (repair + reboot warm-up).
+        let mut repairing = std::mem::take(&mut self.repairing);
+        repairing.retain(|&(r, si, start)| {
+            let s = &self.fleet.regions[r].servers[si];
+            if !s.down && s.accepting(now) {
+                metrics.record_ttr(now - start);
+                false
+            } else {
+                true
+            }
+        });
+        self.repairing = repairing;
+
+        // Harvest: in-flight and still-pending work on servers that
+        // crashed this slot is lost. Partial progress is metered, then the
+        // task either re-enters the backlog after its backoff or — budget
+        // exhausted / deadline unreachable — drops with its honest wait.
+        if !crashed.is_empty() {
+            let mut lost: Vec<PendingEntry> = Vec::new();
+            let hit = |e: &PendingEntry| crashed.contains(&(e.region, e.server));
+            let mut keep = Vec::with_capacity(self.inflight.len());
+            for e in self.inflight.drain(..) {
+                if hit(&e) {
+                    lost.push(e);
+                } else {
+                    keep.push(e);
+                }
+            }
+            self.inflight = keep;
+            let mut keep = Vec::with_capacity(self.pending.len());
+            for e in self.pending.drain(..) {
+                if hit(&e) {
+                    lost.push(e);
+                } else {
+                    keep.push(e);
+                }
+            }
+            self.pending = keep;
+            for e in lost {
+                metrics.lost_work_secs += (now - e.start).clamp(0.0, e.finish - e.start);
+                let attempts = self.retry_counts.get(&e.task.id).copied().unwrap_or(0);
+                let release = now + profile.retry_backoff_secs * f64::powi(2.0, attempts as i32);
+                if attempts < profile.retry_budget && release <= e.task.deadline_secs {
+                    self.retry_counts.insert(e.task.id, attempts + 1);
+                    metrics.task_retries += 1;
+                    self.retry_queue.push(RetryEntry { release, task: e.task });
+                } else {
+                    let wait = (now - e.task.arrival_secs).max(0.0);
+                    metrics.record_task(&drop_record(&e.task, e.region, wait));
+                    self.retry_counts.remove(&e.task.id);
+                }
+            }
+        }
+
+        // Release retries whose backoff elapsed into the backlog (the
+        // step's FIFO sort orders them with everything else).
+        let mut i = 0;
+        while i < self.retry_queue.len() {
+            if self.retry_queue[i].release <= now {
+                let e = self.retry_queue.swap_remove(i);
+                self.buffered.push(e.task);
+            } else {
+                i += 1;
+            }
+        }
+
+        self.faults = Some(sched);
     }
 
     /// One slot; public so examples can drive slot-by-slot (Fig 2/4).
@@ -396,7 +668,12 @@ impl ExecutionEngine {
     ) {
         let now = slot as f64 * self.ctx.slot_secs;
         let slot_end = now + self.ctx.slot_secs;
+        // Work that completed before this boundary is committed BEFORE the
+        // fault sweep: a crash at `now` cannot void already-finished work.
+        self.drain_inflight(now, metrics);
         self.apply_failures(slot);
+        // Chaos sweep: sequential, before any fan-out (see apply_faults).
+        self.apply_faults(now, metrics);
         // Warm-up promotion sweep. Deliberately NOT fanned out: tick_state
         // is one enum branch per server, far below the scoped-pool
         // spawn/join cost at any realistic fleet size — the pipeline's
@@ -414,13 +691,19 @@ impl ExecutionEngine {
             scheduler.feedback(&outcome);
         }
 
-        // Commit reservations that started: no longer migratable, their
-        // deferred records are final.
+        // Commit reservations that started: no longer migratable. Chaos
+        // runs keep the record deferred in the in-flight list (a crash may
+        // still void the work); otherwise it is final here.
+        let chaos = self.faults.is_some();
         if !self.pending.is_empty() {
             let mut keep = Vec::with_capacity(self.pending.len());
             for e in self.pending.drain(..) {
                 if e.start <= now {
-                    metrics.record_task(&e.record);
+                    if chaos {
+                        self.inflight.push(e);
+                    } else {
+                        metrics.record_task(&e.record);
+                    }
                 } else {
                     keep.push(e);
                 }
@@ -629,6 +912,7 @@ impl ExecutionEngine {
             dropped,
             buffered,
             migrated,
+            degraded: self.degraded.clone(),
         });
     }
 
@@ -711,8 +995,10 @@ impl ExecutionEngine {
         }
         *seg_len = 0;
         let migration_enabled = self.migration_enabled;
+        let chaos = self.faults.is_some();
         let threads = self.threads;
         let topo = &self.ctx.topo;
+        let links: &[f64] = &self.link_now;
         let jobs: Vec<(usize, &mut RegionShard, Vec<(usize, Task, usize)>)> = self
             .fleet
             .regions
@@ -740,6 +1026,8 @@ impl ExecutionEngine {
                         server_idx,
                         now,
                         migration_enabled,
+                        chaos,
+                        links,
                     ),
                 ));
             }
@@ -771,7 +1059,13 @@ impl ExecutionEngine {
                     }
                     results.push(result);
                     if let Some(entry) = pending {
-                        self.pending.push(entry);
+                        // Still-unstarted reservations stay migratable;
+                        // chaos entries already running go in-flight.
+                        if self.migration_enabled && entry.start > now {
+                            self.pending.push(entry);
+                        } else {
+                            self.inflight.push(entry);
+                        }
                     }
                 }
                 MergeItem::Assign(AssignEffect::Rebuffer { result, task }) => {
@@ -824,8 +1118,9 @@ impl ExecutionEngine {
         if !region_ok
             || self.fleet.regions[region].failed
             || server_idx >= self.fleet.regions[region].servers.len()
+            || self.fleet.regions[region].servers[server_idx].down
         {
-            // Failed/invalid target: the task is not silently lost — it
+            // Failed/invalid/crashed target: the task is not silently lost — it
             // returns to the backlog and is retried until its deadline
             // passes (then the expiry path records its honest wait).
             if task.deadline_secs >= now {
@@ -859,7 +1154,8 @@ impl ExecutionEngine {
             return;
         }
         let out = server.assign(&task, now);
-        let net = self.ctx.topo.network_secs(task.origin, region, task.payload_kb);
+        let net = link_mult(&self.link_now, self.ctx.topo.n, task.origin, region)
+            * self.ctx.topo.network_secs(task.origin, region, task.payload_kb);
         let price = reg.price_per_kwh;
         if out.switch_energy_j > 0.0 {
             metrics.add_power_dollars(joules_to_dollars(
@@ -888,6 +1184,19 @@ impl ExecutionEngine {
         });
         if self.migration_enabled && out.start_secs > now {
             self.pending.push(PendingEntry {
+                task,
+                region,
+                server: server_idx,
+                lane: out.lane,
+                start: out.start_secs,
+                finish: out.finish_secs,
+                prev_lane_free: out.lane_prev_free,
+                record,
+            });
+        } else if self.faults.is_some() {
+            // Chaos: the record stays deferred until the work completes,
+            // so a crash on this server can still void it.
+            self.inflight.push(PendingEntry {
                 task,
                 region,
                 server: server_idx,
@@ -966,10 +1275,11 @@ impl ExecutionEngine {
         // carries origin -> ... -> current placement, so a re-migrated task
         // keeps every hop it actually traveled.
         let net = entry.record.network_secs
-            + self
-                .ctx
-                .topo
-                .network_secs(entry.region, to_region, entry.task.payload_kb);
+            + link_mult(&self.link_now, self.ctx.topo.n, entry.region, to_region)
+                * self
+                    .ctx
+                    .topo
+                    .network_secs(entry.region, to_region, entry.task.payload_kb);
         let price = self.fleet.regions[to_region].price_per_kwh;
         if out.switch_energy_j > 0.0 {
             metrics.add_power_dollars(joules_to_dollars(
@@ -1010,13 +1320,21 @@ impl ExecutionEngine {
         self.last_outcome.as_ref()
     }
 
-    /// Backlog currently buffered (Fig 2/4 queue-depth plots).
+    /// Backlog currently buffered, including crash-voided tasks waiting
+    /// out their retry backoff (Fig 2/4 queue-depth plots; also keeps the
+    /// task-conservation invariant exact under chaos).
     pub fn backlog_len(&self) -> usize {
-        self.buffered.len()
+        self.buffered.len() + self.retry_queue.len()
     }
 
     /// Queued-but-unstarted reservations currently migratable.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Started-but-unfinished chaos-mode work whose records are still
+    /// deferred (0 outside chaos runs).
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
     }
 }

@@ -1,0 +1,520 @@
+//! Deterministic fault injection: seeded, precomputed fault schedules.
+//!
+//! The chaos layer (docs/FAULTS.md) disturbs a run below the granularity
+//! of the scenario-declared regional [`FailureEvent`](crate::workload::FailureEvent)s:
+//! individual server crashes with MTBF/MTTR-style repair windows, degraded
+//! ("straggler") servers whose service times inflate by a factor, transient
+//! inter-region link degradation layered onto the network-cost hop, and
+//! partial regional brownouts that fail a fraction of one shard's servers.
+//!
+//! Everything is resolved up front: [`FaultSchedule::generate`] draws every
+//! window from one seeded RNG stream ([`FAULT_STREAM`]) before the first
+//! slot runs, so the schedule is a pure function of `(profile, fleet shape,
+//! horizon, seed)` and the engine can apply it sequentially at each slot
+//! boundary — before the shard fan-out — keeping `RunMetrics` bit-identical
+//! for any `--threads` worker count (the PR 5 determinism contract,
+//! docs/PERF.md).
+//!
+//! Recovery and degradation semantics (retry budget, deadline-aware
+//! backoff, per-server health EWMA, quarantine) are parameterized by
+//! [`FaultProfile`] and executed by
+//! [`ExecutionEngine`](crate::engine::ExecutionEngine).
+
+use crate::util::rng::Rng;
+
+/// RNG stream id for fault-schedule generation (fleet build uses 77, the
+/// diurnal workload 101, the TORTA scheduler 313).
+pub const FAULT_STREAM: u64 = 911;
+
+/// Everything the chaos layer needs to know about *how* to break a run:
+/// which fault processes are active (a rate of 0 disables one) and how
+/// tasks and schedulers are allowed to recover.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Mean time between crash onsets per server, seconds (0 disables).
+    pub crash_mtbf_secs: f64,
+    /// Mean repair-window length; actual windows draw uniform in
+    /// `[0.5, 1.5] * mttr`.
+    pub crash_mttr_secs: f64,
+    /// Fraction of servers eligible to degrade into stragglers.
+    pub straggler_frac: f64,
+    /// Service-time inflation factor while degraded (>= 1).
+    pub straggler_slowdown: f64,
+    /// Mean time between degradation onsets per eligible server (0 disables).
+    pub straggler_mtbf_secs: f64,
+    /// Mean degradation-window length.
+    pub straggler_mttr_secs: f64,
+    /// Mean time between link-degradation onsets per region pair (0 disables).
+    pub link_mtbf_secs: f64,
+    /// Mean link-degradation window length.
+    pub link_mttr_secs: f64,
+    /// Network-seconds multiplier on a degraded link (>= 1).
+    pub link_factor: f64,
+    /// Brownout target region (None = seeded pick).
+    pub brownout_region: Option<usize>,
+    /// Fraction of the target region's servers the brownout fails
+    /// (0 disables); at least one server is always left untouched.
+    pub brownout_frac: f64,
+    /// Brownout window, absolute seconds.
+    pub brownout_start_secs: f64,
+    pub brownout_duration_secs: f64,
+    /// Times a task lost to a crash may be re-queued before being dropped.
+    pub retry_budget: u32,
+    /// Base backoff before a retry re-enters the backlog; doubles per
+    /// attempt, and a retry that cannot start before its deadline is
+    /// dropped instead of queued.
+    pub retry_backoff_secs: f64,
+    /// EWMA weight of the newest per-server health observation (0..=1].
+    pub health_alpha: f64,
+    /// Health score below which a server is quarantined (health-aware mode).
+    pub health_floor: f64,
+    /// How long a quarantined server is excluded from candidate sets.
+    pub quarantine_secs: f64,
+    /// Master switch for graceful degradation: quarantine + the degraded
+    /// server feed through `SlotOutcome`. Off = schedulers see faults only
+    /// through queue state (the A/B baseline).
+    pub health_aware: bool,
+}
+
+impl Default for FaultProfile {
+    /// All fault processes disabled; recovery/health knobs at their
+    /// documented defaults so a profile enabling only one process still
+    /// has sane retry and quarantine behavior.
+    fn default() -> FaultProfile {
+        FaultProfile {
+            crash_mtbf_secs: 0.0,
+            crash_mttr_secs: 180.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 3.0,
+            straggler_mtbf_secs: 0.0,
+            straggler_mttr_secs: 400.0,
+            link_mtbf_secs: 0.0,
+            link_mttr_secs: 240.0,
+            link_factor: 1.0,
+            brownout_region: None,
+            brownout_frac: 0.0,
+            brownout_start_secs: 0.0,
+            brownout_duration_secs: 0.0,
+            retry_budget: 3,
+            retry_backoff_secs: 15.0,
+            health_alpha: 0.3,
+            health_floor: 0.55,
+            quarantine_secs: 240.0,
+            health_aware: true,
+        }
+    }
+}
+
+impl FaultProfile {
+    /// Registry preset `chaos-crash`: steady server-level churn.
+    pub fn crash() -> FaultProfile {
+        FaultProfile {
+            crash_mtbf_secs: 1500.0,
+            crash_mttr_secs: 200.0,
+            ..FaultProfile::default()
+        }
+    }
+
+    /// Registry preset `brownout`: a partial regional blackout plus light
+    /// background churn.
+    pub fn brownout() -> FaultProfile {
+        FaultProfile {
+            crash_mtbf_secs: 6000.0,
+            crash_mttr_secs: 180.0,
+            brownout_frac: 0.5,
+            brownout_start_secs: 180.0,
+            brownout_duration_secs: 540.0,
+            ..FaultProfile::default()
+        }
+    }
+
+    /// Registry preset `flaky-network`: degraded links and stragglers with
+    /// occasional crashes.
+    pub fn flaky_network() -> FaultProfile {
+        FaultProfile {
+            crash_mtbf_secs: 4000.0,
+            crash_mttr_secs: 150.0,
+            straggler_frac: 0.35,
+            straggler_slowdown: 3.0,
+            straggler_mtbf_secs: 1800.0,
+            straggler_mttr_secs: 400.0,
+            link_mtbf_secs: 900.0,
+            link_mttr_secs: 240.0,
+            link_factor: 25.0,
+            ..FaultProfile::default()
+        }
+    }
+
+    /// Any fault process enabled?
+    pub fn any_enabled(&self) -> bool {
+        self.crash_mtbf_secs > 0.0
+            || (self.straggler_mtbf_secs > 0.0 && self.straggler_frac > 0.0)
+            || self.link_mtbf_secs > 0.0
+            || (self.brownout_frac > 0.0 && self.brownout_duration_secs > 0.0)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        for (name, v) in [
+            ("crash_mtbf_secs", self.crash_mtbf_secs),
+            ("crash_mttr_secs", self.crash_mttr_secs),
+            ("straggler_mtbf_secs", self.straggler_mtbf_secs),
+            ("straggler_mttr_secs", self.straggler_mttr_secs),
+            ("link_mtbf_secs", self.link_mtbf_secs),
+            ("link_mttr_secs", self.link_mttr_secs),
+            ("brownout_start_secs", self.brownout_start_secs),
+            ("brownout_duration_secs", self.brownout_duration_secs),
+            ("retry_backoff_secs", self.retry_backoff_secs),
+            ("quarantine_secs", self.quarantine_secs),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                errs.push(format!("faults.{name} must be >= 0, got {v}"));
+            }
+        }
+        for (name, v) in [
+            ("straggler_frac", self.straggler_frac),
+            ("brownout_frac", self.brownout_frac),
+            ("health_floor", self.health_floor),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                errs.push(format!("faults.{name} must be in [0, 1], got {v}"));
+            }
+        }
+        if !self.straggler_slowdown.is_finite() || self.straggler_slowdown < 1.0 {
+            errs.push(format!(
+                "faults.straggler_slowdown must be >= 1, got {}",
+                self.straggler_slowdown
+            ));
+        }
+        if !self.link_factor.is_finite() || self.link_factor < 1.0 {
+            errs.push(format!("faults.link_factor must be >= 1, got {}", self.link_factor));
+        }
+        if !self.health_alpha.is_finite() || self.health_alpha <= 0.0 || self.health_alpha > 1.0 {
+            errs.push(format!("faults.health_alpha must be in (0, 1], got {}", self.health_alpha));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+}
+
+/// Half-open absolute time window `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultWindow {
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A degradation window with its service-time inflation factor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlowWindow {
+    pub start: f64,
+    pub end: f64,
+    pub factor: f64,
+}
+
+/// The precomputed fault timeline of one server.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServerFaults {
+    /// Crash/repair windows, sorted by start, non-overlapping (brownout
+    /// windows are merged in).
+    pub crashes: Vec<FaultWindow>,
+    /// Degradation windows, sorted by start, non-overlapping.
+    pub slowdowns: Vec<SlowWindow>,
+}
+
+impl ServerFaults {
+    /// The crash window covering `t`, if any.
+    pub fn crash_at(&self, t: f64) -> Option<FaultWindow> {
+        self.crashes.iter().find(|w| w.start <= t && t < w.end).copied()
+    }
+
+    /// Service-time inflation factor at `t` (1.0 = healthy).
+    pub fn slowdown_at(&self, t: f64) -> f64 {
+        self.slowdowns
+            .iter()
+            .find(|w| w.start <= t && t < w.end)
+            .map(|w| w.factor)
+            .unwrap_or(1.0)
+    }
+}
+
+/// One degraded inter-region link window (applies symmetrically).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFault {
+    pub a: usize,
+    pub b: usize,
+    pub window: FaultWindow,
+    pub factor: f64,
+}
+
+/// The fully resolved fault timeline of a run: what breaks, where, when.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSchedule {
+    pub profile: FaultProfile,
+    /// `[region][server]` timelines, matching the built fleet's shape.
+    pub servers: Vec<Vec<ServerFaults>>,
+    pub links: Vec<LinkFault>,
+}
+
+/// Renewal process: exponential up-time, `[0.5, 1.5] * mttr` down-time.
+fn renewal_windows(rng: &mut Rng, mtbf: f64, mttr: f64, horizon: f64) -> Vec<FaultWindow> {
+    let mut out = Vec::new();
+    if mtbf <= 0.0 || mttr <= 0.0 {
+        return out;
+    }
+    let mut t = rng.exponential(1.0 / mtbf);
+    while t < horizon {
+        let len = (mttr * rng.uniform(0.5, 1.5)).max(1.0);
+        out.push(FaultWindow { start: t, end: t + len });
+        t += len + rng.exponential(1.0 / mtbf);
+    }
+    out
+}
+
+/// Sort by start and merge overlapping/adjacent windows.
+fn normalize(windows: &mut Vec<FaultWindow>) {
+    windows.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    let mut merged: Vec<FaultWindow> = Vec::with_capacity(windows.len());
+    for w in windows.drain(..) {
+        match merged.last_mut() {
+            Some(last) if w.start <= last.end => last.end = last.end.max(w.end),
+            _ => merged.push(w),
+        }
+    }
+    *windows = merged;
+}
+
+impl FaultSchedule {
+    /// Resolve a profile into a concrete timeline for a fleet of shape
+    /// `shape` (servers per region) over `[0, horizon_secs)`. Pure in
+    /// `(profile, shape, horizon, seed)`: every draw comes from one RNG
+    /// forked at [`FAULT_STREAM`], iterated in fixed region/server/pair
+    /// order, so equal inputs give bit-equal schedules.
+    pub fn generate(
+        profile: &FaultProfile,
+        shape: &[usize],
+        horizon_secs: f64,
+        seed: u64,
+    ) -> FaultSchedule {
+        let mut rng = Rng::new(seed, FAULT_STREAM);
+        let n = shape.len();
+        let mut servers: Vec<Vec<ServerFaults>> =
+            shape.iter().map(|&c| vec![ServerFaults::default(); c]).collect();
+
+        if profile.crash_mtbf_secs > 0.0 {
+            for region in servers.iter_mut() {
+                for sf in region.iter_mut() {
+                    sf.crashes = renewal_windows(
+                        &mut rng,
+                        profile.crash_mtbf_secs,
+                        profile.crash_mttr_secs,
+                        horizon_secs,
+                    );
+                }
+            }
+        }
+
+        if profile.straggler_mtbf_secs > 0.0 && profile.straggler_frac > 0.0 {
+            let slow = profile.straggler_slowdown.max(1.0);
+            for region in servers.iter_mut() {
+                for sf in region.iter_mut() {
+                    if !rng.chance(profile.straggler_frac) {
+                        continue;
+                    }
+                    sf.slowdowns = renewal_windows(
+                        &mut rng,
+                        profile.straggler_mtbf_secs,
+                        profile.straggler_mttr_secs,
+                        horizon_secs,
+                    )
+                    .into_iter()
+                    .map(|w| SlowWindow { start: w.start, end: w.end, factor: slow })
+                    .collect();
+                }
+            }
+        }
+
+        if profile.brownout_frac > 0.0 && profile.brownout_duration_secs > 0.0 && n > 0 {
+            let region = profile.brownout_region.unwrap_or_else(|| rng.below(n)).min(n - 1);
+            let count = shape[region].min(
+                ((shape[region] as f64 * profile.brownout_frac).ceil() as usize)
+                    .min(shape[region].saturating_sub(1)),
+            );
+            let mut order: Vec<usize> = (0..shape[region]).collect();
+            rng.shuffle(&mut order);
+            let window = FaultWindow {
+                start: profile.brownout_start_secs,
+                end: profile.brownout_start_secs + profile.brownout_duration_secs,
+            };
+            for &s in order.iter().take(count) {
+                servers[region][s].crashes.push(window);
+            }
+        }
+
+        for region in servers.iter_mut() {
+            for sf in region.iter_mut() {
+                normalize(&mut sf.crashes);
+            }
+        }
+
+        let mut links = Vec::new();
+        if profile.link_mtbf_secs > 0.0 && profile.link_factor > 1.0 {
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    for window in renewal_windows(
+                        &mut rng,
+                        profile.link_mtbf_secs,
+                        profile.link_mttr_secs,
+                        horizon_secs,
+                    ) {
+                        links.push(LinkFault { a, b, window, factor: profile.link_factor });
+                    }
+                }
+            }
+        }
+
+        FaultSchedule { profile: profile.clone(), servers, links }
+    }
+
+    /// Fill `out` with the `n x n` network-seconds multiplier matrix at
+    /// `now` (1.0 = healthy; degraded links apply symmetrically).
+    pub fn fill_links(&self, now: f64, n: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(n * n, 1.0);
+        for lf in &self.links {
+            if lf.window.start <= now && now < lf.window.end && lf.a < n && lf.b < n {
+                out[lf.a * n + lf.b] = lf.factor;
+                out[lf.b * n + lf.a] = lf.factor;
+            }
+        }
+    }
+
+    /// Total crash windows in the schedule (the per-run fault count).
+    pub fn crash_count(&self) -> u64 {
+        self.servers.iter().flatten().map(|sf| sf.crashes.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> Vec<usize> {
+        vec![3, 4, 2, 5]
+    }
+
+    #[test]
+    fn schedule_is_seed_deterministic() {
+        let p = FaultProfile::flaky_network();
+        let a = FaultSchedule::generate(&p, &shape(), 10_000.0, 42);
+        let b = FaultSchedule::generate(&p, &shape(), 10_000.0, 42);
+        assert_eq!(a, b);
+        let c = FaultSchedule::generate(&p, &shape(), 10_000.0, 43);
+        assert_ne!(a, c, "different seeds must give different schedules");
+    }
+
+    #[test]
+    fn crash_windows_are_well_formed_and_disjoint() {
+        let p = FaultProfile {
+            crash_mtbf_secs: 300.0, // dense
+            brownout_frac: 0.5,
+            brownout_start_secs: 100.0,
+            brownout_duration_secs: 400.0,
+            ..FaultProfile::crash()
+        };
+        let sched = FaultSchedule::generate(&p, &shape(), 20_000.0, 7);
+        assert!(sched.crash_count() > 0);
+        for sf in sched.servers.iter().flatten() {
+            for w in &sf.crashes {
+                assert!(w.start >= 0.0 && w.end > w.start, "malformed window {w:?}");
+            }
+            for pair in sf.crashes.windows(2) {
+                assert!(pair[1].start >= pair[0].end, "overlap: {pair:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn brownout_spares_at_least_one_server() {
+        let p = FaultProfile {
+            brownout_region: Some(1),
+            brownout_frac: 1.0,
+            brownout_start_secs: 0.0,
+            brownout_duration_secs: 100.0,
+            ..FaultProfile::default()
+        };
+        let sched = FaultSchedule::generate(&p, &shape(), 1_000.0, 1);
+        let hit = sched.servers[1].iter().filter(|sf| sf.crash_at(50.0).is_some()).count();
+        assert!(hit < sched.servers[1].len(), "brownout must spare one server");
+        assert!(hit >= 1);
+        for (r, region) in sched.servers.iter().enumerate() {
+            if r != 1 {
+                assert!(region.iter().all(|sf| sf.crashes.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_profile_generates_empty_schedule() {
+        let sched = FaultSchedule::generate(&FaultProfile::default(), &shape(), 50_000.0, 42);
+        assert_eq!(sched.crash_count(), 0);
+        assert!(sched.links.is_empty());
+        assert!(sched.servers.iter().flatten().all(|sf| sf.slowdowns.is_empty()));
+        assert!(!FaultProfile::default().any_enabled());
+        assert!(FaultProfile::crash().any_enabled());
+    }
+
+    #[test]
+    fn link_matrix_is_symmetric_and_defaults_to_one() {
+        let p = FaultProfile::flaky_network();
+        let sched = FaultSchedule::generate(&p, &shape(), 10_000.0, 5);
+        assert!(!sched.links.is_empty(), "flaky-network must degrade some link");
+        let n = shape().len();
+        let mut m = Vec::new();
+        let probe = sched.links[0].window.start + 0.5;
+        sched.fill_links(probe, n, &mut m);
+        for i in 0..n {
+            assert_eq!(m[i * n + i], 1.0, "diagonal must stay healthy");
+            for j in 0..n {
+                assert_eq!(m[i * n + j], m[j * n + i], "asymmetric at ({i},{j})");
+            }
+        }
+        assert!(m.iter().any(|&f| f > 1.0));
+        sched.fill_links(-1.0, n, &mut m);
+        assert!(m.iter().all(|&f| f == 1.0));
+    }
+
+    #[test]
+    fn slowdown_queries_outside_windows_are_neutral() {
+        let sf = ServerFaults {
+            crashes: vec![FaultWindow { start: 10.0, end: 20.0 }],
+            slowdowns: vec![SlowWindow { start: 30.0, end: 40.0, factor: 3.0 }],
+        };
+        assert!(sf.crash_at(9.9).is_none());
+        assert_eq!(sf.crash_at(10.0).unwrap().end, 20.0);
+        assert!(sf.crash_at(20.0).is_none(), "windows are half-open");
+        assert_eq!(sf.slowdown_at(29.0), 1.0);
+        assert_eq!(sf.slowdown_at(35.0), 3.0);
+        assert_eq!(sf.slowdown_at(40.0), 1.0);
+    }
+
+    #[test]
+    fn profile_validation_catches_bad_knobs() {
+        assert!(FaultProfile::default().validate().is_ok());
+        assert!(FaultProfile::crash().validate().is_ok());
+        assert!(FaultProfile::brownout().validate().is_ok());
+        assert!(FaultProfile::flaky_network().validate().is_ok());
+        let bad = [
+            FaultProfile { straggler_frac: 1.5, ..FaultProfile::default() },
+            FaultProfile { link_factor: 0.5, ..FaultProfile::default() },
+            FaultProfile { health_alpha: 0.0, ..FaultProfile::default() },
+            FaultProfile { crash_mtbf_secs: -1.0, ..FaultProfile::default() },
+        ];
+        for p in bad {
+            assert!(p.validate().is_err(), "profile should fail validation: {p:?}");
+        }
+    }
+}

@@ -22,6 +22,7 @@
 pub mod cluster;
 pub mod config;
 pub mod engine;
+pub mod faults;
 pub mod geo;
 pub mod metrics;
 pub mod milp;

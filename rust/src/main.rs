@@ -72,7 +72,12 @@ fn base_cli(name: &'static str) -> Cli {
         .opt("slots", "480", "time slots (45 s each)")
         .opt("seed", "42", "workload/fleet seed")
         .opt("config", "", "optional TOML config file")
-        .opt("scenario", "", "registry scenario name or trace:<path> (docs/SCENARIOS.md)")
+        .opt(
+            "scenario",
+            "",
+            "registry scenario name or trace:<path> (docs/SCENARIOS.md; \
+             chaos-crash|brownout|flaky-network: docs/FAULTS.md)",
+        )
         .opt("artifacts", "artifacts", "AOT artifact directory")
         .opt("policy", "", "NativePolicy JSON artifact for the macro layer (docs/RL.md)")
         .opt(

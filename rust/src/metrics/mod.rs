@@ -59,6 +59,24 @@ pub struct RunMetrics {
     pub migration_secs: f64,
     /// Most recent per-server utilization snapshot (diagnostics).
     pub last_balance_snapshot: Vec<f64>,
+    // -- chaos / robustness (docs/FAULTS.md) --------------------------------
+    /// Crash-voided tasks re-queued through the retry path.
+    pub task_retries: u64,
+    /// Partial-progress seconds vaporized by crashes.
+    pub lost_work_secs: f64,
+    /// Tasks that completed after at least one crash-voided attempt.
+    pub recovered_tasks: u64,
+    /// Crash windows actually applied to servers during the run.
+    pub faults_injected: u64,
+    /// Health-aware quarantine windows opened.
+    pub quarantine_events: u64,
+    /// Server-slot observations by the fault sweep (denominator of
+    /// [`availability`](Self::availability); 0 outside chaos runs).
+    pub server_slots: u64,
+    /// Of those, observations where the server was crashed.
+    pub server_down_slots: u64,
+    /// Time-to-recover per fault: onset until the server accepts again.
+    pub ttr: Samples,
     prev_alloc: Option<Vec<f64>>,
 }
 
@@ -126,6 +144,23 @@ impl RunMetrics {
         self.operational_overhead += secs / 2.2e6;
     }
 
+    /// Record one fault's time-to-recover (seconds from crash onset until
+    /// the server accepted work again).
+    pub fn record_ttr(&mut self, secs: f64) {
+        self.ttr.add(secs);
+    }
+
+    /// Fleet availability over the run: the fraction of server-slot
+    /// observations where the server was not crashed. `1.0` when the
+    /// chaos layer never observed the fleet (chaos-free runs).
+    pub fn availability(&self) -> f64 {
+        if self.server_slots == 0 {
+            1.0
+        } else {
+            1.0 - self.server_down_slots as f64 / self.server_slots as f64
+        }
+    }
+
     pub fn drop_rate(&self) -> f64 {
         if self.tasks_total == 0 {
             0.0
@@ -147,16 +182,30 @@ impl RunMetrics {
     }
 
     /// One-line paper-style row. Non-default scenarios are tagged so
-    /// `simulate --scenario` output is self-describing.
+    /// `simulate --scenario` output is self-describing, and chaos runs
+    /// append their availability/retry/lost-work segment (absent on
+    /// chaos-free runs, keeping the classic row byte-stable).
     pub fn row(&mut self) -> String {
         let scenario = if self.scenario.is_empty() || self.scenario == "diurnal" {
             String::new()
         } else {
             format!(" scenario={}", self.scenario)
         };
+        let chaos = if self.server_slots > 0 {
+            format!(
+                " avail={:.4} retries={} lost={:.1}s recovered={} ttr={:.0}s",
+                self.availability(),
+                self.task_retries,
+                self.lost_work_secs,
+                self.recovered_tasks,
+                self.ttr.mean(),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{:<10} {:<8} resp={:>6.2}s (wait {:>5.2} / inf {:>5.2} / net {:>5.3}) \
-             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}% mig={}{}",
+             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}% mig={}{}{}",
             self.scheduler,
             self.topology,
             self.response.mean(),
@@ -168,7 +217,8 @@ impl RunMetrics {
             self.operational_overhead,
             100.0 * self.drop_rate(),
             self.migrations,
-            scenario
+            scenario,
+            chaos
         )
     }
 }

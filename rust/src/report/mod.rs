@@ -32,17 +32,27 @@ pub fn run_matrix(
 }
 
 /// Format the Fig 8/9/10/11 comparison table for a set of finished runs.
+/// Chaos runs (any run the fault sweep observed) grow availability /
+/// retry / lost-work columns; the classic table is byte-stable otherwise.
 pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
+    let chaos = runs.iter().any(|m| m.server_slots > 0);
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<12} {:<9} {:>9} {:>8} {:>8} {:>8} {:>7} {:>11} {:>9} {:>7} {:>6}\n",
+        "{:<12} {:<9} {:>9} {:>8} {:>8} {:>8} {:>7} {:>11} {:>9} {:>7} {:>6}",
         "scheduler", "topology", "resp(s)", "wait(s)", "inf(s)", "net(s)", "LB",
         "power($)", "overhead", "drop%", "migr"
     ));
+    if chaos {
+        out.push_str(&format!(
+            " {:>7} {:>7} {:>9} {:>7}",
+            "avail", "retries", "lost(s)", "ttr(s)"
+        ));
+    }
+    out.push('\n');
     for m in runs.iter_mut() {
         out.push_str(&format!(
             "{:<12} {:<9} {:>9.2} {:>8.2} {:>8.2} {:>8.3} {:>7.3} {:>11.1} {:>9.2} {:>7.2} \
-             {:>6}\n",
+             {:>6}",
             m.scheduler,
             m.topology,
             m.response.mean(),
@@ -55,6 +65,16 @@ pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
             100.0 * m.drop_rate(),
             m.migrations,
         ));
+        if chaos {
+            out.push_str(&format!(
+                " {:>7.4} {:>7} {:>9.1} {:>7.0}",
+                m.availability(),
+                m.task_retries,
+                m.lost_work_secs,
+                m.ttr.mean(),
+            ));
+        }
+        out.push('\n');
     }
     out
 }
@@ -82,7 +102,16 @@ pub fn run_to_json(m: &mut RunMetrics) -> Json {
         .set("model_switches", m.model_switches)
         .set("server_activations", m.server_activations)
         .set("migrations", m.migrations)
-        .set("migration_secs", m.migration_secs);
+        .set("migration_secs", m.migration_secs)
+        // Chaos / robustness metrics (docs/FAULTS.md). All-zero (and
+        // availability 1.0) on chaos-free runs.
+        .set("availability", m.availability())
+        .set("task_retries", m.task_retries)
+        .set("lost_work_secs", m.lost_work_secs)
+        .set("recovered_tasks", m.recovered_tasks)
+        .set("faults_injected", m.faults_injected)
+        .set("quarantine_events", m.quarantine_events)
+        .set("mean_ttr_s", m.ttr.mean());
     let cdf = m.lb_per_slot.cdf(20);
     let mut arr = Json::Arr(vec![]);
     for (v, q) in cdf {
@@ -146,5 +175,28 @@ mod tests {
         let j = run_to_json(&mut m).to_string_pretty();
         assert!(j.contains("p95_response_s"));
         assert!(j.contains("lb_cdf"));
+    }
+
+    #[test]
+    fn json_always_carries_chaos_keys() {
+        let mut m = run();
+        let j = run_to_json(&mut m).to_string_pretty();
+        assert!(j.contains("availability"));
+        assert!(j.contains("task_retries"));
+        assert!(j.contains("lost_work_secs"));
+        assert!(j.contains("mean_ttr_s"));
+    }
+
+    #[test]
+    fn table_grows_chaos_columns_only_for_chaos_runs() {
+        let mut runs = vec![run(), run()];
+        let plain = comparison_table(&mut runs);
+        assert!(!plain.contains("avail"), "chaos-free table must be classic");
+        runs[0].server_slots = 100;
+        runs[0].server_down_slots = 5;
+        runs[0].task_retries = 3;
+        let chaos = comparison_table(&mut runs);
+        assert!(chaos.contains("avail"));
+        assert!(chaos.contains("0.9500"));
     }
 }

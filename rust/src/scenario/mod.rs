@@ -12,13 +12,27 @@
 //! <path>` replays a recorded CSV trace.
 
 use crate::config::{Table, Value, WorkloadConfig};
+use crate::faults::FaultProfile;
 use crate::workload::combinators::{
     FlashCrowd, Mix, RateScale, RegionalDrift, Surge, SurgeWindow, WeeklySeasonal,
 };
 use crate::workload::{Constant, Diurnal, FailureEvent, TraceReplay, WorkloadSource};
 
 /// Registry scenario names (`trace:<path>` is additionally accepted).
-pub const REGISTRY: [&str; 5] = ["diurnal", "surge", "flash-crowd", "regional-failure", "weekly"];
+pub const REGISTRY: [&str; 8] = [
+    "diurnal",
+    "surge",
+    "flash-crowd",
+    "regional-failure",
+    "weekly",
+    "chaos-crash",
+    "brownout",
+    "flaky-network",
+];
+
+/// The chaos subset of [`REGISTRY`]: scenarios that carry a
+/// [`FaultProfile`] (see `docs/FAULTS.md`).
+pub const CHAOS_REGISTRY: [&str; 3] = ["chaos-crash", "brownout", "flaky-network"];
 
 /// Base workload source of a scenario.
 #[derive(Clone, Debug, PartialEq)]
@@ -68,6 +82,10 @@ pub struct Scenario {
     /// Combinator layers, applied base-outward in order.
     pub layers: Vec<LayerSpec>,
     pub failures: Vec<FailureSpec>,
+    /// Stochastic fault-injection profile (chaos layer). `None` disables
+    /// chaos entirely; the engine resolves a [`FaultProfile`] into a
+    /// deterministic per-run schedule (see `docs/FAULTS.md`).
+    pub faults: Option<FaultProfile>,
 }
 
 impl Default for Scenario {
@@ -84,6 +102,7 @@ impl Scenario {
             base: BaseSpec::Diurnal,
             layers: Vec::new(),
             failures: Vec::new(),
+            faults: None,
         }
     }
 
@@ -96,6 +115,7 @@ impl Scenario {
                 base: BaseSpec::Trace { path: path.to_string() },
                 layers: Vec::new(),
                 failures: Vec::new(),
+                faults: None,
             });
         }
         Ok(match name {
@@ -111,6 +131,7 @@ impl Scenario {
                     ],
                 }],
                 failures: Vec::new(),
+                faults: None,
             },
             // Viral event in one region: 4x peak, sharp ramp, slow decay.
             "flash-crowd" => Scenario {
@@ -125,6 +146,7 @@ impl Scenario {
                     region: Some(0),
                 }],
                 failures: Vec::new(),
+                faults: None,
             },
             // Fig 4's critical regional failure: the three highest-demand
             // regions go dark early in the run.
@@ -137,6 +159,7 @@ impl Scenario {
                     start_slot: 2,
                     duration_slots: 6,
                 }],
+                faults: None,
             },
             // Weekly seasonality stacked with rotating regional drift —
             // a two-layer combinator stack.
@@ -148,6 +171,34 @@ impl Scenario {
                     LayerSpec::RegionalDrift { period: 160.0, amp: 0.3 },
                 ],
                 failures: Vec::new(),
+                faults: None,
+            },
+            // Chaos registry (docs/FAULTS.md): the diurnal baseline with a
+            // deterministic fault-injection profile layered on top.
+            "chaos-crash" => Scenario {
+                name: "chaos-crash".into(),
+                base: BaseSpec::Diurnal,
+                layers: Vec::new(),
+                failures: Vec::new(),
+                faults: Some(FaultProfile::crash()),
+            },
+            // Partial regional brownout: half of one shard's servers share
+            // a crash window, plus rare background crashes.
+            "brownout" => Scenario {
+                name: "brownout".into(),
+                base: BaseSpec::Diurnal,
+                layers: Vec::new(),
+                failures: Vec::new(),
+                faults: Some(FaultProfile::brownout()),
+            },
+            // Transient inter-region link degradation + stragglers + rare
+            // crashes — the network-dominated failure mode.
+            "flaky-network" => Scenario {
+                name: "flaky-network".into(),
+                base: BaseSpec::Diurnal,
+                layers: Vec::new(),
+                failures: Vec::new(),
+                faults: Some(FaultProfile::flaky_network()),
             },
             other => anyhow::bail!(
                 "unknown scenario {other:?}; expected one of {REGISTRY:?} or trace:<path>"
@@ -169,6 +220,13 @@ impl Scenario {
     ///   (base overrides, layers/failures append after the registry's) —
     ///   a registry stack is never silently dropped; any other `name` is
     ///   just the run's label.
+    /// * chaos keys (see `docs/FAULTS.md`): `chaos =
+    ///   "crash"|"brownout"|"flaky-network"` selects a fault-profile
+    ///   preset, then `chaos_mtbf`, `chaos_mttr`, `chaos_retry_budget`,
+    ///   `chaos_backoff` and `chaos_health_aware` override individual
+    ///   knobs of whichever profile is in effect (the preset, a chaos
+    ///   registry scenario's profile, or — when only overrides are given —
+    ///   the crash preset).
     ///
     /// Absent all of these, the diurnal default applies.
     pub fn from_config_table(t: &Table) -> anyhow::Result<Scenario> {
@@ -189,6 +247,12 @@ impl Scenario {
             "flash_crowd",
             "failures",
             "fail_top",
+            "chaos",
+            "chaos_mtbf",
+            "chaos_mttr",
+            "chaos_retry_budget",
+            "chaos_backoff",
+            "chaos_health_aware",
         ];
         let has_custom = custom_keys.iter().any(|k| t.get(&format!("scenario.{k}")).is_some());
         let named = t.get("scenario.name").and_then(Value::as_str);
@@ -206,6 +270,7 @@ impl Scenario {
             base: BaseSpec::Diurnal,
             layers: Vec::new(),
             failures: Vec::new(),
+            faults: None,
         });
         if t.get("scenario.base").is_some() {
             sc.base = match t.str_or("scenario.base", "diurnal").as_str() {
@@ -314,6 +379,42 @@ impl Scenario {
 
         sc.layers.extend(layers);
         sc.failures.extend(failures);
+
+        if let Some(v) = t.get("scenario.chaos") {
+            let preset = v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("scenario.chaos must be a string preset name")
+            })?;
+            sc.faults = Some(match preset {
+                "crash" | "chaos-crash" => FaultProfile::crash(),
+                "brownout" => FaultProfile::brownout(),
+                "flaky-network" => FaultProfile::flaky_network(),
+                other => anyhow::bail!(
+                    "unknown scenario.chaos preset {other:?}; \
+                     expected crash|brownout|flaky-network"
+                ),
+            });
+        }
+        let has_chaos_override = [
+            "chaos_mtbf",
+            "chaos_mttr",
+            "chaos_retry_budget",
+            "chaos_backoff",
+            "chaos_health_aware",
+        ]
+        .iter()
+        .any(|k| t.get(&format!("scenario.{k}")).is_some());
+        if has_chaos_override {
+            // Overrides refine the profile in effect; absent any, they
+            // refine the crash preset.
+            let mut p = sc.faults.take().unwrap_or_else(FaultProfile::crash);
+            p.crash_mtbf_secs = t.f64_or("scenario.chaos_mtbf", p.crash_mtbf_secs);
+            p.crash_mttr_secs = t.f64_or("scenario.chaos_mttr", p.crash_mttr_secs);
+            p.retry_budget =
+                t.u64_or("scenario.chaos_retry_budget", p.retry_budget as u64) as u32;
+            p.retry_backoff_secs = t.f64_or("scenario.chaos_backoff", p.retry_backoff_secs);
+            p.health_aware = t.bool_or("scenario.chaos_health_aware", p.health_aware);
+            sc.faults = Some(p);
+        }
         Ok(sc)
     }
 
@@ -380,6 +481,11 @@ impl Scenario {
             };
             if duration == 0 {
                 errs.push("scenario failure duration_slots must be > 0".to_string());
+            }
+        }
+        if let Some(p) = &self.faults {
+            if let Err(e) = p.validate() {
+                errs.push(e);
             }
         }
         if errs.is_empty() {
@@ -590,6 +696,40 @@ mod tests {
         let sc = Scenario::from_config_table(&t).unwrap();
         assert_eq!(sc.base, BaseSpec::Constant { rate: 9.0 });
         assert_eq!(sc.layers.len(), 1, "surge layers kept alongside base override");
+    }
+
+    #[test]
+    fn chaos_registry_resolves_with_profiles() {
+        for name in CHAOS_REGISTRY {
+            let sc = Scenario::by_name(name).unwrap();
+            assert_eq!(sc.name, name);
+            assert!(sc.faults.is_some(), "{name} must carry a fault profile");
+            sc.validate().unwrap();
+        }
+        assert!(Scenario::by_name("diurnal").unwrap().faults.is_none());
+        assert!(Scenario::by_name("surge").unwrap().faults.is_none());
+    }
+
+    #[test]
+    fn chaos_config_keys_parse_and_override() {
+        let t = Table::parse(
+            "[scenario]\nchaos = \"brownout\"\nchaos_mtbf = 800.0\nchaos_health_aware = false",
+        )
+        .unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        let p = sc.faults.expect("chaos preset must materialize a profile");
+        assert!((p.crash_mtbf_secs - 800.0).abs() < 1e-12, "override applies");
+        assert!(!p.health_aware);
+        assert!(p.brownout_frac > 0.0, "brownout preset fields kept");
+        // Overrides without a preset refine the crash profile.
+        let t = Table::parse("[scenario]\nchaos_retry_budget = 5").unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        let p = sc.faults.unwrap();
+        assert_eq!(p.retry_budget, 5);
+        assert!(p.crash_mtbf_secs > 0.0);
+        // Unknown preset is an error, not a silent no-op.
+        let t = Table::parse("[scenario]\nchaos = \"nope\"").unwrap();
+        assert!(Scenario::from_config_table(&t).is_err());
     }
 
     #[test]

@@ -207,6 +207,11 @@ pub struct SlotOutcome {
     pub dropped: usize,
     pub buffered: usize,
     pub migrated: usize,
+    /// Health-degraded `(region, server)` pairs observed by the chaos
+    /// layer this slot (down, quarantined, or below the health floor) —
+    /// health-aware schedulers treat these as rescue-migration sources.
+    /// Empty outside chaos runs. See `docs/FAULTS.md`.
+    pub degraded: Vec<(usize, usize)>,
 }
 
 pub trait Scheduler {

@@ -73,6 +73,11 @@ pub struct TortaScheduler {
     /// EWMA of the realized per-slot switching cost fed back by the engine
     /// (diagnostic / RL reward signal).
     pub realized_switch_ewma: f64,
+    /// Health-degraded `(region, server)` pairs echoed by the engine's
+    /// chaos sweep last slot (`SlotOutcome::degraded`). Rescue-migration
+    /// sources and excluded as migration destinations; empty outside
+    /// chaos runs. See `docs/FAULTS.md`.
+    degraded: Vec<(usize, usize)>,
     /// Shard-pipeline worker count for the per-region matching fan-out
     /// (`torta.threads`, resolved through `util::pool::resolve_threads`;
     /// `1` = the exact sequential legacy path). Bit-identical results for
@@ -152,6 +157,7 @@ impl TortaScheduler {
             queue_estimate: vec![0.0; r],
             migrate_backlog_secs: cfg.migrate_backlog_secs,
             realized_switch_ewma: 0.0,
+            degraded: Vec::new(),
             threads: crate::util::pool::resolve_threads(cfg.threads),
             name: match mode {
                 TortaMode::Full => "torta",
@@ -238,12 +244,14 @@ impl TortaScheduler {
 
     /// DriftSched-style preemptive rebalancing: emit `Migrate` actions for
     /// queued-but-unstarted reservations whose server backlog exceeds
-    /// `torta.migrate_backlog_secs`, or whose region failed (the rescue
-    /// window before the reservation would have started). Destinations are
-    /// chosen least-backlogged-first over a single accepting-server
-    /// snapshot, with a local estimate update so consecutive migrations do
-    /// not dogpile one server; a threshold-triggered move must be a strict
-    /// improvement (< half the source backlog after adding the task).
+    /// `torta.migrate_backlog_secs`, whose region failed, or whose server
+    /// the chaos layer flagged health-degraded (the rescue window before
+    /// the reservation would have started — see `docs/FAULTS.md`).
+    /// Destinations are chosen least-backlogged-first over a single
+    /// accepting-and-healthy-server snapshot, with a local estimate update
+    /// so consecutive migrations do not dogpile one server; a
+    /// threshold-triggered move must be a strict improvement (< half the
+    /// source backlog after adding the task), while rescues always move.
     fn emit_migrations(
         &self,
         fleet: &Fleet,
@@ -252,27 +260,32 @@ impl TortaScheduler {
         actions: &mut Vec<Action>,
     ) {
         let threshold = self.migrate_backlog_secs;
-        if threshold <= 0.0 || pending.is_empty() {
+        let threshold_on = threshold > 0.0;
+        if pending.is_empty() || (!threshold_on && self.degraded.is_empty()) {
             return;
         }
         // Trigger scan first — O(pending) source-server reads only. The
         // full destination snapshot (a second fleet sweep on top of the
         // prelude's single cached pass) is built lazily, so slots with no
-        // overloaded/failed source pay nothing extra (§Perf fleet caches).
+        // overloaded/failed/degraded source pay nothing extra (§Perf fleet
+        // caches).
         let triggered: Vec<(&PendingView, bool, f64)> = pending
             .iter()
             .map(|p| {
-                let src_failed = fleet.regions[p.region].failed;
-                let src_backlog = if src_failed
+                let rescue = fleet.regions[p.region].failed
+                    || self.degraded.contains(&(p.region, p.server));
+                let src_backlog = if rescue
                     || p.server >= fleet.regions[p.region].servers.len()
                 {
                     f64::INFINITY
                 } else {
                     fleet.regions[p.region].servers[p.server].backlog_secs(now)
                 };
-                (p, src_failed, src_backlog)
+                (p, rescue, src_backlog)
             })
-            .filter(|&(_, src_failed, src_backlog)| src_failed || src_backlog > threshold)
+            .filter(|&(_, rescue, src_backlog)| {
+                rescue || (threshold_on && src_backlog > threshold)
+            })
             .collect();
         if triggered.is_empty() {
             return;
@@ -284,7 +297,7 @@ impl TortaScheduler {
                 continue;
             }
             for (si, s) in reg.servers.iter().enumerate() {
-                if s.accepting(now) {
+                if s.accepting(now) && !self.degraded.contains(&(ri, si)) {
                     cands.push((ri, si, s.backlog_secs(now), s.lanes() as f64));
                 }
             }
@@ -292,7 +305,7 @@ impl TortaScheduler {
         if cands.is_empty() {
             return;
         }
-        for (p, src_failed, src_backlog) in triggered {
+        for (p, rescue, src_backlog) in triggered {
             let mut best: Option<usize> = None;
             for (ci, c) in cands.iter().enumerate() {
                 if c.0 == p.region && c.1 == p.server {
@@ -307,7 +320,7 @@ impl TortaScheduler {
                 None => continue,
             };
             let added = p.service_secs / cands[bi].3;
-            let improves = src_failed || cands[bi].2 + added < src_backlog * 0.5;
+            let improves = rescue || cands[bi].2 + added < src_backlog * 0.5;
             if !improves {
                 continue;
             }
@@ -549,6 +562,9 @@ impl Scheduler for TortaScheduler {
         // signal (negative latency/switching terms; see docs/API.md).
         self.realized_switch_ewma =
             0.9 * self.realized_switch_ewma + 0.1 * outcome.switching_cost_frob;
+        // Chaos health echo: degraded servers become rescue-migration
+        // sources (and are shunned as destinations) next slot.
+        self.degraded = outcome.degraded.clone();
     }
 }
 
@@ -632,6 +648,38 @@ mod tests {
         for (_, region, _) in &plan.assignments {
             assert!(*region != 0 && *region != 1);
         }
+    }
+
+    #[test]
+    fn degraded_server_triggers_rescue_migration() {
+        let (ctx, mut fleet, mut s) = setup(TortaMode::Native);
+        // Engine echo: the chaos sweep flagged server (0, 0) as degraded.
+        let outcome = SlotOutcome { degraded: vec![(0, 0)], ..SlotOutcome::default() };
+        s.feedback(&outcome);
+        let pending = [PendingView {
+            task_id: 7,
+            region: 0,
+            server: 0,
+            start_secs: 100.0,
+            service_secs: 30.0,
+            origin: 0,
+            arrival_secs: 0.0,
+            deadline_secs: 500.0,
+        }];
+        let ts = tasks(ctx.topo.n, 5);
+        let decision = s.decide(&ctx, &mut fleet, ts, &pending, 0, 0.0);
+        let migrated: Vec<_> = decision
+            .actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Migrate { task_id, from, to } => Some((*task_id, *from, *to)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(migrated.len(), 1, "degraded source must be rescued");
+        assert_eq!(migrated[0].0, 7);
+        assert_eq!(migrated[0].1, (0, 0));
+        assert_ne!(migrated[0].2, (0, 0), "rescue must leave the degraded server");
     }
 
     #[test]

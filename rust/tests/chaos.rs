@@ -1,0 +1,246 @@
+//! Chaos-layer integration tests (docs/FAULTS.md): the three registry
+//! chaos scenarios end-to-end for every suite scheduler, task retry /
+//! recovery accounting, the health-aware vs quarantine-less TORTA A/B,
+//! and the `with_failures` composition regression (scenario-provided
+//! failure events and explicitly injected ones must BOTH apply).
+
+use torta::config::ExperimentConfig;
+use torta::faults::FaultProfile;
+use torta::metrics::RunMetrics;
+use torta::scenario::{Scenario, CHAOS_REGISTRY};
+use torta::sim::{run_experiment, topo_salt, Simulation};
+use torta::workload::FailureEvent;
+
+const SCHEDULERS: [&str; 4] = ["torta", "skylb", "sdib", "rr"];
+const SLOTS: usize = 28;
+
+fn chaos_cfg(scheduler: &str, scenario: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = scheduler.into();
+    cfg.slots = SLOTS;
+    cfg.torta.use_pjrt = false; // hermetic: no artifact dependence
+    cfg.scenario = Scenario::by_name(scenario).unwrap();
+    cfg
+}
+
+/// Acceptance: all three chaos scenarios run end-to-end for all four
+/// schedulers, with nonzero fault / retry / lost-work metering and an
+/// availability strictly below 1.0 (every preset has a crash component,
+/// and crash windows are longer than a slot, so the boundary sweep
+/// always observes down servers).
+#[test]
+fn chaos_scenarios_end_to_end_all_schedulers() {
+    for scenario in CHAOS_REGISTRY {
+        for scheduler in SCHEDULERS {
+            let cfg = chaos_cfg(scheduler, scenario);
+            let m = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{scheduler}@{scenario} failed: {e}"));
+            let label = format!("{scheduler}@{scenario}");
+            assert!(m.tasks_total > 0, "{label}: empty run proves nothing");
+            assert!(m.server_slots > 0, "{label}: fault sweep never ran");
+            assert!(m.faults_injected > 0, "{label}: no fault ever fired");
+            assert!(m.server_down_slots > 0, "{label}: no down server observed");
+            let avail = m.availability();
+            assert!(avail < 1.0, "{label}: availability must dip below 1.0");
+            assert!(avail > 0.5, "{label}: availability {avail} implausibly low");
+            assert!(m.task_retries > 0, "{label}: crashes never re-queued work");
+            assert!(m.lost_work_secs > 0.0, "{label}: no partial progress lost");
+            assert!(m.ttr.len() > 0, "{label}: no repair ever completed");
+        }
+    }
+}
+
+/// Chaos runs are reproducible run-to-run: the schedule is resolved up
+/// front from `(profile, fleet shape, horizon, seed)` and every mutation
+/// happens in the sequential boundary sweep.
+#[test]
+fn chaos_run_is_deterministic_across_runs() {
+    let cfg = chaos_cfg("torta", "flaky-network");
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.tasks_total, b.tasks_total);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.task_retries, b.task_retries);
+    assert_eq!(a.quarantine_events, b.quarantine_events);
+    assert_eq!(a.lost_work_secs.to_bits(), b.lost_work_secs.to_bits());
+    assert_eq!(a.response.mean().to_bits(), b.response.mean().to_bits());
+    assert_eq!(a.network.mean().to_bits(), b.network.mean().to_bits());
+}
+
+/// Acceptance A/B: under a heavy straggler profile (10x service-time
+/// inflation on 40% of the fleet), health-aware TORTA — EWMA health
+/// scoring, quarantine, degraded-server rescue — must beat the
+/// quarantine-less run (`health_aware: false`, the only knob changed;
+/// the fault schedule itself is bit-identical) on mean response.
+#[test]
+fn health_aware_quarantine_beats_naive_under_stragglers() {
+    let run = |health_aware: bool| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = "torta".into();
+        cfg.slots = 30;
+        cfg.torta.use_pjrt = false;
+        let mut sc = Scenario::by_name("diurnal").unwrap();
+        sc.faults = Some(FaultProfile {
+            straggler_mtbf_secs: 300.0,
+            straggler_mttr_secs: 600.0,
+            straggler_frac: 0.4,
+            straggler_slowdown: 10.0,
+            health_aware,
+            ..FaultProfile::default()
+        });
+        cfg.scenario = sc;
+        run_experiment(&cfg).unwrap()
+    };
+    let naive = run(false);
+    let aware = run(true);
+    assert_eq!(
+        naive.quarantine_events, 0,
+        "health_aware=false must never quarantine"
+    );
+    assert!(
+        aware.quarantine_events > 0,
+        "stragglers this severe must trip the health floor"
+    );
+    assert!(
+        aware.response.mean() < naive.response.mean(),
+        "health-aware TORTA must beat the quarantine-less baseline under \
+         heavy stragglers: aware={} naive={}",
+        aware.response.mean(),
+        naive.response.mean()
+    );
+}
+
+/// Conservation under chaos: generated == recorded (served + dropped) +
+/// still-buffered, where the backlog includes the retry queue; `finish`
+/// must drain the in-flight list. Also bounds total retries by the
+/// per-task budget in aggregate.
+#[test]
+fn task_conservation_and_retry_budget_under_chaos() {
+    for scenario in CHAOS_REGISTRY {
+        let cfg = chaos_cfg("rr", scenario);
+        let mut sim = Simulation::new(cfg.clone()).unwrap();
+        let seed = cfg.seed ^ topo_salt(&sim.ctx.topo.name);
+        let n = sim.ctx.topo.n;
+        let mut wl = cfg
+            .scenario
+            .build_workload(&cfg.workload, n, seed, cfg.slot_secs)
+            .unwrap();
+        let mut twin = cfg
+            .scenario
+            .build_workload(&cfg.workload, n, seed, cfg.slot_secs)
+            .unwrap();
+        let mut generated = 0u64;
+        for slot in 0..cfg.slots {
+            generated += twin.slot_tasks(slot, cfg.slot_secs).len() as u64;
+        }
+        let mut sched = torta::scheduler::build(&cfg.scheduler, &sim.ctx, &cfg).unwrap();
+        let m = sim.run(wl.as_mut(), sched.as_mut());
+        assert_eq!(
+            m.tasks_total + sim.backlog_len() as u64,
+            generated,
+            "{scenario}: conservation violated under chaos"
+        );
+        assert_eq!(sim.inflight_len(), 0, "{scenario}: finish left in-flight work");
+        let budget = cfg.scenario.faults.as_ref().unwrap().retry_budget as u64;
+        assert!(
+            m.task_retries <= generated * budget,
+            "{scenario}: {} retries exceed {} tasks x budget {}",
+            m.task_retries,
+            generated,
+            budget
+        );
+    }
+}
+
+/// A zero retry budget means lost work is dropped outright: no retries,
+/// no recoveries, strictly more drops than the same run ever re-queues.
+#[test]
+fn zero_retry_budget_drops_lost_work_outright() {
+    let mut cfg = chaos_cfg("rr", "chaos-crash");
+    cfg.scenario.faults.as_mut().unwrap().retry_budget = 0;
+    let m = run_experiment(&cfg).unwrap();
+    assert!(m.faults_injected > 0, "crash preset must fire");
+    assert_eq!(m.task_retries, 0, "budget 0 must never re-queue");
+    assert_eq!(m.recovered_tasks, 0, "nothing retried, nothing recovered");
+    assert!(m.tasks_dropped > 0, "harvested work must be dropped instead");
+}
+
+/// Regression (docs/API.md): `with_failures` EXTENDS the scenario's own
+/// failure events instead of replacing them, and `clear_failures` wipes
+/// both sources. The pre-fix behavior silently discarded the
+/// regional-failure scenario's darkened regions whenever a caller added
+/// an explicit event.
+#[test]
+fn with_failures_composes_with_scenario_failures() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = "rr".into();
+    cfg.slots = 10;
+    cfg.workload.base_rate = 10.0;
+    cfg.scenario = Scenario::by_name("regional-failure").unwrap();
+
+    // Step slots 0..4 and report which regions are dark at slot 3 (inside
+    // the scenario's slot 2..8 failure window).
+    let failed_at_slot_3 = |extra: Option<FailureEvent>| -> (Vec<usize>, usize) {
+        let mut sim = Simulation::new(cfg.clone()).unwrap();
+        if let Some(f) = extra {
+            sim = sim.with_failures(vec![f]);
+        }
+        let seed = cfg.seed ^ topo_salt(&sim.ctx.topo.name);
+        let n = sim.ctx.topo.n;
+        let mut wl = cfg
+            .scenario
+            .build_workload(&cfg.workload, n, seed, cfg.slot_secs)
+            .unwrap();
+        let mut sched = torta::scheduler::build(&cfg.scheduler, &sim.ctx, &cfg).unwrap();
+        let mut metrics = RunMetrics::new("rr", "abilene");
+        for slot in 0..4 {
+            sim.step(slot, wl.as_mut(), sched.as_mut(), &mut metrics);
+        }
+        let failed: Vec<usize> = sim
+            .fleet
+            .regions
+            .iter()
+            .filter(|r| r.failed)
+            .map(|r| r.id)
+            .collect();
+        (failed, n)
+    };
+
+    let (base, n) = failed_at_slot_3(None);
+    assert_eq!(base.len(), 3, "regional-failure darkens 3 regions: {base:?}");
+
+    let extra_region = (0..n)
+        .find(|r| !base.contains(r))
+        .expect("some region survives the scenario");
+    let (composed, _) = failed_at_slot_3(Some(FailureEvent {
+        region: extra_region,
+        start_slot: 2,
+        duration_slots: 6,
+    }));
+    let mut want = base.clone();
+    want.push(extra_region);
+    want.sort_unstable();
+    let mut got = composed;
+    got.sort_unstable();
+    assert_eq!(
+        got, want,
+        "with_failures must EXTEND the scenario failure set, not replace it"
+    );
+
+    // clear_failures drops the scenario-provided events too.
+    let mut sim = Simulation::new(cfg.clone()).unwrap().clear_failures();
+    let seed = cfg.seed ^ topo_salt(&sim.ctx.topo.name);
+    let mut wl = cfg
+        .scenario
+        .build_workload(&cfg.workload, n, seed, cfg.slot_secs)
+        .unwrap();
+    let mut sched = torta::scheduler::build(&cfg.scheduler, &sim.ctx, &cfg).unwrap();
+    let mut metrics = RunMetrics::new("rr", "abilene");
+    for slot in 0..4 {
+        sim.step(slot, wl.as_mut(), sched.as_mut(), &mut metrics);
+    }
+    assert!(
+        sim.fleet.regions.iter().all(|r| !r.failed),
+        "clear_failures must wipe scenario-provided events"
+    );
+}

@@ -1,5 +1,5 @@
 //! Golden-metrics regression: key `RunMetrics` fields for all four suite
-//! schedulers x three registry scenarios at a short horizon, compared
+//! schedulers x four registry scenarios at a short horizon, compared
 //! BIT-FOR-BIT against a committed fixture — so future refactors diff
 //! against bits, not vibes.
 //!
@@ -33,8 +33,10 @@ use torta::util::json::Json;
 
 const SCHEDULERS: [&str; 4] = ["torta", "skylb", "sdib", "rr"];
 /// Scenarios chosen so their event windows fire inside [`SLOTS`]:
-/// regional-failure is dark over slots 2-8, flash-crowd ramps at 24.
-const SCENARIOS: [&str; 3] = ["diurnal", "regional-failure", "flash-crowd"];
+/// regional-failure is dark over slots 2-8, flash-crowd ramps at 24, and
+/// chaos-crash pins the fault-injection/retry path (docs/FAULTS.md) to
+/// history too.
+const SCENARIOS: [&str; 4] = ["diurnal", "regional-failure", "flash-crowd", "chaos-crash"];
 const SLOTS: usize = 28;
 
 fn fixture_path() -> PathBuf {
@@ -56,7 +58,14 @@ fn run_one(scheduler: &str, scenario: &str) -> Json {
         .set("operational_overhead", m.operational_overhead)
         .set("migrations", m.migrations)
         .set("tasks_total", m.tasks_total)
-        .set("tasks_dropped", m.tasks_dropped);
+        .set("tasks_dropped", m.tasks_dropped)
+        // Chaos fields are all-zero (availability 1.0) on chaos-free
+        // rows, so pinning them is free there and load-bearing on the
+        // chaos-crash rows.
+        .set("task_retries", m.task_retries)
+        .set("lost_work_secs", m.lost_work_secs)
+        .set("faults_injected", m.faults_injected)
+        .set("availability", m.availability());
     row
 }
 
@@ -140,6 +149,10 @@ fn metrics_match_golden_fixture() {
             "migrations",
             "tasks_total",
             "tasks_dropped",
+            "task_retries",
+            "lost_work_secs",
+            "faults_injected",
+            "availability",
         ] {
             let g = got.get(field).and_then(Json::as_f64);
             let e = exp.get(field).and_then(Json::as_f64);

@@ -21,9 +21,9 @@ const SCHEDULERS: [&str; 4] = ["torta", "skylb", "sdib", "rr"];
 const THREADS: [usize; 3] = [1, 2, 4];
 
 /// Fleet end-state fingerprint: every server's counters, lane backlog and
-/// utilization bits, power state and model residency, in region/server
-/// order.
-fn fleet_fp(fleet: &Fleet, t: f64) -> Vec<(u64, u64, u64, u64, u64, u64, u32)> {
+/// utilization bits, power state, model residency and chaos state (down
+/// flag, health EWMA bits), in region/server order.
+fn fleet_fp(fleet: &Fleet, t: f64) -> Vec<(u64, u64, u64, u64, u64, u64, u32, u64, u64)> {
     let mut fp = Vec::new();
     for shard in &fleet.regions {
         for s in &shard.servers {
@@ -40,6 +40,8 @@ fn fleet_fp(fleet: &Fleet, t: f64) -> Vec<(u64, u64, u64, u64, u64, u64, u32)> {
                 s.utilization(t).to_bits(),
                 state,
                 s.loaded_model.unwrap_or(u32::MAX),
+                s.down as u64,
+                s.health.to_bits(),
             ));
         }
     }
@@ -66,6 +68,17 @@ fn metrics_fp(m: &RunMetrics) -> Vec<(&'static str, u64)> {
         ("operational", m.operational_overhead.to_bits()),
         ("lb_slots", m.lb_per_slot.len() as u64),
         ("lb_mean", m.mean_lb().to_bits()),
+        // Chaos / robustness fields (docs/FAULTS.md) — all-zero on
+        // chaos-free runs, bit-covered on chaos ones.
+        ("task_retries", m.task_retries),
+        ("lost_work_secs", m.lost_work_secs.to_bits()),
+        ("recovered_tasks", m.recovered_tasks),
+        ("faults_injected", m.faults_injected),
+        ("quarantine_events", m.quarantine_events),
+        ("server_slots", m.server_slots),
+        ("server_down_slots", m.server_down_slots),
+        ("ttr_count", m.ttr.len() as u64),
+        ("ttr_mean", m.ttr.mean().to_bits()),
     ]
 }
 
@@ -82,7 +95,7 @@ fn run_cell(
     scenario: &str,
     slots: usize,
     threads: usize,
-) -> (RunMetrics, Vec<(u64, u64, u64, u64, u64, u64, u32)>) {
+) -> (RunMetrics, Vec<(u64, u64, u64, u64, u64, u64, u32, u64, u64)>) {
     let mut cfg = ExperimentConfig::default();
     cfg.scheduler = scheduler.into();
     cfg.slots = slots;
@@ -103,7 +116,7 @@ fn run_cell(
     (m, fleet_fp(&engine.fleet, end))
 }
 
-fn assert_cell_equivalent(scheduler: &str, scenario: &str, slots: usize) {
+fn assert_cell_equivalent(scheduler: &str, scenario: &str, slots: usize) -> RunMetrics {
     let (m1, f1) = run_cell(scheduler, scenario, slots, THREADS[0]);
     assert!(m1.tasks_total > 0, "{scheduler}@{scenario}: empty run proves nothing");
     for &threads in &THREADS[1..] {
@@ -112,6 +125,7 @@ fn assert_cell_equivalent(scheduler: &str, scenario: &str, slots: usize) {
         assert_metrics_bits(&m1, &mt, &label);
         assert_eq!(f1, ft, "{label}: fleet end state diverged");
     }
+    m1
 }
 
 /// Acceptance: RunMetrics + fleet end-state bit-identical across
@@ -133,6 +147,33 @@ fn bit_identical_across_thread_counts_flash_crowd() {
     for scheduler in SCHEDULERS {
         assert_cell_equivalent(scheduler, "flash-crowd", 26);
     }
+}
+
+/// Acceptance (docs/FAULTS.md): chaos runs inherit the determinism
+/// contract — the fault schedule is resolved before any fan-out and all
+/// chaos mutation happens in the sequential boundary sweep, so crashes,
+/// retry re-queues, stragglers and quarantines are bit-identical across
+/// `--threads 1/2/4`. The cell must actually observe faults, otherwise
+/// the equivalence is vacuous.
+#[test]
+fn bit_identical_across_thread_counts_chaos_crash() {
+    for scheduler in SCHEDULERS {
+        let m = assert_cell_equivalent(scheduler, "chaos-crash", 16);
+        assert!(m.server_slots > 0, "{scheduler}@chaos-crash: fault sweep never ran");
+        assert!(m.faults_injected > 0, "{scheduler}@chaos-crash: no crash fired");
+    }
+}
+
+/// Same contract on the other two chaos presets — flaky-network layers
+/// link degradation (the network-seconds multiplier crosses shard
+/// boundaries) and stragglers on top of crashes; brownout exercises the
+/// correlated partial-region outage.
+#[test]
+fn bit_identical_across_thread_counts_chaos_presets() {
+    let m = assert_cell_equivalent("torta", "flaky-network", 24);
+    assert!(m.faults_injected > 0, "flaky-network: no fault fired");
+    let m = assert_cell_equivalent("rr", "brownout", 24);
+    assert!(m.faults_injected > 0, "brownout: no fault fired");
 }
 
 /// Cross-shard migrations under the parallel pipeline: TORTA's
