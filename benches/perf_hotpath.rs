@@ -11,6 +11,12 @@
 //! `suite.save("perf_hotpath")` maintains `BENCH_perf_hotpath.json` in the
 //! working directory: re-running prints a delta column against the
 //! previous run — the before/after record for this PR's speedups.
+//!
+//! `--gate-shard-r N` runs ONLY the R=N shard-pipeline row and exits
+//! nonzero when its slot latency / tasks-per-second breach the
+//! accountability thresholds (see the gate block below) — CI's
+//! bench-smoke promotes the R=256 row from bench-JSON history to a hard
+//! gate this way (ROADMAP "fleet-scale CI gating").
 
 use std::path::Path;
 use std::time::Instant;
@@ -65,17 +71,65 @@ fn main() {
     // the job short; local runs default to the full R=128 sweep).
     let args: Vec<String> = std::env::args().collect();
     let mut max_r = usize::MAX;
+    let mut gate_r: Option<usize> = None;
+    let mut gate_slot_ms = 60_000.0f64;
+    let mut gate_tasks_per_sec = 200.0f64;
+    let parse_num = |s: &str, flag: &str| -> f64 {
+        s.parse().unwrap_or_else(|_| {
+            eprintln!("perf_hotpath: {flag} expects a number, got {s:?}");
+            std::process::exit(2);
+        })
+    };
     let mut i = 1;
     while i < args.len() {
-        if args[i] == "--max-r" && i + 1 < args.len() {
-            max_r = args[i + 1].parse().unwrap_or_else(|_| {
-                eprintln!("perf_hotpath: --max-r expects an integer, got {:?}", args[i + 1]);
-                std::process::exit(2);
-            });
-            i += 2;
-        } else {
-            i += 1;
+        match args[i].as_str() {
+            "--max-r" if i + 1 < args.len() => {
+                max_r = parse_num(&args[i + 1], "--max-r") as usize;
+                i += 2;
+            }
+            "--gate-shard-r" if i + 1 < args.len() => {
+                gate_r = Some(parse_num(&args[i + 1], "--gate-shard-r") as usize);
+                i += 2;
+            }
+            "--gate-slot-ms" if i + 1 < args.len() => {
+                gate_slot_ms = parse_num(&args[i + 1], "--gate-slot-ms");
+                i += 2;
+            }
+            "--gate-tasks-per-sec" if i + 1 < args.len() => {
+                gate_tasks_per_sec = parse_num(&args[i + 1], "--gate-tasks-per-sec");
+                i += 2;
+            }
+            _ => i += 1,
         }
+    }
+
+    // ---- Fleet-scale accountability gate (ROADMAP) ----------------------
+    // Runs only the requested shard-pipeline row and FAILS (exit 1) when
+    // its thresholds are breached, so an R=256 fleet-scale regression
+    // fails CI instead of living only in bench JSON. The thresholds are
+    // deliberately order-of-magnitude loose — shared-runner wall clocks
+    // are noisy, so the gate catches collapses while the bench-JSON delta
+    // column tracks drift. Override: --gate-slot-ms / --gate-tasks-per-sec.
+    if let Some(r) = gate_r {
+        let (fleet_scale, slots) = match r {
+            32 => (2.0, 8usize),
+            64 => (4.0, 8),
+            128 => (8.0, 6),
+            _ => (12.0, 4),
+        };
+        let (secs, n_servers, tasks) = shard_pipeline_run(r, fleet_scale, slots, 4);
+        let slot_ms = secs / slots as f64 * 1e3;
+        let tasks_per_sec = tasks as f64 / secs.max(1e-12);
+        println!(
+            "shard pipeline gate R={r} ({n_servers} servers): \
+             {slot_ms:.1} ms/slot (max {gate_slot_ms:.0}), \
+             {tasks_per_sec:.0} tasks/s (min {gate_tasks_per_sec:.0})"
+        );
+        if slot_ms > gate_slot_ms || tasks_per_sec < gate_tasks_per_sec {
+            eprintln!("perf_hotpath: shard pipeline gate FAILED at R={r}");
+            std::process::exit(1);
+        }
+        return;
     }
 
     let mut suite = BenchSuite::new("Perf — coordinator hot paths");
@@ -278,6 +332,11 @@ fn main() {
             &format!("shard pipeline slot latency R={r} ({n_servers} servers)"),
             par_secs / slots as f64 * 1e3,
             "ms/slot",
+        );
+        suite.metric(
+            &format!("shard pipeline throughput R={r} ({n_servers} servers)"),
+            par_tasks as f64 / par_secs.max(1e-12),
+            "tasks/s",
         );
     }
 

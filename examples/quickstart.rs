@@ -6,12 +6,15 @@
 //!
 //! `scenario` is any registry name — `diurnal` (default), `surge`,
 //! `flash-crowd`, `regional-failure`, `weekly` — or `trace:<path>` for a
-//! recorded trace (see docs/SCENARIOS.md). Uses the PJRT artifacts
+//! recorded trace (see docs/SCENARIOS.md). Token-serving scenarios
+//! (`tenant-mix`, `token-drift` — docs/SERVING.md) additionally print the
+//! per-tenant-class SLO attainment table. Uses the PJRT artifacts
 //! (policy/predictor/sinkhorn HLO) when `make artifacts` has produced
 //! them, and falls back to the native OT-with-smoothing path otherwise.
 
 use torta::config::ExperimentConfig;
 use torta::scenario::Scenario;
+use torta::serving::ALL_SLO_CLASSES;
 use torta::sim::run_experiment;
 
 fn main() -> anyhow::Result<()> {
@@ -40,5 +43,24 @@ fn main() -> anyhow::Result<()> {
     println!("load balance coeff  : {:.3}", metrics.lb_per_slot.mean());
     println!("power cost          : ${:.0}", metrics.power_cost_dollars);
     println!("operational overhead: {:.2} units", metrics.operational_overhead);
+
+    if metrics.token_tasks() > 0 {
+        println!("\n== per-tenant-class SLO attainment (docs/SERVING.md) ==");
+        println!(
+            "{:<12} {:>8} {:>12} {:>10} {:>10}",
+            "class", "requests", "attainment", "ttft", "tpot"
+        );
+        for class in ALL_SLO_CLASSES {
+            let k = class.index();
+            println!(
+                "{:<12} {:>8} {:>11.1}% {:>8.2} s {:>8.3} s",
+                class.name(),
+                metrics.slo_tasks_by_class[k],
+                metrics.slo_attainment(k) * 100.0,
+                metrics.ttft_by_class[k].mean(),
+                metrics.tpot_by_class[k].mean(),
+            );
+        }
+    }
     Ok(())
 }

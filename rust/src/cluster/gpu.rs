@@ -145,6 +145,34 @@ impl GpuType {
         }
     }
 
+    /// Continuous-batching slot bound for the token-stream serving model
+    /// (docs/SERVING.md): max concurrent decoding requests per server.
+    /// Anchored on the DynGPUs simulator's `LLM_MAX_CONCURRENCY` of 17
+    /// per A100; other types scale with memory/bandwidth headroom.
+    pub fn token_slots(self) -> usize {
+        match self {
+            GpuType::A100 => 17,
+            GpuType::H100 => 24,
+            GpuType::Rtx4090 => 10,
+            GpuType::V100 => 12,
+            GpuType::T4 => 6,
+        }
+    }
+
+    /// Per-output-token decode-time multiplier relative to the V100
+    /// reference (docs/SERVING.md): effective TPOT =
+    /// `tpot_ref_secs * tpot_scale()`. Decode is memory-bandwidth-bound,
+    /// so the spread is tighter than raw TFLOPs ratios.
+    pub fn tpot_scale(self) -> f64 {
+        match self {
+            GpuType::A100 => 0.7,
+            GpuType::H100 => 0.5,
+            GpuType::Rtx4090 => 0.9,
+            GpuType::V100 => 1.0,
+            GpuType::T4 => 1.4,
+        }
+    }
+
     /// Cold-start warm-up time in seconds (§II: "GPUs require 1-3 minutes
     /// to transition from cold start to full readiness"); faster silicon
     /// readies sooner.
@@ -205,6 +233,26 @@ mod tests {
             let w = gpu.warmup_secs();
             assert!((60.0..=180.0).contains(&w), "{:?} warmup {w}", gpu);
         }
+    }
+
+    #[test]
+    fn token_slots_anchor_and_exceed_lanes() {
+        // DynGPUs anchor: 17 concurrent requests per A100.
+        assert_eq!(GpuType::A100.token_slots(), 17);
+        for gpu in ALL_GPUS {
+            // Continuous batching packs more requests than scalar lanes.
+            assert!(gpu.token_slots() >= gpu.lanes(), "{:?}", gpu);
+        }
+    }
+
+    #[test]
+    fn tpot_scale_is_v100_anchored_and_ordered() {
+        assert_eq!(GpuType::V100.tpot_scale(), 1.0);
+        for gpu in ALL_GPUS {
+            assert!(gpu.tpot_scale() > 0.0);
+        }
+        assert!(GpuType::H100.tpot_scale() < GpuType::A100.tpot_scale());
+        assert!(GpuType::T4.tpot_scale() > GpuType::V100.tpot_scale());
     }
 
     #[test]

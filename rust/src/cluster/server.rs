@@ -1,16 +1,25 @@
 //! GPU server model: multi-lane execution, state machine, model residency.
 //!
-//! Each server is a `lanes()`-way continuous-batching executor. Assigning a
+//! Each server is a multi-lane continuous-batching executor. Assigning a
 //! task picks the earliest-free lane (exact multi-server queue semantics, so
 //! waiting time is computed analytically rather than by sub-slot stepping).
-//! The state machine implements §V-C's activation lifecycle: Cold servers
-//! must warm up for `warmup_secs` before serving; model switches on a warm
-//! server incur the Fig 3 switch stages.
+//! Lane occupancy depends on the engine's serving model
+//! ([`crate::serving::ServingModel`], docs/SERVING.md): under the default
+//! `Scalar` model a task holds a lane for
+//! `service_secs * speed_factor` (lane count = `gpu.lanes()`); under
+//! `TokenStream` a lane is a continuous-batching slot occupied for
+//! `ttft + out_tokens * tpot * speed_factor` with concurrency bounded by
+//! `gpu.token_slots()` (the engine resizes lanes at init via
+//! [`Server::set_lane_count`]). The state machine implements §V-C's
+//! activation lifecycle: Cold servers must warm up for `warmup_secs`
+//! before serving; model switches on a warm server incur the Fig 3
+//! switch stages.
 
 use std::collections::VecDeque;
 
 use super::gpu::GpuType;
 use super::transition::{switch_cost, switch_energy_j};
+use crate::serving::ServingModel;
 use crate::workload::{Task, EMBED_DIM};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -115,6 +124,15 @@ impl Server {
         self.lanes_free_at.len()
     }
 
+    /// Resize the lane array — the engine's token-mode hook, called once
+    /// at init (before any work is queued) to widen lanes to
+    /// `gpu.token_slots()` continuous-batching slots. Per-server
+    /// concurrency can never exceed the lane count: `assign` always
+    /// queues on an existing lane.
+    pub fn set_lane_count(&mut self, n: usize) {
+        self.lanes_free_at.resize(n.max(1), 0.0);
+    }
+
     pub fn is_active(&self) -> bool {
         matches!(self.state, ServerState::Active)
     }
@@ -208,9 +226,43 @@ impl Server {
         task.service_secs * self.gpu.speed_factor(task.class) * penalty * self.fault_slowdown
     }
 
+    /// Slot occupancy of `task` under `serving`: the token-stream model
+    /// (`ttft + out_tokens * tpot * speed_factor`, straggler-degraded)
+    /// for annotated tasks, else the scalar
+    /// [`effective_service_secs`](Self::effective_service_secs) — so
+    /// unannotated tasks (legacy paths, trace replays) stay well-defined
+    /// in token mode.
+    pub fn service_secs_for(&self, task: &Task, serving: &ServingModel) -> f64 {
+        match serving {
+            ServingModel::TokenStream { ttft, tpot_by_gpu } if task.output_tokens > 0 => {
+                let tpot = tpot_by_gpu[self.gpu.index()] * self.gpu.speed_factor(task.class);
+                (ttft + task.output_tokens as f64 * tpot) * self.fault_slowdown
+            }
+            _ => self.effective_service_secs(task),
+        }
+    }
+
     /// Assign a task: picks the earliest-free lane, charges model-switch
     /// stages when the resident model differs, updates locality memory.
     pub fn assign(&mut self, task: &Task, now: f64) -> AssignOutcome {
+        let service = self.effective_service_secs(task);
+        self.assign_with_service(task, now, service)
+    }
+
+    /// [`assign`](Self::assign) under an explicit serving model — the
+    /// engine's entry point. With `ServingModel::Scalar` this is
+    /// bit-identical to `assign`.
+    pub fn assign_serving(
+        &mut self,
+        task: &Task,
+        now: f64,
+        serving: &ServingModel,
+    ) -> AssignOutcome {
+        let service = self.service_secs_for(task, serving);
+        self.assign_with_service(task, now, service)
+    }
+
+    fn assign_with_service(&mut self, task: &Task, now: f64, service: f64) -> AssignOutcome {
         debug_assert!(self.accepting(now) || matches!(self.state, ServerState::Warming { .. }));
         self.tick_state(now);
 
@@ -253,7 +305,6 @@ impl Server {
         }
         self.loaded_model = Some(task.model);
 
-        let service = self.effective_service_secs(task);
         let finish = start + service;
         self.lanes_free_at[lane_idx] = finish;
         self.work_intervals.push((start, finish));
@@ -588,6 +639,57 @@ mod tests {
         assert!((s.effective_service_secs(&t) - 3.0 * base).abs() < 1e-12);
         s.fault_slowdown = 1.0;
         assert_eq!(s.effective_service_secs(&t).to_bits(), base.to_bits());
+    }
+
+    #[test]
+    fn scalar_serving_matches_plain_assign_bitwise() {
+        let t = task_at(3.0, 1);
+        let mut a = Server::new(0, 0, GpuType::V100, true);
+        let mut b = a.clone();
+        let oa = a.assign(&t, 3.0);
+        let ob = b.assign_serving(&t, 3.0, &ServingModel::Scalar);
+        assert_eq!(oa.start_secs.to_bits(), ob.start_secs.to_bits());
+        assert_eq!(oa.finish_secs.to_bits(), ob.finish_secs.to_bits());
+        assert_eq!(oa.service_secs.to_bits(), ob.service_secs.to_bits());
+        assert_eq!(oa.lane, ob.lane);
+    }
+
+    #[test]
+    fn token_service_is_ttft_plus_decode() {
+        let s = Server::new(0, 0, GpuType::V100, true);
+        let mut t = task_at(0.0, 0);
+        t.output_tokens = 100;
+        let model = crate::serving::ServingSpec::default().model();
+        let got = s.service_secs_for(&t, &model);
+        // V100 anchor: tpot_scale = 1.0, so tpot = 0.05 s/token.
+        let want = 0.5 + 100.0 * 0.05 * s.gpu.speed_factor(t.class);
+        assert!((got - want).abs() < 1e-12, "got {got} want {want}");
+        // Unannotated tasks fall back to the scalar model.
+        t.output_tokens = 0;
+        assert_eq!(
+            s.service_secs_for(&t, &model).to_bits(),
+            s.effective_service_secs(&t).to_bits()
+        );
+        // Straggler degradation inflates token service too.
+        let mut slow = s.clone();
+        slow.fault_slowdown = 2.0;
+        t.output_tokens = 100;
+        assert!((slow.service_secs_for(&t, &model) - 2.0 * want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn set_lane_count_widens_concurrency() {
+        let mut s = Server::new(0, 0, GpuType::A100, true); // 8 scalar lanes
+        s.set_lane_count(s.gpu.token_slots());
+        assert_eq!(s.lanes(), 17);
+        s.loaded_model = Some(0);
+        let t = task_at(0.0, 0);
+        for _ in 0..17 {
+            let out = s.assign(&t, 0.0);
+            assert_eq!(out.wait_secs, 0.0);
+        }
+        // The 18th request queues: concurrency is bounded by the slots.
+        assert!(s.assign(&t, 0.0).wait_secs > 0.0);
     }
 
     #[test]

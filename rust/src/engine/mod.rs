@@ -40,6 +40,15 @@
 //! exponential backoff) with their partial progress metered as
 //! `lost_work_secs`.
 //!
+//! The token-serving layer (docs/SERVING.md) slots in behind one seam:
+//! [`crate::serving::ServingModel`], resolved once in
+//! [`ExecutionEngine::new`] from the scenario spec. Under the default
+//! `Scalar` model every path below is bit-identical to the pre-serving
+//! engine; under `TokenStream` assignments occupy continuous-batching
+//! slots (`ttft + out_tokens * tpot`), per-server concurrency widens to
+//! [`crate::cluster::GpuType::token_slots`], and each record carries
+//! per-tenant-class TTFT/TPOT/SLO-attainment metering.
+//!
 //! Power accounting treats each simulated server as a *server cluster*
 //! (Fig 1's units are clusters): `POWER_SCALE` physical boards per cluster,
 //! which puts 6-hour totals in the paper's $K range.
@@ -54,6 +63,7 @@ use crate::power::{joules_to_dollars, server_energy_j, PriceTable};
 use crate::scheduler::{
     Action, ActionResult, Ctx, PendingView, PowerState, Scheduler, SlotDecision, SlotOutcome,
 };
+use crate::serving::{ServingModel, SloClass};
 use crate::topology::Topology;
 use crate::util::pool;
 use crate::workload::{FailureEvent, Task, WorkloadSource};
@@ -109,6 +119,33 @@ fn drop_record(task: &Task, served_region: usize, wait_secs: f64) -> TaskRecord 
         compute_secs: 0.0,
         met_deadline: false,
         dropped: true,
+        // Dropped token-class requests always miss their SLO.
+        slo_class: task.slo,
+        ttft_secs: 0.0,
+        tpot_secs: 0.0,
+        slo_met: false,
+    }
+}
+
+/// Per-task token metering (docs/SERVING.md): observed TTFT is queue wait
+/// + prefill + network (the client's first-token latency), observed TPOT
+/// is decode time per output token; a request attains its SLO when both
+/// are within its class targets. Scalar tasks carry inert zeros.
+fn token_fields(
+    task: &Task,
+    serving: &ServingModel,
+    wait_secs: f64,
+    service_secs: f64,
+    net: f64,
+) -> (Option<SloClass>, f64, f64, bool) {
+    match (serving, task.slo) {
+        (ServingModel::TokenStream { ttft, .. }, Some(class)) if task.output_tokens > 0 => {
+            let ttft_obs = wait_secs + ttft + net;
+            let tpot_obs = (service_secs - ttft).max(0.0) / task.output_tokens as f64;
+            let met = ttft_obs <= class.ttft_target_secs() && tpot_obs <= class.tpot_target_secs();
+            (Some(class), ttft_obs, tpot_obs, met)
+        }
+        _ => (task.slo, 0.0, 0.0, false),
     }
 }
 
@@ -179,6 +216,7 @@ fn exec_assign_shard(
     migration_enabled: bool,
     chaos: bool,
     links: &[f64],
+    serving: &ServingModel,
 ) -> AssignEffect {
     if shard.failed || server_idx >= shard.servers.len() || shard.servers[server_idx].down {
         // Failed/invalid/crashed target: the task is not silently lost — it
@@ -200,7 +238,7 @@ fn exec_assign_shard(
     // meet the deadline constraint d_i (§V-A) or whose wait exceeds the
     // client timeout — the paper's "task-dropping mechanism".
     let projected_start = server.earliest_start(now.max(task.arrival_secs));
-    let projected_finish = projected_start + server.effective_service_secs(&task);
+    let projected_finish = projected_start + server.service_secs_for(&task, serving);
     if projected_start - task.arrival_secs > DROP_WAIT_SECS
         || projected_finish > task.deadline_secs + task.service_secs
     {
@@ -212,7 +250,7 @@ fn exec_assign_shard(
             switch_dollars: 0.0,
         };
     }
-    let out = server.assign(&task, now);
+    let out = server.assign_serving(&task, now, serving);
     let net = link_mult(links, topo.n, task.origin, region)
         * topo.network_secs(task.origin, region, task.payload_kb);
     let switch_dollars = if out.switch_energy_j > 0.0 {
@@ -220,6 +258,8 @@ fn exec_assign_shard(
     } else {
         0.0
     };
+    let (slo_class, ttft_secs, tpot_secs, slo_met) =
+        token_fields(&task, serving, out.wait_secs, out.service_secs, net);
     let record = TaskRecord {
         task_id: task.id,
         origin: task.origin,
@@ -229,6 +269,10 @@ fn exec_assign_shard(
         compute_secs: out.service_secs,
         met_deadline: out.finish_secs + net <= task.deadline_secs,
         dropped: false,
+        slo_class,
+        ttft_secs,
+        tpot_secs,
+        slo_met,
     };
     let result = ActionResult::Assigned {
         task_id: task.id,
@@ -347,6 +391,10 @@ pub struct ExecutionEngine {
     /// the `SlotOutcome` health feed — populated only in health-aware
     /// mode.
     degraded: Vec<(usize, usize)>,
+    /// Service model (docs/SERVING.md), resolved once from the scenario
+    /// spec. `Scalar` (the default) keeps every path bit-identical to the
+    /// pre-serving engine.
+    serving: ServingModel,
 }
 
 impl ExecutionEngine {
@@ -356,7 +404,18 @@ impl ExecutionEngine {
         // get distinct fleets/prices (Abilene and Polska are both R=12).
         let seed = cfg.seed ^ topo_salt(&topo.name);
         let prices = PriceTable::for_regions(topo.n, seed);
-        let fleet = Fleet::build(&topo, &prices, seed);
+        let mut fleet = Fleet::build(&topo, &prices, seed);
+        // Token mode: a lane becomes a continuous-batching slot, so each
+        // server's concurrency widens to its GPU's decode-slot budget
+        // (GpuType::token_slots; aggregate caches are still unbuilt here).
+        let serving = cfg.scenario.serving.as_ref().map(|s| s.model()).unwrap_or_default();
+        if serving.is_token() {
+            for region in &mut fleet.regions {
+                for s in &mut region.servers {
+                    s.set_lane_count(s.gpu.token_slots());
+                }
+            }
+        }
         let migration_enabled = cfg.torta.migrate_backlog_secs > 0.0;
         let threads = pool::resolve_threads(cfg.torta.threads);
         // Scenario-declared failure events resolve here against the same
@@ -390,7 +449,13 @@ impl ExecutionEngine {
             link_now: Vec::new(),
             repairing: Vec::new(),
             degraded: Vec::new(),
+            serving,
         })
+    }
+
+    /// The run's resolved service model (docs/SERVING.md).
+    pub fn serving(&self) -> &ServingModel {
+        &self.serving
     }
 
     /// Layer explicit failure events on top of whatever the scenario spec
@@ -628,6 +693,9 @@ impl ExecutionEngine {
             }
             self.pending = keep;
             for e in lost {
+                // Elapsed wall time doubles as token-level progress: under
+                // the TokenStream model `now - e.start` is exactly the
+                // prefill + decoded-token seconds the crash threw away.
                 metrics.lost_work_secs += (now - e.start).clamp(0.0, e.finish - e.start);
                 let attempts = self.retry_counts.get(&e.task.id).copied().unwrap_or(0);
                 let release = now + profile.retry_backoff_secs * f64::powi(2.0, attempts as i32);
@@ -913,6 +981,14 @@ impl ExecutionEngine {
             buffered,
             migrated,
             degraded: self.degraded.clone(),
+            // Per-class SLO attainment feed (docs/SERVING.md): cumulative,
+            // so schedulers see the run-to-date service level; empty under
+            // the scalar model (keeps scalar feedback byte-identical).
+            slo_attainment: if self.serving.is_token() {
+                metrics.slo_attainment_vec()
+            } else {
+                Vec::new()
+            },
         });
     }
 
@@ -999,6 +1075,7 @@ impl ExecutionEngine {
         let threads = self.threads;
         let topo = &self.ctx.topo;
         let links: &[f64] = &self.link_now;
+        let serving = &self.serving;
         let jobs: Vec<(usize, &mut RegionShard, Vec<(usize, Task, usize)>)> = self
             .fleet
             .regions
@@ -1028,6 +1105,7 @@ impl ExecutionEngine {
                         migration_enabled,
                         chaos,
                         links,
+                        serving,
                     ),
                 ));
             }
@@ -1144,7 +1222,7 @@ impl ExecutionEngine {
         // third element, §V-A) or whose wait exceeds the client
         // timeout — the paper's "task-dropping mechanism".
         let projected_start = server.earliest_start(now.max(task.arrival_secs));
-        let projected_finish = projected_start + server.effective_service_secs(&task);
+        let projected_finish = projected_start + server.service_secs_for(&task, &self.serving);
         if projected_start - task.arrival_secs > DROP_WAIT_SECS
             || projected_finish > task.deadline_secs + task.service_secs
         {
@@ -1153,7 +1231,7 @@ impl ExecutionEngine {
             results.push(ActionResult::Dropped { task_id: task.id, wait_secs: wait });
             return;
         }
-        let out = server.assign(&task, now);
+        let out = server.assign_serving(&task, now, &self.serving);
         let net = link_mult(&self.link_now, self.ctx.topo.n, task.origin, region)
             * self.ctx.topo.network_secs(task.origin, region, task.payload_kb);
         let price = reg.price_per_kwh;
@@ -1163,6 +1241,8 @@ impl ExecutionEngine {
                 price,
             ));
         }
+        let (slo_class, ttft_secs, tpot_secs, slo_met) =
+            token_fields(&task, &self.serving, out.wait_secs, out.service_secs, net);
         let record = TaskRecord {
             task_id: task.id,
             origin: task.origin,
@@ -1172,6 +1252,10 @@ impl ExecutionEngine {
             compute_secs: out.service_secs,
             met_deadline: out.finish_secs + net <= task.deadline_secs,
             dropped: false,
+            slo_class,
+            ttft_secs,
+            tpot_secs,
+            slo_met,
         };
         results.push(ActionResult::Assigned {
             task_id: task.id,
@@ -1253,7 +1337,7 @@ impl ExecutionEngine {
             let task = &self.pending[idx].task;
             let dest = &self.fleet.regions[to_region].servers[to_server];
             let projected_start = dest.earliest_start(now.max(task.arrival_secs));
-            let projected_finish = projected_start + dest.effective_service_secs(task);
+            let projected_finish = projected_start + dest.service_secs_for(task, &self.serving);
             if projected_start - task.arrival_secs > DROP_WAIT_SECS
                 || projected_finish > task.deadline_secs + task.service_secs
             {
@@ -1270,7 +1354,11 @@ impl ExecutionEngine {
             self.pending.insert(idx, entry);
             return 0.0;
         }
-        let out = self.fleet.regions[to_region].servers[to_server].assign(&entry.task, now);
+        let out = self.fleet.regions[to_region].servers[to_server].assign_serving(
+            &entry.task,
+            now,
+            &self.serving,
+        );
         // Payload path accumulates across hops: the deferred record already
         // carries origin -> ... -> current placement, so a re-migrated task
         // keeps every hop it actually traveled.
@@ -1288,6 +1376,8 @@ impl ExecutionEngine {
             ));
         }
         metrics.record_migration(MIGRATION_SECS);
+        let (slo_class, ttft_secs, tpot_secs, slo_met) =
+            token_fields(&entry.task, &self.serving, out.wait_secs, out.service_secs, net);
         entry.record = TaskRecord {
             task_id,
             origin: entry.task.origin,
@@ -1297,6 +1387,10 @@ impl ExecutionEngine {
             compute_secs: out.service_secs,
             met_deadline: out.finish_secs + net <= entry.task.deadline_secs,
             dropped: false,
+            slo_class,
+            ttft_secs,
+            tpot_secs,
+            slo_met,
         };
         results.push(ActionResult::Migrated {
             task_id,

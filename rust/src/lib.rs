@@ -34,6 +34,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod scheduler;
 pub mod serve;
+pub mod serving;
 pub mod sim;
 pub mod topology;
 pub mod util;

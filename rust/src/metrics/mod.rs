@@ -3,6 +3,7 @@
 //! Figs 8/11), load balance 1/(1+CV) CDF (Fig 10), and total cost: power
 //! dollars + switching/operational overhead (Fig 9).
 
+use crate::serving::{SloClass, N_SLO_CLASSES};
 use crate::util::stats::{frobenius_dist_sq, load_balance_coefficient, Samples};
 
 /// Per-task timing record.
@@ -16,6 +17,15 @@ pub struct TaskRecord {
     pub compute_secs: f64,
     pub met_deadline: bool,
     pub dropped: bool,
+    // -- token serving (docs/SERVING.md; defaults outside token mode) ----
+    /// Tenant SLO class (`None` under scalar serving).
+    pub slo_class: Option<SloClass>,
+    /// Observed time-to-first-token: wait + network + prefill.
+    pub ttft_secs: f64,
+    /// Observed per-output-token decode latency.
+    pub tpot_secs: f64,
+    /// Both class targets met (dropped/expired requests always miss).
+    pub slo_met: bool,
 }
 
 impl TaskRecord {
@@ -77,6 +87,17 @@ pub struct RunMetrics {
     pub server_down_slots: u64,
     /// Time-to-recover per fault: onset until the server accepts again.
     pub ttr: Samples,
+    // -- token serving (docs/SERVING.md) ------------------------------------
+    /// Observed TTFT samples per tenant class ([`SloClass::index`];
+    /// served tasks only).
+    pub ttft_by_class: [Samples; N_SLO_CLASSES],
+    /// Observed per-token decode latency samples per tenant class.
+    pub tpot_by_class: [Samples; N_SLO_CLASSES],
+    /// Token-annotated tasks per class (attainment denominator; includes
+    /// drops).
+    pub slo_tasks_by_class: [u64; N_SLO_CLASSES],
+    /// Of those, tasks that met both class targets.
+    pub slo_met_by_class: [u64; N_SLO_CLASSES],
     prev_alloc: Option<Vec<f64>>,
 }
 
@@ -91,6 +112,20 @@ impl RunMetrics {
 
     pub fn record_task(&mut self, rec: &TaskRecord) {
         self.tasks_total += 1;
+        // Per-class SLO accounting happens before the dropped early-out:
+        // a dropped request still counts in its class's denominator (it
+        // missed the SLO), only the latency samples are withheld.
+        if let Some(class) = rec.slo_class {
+            let k = class.index();
+            self.slo_tasks_by_class[k] += 1;
+            if !rec.dropped {
+                if rec.slo_met {
+                    self.slo_met_by_class[k] += 1;
+                }
+                self.ttft_by_class[k].add(rec.ttft_secs);
+                self.tpot_by_class[k].add(rec.tpot_secs);
+            }
+        }
         if rec.dropped {
             self.tasks_dropped += 1;
             return;
@@ -161,6 +196,29 @@ impl RunMetrics {
         }
     }
 
+    /// Token-annotated tasks observed (0 outside token-serving runs —
+    /// the gate for the serving row/column segments).
+    pub fn token_tasks(&self) -> u64 {
+        self.slo_tasks_by_class.iter().sum()
+    }
+
+    /// SLO attainment for tenant class `k` ([`SloClass::index`]): met /
+    /// total, with the no-traffic convention of 1.0 (a class that sent
+    /// nothing had nothing violated).
+    pub fn slo_attainment(&self, k: usize) -> f64 {
+        if self.slo_tasks_by_class[k] == 0 {
+            1.0
+        } else {
+            self.slo_met_by_class[k] as f64 / self.slo_tasks_by_class[k] as f64
+        }
+    }
+
+    /// Per-class attainment vector (the `SlotOutcome::slo_attainment`
+    /// payload; callers gate on token mode).
+    pub fn slo_attainment_vec(&self) -> Vec<f64> {
+        (0..N_SLO_CLASSES).map(|k| self.slo_attainment(k)).collect()
+    }
+
     pub fn drop_rate(&self) -> f64 {
         if self.tasks_total == 0 {
             0.0
@@ -203,9 +261,25 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        // Token-serving segment (docs/SERVING.md): per-class attainment
+        // and mean TTFT, interactive/standard/batch order. Absent on
+        // scalar runs, keeping the classic row byte-stable.
+        let token = if self.token_tasks() > 0 {
+            format!(
+                " slo={:.3}/{:.3}/{:.3} ttft={:.2}/{:.2}/{:.2}s",
+                self.slo_attainment(0),
+                self.slo_attainment(1),
+                self.slo_attainment(2),
+                self.ttft_by_class[0].mean(),
+                self.ttft_by_class[1].mean(),
+                self.ttft_by_class[2].mean(),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{:<10} {:<8} resp={:>6.2}s (wait {:>5.2} / inf {:>5.2} / net {:>5.3}) \
-             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}% mig={}{}{}",
+             LB={:>5.3} power=${:>8.1} overhead={:>5.2} drops={:.2}% mig={}{}{}{}",
             self.scheduler,
             self.topology,
             self.response.mean(),
@@ -218,7 +292,8 @@ impl RunMetrics {
             100.0 * self.drop_rate(),
             self.migrations,
             scenario,
-            chaos
+            chaos,
+            token
         )
     }
 }
@@ -237,6 +312,20 @@ mod tests {
             compute_secs: 10.0,
             met_deadline: true,
             dropped,
+            slo_class: None,
+            ttft_secs: 0.0,
+            tpot_secs: 0.0,
+            slo_met: false,
+        }
+    }
+
+    fn token_rec(class: SloClass, met: bool, dropped: bool) -> TaskRecord {
+        TaskRecord {
+            slo_class: Some(class),
+            ttft_secs: 1.2,
+            tpot_secs: 0.06,
+            slo_met: met,
+            ..rec(0.5, dropped)
         }
     }
 
@@ -308,6 +397,36 @@ mod tests {
         assert!(!m.row().contains("scenario="));
         m.scenario = "flash-crowd".into();
         assert!(m.row().contains("scenario=flash-crowd"));
+    }
+
+    #[test]
+    fn per_class_attainment_counts_drops_as_misses() {
+        let mut m = RunMetrics::new("torta", "abilene");
+        m.record_task(&token_rec(SloClass::Interactive, true, false));
+        m.record_task(&token_rec(SloClass::Interactive, false, false));
+        m.record_task(&token_rec(SloClass::Interactive, false, true)); // drop
+        m.record_task(&token_rec(SloClass::Batch, true, false));
+        assert_eq!(m.token_tasks(), 4);
+        assert!((m.slo_attainment(SloClass::Interactive.index()) - 1.0 / 3.0).abs() < 1e-12);
+        // Untravelled class reports 1.0 by convention.
+        assert_eq!(m.slo_attainment(SloClass::Standard.index()), 1.0);
+        assert_eq!(m.slo_attainment(SloClass::Batch.index()), 1.0);
+        // Latency samples exclude the drop.
+        assert_eq!(m.ttft_by_class[SloClass::Interactive.index()].len(), 2);
+        let v = m.slo_attainment_vec();
+        assert_eq!(v.len(), N_SLO_CLASSES);
+        assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn row_grows_token_segment_only_for_token_runs() {
+        let mut m = RunMetrics::new("torta", "abilene");
+        m.record_task(&rec(0.5, false));
+        assert!(!m.row().contains("slo="), "scalar row must stay byte-stable");
+        m.record_task(&token_rec(SloClass::Standard, true, false));
+        let row = m.row();
+        assert!(row.contains("slo="));
+        assert!(row.contains("ttft="));
     }
 
     #[test]

@@ -33,9 +33,12 @@ pub fn run_matrix(
 
 /// Format the Fig 8/9/10/11 comparison table for a set of finished runs.
 /// Chaos runs (any run the fault sweep observed) grow availability /
-/// retry / lost-work columns; the classic table is byte-stable otherwise.
+/// retry / lost-work columns; token-serving runs (any run with annotated
+/// tasks, docs/SERVING.md) grow per-class SLO-attainment + TTFT columns;
+/// the classic table is byte-stable otherwise.
 pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
     let chaos = runs.iter().any(|m| m.server_slots > 0);
+    let token = runs.iter().any(|m| m.token_tasks() > 0);
     let mut out = String::new();
     out.push_str(&format!(
         "{:<12} {:<9} {:>9} {:>8} {:>8} {:>8} {:>7} {:>11} {:>9} {:>7} {:>6}",
@@ -47,6 +50,9 @@ pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
             " {:>7} {:>7} {:>9} {:>7}",
             "avail", "retries", "lost(s)", "ttr(s)"
         ));
+    }
+    if token {
+        out.push_str(&format!(" {:>17} {:>17}", "slo(i/s/b)", "ttft(i/s/b)"));
     }
     out.push('\n');
     for m in runs.iter_mut() {
@@ -72,6 +78,23 @@ pub fn comparison_table(runs: &mut [RunMetrics]) -> String {
                 m.task_retries,
                 m.lost_work_secs,
                 m.ttr.mean(),
+            ));
+        }
+        if token {
+            out.push_str(&format!(
+                " {:>17} {:>17}",
+                format!(
+                    "{:.3}/{:.3}/{:.3}",
+                    m.slo_attainment(0),
+                    m.slo_attainment(1),
+                    m.slo_attainment(2)
+                ),
+                format!(
+                    "{:.2}/{:.2}/{:.2}",
+                    m.ttft_by_class[0].mean(),
+                    m.ttft_by_class[1].mean(),
+                    m.ttft_by_class[2].mean()
+                ),
             ));
         }
         out.push('\n');
@@ -112,6 +135,19 @@ pub fn run_to_json(m: &mut RunMetrics) -> Json {
         .set("faults_injected", m.faults_injected)
         .set("quarantine_events", m.quarantine_events)
         .set("mean_ttr_s", m.ttr.mean());
+    // Token-serving metrics (docs/SERVING.md). Always present: all-zero
+    // counts (and attainment 1.0 by the no-traffic convention) on scalar
+    // runs, so downstream tooling can key on them unconditionally.
+    j.set("token_tasks", m.token_tasks())
+        .set("slo_attainment_interactive", m.slo_attainment(0))
+        .set("slo_attainment_standard", m.slo_attainment(1))
+        .set("slo_attainment_batch", m.slo_attainment(2))
+        .set("mean_ttft_interactive_s", m.ttft_by_class[0].mean())
+        .set("mean_ttft_standard_s", m.ttft_by_class[1].mean())
+        .set("mean_ttft_batch_s", m.ttft_by_class[2].mean())
+        .set("mean_tpot_interactive_s", m.tpot_by_class[0].mean())
+        .set("mean_tpot_standard_s", m.tpot_by_class[1].mean())
+        .set("mean_tpot_batch_s", m.tpot_by_class[2].mean());
     let cdf = m.lb_per_slot.cdf(20);
     let mut arr = Json::Arr(vec![]);
     for (v, q) in cdf {
@@ -155,6 +191,10 @@ mod tests {
                 compute_secs: 15.0 + i as f64,
                 met_deadline: true,
                 dropped: false,
+                slo_class: None,
+                ttft_secs: 0.0,
+                tpot_secs: 0.0,
+                slo_met: false,
             });
         }
         m.record_slot_balance(&[0.5, 0.6]);
@@ -185,6 +225,42 @@ mod tests {
         assert!(j.contains("task_retries"));
         assert!(j.contains("lost_work_secs"));
         assert!(j.contains("mean_ttr_s"));
+    }
+
+    #[test]
+    fn json_always_carries_serving_keys() {
+        let mut m = run(); // scalar run: zero token tasks
+        let j = run_to_json(&mut m).to_string_pretty();
+        assert!(j.contains("token_tasks"));
+        assert!(j.contains("slo_attainment_interactive"));
+        assert!(j.contains("slo_attainment_standard"));
+        assert!(j.contains("slo_attainment_batch"));
+        assert!(j.contains("mean_ttft_interactive_s"));
+        assert!(j.contains("mean_tpot_batch_s"));
+    }
+
+    #[test]
+    fn table_grows_token_columns_only_for_token_runs() {
+        let mut runs = vec![run(), run()];
+        let plain = comparison_table(&mut runs);
+        assert!(!plain.contains("slo(i/s/b)"), "scalar table must be classic");
+        runs[0].record_task(&TaskRecord {
+            task_id: 99,
+            origin: 0,
+            served_region: 1,
+            network_secs: 0.05,
+            wait_secs: 0.5,
+            compute_secs: 6.0,
+            met_deadline: true,
+            dropped: false,
+            slo_class: Some(crate::serving::SloClass::Interactive),
+            ttft_secs: 1.0,
+            tpot_secs: 0.05,
+            slo_met: true,
+        });
+        let token = comparison_table(&mut runs);
+        assert!(token.contains("slo(i/s/b)"));
+        assert!(token.contains("ttft(i/s/b)"));
     }
 
     #[test]

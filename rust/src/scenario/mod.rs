@@ -13,13 +13,14 @@
 
 use crate::config::{Table, Value, WorkloadConfig};
 use crate::faults::FaultProfile;
+use crate::serving::{ServingSpec, TokenDriftSpec, Tokenized};
 use crate::workload::combinators::{
-    FlashCrowd, Mix, RateScale, RegionalDrift, Surge, SurgeWindow, WeeklySeasonal,
+    FlashCrowd, Mix, RateScale, RegionalDrift, Surge, SurgeWindow, TokenDrift, WeeklySeasonal,
 };
 use crate::workload::{Constant, Diurnal, FailureEvent, TraceReplay, WorkloadSource};
 
 /// Registry scenario names (`trace:<path>` is additionally accepted).
-pub const REGISTRY: [&str; 8] = [
+pub const REGISTRY: [&str; 10] = [
     "diurnal",
     "surge",
     "flash-crowd",
@@ -28,6 +29,8 @@ pub const REGISTRY: [&str; 8] = [
     "chaos-crash",
     "brownout",
     "flaky-network",
+    "tenant-mix",
+    "token-drift",
 ];
 
 /// The chaos subset of [`REGISTRY`]: scenarios that carry a
@@ -86,6 +89,11 @@ pub struct Scenario {
     /// chaos entirely; the engine resolves a [`FaultProfile`] into a
     /// deterministic per-run schedule (see `docs/FAULTS.md`).
     pub faults: Option<FaultProfile>,
+    /// Token-level serving configuration. `None` (the default) keeps the
+    /// legacy scalar service model byte-identical; `Some` annotates tasks
+    /// with tenant classes + token counts and switches the engine to
+    /// [`crate::serving::ServingModel::TokenStream`] (docs/SERVING.md).
+    pub serving: Option<ServingSpec>,
 }
 
 impl Default for Scenario {
@@ -103,6 +111,7 @@ impl Scenario {
             layers: Vec::new(),
             failures: Vec::new(),
             faults: None,
+            serving: None,
         }
     }
 
@@ -116,6 +125,7 @@ impl Scenario {
                 layers: Vec::new(),
                 failures: Vec::new(),
                 faults: None,
+                serving: None,
             });
         }
         Ok(match name {
@@ -132,6 +142,7 @@ impl Scenario {
                 }],
                 failures: Vec::new(),
                 faults: None,
+                serving: None,
             },
             // Viral event in one region: 4x peak, sharp ramp, slow decay.
             "flash-crowd" => Scenario {
@@ -147,6 +158,7 @@ impl Scenario {
                 }],
                 failures: Vec::new(),
                 faults: None,
+                serving: None,
             },
             // Fig 4's critical regional failure: the three highest-demand
             // regions go dark early in the run.
@@ -160,6 +172,7 @@ impl Scenario {
                     duration_slots: 6,
                 }],
                 faults: None,
+                serving: None,
             },
             // Weekly seasonality stacked with rotating regional drift —
             // a two-layer combinator stack.
@@ -172,6 +185,7 @@ impl Scenario {
                 ],
                 failures: Vec::new(),
                 faults: None,
+                serving: None,
             },
             // Chaos registry (docs/FAULTS.md): the diurnal baseline with a
             // deterministic fault-injection profile layered on top.
@@ -181,6 +195,7 @@ impl Scenario {
                 layers: Vec::new(),
                 failures: Vec::new(),
                 faults: Some(FaultProfile::crash()),
+                serving: None,
             },
             // Partial regional brownout: half of one shard's servers share
             // a crash window, plus rare background crashes.
@@ -190,6 +205,7 @@ impl Scenario {
                 layers: Vec::new(),
                 failures: Vec::new(),
                 faults: Some(FaultProfile::brownout()),
+                serving: None,
             },
             // Transient inter-region link degradation + stragglers + rare
             // crashes — the network-dominated failure mode.
@@ -199,6 +215,31 @@ impl Scenario {
                 layers: Vec::new(),
                 failures: Vec::new(),
                 faults: Some(FaultProfile::flaky_network()),
+                serving: None,
+            },
+            // Token-serving registry (docs/SERVING.md): the diurnal
+            // baseline under the TokenStream model with the default
+            // tenant mix (50/35/15 interactive/standard/batch).
+            "tenant-mix" => Scenario {
+                name: "tenant-mix".into(),
+                base: BaseSpec::Diurnal,
+                layers: Vec::new(),
+                failures: Vec::new(),
+                faults: None,
+                serving: Some(ServingSpec::default()),
+            },
+            // Tenant mix plus DriftSched-style runtime output-length
+            // drift: mean output length ramps to 2.5x from slot 16.
+            "token-drift" => Scenario {
+                name: "token-drift".into(),
+                base: BaseSpec::Diurnal,
+                layers: Vec::new(),
+                failures: Vec::new(),
+                faults: None,
+                serving: Some(ServingSpec {
+                    drift: Some(TokenDriftSpec { at: 16, ramp: 8, factor: 2.5 }),
+                    ..ServingSpec::default()
+                }),
             },
             other => anyhow::bail!(
                 "unknown scenario {other:?}; expected one of {REGISTRY:?} or trace:<path>"
@@ -220,6 +261,12 @@ impl Scenario {
     ///   (base overrides, layers/failures append after the registry's) —
     ///   a registry stack is never silently dropped; any other `name` is
     ///   just the run's label.
+    /// * serving keys (see `docs/SERVING.md`): `serving = true` switches
+    ///   the run to the token-stream model with default TTFT/TPOT and
+    ///   tenant mix; `tenant_mix = [i, s, b]` sets the class weights and
+    ///   `token_drift = [at, ramp, factor]` adds runtime output-length
+    ///   drift (each implies `serving = true`). `serving = false`
+    ///   forces the scalar model even for a token registry scenario.
     /// * chaos keys (see `docs/FAULTS.md`): `chaos =
     ///   "crash"|"brownout"|"flaky-network"` selects a fault-profile
     ///   preset, then `chaos_mtbf`, `chaos_mttr`, `chaos_retry_budget`,
@@ -253,6 +300,9 @@ impl Scenario {
             "chaos_retry_budget",
             "chaos_backoff",
             "chaos_health_aware",
+            "serving",
+            "tenant_mix",
+            "token_drift",
         ];
         let has_custom = custom_keys.iter().any(|k| t.get(&format!("scenario.{k}")).is_some());
         let named = t.get("scenario.name").and_then(Value::as_str);
@@ -271,6 +321,7 @@ impl Scenario {
             layers: Vec::new(),
             failures: Vec::new(),
             faults: None,
+            serving: None,
         });
         if t.get("scenario.base").is_some() {
             sc.base = match t.str_or("scenario.base", "diurnal").as_str() {
@@ -415,6 +466,38 @@ impl Scenario {
             p.health_aware = t.bool_or("scenario.chaos_health_aware", p.health_aware);
             sc.faults = Some(p);
         }
+
+        if let Some(v) = t.get("scenario.serving") {
+            let on = v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("scenario.serving must be a bool (see docs/SERVING.md)")
+            })?;
+            sc.serving = if on {
+                Some(sc.serving.take().unwrap_or_default())
+            } else {
+                None
+            };
+        }
+        if let Some(v) = t.get("scenario.tenant_mix") {
+            let xs = nums(v, "tenant_mix")?;
+            anyhow::ensure!(
+                xs.len() == crate::serving::N_SLO_CLASSES,
+                "scenario.tenant_mix = [interactive, standard, batch] weights"
+            );
+            let mut spec = sc.serving.take().unwrap_or_default();
+            spec.tenant_mix = [xs[0], xs[1], xs[2]];
+            sc.serving = Some(spec);
+        }
+        if let Some(v) = t.get("scenario.token_drift") {
+            let xs = nums(v, "token_drift")?;
+            anyhow::ensure!(xs.len() == 3, "scenario.token_drift = [at_slot, ramp_slots, factor]");
+            let mut spec = sc.serving.take().unwrap_or_default();
+            spec.drift = Some(TokenDriftSpec {
+                at: xs[0].max(0.0) as usize,
+                ramp: xs[1].max(0.0) as usize,
+                factor: xs[2],
+            });
+            sc.serving = Some(spec);
+        }
         Ok(sc)
     }
 
@@ -488,6 +571,11 @@ impl Scenario {
                 errs.push(e);
             }
         }
+        if let Some(s) = &self.serving {
+            if let Err(e) = s.validate() {
+                errs.push(e);
+            }
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -530,6 +618,17 @@ impl Scenario {
                     Box::new(FlashCrowd::wrap(src, *at, *ramp, *hold, *decay, *factor, *region))
                 }
             };
+        }
+        // Token annotation wraps outermost so every layered task gets a
+        // tenant class + token counts; drift post-processes the annotated
+        // stream (docs/SERVING.md). Scalar runs skip both wrappers — the
+        // source stack stays bit-identical to the pre-serving build.
+        if let Some(spec) = &self.serving {
+            let drift = spec.drift;
+            src = Box::new(Tokenized::wrap(src, spec.clone(), seed));
+            if let Some(d) = drift {
+                src = Box::new(TokenDrift::wrap(src, d));
+            }
         }
         Ok(src)
     }
@@ -730,6 +829,69 @@ mod tests {
         // Unknown preset is an error, not a silent no-op.
         let t = Table::parse("[scenario]\nchaos = \"nope\"").unwrap();
         assert!(Scenario::from_config_table(&t).is_err());
+    }
+
+    #[test]
+    fn token_registry_carries_serving_specs() {
+        let sc = Scenario::by_name("tenant-mix").unwrap();
+        let spec = sc.serving.expect("tenant-mix is a token scenario");
+        assert_eq!(spec, ServingSpec::default());
+        assert!(spec.drift.is_none());
+        let sc = Scenario::by_name("token-drift").unwrap();
+        let d = sc.serving.unwrap().drift.expect("token-drift carries drift");
+        assert_eq!((d.at, d.ramp), (16, 8));
+        assert!((d.factor - 2.5).abs() < 1e-12);
+        // Scalar registry scenarios stay scalar.
+        assert!(Scenario::by_name("diurnal").unwrap().serving.is_none());
+        assert!(Scenario::by_name("chaos-crash").unwrap().serving.is_none());
+    }
+
+    #[test]
+    fn serving_config_keys_parse_and_compose() {
+        // Bare enable picks up every default.
+        let t = Table::parse("[scenario]\nserving = true").unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert_eq!(sc.serving, Some(ServingSpec::default()));
+        // tenant_mix / token_drift imply serving and refine the spec.
+        let t = Table::parse(
+            "[scenario]\ntenant_mix = [0.2, 0.3, 0.5]\ntoken_drift = [10, 4, 3.0]",
+        )
+        .unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        let spec = sc.serving.unwrap();
+        assert_eq!(spec.tenant_mix, [0.2, 0.3, 0.5]);
+        let d = spec.drift.unwrap();
+        assert_eq!((d.at, d.ramp), (10, 4));
+        sc.validate().unwrap();
+        // serving = false forces scalar even on a token registry name.
+        let t = Table::parse("[scenario]\nname = \"tenant-mix\"\nserving = false").unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert!(sc.serving.is_none());
+        // Bad shapes and values are errors, not silent no-ops.
+        let t = Table::parse("[scenario]\ntenant_mix = [1.0, 2.0]").unwrap();
+        assert!(Scenario::from_config_table(&t).is_err());
+        let t = Table::parse("[scenario]\ntoken_drift = [4, 2, -1.0]").unwrap();
+        let sc = Scenario::from_config_table(&t).unwrap();
+        assert!(sc.validate().unwrap_err().contains("token_drift.factor"));
+    }
+
+    #[test]
+    fn token_scenarios_build_annotated_workloads() {
+        let wl = WorkloadConfig::default();
+        for name in ["tenant-mix", "token-drift"] {
+            let sc = Scenario::by_name(name).unwrap();
+            let mut src = sc.build_workload(&wl, 4, 3, 45.0).unwrap();
+            let tasks = src.slot_tasks(0, 45.0);
+            assert!(!tasks.is_empty(), "{name}");
+            for t in &tasks {
+                assert!(t.slo.is_some(), "{name}: tasks must carry a tenant class");
+                assert!(t.prompt_tokens > 0 && t.output_tokens > 0, "{name}");
+            }
+        }
+        // Scalar scenarios keep tasks unannotated.
+        let sc = Scenario::by_name("diurnal").unwrap();
+        let mut src = sc.build_workload(&wl, 4, 3, 45.0).unwrap();
+        assert!(src.slot_tasks(0, 45.0).iter().all(|t| t.slo.is_none()));
     }
 
     #[test]

@@ -212,6 +212,12 @@ pub struct SlotOutcome {
     /// health-aware schedulers treat these as rescue-migration sources.
     /// Empty outside chaos runs. See `docs/FAULTS.md`.
     pub degraded: Vec<(usize, usize)>,
+    /// Cumulative per-tenant-class SLO attainment (indexed by
+    /// [`crate::serving::SloClass::index`]) under the token-stream
+    /// serving model — the SLO-pressure signal TORTA's macro layer and
+    /// trained policies read. Empty under scalar serving. See
+    /// `docs/SERVING.md`.
+    pub slo_attainment: Vec<f64>,
 }
 
 pub trait Scheduler {

@@ -78,6 +78,12 @@ pub struct TortaScheduler {
     /// sources and excluded as migration destinations; empty outside
     /// chaos runs. See `docs/FAULTS.md`.
     degraded: Vec<(usize, usize)>,
+    /// Cumulative per-tenant-class SLO attainment echoed by the engine
+    /// last slot (`SlotOutcome::slo_attainment`) — the token-serving
+    /// SLO-pressure signal, exposed to the RL featurizer's reward side
+    /// alongside the realized switching cost. Empty under scalar
+    /// serving. See `docs/SERVING.md`.
+    pub slo_attainment: Vec<f64>,
     /// Shard-pipeline worker count for the per-region matching fan-out
     /// (`torta.threads`, resolved through `util::pool::resolve_threads`;
     /// `1` = the exact sequential legacy path). Bit-identical results for
@@ -158,6 +164,7 @@ impl TortaScheduler {
             migrate_backlog_secs: cfg.migrate_backlog_secs,
             realized_switch_ewma: 0.0,
             degraded: Vec::new(),
+            slo_attainment: Vec::new(),
             threads: crate::util::pool::resolve_threads(cfg.threads),
             name: match mode {
                 TortaMode::Full => "torta",
@@ -565,6 +572,9 @@ impl Scheduler for TortaScheduler {
         // Chaos health echo: degraded servers become rescue-migration
         // sources (and are shunned as destinations) next slot.
         self.degraded = outcome.degraded.clone();
+        // Token-serving SLO pressure: per-class attainment under the
+        // TokenStream model (empty under scalar serving).
+        self.slo_attainment = outcome.slo_attainment.clone();
     }
 }
 
@@ -680,6 +690,19 @@ mod tests {
         assert_eq!(migrated[0].0, 7);
         assert_eq!(migrated[0].1, (0, 0));
         assert_ne!(migrated[0].2, (0, 0), "rescue must leave the degraded server");
+    }
+
+    #[test]
+    fn feedback_echoes_slo_attainment() {
+        let (_ctx, _fleet, mut s) = setup(TortaMode::Native);
+        assert!(s.slo_attainment.is_empty());
+        let outcome =
+            SlotOutcome { slo_attainment: vec![0.9, 0.75, 1.0], ..SlotOutcome::default() };
+        s.feedback(&outcome);
+        assert_eq!(s.slo_attainment, vec![0.9, 0.75, 1.0]);
+        // Scalar-serving outcomes clear the echo again.
+        s.feedback(&SlotOutcome::default());
+        assert!(s.slo_attainment.is_empty());
     }
 
     #[test]

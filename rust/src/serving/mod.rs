@@ -1,0 +1,377 @@
+//! Token-level serving model: TTFT/TPOT execution, multi-tenant SLO
+//! classes, and the workload wrapper that annotates tasks with token
+//! counts (see `docs/SERVING.md`).
+//!
+//! The engine supports two service models behind one seam
+//! ([`ServingModel`]):
+//!
+//! * `Scalar` (default) — the legacy model: a task costs
+//!   `service_secs * speed_factor` seconds on one lane. Byte-identical
+//!   to the pre-serving engine (oracle-tested in `golden_metrics.rs`
+//!   and `scenario_equivalence.rs`).
+//! * `TokenStream` — LLM decoding: a task occupies one continuous-
+//!   batching slot for `ttft + out_tokens * tpot[gpu] * speed_factor`
+//!   seconds, with per-server concurrency bounded by
+//!   [`GpuType::token_slots`]. The constants anchor on the DynGPUs
+//!   simulator (`LLM_TTFT` 0.5 s, `LLM_TPOT` 0.05 s, 17 concurrent
+//!   requests per A100).
+//!
+//! Tenant SLO classes (`Interactive`/`Standard`/`Batch`) follow the
+//! SageServe latency-class mixes; runtime output-length drift follows
+//! DriftSched (both in PAPERS.md). Token/tenant annotation happens in a
+//! dedicated wrapper ([`Tokenized`]) with its own RNG stream
+//! ([`SERVING_STREAM`]), drawn *after* base generation, so enabling the
+//! token model never perturbs the arrival process.
+
+use crate::cluster::{GpuType, ALL_GPUS, N_GPU_TYPES};
+use crate::util::rng::Rng;
+use crate::workload::{DemandForecast, Task, WorkloadSource};
+
+/// RNG stream id for the token/tenant sampler (fleet 77, workload 101,
+/// TORTA 313, faults 911 — see the determinism contract in docs/PERF.md).
+pub const SERVING_STREAM: u64 = 523;
+
+/// Number of tenant SLO classes (size of per-class metering tables).
+pub const N_SLO_CLASSES: usize = 3;
+
+/// Tenant SLO class: latency tier a request is billed against.
+///
+/// Targets are (TTFT, per-output-token) latency bounds in seconds; a
+/// request attains its SLO when both observed values are within target
+/// (dropped/expired requests always miss).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SloClass {
+    /// Chat-style traffic: tight first-token and streaming bounds.
+    Interactive,
+    /// Default API traffic.
+    Standard,
+    /// Offline/bulk jobs: throughput-oriented, loose bounds.
+    Batch,
+}
+
+pub const ALL_SLO_CLASSES: [SloClass; N_SLO_CLASSES] =
+    [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+impl SloClass {
+    /// Dense index, consistent with [`ALL_SLO_CLASSES`] ordering (used
+    /// for per-class metering tables).
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Time-to-first-token target, seconds (queue wait + prefill + net).
+    pub fn ttft_target_secs(self) -> f64 {
+        match self {
+            SloClass::Interactive => 15.0,
+            SloClass::Standard => 60.0,
+            SloClass::Batch => 240.0,
+        }
+    }
+
+    /// Per-output-token decode latency target, seconds.
+    pub fn tpot_target_secs(self) -> f64 {
+        match self {
+            SloClass::Interactive => 0.08,
+            SloClass::Standard => 0.15,
+            SloClass::Batch => 0.50,
+        }
+    }
+
+    /// Prompt-length bounds (tokens, inclusive) for the seeded sampler.
+    pub fn prompt_bounds(self) -> (u32, u32) {
+        match self {
+            SloClass::Interactive => (64, 512),
+            SloClass::Standard => (128, 1024),
+            SloClass::Batch => (256, 2048),
+        }
+    }
+
+    /// Output-length bounds (tokens, inclusive) for the seeded sampler.
+    pub fn output_bounds(self) -> (u32, u32) {
+        match self {
+            SloClass::Interactive => (32, 256),
+            SloClass::Standard => (128, 768),
+            SloClass::Batch => (512, 2048),
+        }
+    }
+}
+
+/// The engine's service-model seam.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum ServingModel {
+    /// Legacy scalar service times — the default; bitwise-identical to
+    /// the pre-serving engine.
+    #[default]
+    Scalar,
+    /// Token-stream decoding: slot occupancy =
+    /// `ttft + out_tokens * tpot_by_gpu[gpu] * speed_factor(class)`.
+    TokenStream {
+        /// Time-to-first-token (prefill), seconds.
+        ttft: f64,
+        /// Per-output-token decode time by [`GpuType::index`], seconds.
+        tpot_by_gpu: [f64; N_GPU_TYPES],
+    },
+}
+
+impl ServingModel {
+    pub fn is_token(&self) -> bool {
+        matches!(self, ServingModel::TokenStream { .. })
+    }
+}
+
+/// Runtime output-length drift (DriftSched-style): from slot `at`, the
+/// mean output length ramps linearly over `ramp` slots to `factor`x and
+/// holds. Applied by [`crate::workload::combinators::TokenDrift`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenDriftSpec {
+    /// First slot at which drift begins.
+    pub at: usize,
+    /// Slots over which the multiplier ramps from 1.0 to `factor`.
+    pub ramp: usize,
+    /// Steady-state output-length multiplier.
+    pub factor: f64,
+}
+
+/// Declarative token-serving configuration (the `[scenario] serving`
+/// TOML section; see docs/SERVING.md for the key reference).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingSpec {
+    /// Time-to-first-token, seconds (DynGPUs `LLM_TTFT`).
+    pub ttft_secs: f64,
+    /// Reference per-token decode time, seconds, on the V100 anchor
+    /// (DynGPUs `LLM_TPOT`); per-GPU values scale by
+    /// [`GpuType::tpot_scale`].
+    pub tpot_ref_secs: f64,
+    /// Tenant-class weights (interactive, standard, batch); normalized
+    /// at sampling time.
+    pub tenant_mix: [f64; N_SLO_CLASSES],
+    /// Optional runtime output-length drift.
+    pub drift: Option<TokenDriftSpec>,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        ServingSpec {
+            ttft_secs: 0.5,
+            tpot_ref_secs: 0.05,
+            tenant_mix: [0.5, 0.35, 0.15],
+            drift: None,
+        }
+    }
+}
+
+impl ServingSpec {
+    /// Resolve the spec into the engine's [`ServingModel`].
+    pub fn model(&self) -> ServingModel {
+        let mut tpot_by_gpu = [0.0; N_GPU_TYPES];
+        for gpu in ALL_GPUS {
+            tpot_by_gpu[gpu.index()] = self.tpot_ref_secs * gpu.tpot_scale();
+        }
+        ServingModel::TokenStream { ttft: self.ttft_secs, tpot_by_gpu }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.ttft_secs < 0.0 {
+            errs.push("serving.ttft_secs must be >= 0".to_string());
+        }
+        if self.tpot_ref_secs <= 0.0 {
+            errs.push("serving.tpot_ref_secs must be > 0".to_string());
+        }
+        if self.tenant_mix.iter().any(|&w| w < 0.0) || self.tenant_mix.iter().sum::<f64>() <= 0.0 {
+            errs.push("serving.tenant_mix weights must be non-negative and sum to > 0".to_string());
+        }
+        if let Some(d) = &self.drift {
+            if d.factor <= 0.0 {
+                errs.push("token_drift.factor must be > 0".to_string());
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+}
+
+/// Workload wrapper that annotates generated tasks with a tenant SLO
+/// class and prompt/output token counts, drawn from a dedicated RNG
+/// stream *after* base generation — the base arrival process (ids,
+/// arrivals, service times, embeddings) is bit-identical wrapped or
+/// not (oracle-tested in `scenario_equivalence.rs`).
+pub struct Tokenized<S> {
+    base: S,
+    spec: ServingSpec,
+    rng: Rng,
+}
+
+impl<S: WorkloadSource> Tokenized<S> {
+    /// `seed` is the scenario seed (already topology-salted by
+    /// `Scenario::build_workload` callers).
+    pub fn wrap(base: S, spec: ServingSpec, seed: u64) -> Tokenized<S> {
+        Tokenized { base, spec, rng: Rng::new(seed, SERVING_STREAM) }
+    }
+
+    fn annotate(&mut self, tasks: &mut [Task]) {
+        for t in tasks.iter_mut() {
+            let class = ALL_SLO_CLASSES[self.rng.categorical(&self.spec.tenant_mix)];
+            let (plo, phi) = class.prompt_bounds();
+            let (olo, ohi) = class.output_bounds();
+            t.prompt_tokens = self.rng.range(plo as usize, phi as usize) as u32;
+            t.output_tokens = self.rng.range(olo as usize, ohi as usize) as u32;
+            t.slo = Some(class);
+        }
+    }
+}
+
+impl<S: WorkloadSource> DemandForecast for Tokenized<S> {
+    fn n_regions(&self) -> usize {
+        self.base.n_regions()
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        self.base.rate_at(slot)
+    }
+
+    fn rate_horizon(&self, slot: usize, horizon: usize) -> Vec<Vec<f64>> {
+        self.base.rate_horizon(slot, horizon)
+    }
+}
+
+impl<S: WorkloadSource> WorkloadSource for Tokenized<S> {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let mut tasks = self.base.slot_tasks(slot, slot_secs);
+        self.annotate(&mut tasks);
+        tasks
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        let mut tasks = self.base.gen_at_rates(slot, slot_secs, rates);
+        self.annotate(&mut tasks);
+        tasks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::Diurnal;
+
+    #[test]
+    fn class_index_roundtrip() {
+        for (k, c) in ALL_SLO_CLASSES.iter().enumerate() {
+            assert_eq!(c.index(), k);
+            assert_eq!(SloClass::from_name(c.name()), Some(*c));
+        }
+        assert_eq!(SloClass::from_name("nope"), None);
+    }
+
+    #[test]
+    fn targets_tighten_with_interactivity() {
+        assert!(SloClass::Interactive.ttft_target_secs() < SloClass::Standard.ttft_target_secs());
+        assert!(SloClass::Standard.ttft_target_secs() < SloClass::Batch.ttft_target_secs());
+        assert!(SloClass::Interactive.tpot_target_secs() < SloClass::Batch.tpot_target_secs());
+    }
+
+    #[test]
+    fn default_model_is_scalar() {
+        assert_eq!(ServingModel::default(), ServingModel::Scalar);
+        assert!(!ServingModel::default().is_token());
+    }
+
+    #[test]
+    fn spec_model_scales_tpot_by_gpu() {
+        let spec = ServingSpec::default();
+        match spec.model() {
+            ServingModel::TokenStream { ttft, tpot_by_gpu } => {
+                assert!((ttft - 0.5).abs() < 1e-12);
+                // V100 is the reference anchor (tpot_scale = 1.0).
+                assert!((tpot_by_gpu[GpuType::V100.index()] - spec.tpot_ref_secs).abs() < 1e-12);
+                // Faster silicon decodes faster.
+                assert!(tpot_by_gpu[GpuType::H100.index()] < tpot_by_gpu[GpuType::T4.index()]);
+                assert!(tpot_by_gpu.iter().all(|&x| x > 0.0));
+            }
+            ServingModel::Scalar => panic!("spec.model() must be TokenStream"),
+        }
+    }
+
+    #[test]
+    fn spec_validation_catches_bad_values() {
+        assert!(ServingSpec::default().validate().is_ok());
+        let mut s = ServingSpec::default();
+        s.tpot_ref_secs = 0.0;
+        s.tenant_mix = [0.0, 0.0, 0.0];
+        s.drift = Some(TokenDriftSpec { at: 0, ramp: 0, factor: -1.0 });
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("tpot_ref_secs"));
+        assert!(err.contains("tenant_mix"));
+        assert!(err.contains("token_drift.factor"));
+    }
+
+    #[test]
+    fn tokenized_annotates_without_perturbing_base() {
+        let mk = || Diurnal::new(WorkloadConfig::default(), 3, 7);
+        let mut plain = mk();
+        let mut tok = Tokenized::wrap(mk(), ServingSpec::default(), 7);
+        for slot in 0..4 {
+            let a = plain.slot_tasks(slot, 45.0);
+            let b = tok.slot_tasks(slot, 45.0);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+                assert_eq!(x.service_secs.to_bits(), y.service_secs.to_bits());
+                // The wrapper only adds token metadata.
+                assert_eq!(x.prompt_tokens, 0);
+                let class = y.slo.expect("annotated");
+                let (plo, phi) = class.prompt_bounds();
+                let (olo, ohi) = class.output_bounds();
+                assert!((plo..=phi).contains(&y.prompt_tokens));
+                assert!((olo..=ohi).contains(&y.output_tokens));
+            }
+        }
+    }
+
+    #[test]
+    fn tokenized_is_seed_deterministic() {
+        let mk = |seed| {
+            Tokenized::wrap(
+                Diurnal::new(WorkloadConfig::default(), 3, seed),
+                ServingSpec::default(),
+                seed,
+            )
+        };
+        let (mut a, mut b) = (mk(11), mk(11));
+        for slot in 0..3 {
+            let ta = a.slot_tasks(slot, 45.0);
+            let tb = b.slot_tasks(slot, 45.0);
+            for (x, y) in ta.iter().zip(tb.iter()) {
+                assert_eq!(x.prompt_tokens, y.prompt_tokens);
+                assert_eq!(x.output_tokens, y.output_tokens);
+                assert_eq!(x.slo, y.slo);
+            }
+        }
+    }
+}

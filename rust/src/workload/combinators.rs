@@ -330,6 +330,79 @@ impl WorkloadSource for Mix {
     }
 }
 
+/// Runtime token-drift layer (DriftSched-style): from slot `at`, output
+/// lengths ramp linearly over `ramp` slots to `factor`x the sampled
+/// value and hold there. Unlike the rate combinators above this is a
+/// *task post-processor* — it rewrites `output_tokens` on already
+/// generated tasks and never touches the arrival process, so wrapping it
+/// around any stack leaves ids/arrivals/service times bit-identical.
+/// Tasks without token annotation (`output_tokens == 0`, scalar
+/// serving) pass through untouched.
+pub struct TokenDrift<S> {
+    base: S,
+    spec: crate::serving::TokenDriftSpec,
+}
+
+impl<S: WorkloadSource> TokenDrift<S> {
+    pub fn wrap(base: S, spec: crate::serving::TokenDriftSpec) -> TokenDrift<S> {
+        TokenDrift { base, spec }
+    }
+
+    /// Output-length multiplier at `slot`: 1.0 before `at`, a linear
+    /// ramp over `ramp` slots, then `factor` held for the rest of the
+    /// run.
+    pub fn factor_at(&self, slot: usize) -> f64 {
+        if slot < self.spec.at {
+            return 1.0;
+        }
+        let since = slot - self.spec.at;
+        if self.spec.ramp == 0 || since >= self.spec.ramp {
+            return self.spec.factor;
+        }
+        1.0 + (self.spec.factor - 1.0) * (since + 1) as f64 / self.spec.ramp as f64
+    }
+
+    fn apply(&self, slot: usize, tasks: &mut [Task]) {
+        let f = self.factor_at(slot);
+        if f == 1.0 {
+            return;
+        }
+        for t in tasks.iter_mut() {
+            if t.output_tokens > 0 {
+                t.output_tokens = ((t.output_tokens as f64 * f).round() as u32).max(1);
+            }
+        }
+    }
+}
+
+impl<S: WorkloadSource> DemandForecast for TokenDrift<S> {
+    fn n_regions(&self) -> usize {
+        self.base.n_regions()
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        self.base.rate_at(slot)
+    }
+
+    fn rate_horizon(&self, slot: usize, horizon: usize) -> Vec<Vec<f64>> {
+        self.base.rate_horizon(slot, horizon)
+    }
+}
+
+impl<S: WorkloadSource> WorkloadSource for TokenDrift<S> {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let mut tasks = self.base.slot_tasks(slot, slot_secs);
+        self.apply(slot, &mut tasks);
+        tasks
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        let mut tasks = self.base.gen_at_rates(slot, slot_secs, rates);
+        self.apply(slot, &mut tasks);
+        tasks
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -445,6 +518,46 @@ mod tests {
         }
         let ratio = total as f64 / (30.0 * 2.0 * 15.0);
         assert!((0.9..1.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn token_drift_ramp_profile() {
+        let spec = crate::serving::TokenDriftSpec { at: 10, ramp: 4, factor: 3.0 };
+        let d = TokenDrift::wrap(diurnal(2, 1), spec);
+        assert_eq!(d.factor_at(9), 1.0);
+        assert!(d.factor_at(10) > 1.0 && d.factor_at(10) < 3.0);
+        assert!(d.factor_at(12) < 3.0);
+        assert_eq!(d.factor_at(13), 3.0); // ramp complete
+        assert_eq!(d.factor_at(100), 3.0); // holds
+        let step = TokenDrift::wrap(
+            diurnal(2, 1),
+            crate::serving::TokenDriftSpec { at: 5, ramp: 0, factor: 2.0 },
+        );
+        assert_eq!(step.factor_at(4), 1.0);
+        assert_eq!(step.factor_at(5), 2.0);
+    }
+
+    #[test]
+    fn token_drift_scales_only_annotated_tasks() {
+        use crate::serving::{ServingSpec, TokenDriftSpec, Tokenized};
+        let spec = TokenDriftSpec { at: 0, ramp: 0, factor: 2.0 };
+        // Annotated stack: every output length doubles vs the undrifted twin.
+        let mut plain = Tokenized::wrap(diurnal(2, 7), ServingSpec::default(), 7);
+        let mut drifted =
+            TokenDrift::wrap(Tokenized::wrap(diurnal(2, 7), ServingSpec::default(), 7), spec);
+        let a = plain.slot_tasks(3, 45.0);
+        let b = drifted.slot_tasks(3, 45.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(y.output_tokens, (x.output_tokens as f64 * 2.0).round() as u32);
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+        }
+        // Unannotated (scalar) tasks pass through untouched.
+        let mut scalar = TokenDrift::wrap(diurnal(2, 7), spec);
+        for t in scalar.slot_tasks(3, 45.0) {
+            assert_eq!(t.output_tokens, 0);
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod trace;
 
 pub use combinators::{
     FlashCrowd, Mix, Modulated, RateScale, RateShape, RegionalDrift, Surge, SurgeWindow,
-    WeeklySeasonal,
+    TokenDrift, WeeklySeasonal,
 };
 pub use trace::TraceReplay;
 
@@ -75,8 +75,13 @@ pub struct Task {
     pub model: u32,
     /// User identity (drives SkyLB prefix affinity).
     pub user: u32,
-    /// Reference service time in seconds (V100 on its preferred class);
-    /// per-server effective time = service_secs * gpu.speed_factor(class).
+    /// Reference service time in seconds (V100 on its preferred class).
+    /// Under the default scalar serving model the per-server effective
+    /// time is `service_secs * gpu.speed_factor(class)`; under
+    /// [`crate::serving::ServingModel::TokenStream`] the slot occupancy
+    /// is instead derived from the token counts below (TTFT + per-token
+    /// decode; see docs/SERVING.md), and `service_secs` only scales the
+    /// deadline slack.
     pub service_secs: f64,
     /// Absolute arrival time in simulation seconds.
     pub arrival_secs: f64,
@@ -89,6 +94,12 @@ pub struct Task {
     pub embed: [f32; EMBED_DIM],
     /// Request+response payload size (network transfer), KB.
     pub payload_kb: f64,
+    /// Prompt length in tokens (0 = not annotated: scalar serving).
+    pub prompt_tokens: u32,
+    /// Output length in tokens (0 = not annotated: scalar serving).
+    pub output_tokens: u32,
+    /// Tenant SLO class; `None` outside token-serving scenarios.
+    pub slo: Option<crate::serving::SloClass>,
 }
 
 impl Task {
@@ -295,6 +306,9 @@ impl Diurnal {
             memory_demand_gb: memory,
             embed,
             payload_kb: self.rng.uniform(2.0, 64.0),
+            prompt_tokens: 0,
+            output_tokens: 0,
+            slo: None,
         }
     }
 }

@@ -136,6 +136,11 @@ fn parse_line(line: &str) -> Result<Task, String> {
         memory_demand_gb: f(9)?,
         payload_kb: f(10)?,
         embed,
+        // Traces predate the token-serving model and replay scalar
+        // (annotation, when wanted, layers on via `serving::Tokenized`).
+        prompt_tokens: 0,
+        output_tokens: 0,
+        slo: None,
     })
 }
 

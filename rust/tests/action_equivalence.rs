@@ -105,6 +105,10 @@ fn run_oracle(
                     compute_secs: 0.0,
                     met_deadline: false,
                     dropped: true,
+                    slo_class: None,
+                    ttft_secs: 0.0,
+                    tpot_secs: 0.0,
+                    slo_met: false,
                 });
                 fp.expired.push(t.id);
                 false
@@ -132,6 +136,10 @@ fn run_oracle(
                     compute_secs: 0.0,
                     met_deadline: false,
                     dropped: true,
+                    slo_class: None,
+                    ttft_secs: 0.0,
+                    tpot_secs: 0.0,
+                    slo_met: false,
                 });
                 fp.assigns.push((task.id, None));
                 continue;
@@ -147,6 +155,10 @@ fn run_oracle(
                 compute_secs: out.service_secs,
                 met_deadline: out.finish_secs + net <= task.deadline_secs,
                 dropped: false,
+                slo_class: None,
+                ttft_secs: 0.0,
+                tpot_secs: 0.0,
+                slo_met: false,
             });
             fp.assigns.push((task.id, Some((region, server_idx))));
         }

@@ -79,6 +79,38 @@ fn run_all() -> Json {
     root
 }
 
+/// Token-mode-off oracle (docs/SERVING.md): a token registry scenario
+/// with its serving spec stripped back to `None` must be bit-identical
+/// to the legacy scalar run — the serving seam may not move a single bit
+/// while it is off.
+#[test]
+fn token_mode_off_is_bit_identical_to_legacy_scalar_run() {
+    for scheduler in SCHEDULERS {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = scheduler.into();
+        cfg.slots = 12;
+        cfg.torta.use_pjrt = false;
+        let a = run_experiment(&cfg).unwrap();
+
+        // tenant-mix is the diurnal baseline + a serving spec; stripping
+        // the spec must recover the baseline exactly.
+        let mut sc = torta::scenario::Scenario::by_name("tenant-mix").unwrap();
+        sc.serving = None;
+        sc.name = "diurnal".into();
+        let mut cfg2 = cfg.clone();
+        cfg2.scenario = sc;
+        let b = run_experiment(&cfg2).unwrap();
+
+        assert_eq!(a.tasks_total, b.tasks_total, "{scheduler}");
+        assert_eq!(a.tasks_dropped, b.tasks_dropped, "{scheduler}");
+        assert_eq!(a.mean_response().to_bits(), b.mean_response().to_bits(), "{scheduler}");
+        assert_eq!(a.waiting.mean().to_bits(), b.waiting.mean().to_bits(), "{scheduler}");
+        assert_eq!(a.power_cost_dollars.to_bits(), b.power_cost_dollars.to_bits(), "{scheduler}");
+        assert_eq!(a.switching_cost_frob.to_bits(), b.switching_cost_frob.to_bits(), "{scheduler}");
+        assert_eq!(b.token_tasks(), 0, "{scheduler}: scalar runs must meter no tokens");
+    }
+}
+
 #[test]
 fn metrics_match_golden_fixture() {
     let path = fixture_path();

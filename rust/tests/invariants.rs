@@ -393,6 +393,133 @@ fn mix_superposes_member_rates() {
     });
 }
 
+// ---- Token-serving sampler invariants (docs/SERVING.md) -----------------
+
+#[test]
+fn token_sampler_deterministic_salted_and_length_bounded() {
+    use torta::serving::{ServingSpec, Tokenized};
+    prop::check(16, |rng, _size| {
+        let n = 2 + rng.below(4);
+        let seed = rng.next_u64();
+        let mk = |s: u64| {
+            Tokenized::wrap(
+                Diurnal::new(WorkloadConfig::default(), n, s),
+                ServingSpec::default(),
+                s,
+            )
+        };
+        let (mut a, mut b) = (mk(seed), mk(seed));
+        // The topology fold XORs a salt into the seed; the sampler must
+        // follow it, not collapse every topology onto one token stream.
+        let mut salted = mk(seed ^ 0x9e37_79b9);
+        let mut salt_moved = false;
+        for slot in 0..3 {
+            let ta = a.slot_tasks(slot, 45.0);
+            let tb = b.slot_tasks(slot, 45.0);
+            let ts = salted.slot_tasks(slot, 45.0);
+            assert_eq!(ta.len(), tb.len());
+            for (x, y) in ta.iter().zip(&tb) {
+                assert_eq!(
+                    (x.prompt_tokens, x.output_tokens, x.slo),
+                    (y.prompt_tokens, y.output_tokens, y.slo),
+                    "same seed must replay the same annotations"
+                );
+            }
+            for t in &ta {
+                let class = t.slo.expect("every task annotated");
+                let (plo, phi) = class.prompt_bounds();
+                let (olo, ohi) = class.output_bounds();
+                assert!((plo..=phi).contains(&t.prompt_tokens));
+                assert!((olo..=ohi).contains(&t.output_tokens));
+            }
+            for (x, y) in ta.iter().zip(&ts) {
+                if (x.prompt_tokens, x.output_tokens) != (y.prompt_tokens, y.output_tokens) {
+                    salt_moved = true;
+                }
+            }
+        }
+        assert!(salt_moved, "a salted seed must perturb the token stream");
+    });
+}
+
+#[test]
+fn token_drift_multiplies_output_lengths_exactly() {
+    use torta::serving::{ServingSpec, TokenDriftSpec, Tokenized};
+    use torta::workload::combinators::TokenDrift;
+    prop::check(12, |rng, _size| {
+        let n = 2 + rng.below(3);
+        let seed = rng.next_u64();
+        let spec = TokenDriftSpec {
+            at: rng.below(4),
+            ramp: rng.below(4),
+            factor: rng.uniform(1.2, 4.0),
+        };
+        let mk = || {
+            Tokenized::wrap(
+                Diurnal::new(WorkloadConfig::default(), n, seed),
+                ServingSpec::default(),
+                seed,
+            )
+        };
+        let mut plain = mk();
+        let mut drifted = TokenDrift::wrap(mk(), spec);
+        for slot in 0..(spec.at + spec.ramp + 3) {
+            let f = drifted.factor_at(slot);
+            if slot < spec.at {
+                assert!((f - 1.0).abs() < 1e-12, "no drift before `at`");
+            }
+            if slot >= spec.at + spec.ramp {
+                assert!((f - spec.factor).abs() < 1e-12, "steady state holds `factor`");
+            }
+            let ta = plain.slot_tasks(slot, 45.0);
+            let tb = drifted.slot_tasks(slot, 45.0);
+            assert_eq!(ta.len(), tb.len(), "drift must not touch the arrival process");
+            for (x, y) in ta.iter().zip(&tb) {
+                assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+                assert_eq!(x.prompt_tokens, y.prompt_tokens, "prompts are untouched");
+                let want = if f == 1.0 {
+                    x.output_tokens
+                } else {
+                    ((x.output_tokens as f64 * f).round() as u32).max(1)
+                };
+                assert_eq!(y.output_tokens, want, "slot {slot} factor {f}");
+            }
+        }
+    });
+}
+
+#[test]
+fn token_slot_occupancy_never_exceeds_concurrency_bound() {
+    use torta::cluster::{Server, ALL_GPUS};
+    use torta::serving::{ServingSpec, Tokenized};
+    prop::check(12, |rng, _size| {
+        let gpu = ALL_GPUS[rng.below(ALL_GPUS.len())];
+        let mut s = Server::new(0, 0, gpu, true);
+        s.loaded_model = Some(0);
+        s.set_lane_count(gpu.token_slots());
+        let model = ServingSpec::default().model();
+        let mut wl = Tokenized::wrap(
+            Diurnal::new(WorkloadConfig::default(), 1, rng.next_u64()),
+            ServingSpec::default(),
+            rng.next_u64(),
+        );
+        let mut intervals: Vec<(f64, f64)> = Vec::new();
+        for slot in 0..3 {
+            let now = slot as f64 * 45.0;
+            for mut t in wl.slot_tasks(slot, 45.0) {
+                t.model = 0; // keep switch stalls out of the occupancy picture
+                let out = s.assign_serving(&t, now, &model);
+                intervals.push((out.start_secs, out.finish_secs));
+            }
+        }
+        let bound = gpu.token_slots();
+        for &(start, _) in &intervals {
+            let running = intervals.iter().filter(|&&(a, b)| a <= start && start < b).count();
+            assert!(running <= bound, "{running} > {bound} concurrent requests on {gpu:?}");
+        }
+    });
+}
+
 #[test]
 fn switching_cost_zero_for_constant_allocation() {
     // A scheduler that reports the same alloc every slot accrues zero

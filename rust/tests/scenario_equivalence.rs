@@ -205,6 +205,50 @@ fn registry_scenarios_run_all_schedulers_end_to_end() {
 }
 
 #[test]
+fn tenant_mix_annotates_without_moving_the_arrival_stream() {
+    // Token-mode oracle half 1: the tenant-mix stack's base stream (ids,
+    // arrivals, service times) is bit-equal to plain diurnal — token
+    // sampling lives on its own RNG stream (docs/SERVING.md).
+    let wl_cfg = WorkloadConfig::default();
+    let mut plain = Scenario::diurnal().build_workload(&wl_cfg, 12, 99, 45.0).unwrap();
+    let mut token = Scenario::by_name("tenant-mix")
+        .unwrap()
+        .build_workload(&wl_cfg, 12, 99, 45.0)
+        .unwrap();
+    for slot in 0..8 {
+        let a = plain.slot_tasks(slot, 45.0);
+        let b = token.slot_tasks(slot, 45.0);
+        assert_eq!(a.len(), b.len(), "slot {slot}");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+            assert_eq!(x.service_secs.to_bits(), y.service_secs.to_bits());
+            assert!(x.slo.is_none() && x.prompt_tokens == 0, "scalar stream annotated");
+            assert!(y.slo.is_some(), "tenant-mix task missing its class");
+            assert!(y.prompt_tokens > 0 && y.output_tokens > 0);
+        }
+    }
+}
+
+#[test]
+fn token_scenarios_meter_per_class_attainment_end_to_end() {
+    // Token-mode oracle half 2: tenant-mix / token-drift runs actually
+    // meter the per-class serving metrics, for every suite scheduler.
+    for name in ["tenant-mix", "token-drift"] {
+        for sched in SCHEDULERS {
+            let mut cfg = small_cfg(sched);
+            cfg.scenario = Scenario::by_name(name).unwrap();
+            let m = run_experiment(&cfg).unwrap();
+            assert!(m.token_tasks() > 0, "{sched} on {name}: no token metering");
+            for k in 0..3 {
+                let att = m.slo_attainment(k);
+                assert!((0.0..=1.0).contains(&att), "{sched} on {name}: attainment {att}");
+            }
+        }
+    }
+}
+
+#[test]
 fn regional_failure_scenario_applies_failures_from_spec() {
     let mut cfg = small_cfg("rr");
     cfg.scenario = Scenario::by_name("regional-failure").unwrap();

@@ -79,6 +79,21 @@ fn metrics_fp(m: &RunMetrics) -> Vec<(&'static str, u64)> {
         ("server_down_slots", m.server_down_slots),
         ("ttr_count", m.ttr.len() as u64),
         ("ttr_mean", m.ttr.mean().to_bits()),
+        // Token-serving fields (docs/SERVING.md) — all-zero on scalar
+        // runs, bit-covered on token ones.
+        ("token_tasks", m.token_tasks()),
+        ("slo_i_total", m.slo_tasks_by_class[0]),
+        ("slo_s_total", m.slo_tasks_by_class[1]),
+        ("slo_b_total", m.slo_tasks_by_class[2]),
+        ("slo_i_met", m.slo_met_by_class[0]),
+        ("slo_s_met", m.slo_met_by_class[1]),
+        ("slo_b_met", m.slo_met_by_class[2]),
+        ("ttft_i_mean", m.ttft_by_class[0].mean().to_bits()),
+        ("ttft_s_mean", m.ttft_by_class[1].mean().to_bits()),
+        ("ttft_b_mean", m.ttft_by_class[2].mean().to_bits()),
+        ("tpot_i_mean", m.tpot_by_class[0].mean().to_bits()),
+        ("tpot_s_mean", m.tpot_by_class[1].mean().to_bits()),
+        ("tpot_b_mean", m.tpot_by_class[2].mean().to_bits()),
     ]
 }
 
@@ -174,6 +189,59 @@ fn bit_identical_across_thread_counts_chaos_presets() {
     assert!(m.faults_injected > 0, "flaky-network: no fault fired");
     let m = assert_cell_equivalent("rr", "brownout", 24);
     assert!(m.faults_injected > 0, "brownout: no fault fired");
+}
+
+/// Token-serving runs (docs/SERVING.md) inherit the determinism
+/// contract: slot occupancy, widened concurrency and the per-class
+/// TTFT/TPOT/SLO metering are bit-identical across `--threads 1/2/4`
+/// for every suite scheduler.
+#[test]
+fn bit_identical_across_thread_counts_token_scenarios() {
+    for scheduler in SCHEDULERS {
+        let m = assert_cell_equivalent(scheduler, "tenant-mix", 14);
+        assert!(m.token_tasks() > 0, "{scheduler}@tenant-mix: no token metering");
+    }
+    // token-drift at a horizon past its ramp (at 16 + ramp 8), so the
+    // drifted decode lengths are in the covered bits.
+    let m = assert_cell_equivalent("torta", "token-drift", 28);
+    assert!(m.token_tasks() > 0, "token-drift: no token metering");
+}
+
+/// Chaos + token: a chaos-crash run under the TokenStream model must
+/// keep the fault sweep (crash harvest of partially-decoded work, retry
+/// release) AND the token metering bit-identical across worker counts.
+#[test]
+fn bit_identical_across_thread_counts_chaos_token() {
+    use torta::serving::ServingSpec;
+    let run = |threads: usize| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = "torta".into();
+        cfg.slots = 16;
+        cfg.torta.use_pjrt = false;
+        cfg.torta.threads = threads;
+        cfg.scenario = torta::scenario::Scenario::by_name("chaos-crash").unwrap();
+        cfg.scenario.serving = Some(ServingSpec::default());
+        let mut engine = Simulation::new(cfg.clone()).unwrap();
+        let seed = cfg.seed ^ topo_salt(&engine.ctx.topo.name);
+        let n = engine.ctx.topo.n;
+        let mut wl = cfg
+            .scenario
+            .build_workload(&cfg.workload, n, seed, cfg.slot_secs)
+            .unwrap();
+        let mut sched = torta::scheduler::build(&cfg.scheduler, &engine.ctx, &cfg).unwrap();
+        let m = engine.run(wl.as_mut(), sched.as_mut());
+        let end = cfg.slots as f64 * cfg.slot_secs;
+        (m, fleet_fp(&engine.fleet, end))
+    };
+    let (m1, f1) = run(1);
+    assert!(m1.faults_injected > 0, "chaos+token: no crash fired — cell is vacuous");
+    assert!(m1.token_tasks() > 0, "chaos+token: no token metering — cell is vacuous");
+    for threads in [2usize, 4] {
+        let (mt, ft) = run(threads);
+        let label = format!("torta@chaos-crash+token threads={threads}");
+        assert_metrics_bits(&m1, &mt, &label);
+        assert_eq!(f1, ft, "{label}: fleet end state diverged");
+    }
 }
 
 /// Cross-shard migrations under the parallel pipeline: TORTA's
