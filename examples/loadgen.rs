@@ -1,0 +1,146 @@
+//! HTTP load generator for the control-plane daemon (docs/DAEMON.md).
+//!
+//! Spawns an in-process `torta daemon` on an ephemeral loopback port (or
+//! targets an already-running one via `--addr`), submits requests over
+//! HTTP at a configurable rate with a rotating SLO-class mix, then
+//! drains and prints per-class attainment from the final results JSON —
+//! doubling as the manual smoke driver for the daemon's endpoints.
+//!
+//!     cargo run --release --example loadgen
+//!     cargo run --release --example loadgen -- --rate 200 --seconds 3
+//!     cargo run --release --example loadgen -- --addr 127.0.0.1:7070
+//!
+//! Against an external daemon (`--addr`), the example drives it to
+//! completion via `/v1/drain` — don't point it at a daemon you want to
+//! keep running.
+
+use std::time::{Duration, Instant};
+
+use torta::config::ExperimentConfig;
+use torta::daemon::{Daemon, DaemonOpts};
+use torta::serving::ALL_SLO_CLASSES;
+use torta::util::cli::Cli;
+use torta::util::http::http_call;
+use torta::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("loadgen", "drive the torta daemon over loopback HTTP")
+        .opt("addr", "", "target an external daemon instead of spawning one")
+        .opt("rate", "100", "submissions per wall second")
+        .opt("seconds", "2", "submission window (wall seconds)")
+        .opt("slots", "8", "horizon of the spawned daemon (ignored with --addr)")
+        .opt("queue-cap", "64", "streamed-lane bound of the spawned daemon")
+        .parse(&args)?;
+    let rate = cli.f64("rate")?;
+    let seconds = cli.f64("seconds")?;
+
+    // Spawn an in-process daemon unless pointed at a running one. The
+    // spawned daemon runs time-compressed (10 slots/s) so the example
+    // finishes in seconds while the submission window stays open.
+    let (addr, daemon) = {
+        let addr = cli.str("addr");
+        if addr.is_empty() {
+            let mut cfg = ExperimentConfig::default();
+            cfg.topology = "synthetic-4".into();
+            cfg.scheduler = "rr".into();
+            cfg.slots = cli.usize("slots")?;
+            cfg.workload.base_rate = 4.0;
+            cfg.torta.use_pjrt = false;
+            let opts =
+                DaemonOpts { time_scale: 450.0, queue_cap: cli.usize("queue-cap")? };
+            let d = Daemon::spawn(cfg, opts, "127.0.0.1:0")?;
+            (d.local_addr().to_string(), Some(d))
+        } else {
+            (addr, None)
+        }
+    };
+
+    // Fleet discovery: origin rotation needs the region count.
+    let (status, body) = http_call(&addr, "GET", "/v1/fleet", None)?;
+    anyhow::ensure!(status == 200, "GET /v1/fleet -> {status}: {body}");
+    let fleet = Json::parse(&body).map_err(|e| anyhow::anyhow!("fleet JSON: {e}"))?;
+    let n_regions = fleet.get("regions").and_then(Json::as_arr).map(<[Json]>::len).unwrap_or(1);
+    println!(
+        "driving http://{addr} — {} regions, {:.0} req/s for {:.1}s",
+        n_regions, rate, seconds
+    );
+
+    // Paced submission loop: rotate origins and SLO classes; every third
+    // burst goes through the batch endpoint.
+    let period = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+    let t0 = Instant::now();
+    let mut sent = 0u64;
+    let mut shed = 0u64;
+    let mut rejected = 0u64;
+    while t0.elapsed().as_secs_f64() < seconds {
+        let i = sent as usize;
+        let class = ALL_SLO_CLASSES[i % ALL_SLO_CLASSES.len()];
+        let mut req = Json::obj();
+        req.set("origin", i % n_regions)
+            .set("slo", class.name())
+            .set("service_secs", 5.0 + (i % 7) as f64)
+            .set("prompt_tokens", (64 + 32 * (i % 4)) as u64)
+            .set("output_tokens", (32 + 16 * (i % 5)) as u64);
+        let (status, body) = if i % 3 == 2 {
+            let mut batch = Json::obj();
+            let mut arr = Json::Arr(vec![]);
+            arr.push(req);
+            batch.set("requests", arr);
+            http_call(&addr, "POST", "/v1/requests/batch", Some(&batch.to_string_pretty()))?
+        } else {
+            http_call(&addr, "POST", "/v1/requests", Some(&req.to_string_pretty()))?
+        };
+        sent += 1;
+        if status == 202 {
+            let j = Json::parse(&body).unwrap_or(Json::Null);
+            if j.get("status").and_then(Json::as_str) == Some("shed-to-batch") {
+                shed += 1;
+            }
+            shed += j.get("shed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        } else {
+            rejected += 1;
+        }
+        let target = period * sent as u32;
+        let elapsed = t0.elapsed();
+        if elapsed < target {
+            std::thread::sleep(target - elapsed);
+        }
+    }
+    println!("submitted {sent} ({shed} shed to batch, {rejected} rejected)");
+
+    let (status, body) = http_call(&addr, "GET", "/v1/healthz", None)?;
+    anyhow::ensure!(status == 200, "GET /v1/healthz -> {status}");
+    let h = Json::parse(&body).map_err(|e| anyhow::anyhow!("healthz JSON: {e}"))?;
+    println!(
+        "daemon at slot {} / {}, queue depth {}",
+        h.get("slot").and_then(Json::as_f64).unwrap_or(-1.0),
+        h.get("slots").and_then(Json::as_f64).unwrap_or(-1.0),
+        h.get("queue_depth").and_then(Json::as_f64).unwrap_or(-1.0),
+    );
+
+    // Drain: run the remaining horizon and read the final results JSON.
+    let (status, results) = http_call(&addr, "POST", "/v1/drain", None)?;
+    anyhow::ensure!(status == 200, "POST /v1/drain -> {status}: {results}");
+    let m = Json::parse(&results).map_err(|e| anyhow::anyhow!("results JSON: {e}"))?;
+    let f = |k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    println!(
+        "run complete: {} tasks ({} dropped), mean response {:.2}s, power ${:.2}",
+        f("tasks_total"),
+        f("tasks_dropped"),
+        f("mean_response_s"),
+        f("power_cost_dollars"),
+    );
+    println!("SLO attainment (met/total per tenant class — docs/SERVING.md):");
+    for class in ALL_SLO_CLASSES {
+        println!(
+            "  {:<12} {:.3}",
+            class.name(),
+            f(&format!("slo_attainment_{}", class.name()))
+        );
+    }
+    if let Some(d) = daemon {
+        d.join()?;
+    }
+    Ok(())
+}

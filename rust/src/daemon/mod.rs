@@ -1,0 +1,891 @@
+//! Control-plane daemon: the event-driven serve loop plus a dependency-
+//! free HTTP/1.1 JSON API over it (docs/DAEMON.md).
+//!
+//! The paper frames TORTA as serving infrastructure for live traffic;
+//! this module is the externally drivable layer over the engine. Two
+//! pieces:
+//!
+//! * [`run_event_loop`] — the serve loop reworked around events: slot
+//!   deadlines are timers, and between deadlines the leader blocks on a
+//!   control channel consuming submissions, state queries, stream
+//!   subscriptions and drain requests. Each deadline fires one
+//!   [`ExecutionEngine::step`] over an [`IngestSource`] that merges the
+//!   externally submitted tasks into the base generator's batch
+//!   deterministically by `(arrival, id)`, then dispatches the slot's
+//!   assignments to per-region worker threads exactly as the pre-daemon
+//!   serve loop did. With no control surface attached
+//!   ([`crate::serve::serve_realtime`]) the loop degenerates to plain
+//!   timer pacing and stays bit-identical to the virtual-time engine.
+//! * [`Daemon`] — `torta daemon --listen <addr>`: a `TcpListener` accept
+//!   loop (thread per connection, [`crate::util::http`] parser) exposing
+//!   request submission with SLO class + token counts, fleet/region
+//!   state incl. health and quarantine, cumulative [`RunMetrics`] in the
+//!   results-JSON shape ([`report::run_to_json`]), a chunked long-poll
+//!   stream of per-slot metrics frames, and a drain endpoint that runs
+//!   the remaining horizon without pacing, replies with the final
+//!   metrics document and shuts the daemon down cleanly.
+//!
+//! Backpressure (docs/DAEMON.md): the streamed admission lane is bounded
+//! by [`DaemonOpts::queue_cap`]; overflow is not dropped but *shed to
+//! batch* — the request is demoted to [`SloClass::Batch`] and admitted
+//! anyway, so over-rate traffic degrades to throughput-oriented service
+//! instead of erroring. Responses carry `"status": "shed-to-batch"` so
+//! clients can observe the demotion.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::cluster::ServerState;
+use crate::config::ExperimentConfig;
+use crate::engine::ExecutionEngine;
+use crate::metrics::RunMetrics;
+use crate::report;
+use crate::scheduler::{ActionResult, Scheduler};
+use crate::serving::SloClass;
+use crate::util::http::{self, ParseError, Request};
+use crate::util::json::Json;
+use crate::workload::{external_task, IngestSource, IngestSpec, WorkloadSource, INGEST_ID_BASE};
+
+/// One externally submitted request, pre-validated by the HTTP layer.
+struct Submit {
+    id: u64,
+    origin: usize,
+    /// Explicit absolute arrival in sim seconds; `None` = "now", resolved
+    /// by the leader against the wall clock (nondeterministic — the
+    /// determinism caveat in docs/DAEMON.md).
+    arrival_secs: Option<f64>,
+    service_secs: f64,
+    slo: Option<SloClass>,
+    prompt_tokens: u32,
+    output_tokens: u32,
+    /// Admitted through the overflow lane (already demoted to batch).
+    shed: bool,
+}
+
+/// Read-only state queries answered by the leader between slots.
+enum Query {
+    Fleet,
+    Region(usize),
+    Metrics,
+    Health,
+}
+
+/// Everything that can arrive on the daemon's control channel.
+enum Event {
+    Submit(Submit),
+    Query(Query, Sender<(u16, String)>),
+    Subscribe(Sender<String>),
+    Drain(Sender<String>),
+}
+
+/// Leader-side handle of the control channel, handed to
+/// [`run_event_loop`] by [`Daemon::spawn`].
+pub(crate) struct LoopCtl {
+    rx: Receiver<Event>,
+    /// Streamed-lane depth: incremented by the HTTP layer on admission,
+    /// decremented here on dequeue (the bound lives in [`Shared`]).
+    depth: Arc<AtomicUsize>,
+    /// Next unstepped slot, published for the HTTP layer's responses.
+    slot: Arc<AtomicUsize>,
+}
+
+/// Messages from leader to a region worker (unchanged from the
+/// pre-daemon serve loop).
+enum WorkerMsg {
+    /// Simulate the residency of one executed assignment and ack. All
+    /// accounting already happened in the engine; the worker only models
+    /// the deployment's execution/ack round-trip.
+    Execute { task_id: u64, compute_secs: f64 },
+    Shutdown,
+}
+
+/// Completion acknowledgements back to the leader.
+struct Ack {
+    #[allow(dead_code)]
+    task_id: u64,
+}
+
+/// Run the event-driven serve loop: `slots` engine steps paced against
+/// the wall clock (one slot per `slot_secs / time_scale` seconds), with
+/// the event phase between deadlines consuming control events when a
+/// [`LoopCtl`] is attached. A drain request flips the loop into batch
+/// mode: the remaining slots step back-to-back with no pacing so queued
+/// work still completes, then the final metrics document is sent to
+/// every drain waiter.
+pub(crate) fn run_event_loop<S: WorkloadSource>(
+    cfg: &ExperimentConfig,
+    ingest: &mut IngestSource<S>,
+    scheduler: &mut dyn Scheduler,
+    slots: usize,
+    time_scale: f64,
+    ctl: Option<LoopCtl>,
+) -> anyhow::Result<RunMetrics> {
+    let mut engine = ExecutionEngine::new(cfg.clone())?;
+    let n_regions = engine.ctx.topo.n;
+    let mut metrics = RunMetrics::new(scheduler.name(), &cfg.topology);
+    metrics.scenario = cfg.scenario.name.clone();
+
+    // Region workers: same channel topology as an async runtime's task
+    // graph, on std::thread + mpsc (the offline build has no tokio).
+    let (ack_tx, ack_rx) = mpsc::channel::<Ack>();
+    let mut worker_tx: Vec<mpsc::Sender<WorkerMsg>> = Vec::with_capacity(n_regions);
+    let mut handles = Vec::with_capacity(n_regions);
+    for _region in 0..n_regions {
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
+        let ack = ack_tx.clone();
+        worker_tx.push(tx);
+        handles.push(thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    WorkerMsg::Execute { task_id, compute_secs } => {
+                        // Residency: the task's compute time, scaled.
+                        let dur = compute_secs / time_scale.max(1e-6);
+                        thread::sleep(Duration::from_secs_f64(dur.min(0.05)));
+                        if ack.send(Ack { task_id }).is_err() {
+                            break;
+                        }
+                    }
+                    WorkerMsg::Shutdown => break,
+                }
+            }
+        }));
+    }
+    drop(ack_tx);
+
+    let slot_wall = Duration::from_secs_f64(cfg.slot_secs / time_scale);
+    let t0 = Instant::now();
+    let mut inflight = 0usize;
+    let mut draining = false;
+    let mut drain_waiters: Vec<Sender<String>> = Vec::new();
+    let mut subscribers: Vec<Sender<String>> = Vec::new();
+    for slot in 0..slots {
+        // Event phase: wait out the slot's wall window. The deadline is
+        // the timer — whatever has been ingested when it fires forms the
+        // slot's external arrival batch.
+        let deadline = t0 + slot_wall * (slot as u32 + 1);
+        match &ctl {
+            Some(ctl) if !draining => loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match ctl.rx.recv_timeout(deadline - now) {
+                    Ok(Event::Submit(s)) => {
+                        if !s.shed {
+                            ctl.depth.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        let lo = slot as f64 * cfg.slot_secs;
+                        let hi = (slot as f64 + 1.0) * cfg.slot_secs;
+                        // Wall-clock arrivals map into the accumulating
+                        // slot's window; explicit arrivals pass through
+                        // untouched (the deterministic path).
+                        let arrival = s.arrival_secs.unwrap_or_else(|| {
+                            (t0.elapsed().as_secs_f64() * time_scale).clamp(lo, hi - 1e-6)
+                        });
+                        let spec = IngestSpec {
+                            origin: s.origin,
+                            arrival_secs: arrival,
+                            service_secs: s.service_secs,
+                            slo: s.slo,
+                            prompt_tokens: s.prompt_tokens,
+                            output_tokens: s.output_tokens,
+                        };
+                        ingest.push(external_task(s.id, &spec, cfg.workload.deadline_slack));
+                    }
+                    Ok(Event::Query(q, reply)) => {
+                        let answer = answer_query(
+                            q,
+                            &engine,
+                            &metrics,
+                            slot,
+                            slots,
+                            ctl.depth.load(Ordering::SeqCst),
+                            ingest.pending(),
+                            draining,
+                        );
+                        let _ = reply.send(answer);
+                    }
+                    Ok(Event::Subscribe(tx)) => subscribers.push(tx),
+                    Ok(Event::Drain(tx)) => {
+                        draining = true;
+                        drain_waiters.push(tx);
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        // No control surface left; fall back to pacing.
+                        let now = Instant::now();
+                        if now < deadline {
+                            thread::sleep(deadline - now);
+                        }
+                        break;
+                    }
+                }
+            },
+            None if !draining => {
+                // Generator-driven session: plain timer pacing.
+                let now = Instant::now();
+                if now < deadline {
+                    thread::sleep(deadline - now);
+                }
+            }
+            // Draining: step the remaining horizon back-to-back.
+            _ => {}
+        }
+
+        // Leader: one engine slot (arrivals + backlog -> scheduler ->
+        // action execution -> metering), then dispatch the executed
+        // assignments to the region workers.
+        engine.step(slot, ingest, scheduler, &mut metrics);
+        if let Some(ctl) = &ctl {
+            ctl.slot.store(slot + 1, Ordering::SeqCst);
+        }
+        if let Some(outcome) = engine.last_outcome() {
+            for res in &outcome.results {
+                if let ActionResult::Assigned { task_id, region, compute_secs, .. } = res {
+                    // Count in-flight only on successful dispatch: a dead
+                    // worker must not leave phantom entries for the
+                    // shutdown drain to wait on.
+                    if worker_tx[*region]
+                        .send(WorkerMsg::Execute {
+                            task_id: *task_id,
+                            compute_secs: *compute_secs,
+                        })
+                        .is_ok()
+                    {
+                        inflight += 1;
+                    }
+                }
+            }
+        }
+        // Drain acks that completed during the slot.
+        while ack_rx.try_recv().is_ok() {
+            inflight -= 1;
+        }
+        // Per-slot metrics frame for chunked long-poll subscribers.
+        if !subscribers.is_empty() {
+            let frame = slot_frame(slot, &engine, &metrics);
+            subscribers.retain(|tx| tx.send(frame.clone()).is_ok());
+        }
+    }
+    engine.finish(&mut metrics);
+
+    // Final metrics document: drain waiters get the full results JSON,
+    // stream subscribers a closing frame (dropping the senders ends
+    // their chunked responses).
+    if !drain_waiters.is_empty() || !subscribers.is_empty() {
+        let final_json = report::run_to_json(&mut metrics.clone()).to_string_pretty();
+        for tx in drain_waiters.drain(..) {
+            let _ = tx.send(final_json.clone());
+        }
+        let mut closing = Json::obj();
+        closing.set("done", true).set("slots", slots).set("tasks_total", metrics.tasks_total);
+        let closing = closing.to_string_compact();
+        for tx in subscribers.drain(..) {
+            let _ = tx.send(closing.clone());
+        }
+    }
+
+    // Shutdown and drain the remainder.
+    for tx in &worker_tx {
+        tx.send(WorkerMsg::Shutdown).ok();
+    }
+    while inflight > 0 {
+        match ack_rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(_) => inflight -= 1,
+            Err(_) => break,
+        }
+    }
+    for h in handles {
+        h.join().ok();
+    }
+    Ok(metrics)
+}
+
+/// One compact NDJSON frame per stepped slot: the slot's outcome deltas
+/// plus the cumulative headline counters.
+fn slot_frame(slot: usize, engine: &ExecutionEngine, metrics: &RunMetrics) -> String {
+    let mut j = Json::obj();
+    j.set("slot", slot);
+    if let Some(out) = engine.last_outcome() {
+        j.set("assigned", out.assigned)
+            .set("dropped", out.dropped)
+            .set("buffered", out.buffered)
+            .set("migrated", out.migrated);
+    }
+    j.set("tasks_total", metrics.tasks_total)
+        .set("tasks_dropped", metrics.tasks_dropped)
+        .set("deadline_misses", metrics.deadline_misses)
+        .set("power_cost_dollars", metrics.power_cost_dollars)
+        .set("mean_response_s", metrics.mean_response());
+    j.to_string_compact()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn answer_query(
+    q: Query,
+    engine: &ExecutionEngine,
+    metrics: &RunMetrics,
+    next_slot: usize,
+    slots: usize,
+    queue_depth: usize,
+    ingest_pending: usize,
+    draining: bool,
+) -> (u16, String) {
+    let now = next_slot as f64 * engine.cfg.slot_secs;
+    match q {
+        Query::Metrics => {
+            (200, report::run_to_json(&mut metrics.clone()).to_string_pretty())
+        }
+        Query::Fleet => (200, fleet_json(engine, now).to_string_pretty()),
+        Query::Region(r) => match region_json(engine, r, now) {
+            Some(j) => (200, j.to_string_pretty()),
+            None => {
+                let n = engine.fleet.regions.len();
+                (404, error_json(&format!("region {r} out of range (fleet has {n} regions)")))
+            }
+        },
+        Query::Health => {
+            let mut j = Json::obj();
+            j.set("status", if draining { "draining" } else { "ok" })
+                .set("slot", next_slot)
+                .set("slots", slots)
+                .set("queue_depth", queue_depth)
+                .set("ingest_pending", ingest_pending)
+                .set("backlog", engine.backlog_len())
+                .set("scheduler", metrics.scheduler.as_str())
+                .set("topology", metrics.topology.as_str())
+                .set("scenario", metrics.scenario.as_str())
+                .set("tasks_total", metrics.tasks_total);
+            (200, j.to_string_pretty())
+        }
+    }
+}
+
+/// Fleet summary: per-region aggregates incl. health and quarantine.
+fn fleet_json(engine: &ExecutionEngine, now: f64) -> Json {
+    let mut regions = Json::Arr(vec![]);
+    for region in &engine.fleet.regions {
+        let mut down = 0usize;
+        let mut quarantined = 0usize;
+        let mut health = 0.0;
+        for s in &region.servers {
+            if s.down {
+                down += 1;
+            }
+            if s.quarantined_until > now {
+                quarantined += 1;
+            }
+            health += s.health;
+        }
+        let mut o = Json::obj();
+        o.set("id", region.id)
+            .set("name", region.name.as_str())
+            .set("failed", region.failed)
+            .set("servers", region.servers.len())
+            .set("active_servers", region.active_servers())
+            .set("lanes", region.total_lanes())
+            .set("price_per_kwh", region.price_per_kwh)
+            .set("down", down)
+            .set("quarantined", quarantined)
+            .set("mean_health", health / region.servers.len().max(1) as f64);
+        regions.push(o);
+    }
+    let mut j = Json::obj();
+    j.set("topology", engine.ctx.topo.name.as_str())
+        .set("regions", regions)
+        .set("backlog", engine.backlog_len())
+        .set("pending", engine.pending_len())
+        .set("inflight", engine.inflight_len());
+    j
+}
+
+/// Per-server detail for one region.
+fn region_json(engine: &ExecutionEngine, r: usize, now: f64) -> Option<Json> {
+    let region = engine.fleet.regions.get(r)?;
+    let mut servers = Json::Arr(vec![]);
+    for s in &region.servers {
+        let state = match s.state {
+            ServerState::Cold => "cold",
+            ServerState::Warming { .. } => "warming",
+            ServerState::Active => "active",
+        };
+        let mut o = Json::obj();
+        o.set("index", s.index)
+            .set("gpu", s.gpu.name())
+            .set("state", state)
+            .set("down", s.down)
+            .set("health", s.health)
+            .set("quarantined", s.quarantined_until > now)
+            .set("model_switches", s.model_switches)
+            .set("activations", s.activations)
+            .set("tasks_served", s.tasks_served)
+            .set("utilization", s.utilization(now));
+        servers.push(o);
+    }
+    let mut j = Json::obj();
+    j.set("id", region.id)
+        .set("name", region.name.as_str())
+        .set("failed", region.failed)
+        .set("price_per_kwh", region.price_per_kwh)
+        .set("servers", servers);
+    Some(j)
+}
+
+fn error_json(msg: &str) -> String {
+    let mut j = Json::obj();
+    j.set("error", msg);
+    j.to_string_pretty()
+}
+
+/// Daemon tunables beyond the experiment config.
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonOpts {
+    /// Wall-time compression factor: one 45 s slot elapses per
+    /// `slot_secs / time_scale` wall seconds (45 = one slot per second;
+    /// same semantics as `torta serve`).
+    pub time_scale: f64,
+    /// Streamed-lane admission bound; overflow sheds to batch
+    /// (docs/DAEMON.md).
+    pub queue_cap: usize,
+}
+
+impl Default for DaemonOpts {
+    fn default() -> DaemonOpts {
+        DaemonOpts { time_scale: 45.0, queue_cap: 1024 }
+    }
+}
+
+/// State shared between HTTP handler threads and the serve loop.
+#[derive(Clone)]
+struct Shared {
+    tx: Sender<Event>,
+    depth: Arc<AtomicUsize>,
+    slot: Arc<AtomicUsize>,
+    next_id: Arc<AtomicU64>,
+    shed_total: Arc<AtomicUsize>,
+    queue_cap: usize,
+    n_regions: usize,
+}
+
+/// A running control-plane daemon: serve loop + HTTP accept loop.
+pub struct Daemon {
+    addr: SocketAddr,
+    serve: Option<JoinHandle<anyhow::Result<RunMetrics>>>,
+    accept: Option<JoinHandle<()>>,
+    running: Arc<AtomicBool>,
+}
+
+impl Daemon {
+    /// Bind `listen` (`host:port`; port 0 = ephemeral) and start the
+    /// serve loop and accept loop. Topology/config errors surface here;
+    /// workload/scheduler construction happens on the serve thread (the
+    /// boxed sources are not `Send`) and surfaces via [`Daemon::join`].
+    pub fn spawn(cfg: ExperimentConfig, opts: DaemonOpts, listen: &str) -> anyhow::Result<Daemon> {
+        anyhow::ensure!(opts.time_scale > 0.0, "daemon time_scale must be > 0");
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        // Pre-validate the topology (and get the region count for origin
+        // checks) before committing threads.
+        let setup = crate::sim::run_setup(&cfg)?;
+        let n_regions = setup.ctx.topo.n;
+        drop(setup);
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+        let addr = listener.local_addr()?;
+
+        let (tx, rx) = mpsc::channel::<Event>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let slot = Arc::new(AtomicUsize::new(0));
+        let running = Arc::new(AtomicBool::new(true));
+        let shared = Shared {
+            tx,
+            depth: depth.clone(),
+            slot: slot.clone(),
+            next_id: Arc::new(AtomicU64::new(INGEST_ID_BASE)),
+            shed_total: Arc::new(AtomicUsize::new(0)),
+            queue_cap: opts.queue_cap,
+            n_regions,
+        };
+        let ctl = LoopCtl { rx, depth, slot };
+
+        let running_serve = running.clone();
+        let time_scale = opts.time_scale;
+        let serve = thread::Builder::new().name("torta-daemon-loop".into()).spawn(
+            move || -> anyhow::Result<RunMetrics> {
+                let result = (|| {
+                    let setup = crate::sim::run_setup(&cfg)?;
+                    let workload = setup.workload(&cfg)?;
+                    let mut scheduler = setup.scheduler(&cfg)?;
+                    let mut ingest = IngestSource::new(workload);
+                    run_event_loop(
+                        &cfg,
+                        &mut ingest,
+                        scheduler.as_mut(),
+                        cfg.slots,
+                        time_scale,
+                        Some(ctl),
+                    )
+                })();
+                running_serve.store(false, Ordering::SeqCst);
+                // Unblock the accept loop so it can observe the flag.
+                let _ = TcpStream::connect(addr);
+                result
+            },
+        )?;
+
+        let running_accept = running.clone();
+        let accept = thread::Builder::new().name("torta-daemon-http".into()).spawn(move || {
+            for conn in listener.incoming() {
+                if !running_accept.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let sh = shared.clone();
+                    thread::spawn(move || handle_conn(stream, sh));
+                }
+            }
+        })?;
+
+        Ok(Daemon { addr, serve: Some(serve), accept: Some(accept), running })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the serve loop to finish — after a drain request or the
+    /// configured horizon, whichever comes first — then stop the accept
+    /// loop and return the run's metrics.
+    pub fn join(mut self) -> anyhow::Result<RunMetrics> {
+        let result = match self.serve.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("daemon serve loop panicked"))?,
+            None => anyhow::bail!("daemon already joined"),
+        };
+        self.running.store(false, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        result
+    }
+}
+
+/// Admission outcome for the HTTP layer.
+enum Reject {
+    /// Client error — 400 with a message.
+    Bad(String),
+    /// Daemon is past its horizon or draining — 503.
+    Unavailable(&'static str),
+}
+
+/// A parsed, validated submit body (before id/lane assignment).
+struct SubmitReq {
+    origin: usize,
+    arrival_secs: Option<f64>,
+    service_secs: f64,
+    slo: Option<SloClass>,
+    prompt_tokens: u32,
+    output_tokens: u32,
+}
+
+fn uint_field(j: &Json, key: &str, default: u32) -> Result<u32, Reject> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= u32::MAX as f64)
+            .map(|x| x as u32)
+            .ok_or_else(|| Reject::Bad(format!("{key} must be a non-negative integer"))),
+    }
+}
+
+fn parse_submit(j: &Json, n_regions: usize) -> Result<SubmitReq, Reject> {
+    if j.get("requests").is_some() {
+        return Err(Reject::Bad(
+            "batch bodies ({\"requests\": [...]}) go to /v1/requests/batch".into(),
+        ));
+    }
+    let origin = match j.get("origin") {
+        None => 0,
+        Some(v) => v
+            .as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| Reject::Bad("origin must be a non-negative integer".into()))?,
+    };
+    if origin >= n_regions {
+        return Err(Reject::Bad(format!(
+            "origin {origin} out of range (fleet has {n_regions} regions)"
+        )));
+    }
+    let slo = match j.get("slo") {
+        None => None,
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| Reject::Bad("slo must be a string".into()))?;
+            Some(SloClass::from_name(s).ok_or_else(|| {
+                Reject::Bad(format!("unknown slo class {s:?}; expected interactive|standard|batch"))
+            })?)
+        }
+    };
+    let service_secs = match j.get("service_secs") {
+        None => 10.0,
+        Some(v) => v
+            .as_f64()
+            .filter(|x| *x > 0.0 && x.is_finite())
+            .ok_or_else(|| Reject::Bad("service_secs must be a positive number".into()))?,
+    };
+    let arrival_secs = match j.get("arrival_s") {
+        None => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|x| *x >= 0.0 && x.is_finite())
+                .ok_or_else(|| Reject::Bad("arrival_s must be a non-negative number".into()))?,
+        ),
+    };
+    Ok(SubmitReq {
+        origin,
+        arrival_secs,
+        service_secs,
+        slo,
+        prompt_tokens: uint_field(j, "prompt_tokens", 0)?,
+        output_tokens: uint_field(j, "output_tokens", 0)?,
+    })
+}
+
+/// Reserve a streamed-lane slot: depth++ unless the lane is full.
+fn try_reserve(depth: &AtomicUsize, cap: usize) -> bool {
+    let bump = |d: usize| if d < cap { Some(d + 1) } else { None };
+    depth.fetch_update(Ordering::SeqCst, Ordering::SeqCst, bump).is_ok()
+}
+
+/// Admit one parsed request: assign an id, pick the lane (streamed or
+/// shed-to-batch), enqueue the submit event, and build the response row.
+fn admit(p: SubmitReq, sh: &Shared) -> Result<Json, Reject> {
+    let shed = !try_reserve(&sh.depth, sh.queue_cap);
+    let slo = if shed {
+        sh.shed_total.fetch_add(1, Ordering::SeqCst);
+        Some(SloClass::Batch)
+    } else {
+        p.slo
+    };
+    let id = sh.next_id.fetch_add(1, Ordering::SeqCst);
+    let ev = Event::Submit(Submit {
+        id,
+        origin: p.origin,
+        arrival_secs: p.arrival_secs,
+        service_secs: p.service_secs,
+        slo,
+        prompt_tokens: p.prompt_tokens,
+        output_tokens: p.output_tokens,
+        shed,
+    });
+    sh.tx.send(ev).map_err(|_| Reject::Unavailable("daemon is shutting down"))?;
+    let mut r = Json::obj();
+    r.set("id", id)
+        .set("status", if shed { "shed-to-batch" } else { "queued" })
+        .set("slot", sh.slot.load(Ordering::SeqCst));
+    Ok(r)
+}
+
+fn write_reject(out: &mut TcpStream, r: Reject) {
+    match r {
+        Reject::Bad(msg) => {
+            let _ = http::write_json(out, 400, &error_json(&msg));
+        }
+        Reject::Unavailable(msg) => {
+            let _ = http::write_json(out, 503, &error_json(msg));
+        }
+    }
+}
+
+fn submit_single(req: &Request, out: &mut TcpStream, sh: &Shared) {
+    let j = match Json::parse(&req.body) {
+        Ok(j) => j,
+        Err(e) => {
+            let _ = http::write_json(out, 400, &error_json(&format!("invalid JSON: {e}")));
+            return;
+        }
+    };
+    match parse_submit(&j, sh.n_regions).and_then(|p| admit(p, sh)) {
+        Ok(resp) => {
+            let _ = http::write_json(out, 202, &resp.to_string_pretty());
+        }
+        Err(r) => write_reject(out, r),
+    }
+}
+
+fn submit_batch(req: &Request, out: &mut TcpStream, sh: &Shared) {
+    let j = match Json::parse(&req.body) {
+        Ok(j) => j,
+        Err(e) => {
+            let _ = http::write_json(out, 400, &error_json(&format!("invalid JSON: {e}")));
+            return;
+        }
+    };
+    let items = match j.get("requests").and_then(Json::as_arr) {
+        Some(items) => items,
+        None => {
+            let _ = http::write_json(
+                out,
+                400,
+                &error_json("batch body must be {\"requests\": [...]}"),
+            );
+            return;
+        }
+    };
+    // Validate everything before admitting anything: a malformed entry
+    // rejects the whole batch without side effects.
+    let mut parsed = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        match parse_submit(item, sh.n_regions) {
+            Ok(p) => parsed.push(p),
+            Err(Reject::Bad(msg)) => {
+                let _ =
+                    http::write_json(out, 400, &error_json(&format!("requests[{i}]: {msg}")));
+                return;
+            }
+            Err(r) => {
+                write_reject(out, r);
+                return;
+            }
+        }
+    }
+    let mut ids = Json::Arr(vec![]);
+    let mut accepted = 0usize;
+    let mut shed = 0usize;
+    for p in parsed {
+        match admit(p, sh) {
+            Ok(row) => {
+                if row.get("status").and_then(Json::as_str) == Some("shed-to-batch") {
+                    shed += 1;
+                } else {
+                    accepted += 1;
+                }
+                if let Some(id) = row.get("id") {
+                    ids.push(id.clone());
+                }
+            }
+            Err(r) => {
+                write_reject(out, r);
+                return;
+            }
+        }
+    }
+    let mut resp = Json::obj();
+    resp.set("accepted", accepted).set("shed", shed).set("ids", ids);
+    let _ = http::write_json(out, 202, &resp.to_string_pretty());
+}
+
+fn query(out: &mut TcpStream, sh: &Shared, q: Query) {
+    let (rtx, rrx) = mpsc::channel();
+    if sh.tx.send(Event::Query(q, rtx)).is_err() {
+        write_reject(out, Reject::Unavailable("daemon is shutting down"));
+        return;
+    }
+    match rrx.recv_timeout(Duration::from_secs(60)) {
+        Ok((status, body)) => {
+            let _ = http::write_json(out, status, &body);
+        }
+        Err(_) => write_reject(out, Reject::Unavailable("daemon did not answer")),
+    }
+}
+
+fn drain(out: &mut TcpStream, sh: &Shared) {
+    let (rtx, rrx) = mpsc::channel();
+    if sh.tx.send(Event::Drain(rtx)).is_err() {
+        write_reject(out, Reject::Unavailable("daemon is shutting down"));
+        return;
+    }
+    // The drained horizon runs without pacing but can still be sizable;
+    // wait generously.
+    match rrx.recv_timeout(Duration::from_secs(600)) {
+        Ok(body) => {
+            let _ = http::write_json(out, 200, &body);
+        }
+        Err(_) => write_reject(out, Reject::Unavailable("drain did not complete")),
+    }
+}
+
+fn stream_metrics(out: &mut TcpStream, sh: &Shared) {
+    let (ftx, frx) = mpsc::channel::<String>();
+    if sh.tx.send(Event::Subscribe(ftx)).is_err() {
+        write_reject(out, Reject::Unavailable("daemon is shutting down"));
+        return;
+    }
+    if http::write_chunked_head(out, 200, "application/x-ndjson").is_err() {
+        return;
+    }
+    while let Ok(frame) = frx.recv() {
+        let mut line = frame;
+        line.push('\n');
+        if http::write_chunk(out, &line).is_err() {
+            return; // client went away; leader prunes us on next send
+        }
+    }
+    let _ = http::write_chunk_end(out);
+}
+
+fn route(req: &Request, out: &mut TcpStream, sh: &Shared) {
+    const ENDPOINTS: [&str; 7] = [
+        "/v1/requests",
+        "/v1/requests/batch",
+        "/v1/drain",
+        "/v1/fleet",
+        "/v1/metrics",
+        "/v1/metrics/stream",
+        "/v1/healthz",
+    ];
+    let method = req.method.as_str();
+    let path = req.path.as_str();
+    match (method, path) {
+        ("POST", "/v1/requests") => submit_single(req, out, sh),
+        ("POST", "/v1/requests/batch") => submit_batch(req, out, sh),
+        ("POST", "/v1/drain") => drain(out, sh),
+        ("GET", "/v1/fleet") => query(out, sh, Query::Fleet),
+        ("GET", "/v1/metrics") => query(out, sh, Query::Metrics),
+        ("GET", "/v1/metrics/stream") => stream_metrics(out, sh),
+        ("GET", "/v1/healthz") => query(out, sh, Query::Health),
+        ("GET", p) if p.starts_with("/v1/regions/") => {
+            match p["/v1/regions/".len()..].parse::<usize>() {
+                Ok(r) => query(out, sh, Query::Region(r)),
+                Err(_) => {
+                    let _ = http::write_json(
+                        out,
+                        400,
+                        &error_json("region index must be an unsigned integer"),
+                    );
+                }
+            }
+        }
+        (_, p) if ENDPOINTS.contains(&p) || p.starts_with("/v1/regions/") => {
+            let _ = http::write_json(out, 405, &error_json("method not allowed"));
+        }
+        _ => {
+            let _ = http::write_json(out, 404, &error_json("no such endpoint (docs/DAEMON.md)"));
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, sh: Shared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader);
+    let mut out = stream;
+    match http::read_request(&mut reader) {
+        Ok(req) => route(&req, &mut out, &sh),
+        // Health checks and port probes open-and-close; stay quiet.
+        Err(ParseError::Eof) => {}
+        Err(_) => {
+            let _ = http::write_json(&mut out, 400, &error_json("malformed HTTP request"));
+        }
+    }
+}

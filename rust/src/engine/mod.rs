@@ -1,11 +1,13 @@
 //! Unified execution engine: the single owner of backlog, deadline
 //! expiry, failure handling, action execution and metering.
 //!
-//! Both execution surfaces — the virtual-time simulator (`crate::sim`,
-//! §VI-A: 480 slots x 45 s) and the real-time serving driver
-//! (`crate::serve`) — are thin drivers over [`ExecutionEngine::step`], so
-//! their task accounting is one code path and their `RunMetrics` agree
-//! bit-for-bit for the same config/seed (tested).
+//! All execution surfaces — the virtual-time simulator (`crate::sim`,
+//! §VI-A: 480 slots x 45 s), the real-time serving driver
+//! (`crate::serve`) and the control-plane daemon's event loop
+//! (`crate::daemon`, docs/DAEMON.md) — are thin drivers over
+//! [`ExecutionEngine::step`], so their task accounting is one code path
+//! and their `RunMetrics` agree bit-for-bit for the same config/seed and
+//! merged workload (tested).
 //!
 //! Per slot the engine: applies failure events, ticks server warm-ups,
 //! feeds the previous slot's [`SlotOutcome`] back to the scheduler

@@ -21,6 +21,7 @@
 
 pub mod cluster;
 pub mod config;
+pub mod daemon;
 pub mod engine;
 pub mod faults;
 pub mod geo;

@@ -7,6 +7,7 @@
 //!   milp      — Fig 5 MILP solve-time scaling demo
 //!   trace     — record a workload trace to CSV
 //!   serve     — real-time (time-scaled) serving session
+//!   daemon    — control-plane daemon: serve loop + HTTP/JSON API
 //!
 //! `torta <cmd> --help` lists options.
 
@@ -28,6 +29,7 @@ fn main() {
         "milp" => cmd_milp(&rest),
         "trace" => cmd_trace(&rest),
         "serve" => cmd_serve(&rest),
+        "daemon" => cmd_daemon(&rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -60,7 +62,8 @@ fn print_help() {
          \x20 suite      all schedulers x topologies comparison table\n\
          \x20 milp       Fig 5 MILP solve-time scaling\n\
          \x20 trace      record a workload trace CSV\n\
-         \x20 serve      real-time (scaled) serving session\n\n\
+         \x20 serve      real-time (scaled) serving session\n\
+         \x20 daemon     control-plane daemon: HTTP/JSON API over the serve loop\n\n\
          Run `torta <command> --help` for options."
     );
 }
@@ -286,9 +289,8 @@ fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
         .opt("out", "results/trace.csv", "output CSV path")
         .parse(args)?;
     let cfg = load_cfg(&cli)?;
-    let topo = torta::topology::Topology::by_name(&cfg.topology)?;
-    let seed = cfg.seed ^ torta::sim::topo_salt(&topo.name);
-    let mut wl = cfg.scenario.build_workload(&cfg.workload, topo.n, seed, cfg.slot_secs)?;
+    let setup = torta::sim::run_setup(&cfg)?;
+    let mut wl = setup.workload(&cfg)?;
     let out = std::path::PathBuf::from(cli.str("out"));
     if let Some(dir) = out.parent() {
         std::fs::create_dir_all(dir)?;
@@ -306,17 +308,41 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("time-scale", "45", "wall-time compression factor")
         .parse(args)?;
     let cfg = load_cfg(&cli)?;
-    let topo = torta::topology::Topology::by_name(&cfg.topology)?;
-    // Same salted seed as the engine inside serve_realtime: the
-    // scheduler's price/cost view must match what the engine bills.
-    let seed = cfg.seed ^ torta::sim::topo_salt(&topo.name);
-    let prices = torta::power::PriceTable::for_regions(topo.n, seed);
-    let ctx = torta::scheduler::Ctx { topo, prices, slot_secs: cfg.slot_secs };
-    let mut wl = cfg.scenario.build_workload(&cfg.workload, ctx.topo.n, seed, cfg.slot_secs)?;
-    let mut sched = torta::scheduler::build(&cfg.scheduler, &ctx, &cfg)?;
+    // run_setup derives the same salted seed / price table as the engine
+    // inside serve_realtime: the scheduler's cost view cannot drift from
+    // what the engine bills.
+    let setup = torta::sim::run_setup(&cfg)?;
+    let mut wl = setup.workload(&cfg)?;
+    let mut sched = setup.scheduler(&cfg)?;
     let scale = cli.f64("time-scale")?;
     let mut m =
         torta::serve::serve_realtime(&cfg, wl.as_mut(), sched.as_mut(), cfg.slots, scale)?;
+    println!("{}", m.row());
+    Ok(())
+}
+
+fn cmd_daemon(args: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("torta daemon")
+        .opt("listen", "127.0.0.1:7070", "TCP listen address (host:port; port 0 = ephemeral)")
+        .opt("time-scale", "45", "wall-time compression factor (45 = one slot per second)")
+        .opt("queue-cap", "1024", "streamed-lane bound; overflow sheds to batch (docs/DAEMON.md)")
+        .parse(args)?;
+    let cfg = load_cfg(&cli)?;
+    let opts = torta::daemon::DaemonOpts {
+        time_scale: cli.f64("time-scale")?,
+        queue_cap: cli.usize("queue-cap")?,
+    };
+    let listen = cli.str("listen");
+    let daemon = torta::daemon::Daemon::spawn(cfg.clone(), opts, &listen)?;
+    println!(
+        "torta daemon listening on http://{} — {} x {}, {} slots (docs/DAEMON.md; \
+         POST /v1/drain to finish)",
+        daemon.local_addr(),
+        cfg.topology,
+        cfg.scheduler,
+        cfg.slots
+    );
+    let mut m = daemon.join()?;
     println!("{}", m.row());
     Ok(())
 }

@@ -20,7 +20,7 @@ use crate::workload::combinators::{
 use crate::workload::{Constant, Diurnal, FailureEvent, TraceReplay, WorkloadSource};
 
 /// Registry scenario names (`trace:<path>` is additionally accepted).
-pub const REGISTRY: [&str; 10] = [
+pub const REGISTRY: [&str; 11] = [
     "diurnal",
     "surge",
     "flash-crowd",
@@ -31,6 +31,7 @@ pub const REGISTRY: [&str; 10] = [
     "flaky-network",
     "tenant-mix",
     "token-drift",
+    "fleet-256",
 ];
 
 /// The chaos subset of [`REGISTRY`]: scenarios that carry a
@@ -240,6 +241,21 @@ impl Scenario {
                     drift: Some(TokenDriftSpec { at: 16, ramp: 8, factor: 2.5 }),
                     ..ServingSpec::default()
                 }),
+            },
+            // Fleet-scale regression target (docs/PERF.md, "Shard
+            // pipeline"): the diurnal baseline at 4x rate, meant for the
+            // synthetic-256 topology where the R=256 shard pipeline and
+            // its determinism contract are exercised at full width. The
+            // spec is topology-independent (scenarios always are); the
+            // suite/tier-1 pairing with synthetic-256 lives in the
+            // end-to-end tests and CI.
+            "fleet-256" => Scenario {
+                name: "fleet-256".into(),
+                base: BaseSpec::Diurnal,
+                layers: vec![LayerSpec::RateScale { factor: 4.0 }],
+                failures: Vec::new(),
+                faults: None,
+                serving: None,
             },
             other => anyhow::bail!(
                 "unknown scenario {other:?}; expected one of {REGISTRY:?} or trace:<path>"

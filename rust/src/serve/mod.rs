@@ -10,6 +10,17 @@
 //! mpsc channels. Used by `examples/serving_realtime.rs`; identical
 //! config/seed yields `RunMetrics` bit-identical to `sim` (tested).
 //!
+//! Since the control-plane daemon landed (docs/DAEMON.md), the loop
+//! itself lives in [`crate::daemon::run_event_loop`]: slot deadlines are
+//! timers, and between deadlines the leader can consume live submissions,
+//! state queries and drain requests from the daemon's HTTP layer.
+//! [`serve_realtime`] is the generator-driven entry point — no control
+//! surface attached, so the event phase degenerates to plain timer pacing
+//! and the session stays bit-identical to the virtual-time engine (the
+//! parity test below). The workload is wrapped in an
+//! [`IngestSource`](crate::workload::IngestSource) whose queue stays
+//! empty, which is exactly its bit-transparent fast path.
+//!
 //! Built on std::thread + mpsc (the offline build has no tokio); the
 //! channel topology is identical to an async runtime's task graph.
 //!
@@ -20,30 +31,10 @@
 //! the serve-vs-sim `RunMetrics` parity test below exact regardless of
 //! the deployment's thread configuration.
 
-use std::sync::mpsc;
-use std::thread;
-use std::time::{Duration, Instant};
-
 use crate::config::ExperimentConfig;
-use crate::engine::ExecutionEngine;
 use crate::metrics::RunMetrics;
-use crate::scheduler::{ActionResult, Scheduler};
-use crate::workload::WorkloadSource;
-
-/// Messages from leader to a region worker.
-enum WorkerMsg {
-    /// Simulate the residency of one executed assignment and ack. All
-    /// accounting already happened in the engine; the worker only models
-    /// the deployment's execution/ack round-trip.
-    Execute { task_id: u64, compute_secs: f64 },
-    Shutdown,
-}
-
-/// Completion acknowledgements back to the leader.
-struct Ack {
-    #[allow(dead_code)]
-    task_id: u64,
-}
+use crate::scheduler::Scheduler;
+use crate::workload::{IngestSource, WorkloadSource};
 
 /// Run a real-time (scaled) serving session.
 ///
@@ -56,90 +47,9 @@ pub fn serve_realtime(
     slots: usize,
     time_scale: f64,
 ) -> anyhow::Result<RunMetrics> {
-    let mut engine = ExecutionEngine::new(cfg.clone())?;
-    let n_regions = engine.ctx.topo.n;
-    let mut metrics = RunMetrics::new(scheduler.name(), &cfg.topology);
-    metrics.scenario = cfg.scenario.name.clone();
-
-    // Spawn region workers.
-    let (ack_tx, ack_rx) = mpsc::channel::<Ack>();
-    let mut worker_tx: Vec<mpsc::Sender<WorkerMsg>> = Vec::with_capacity(n_regions);
-    let mut handles = Vec::with_capacity(n_regions);
-    for _region in 0..n_regions {
-        let (tx, rx) = mpsc::channel::<WorkerMsg>();
-        let ack = ack_tx.clone();
-        worker_tx.push(tx);
-        handles.push(thread::spawn(move || {
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    WorkerMsg::Execute { task_id, compute_secs } => {
-                        // Residency: the task's compute time, scaled.
-                        let dur = compute_secs / time_scale.max(1e-6);
-                        thread::sleep(Duration::from_secs_f64(dur.min(0.05)));
-                        if ack.send(Ack { task_id }).is_err() {
-                            break;
-                        }
-                    }
-                    WorkerMsg::Shutdown => break,
-                }
-            }
-        }));
-    }
-    drop(ack_tx);
-
-    let slot_wall = Duration::from_secs_f64(cfg.slot_secs / time_scale);
-    let t0 = Instant::now();
-    let mut inflight = 0usize;
-    for slot in 0..slots {
-        // Leader: one engine slot (arrivals + backlog -> scheduler ->
-        // action execution -> metering), then dispatch the executed
-        // assignments to the region workers.
-        engine.step(slot, workload, scheduler, &mut metrics);
-        if let Some(outcome) = engine.last_outcome() {
-            for res in &outcome.results {
-                if let ActionResult::Assigned { task_id, region, compute_secs, .. } = res {
-                    // Count in-flight only on successful dispatch: a dead
-                    // worker must not leave phantom entries for the
-                    // shutdown drain to wait on.
-                    if worker_tx[*region]
-                        .send(WorkerMsg::Execute {
-                            task_id: *task_id,
-                            compute_secs: *compute_secs,
-                        })
-                        .is_ok()
-                    {
-                        inflight += 1;
-                    }
-                }
-            }
-        }
-
-        // Drain acks that completed during the slot.
-        while ack_rx.try_recv().is_ok() {
-            inflight -= 1;
-        }
-        // Pace to real time.
-        let target = slot_wall * (slot as u32 + 1);
-        let elapsed = t0.elapsed();
-        if elapsed < target {
-            thread::sleep(target - elapsed);
-        }
-    }
-    engine.finish(&mut metrics);
-    // Shutdown and drain the remainder.
-    for tx in &worker_tx {
-        tx.send(WorkerMsg::Shutdown).ok();
-    }
-    while inflight > 0 {
-        match ack_rx.recv_timeout(Duration::from_secs(5)) {
-            Ok(_) => inflight -= 1,
-            Err(_) => break,
-        }
-    }
-    for h in handles {
-        h.join().ok();
-    }
-    Ok(metrics)
+    // Empty ingest queue => every batch passes through bit-identically.
+    let mut ingest = IngestSource::new(workload);
+    crate::daemon::run_event_loop(cfg, &mut ingest, scheduler, slots, time_scale, None)
 }
 
 #[cfg(test)]

@@ -14,6 +14,45 @@ pub use crate::engine::{
 
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
+use crate::scheduler::{Ctx, Scheduler};
+use crate::workload::WorkloadSource;
+
+/// Shared run assembly: the one place that resolves a config into the
+/// topology, the topology-salted seed, the price table and the scheduler
+/// [`Ctx`]. Every driver — `run_experiment`, the serve CLI, the trace
+/// recorder and the control-plane daemon — goes through this, so their
+/// seed/price view cannot drift from what the engine bills
+/// ([`ExecutionEngine::new`](crate::engine::ExecutionEngine::new) derives
+/// the identical values from the same config).
+pub struct RunSetup {
+    pub ctx: Ctx,
+    /// `cfg.seed ^ topo_salt(canonical name)` — the salt uses the
+    /// canonical topology name (`by_name` lowercases), matching the
+    /// engine's fleet/failure seed even when `cfg.topology` differs in
+    /// case.
+    pub seed: u64,
+}
+
+/// Resolve topology, salted seed, prices and scheduler context for `cfg`.
+pub fn run_setup(cfg: &ExperimentConfig) -> anyhow::Result<RunSetup> {
+    let topo = crate::topology::Topology::by_name(&cfg.topology)?;
+    let seed = cfg.seed ^ topo_salt(&topo.name);
+    let prices = crate::power::PriceTable::for_regions(topo.n, seed);
+    Ok(RunSetup { ctx: Ctx { topo, prices, slot_secs: cfg.slot_secs }, seed })
+}
+
+impl RunSetup {
+    /// Build the scenario's workload source stack against this setup's
+    /// region count and salted seed.
+    pub fn workload(&self, cfg: &ExperimentConfig) -> anyhow::Result<Box<dyn WorkloadSource>> {
+        cfg.scenario.build_workload(&cfg.workload, self.ctx.topo.n, self.seed, cfg.slot_secs)
+    }
+
+    /// Build the configured scheduler against this setup's context.
+    pub fn scheduler(&self, cfg: &ExperimentConfig) -> anyhow::Result<Box<dyn Scheduler>> {
+        crate::scheduler::build(&cfg.scheduler, &self.ctx, cfg)
+    }
+}
 
 /// Convenience: build the scenario workload + scheduler by name and run
 /// the configured experiment. The scenario spec drives both the workload
@@ -21,13 +60,9 @@ use crate::metrics::RunMetrics;
 /// config reproduces the pre-scenario diurnal run bit-for-bit.
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunMetrics> {
     let mut sim = Simulation::new(cfg.clone())?;
-    // Salt with the canonical topology name (by_name lowercases), matching
-    // the engine's fleet/failure seed even when cfg.topology differs in
-    // case.
-    let seed = cfg.seed ^ topo_salt(&sim.ctx.topo.name);
-    let n = sim.ctx.topo.n;
-    let mut workload = cfg.scenario.build_workload(&cfg.workload, n, seed, cfg.slot_secs)?;
-    let mut sched = crate::scheduler::build(&cfg.scheduler, &sim.ctx, cfg)?;
+    let setup = run_setup(cfg)?;
+    let mut workload = setup.workload(cfg)?;
+    let mut sched = setup.scheduler(cfg)?;
     Ok(sim.run(workload.as_mut(), sched.as_mut()))
 }
 
@@ -111,6 +146,20 @@ mod tests {
             sim.step(slot, &mut wl, &mut sched, &mut metrics);
         }
         assert!(!sim.fleet.regions[0].failed);
+    }
+
+    #[test]
+    fn run_setup_matches_engine_view() {
+        // The shared builder and the engine must resolve the same
+        // topology and salted seed from one config — this is the seam
+        // that keeps serve/daemon schedulers priced like the engine.
+        let cfg = small_cfg();
+        let sim = Simulation::new(cfg.clone()).unwrap();
+        let setup = run_setup(&cfg).unwrap();
+        assert_eq!(setup.ctx.topo.name, sim.ctx.topo.name);
+        assert_eq!(setup.ctx.topo.n, sim.ctx.topo.n);
+        assert_eq!(setup.seed, cfg.seed ^ topo_salt(&sim.ctx.topo.name));
+        assert_eq!(setup.ctx.slot_secs, cfg.slot_secs);
     }
 
     #[test]

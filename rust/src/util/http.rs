@@ -1,0 +1,332 @@
+//! Minimal dependency-free HTTP/1.1 layer for the control-plane daemon
+//! (docs/DAEMON.md): a request parser, response writers, chunked
+//! transfer-encoding helpers and a tiny blocking client used by the
+//! loadgen example and the daemon integration tests.
+//!
+//! Deliberately small — enough of RFC 9112 for `curl` and loopback test
+//! traffic: one request per connection, `Connection: close` on every
+//! response, bodies framed by `Content-Length` (responses may also use
+//! chunked encoding for the metrics stream). The offline build has no
+//! hyper/tokio, mirroring the no-serde stance of [`crate::util::json`].
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on the request line or any single header line, bytes.
+const MAX_LINE: usize = 8 * 1024;
+/// Upper bound on a request body, bytes.
+const MAX_BODY: usize = 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path portion of the request target (query string stripped).
+    pub path: String,
+    /// Raw query string (empty when absent).
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Request-parse failure; maps to a 4xx (or a silent close) at the call
+/// site.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Peer closed the connection before sending a request line.
+    Eof,
+    /// Malformed or oversized request.
+    Bad(String),
+    Io(io::Error),
+}
+
+impl From<io::Error> for ParseError {
+    fn from(e: io::Error) -> ParseError {
+        ParseError::Io(e)
+    }
+}
+
+/// Read one CRLF- (or LF-) terminated line, bounded by [`MAX_LINE`].
+fn read_line<R: BufRead>(r: &mut R) -> Result<Option<String>, ParseError> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1];
+    loop {
+        match r.read(&mut chunk)? {
+            0 => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                break;
+            }
+            _ => {
+                if chunk[0] == b'\n' {
+                    break;
+                }
+                buf.push(chunk[0]);
+                if buf.len() > MAX_LINE {
+                    return Err(ParseError::Bad("header line too long".into()));
+                }
+            }
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| ParseError::Bad("non-UTF-8 header".into()))
+}
+
+/// Parse one HTTP/1.1 request from `r` (request line, headers, and a
+/// `Content-Length`-framed body).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ParseError> {
+    let line = read_line(r)?.ok_or(ParseError::Eof)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(ParseError::Bad(format!("bad request line {line:?}")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?.ok_or_else(|| ParseError::Bad("truncated headers".into()))?;
+        if line.is_empty() {
+            break;
+        }
+        match line.split_once(':') {
+            Some((k, v)) => headers.push((k.trim().to_string(), v.trim().to_string())),
+            None => return Err(ParseError::Bad(format!("bad header line {line:?}"))),
+        }
+    }
+    let mut req = Request { method, path, query, headers, body: String::new() };
+    let len: usize = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| ParseError::Bad(format!("bad content-length {v:?}")))?,
+    };
+    if len > MAX_BODY {
+        return Err(ParseError::Bad(format!("body too large ({len} bytes)")));
+    }
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        req.body =
+            String::from_utf8(body).map_err(|_| ParseError::Bad("non-UTF-8 body".into()))?;
+    }
+    Ok(req)
+}
+
+/// Canonical reason phrase for the status codes the daemon emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete `Connection: close` response with a
+/// `Content-Length`-framed body.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// JSON response shorthand.
+pub fn write_json<W: Write>(w: &mut W, status: u16, body: &str) -> io::Result<()> {
+    write_response(w, status, "application/json", body)
+}
+
+/// Start a chunked (streaming) response; follow with [`write_chunk`]
+/// calls and a final [`write_chunk_end`].
+pub fn write_chunked_head<W: Write>(w: &mut W, status: u16, content_type: &str) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+    )?;
+    w.flush()
+}
+
+/// Write one chunk (flushed immediately so long-poll clients see it).
+pub fn write_chunk<W: Write>(w: &mut W, data: &str) -> io::Result<()> {
+    if data.is_empty() {
+        return Ok(()); // an empty chunk would terminate the stream
+    }
+    write!(w, "{:x}\r\n{}\r\n", data.len(), data)?;
+    w.flush()
+}
+
+/// Terminate a chunked response.
+pub fn write_chunk_end<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+/// Blocking one-shot HTTP client: send `method path` with an optional
+/// JSON body to `addr`, return `(status, body)`. Bodies are read by
+/// `Content-Length` or to EOF (the daemon closes every connection), so
+/// this intentionally does not decode chunked responses — use a raw
+/// [`TcpStream`] for the metrics stream endpoint.
+pub fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut r = BufReader::new(stream);
+    let status_line = read_line(&mut r)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{e:?}")))?
+        .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "empty response"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("bad status line {status_line:?}"))
+        })?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let line = read_line(&mut r)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{e:?}")))?
+            .unwrap_or_default();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().ok();
+            }
+        }
+    }
+    let mut body = String::new();
+    match content_length {
+        Some(len) => {
+            let mut buf = vec![0u8; len];
+            r.read_exact(&mut buf)?;
+            body = String::from_utf8_lossy(&buf).into_owned();
+        }
+        None => {
+            r.read_to_string(&mut body)?;
+        }
+    }
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = "POST /v1/requests?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 4\r\n\r\nbody";
+        let req = read_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/requests");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.header("host"), Some("a"));
+        assert_eq!(req.body, "body");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = "GET /v1/metrics HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage_and_eof() {
+        assert!(matches!(
+            read_request(&mut Cursor::new(b"not http\r\n\r\n" as &[u8])),
+            Err(ParseError::Bad(_))
+        ));
+        assert!(matches!(
+            read_request(&mut Cursor::new(b"" as &[u8])),
+            Err(ParseError::Eof)
+        ));
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(MAX_LINE + 1));
+        assert!(matches!(
+            read_request(&mut Cursor::new(long.as_bytes())),
+            Err(ParseError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_oversized_body_declaration() {
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(matches!(
+            read_request(&mut Cursor::new(raw.as_bytes())),
+            Err(ParseError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn response_writer_frames_body() {
+        let mut out = Vec::new();
+        write_json(&mut out, 202, "{\"ok\": true}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 202 Accepted\r\n"));
+        assert!(s.contains("Content-Length: 12\r\n"));
+        assert!(s.ends_with("{\"ok\": true}"));
+    }
+
+    #[test]
+    fn chunked_stream_frames_and_terminates() {
+        let mut out = Vec::new();
+        write_chunked_head(&mut out, 200, "application/x-ndjson").unwrap();
+        write_chunk(&mut out, "{\"slot\":0}\n").unwrap();
+        write_chunk(&mut out, "").unwrap(); // no-op, must not terminate
+        write_chunk_end(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Transfer-Encoding: chunked"));
+        assert!(s.contains("b\r\n{\"slot\":0}\n\r\n"));
+        assert!(s.ends_with("0\r\n\r\n"));
+    }
+}

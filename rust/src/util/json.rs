@@ -48,6 +48,14 @@ impl Json {
         s
     }
 
+    /// Single-line rendering (no indentation or newlines) — the daemon's
+    /// metrics stream emits one compact document per line (NDJSON).
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
     /// Parse a JSON document (strict enough for our own output; rejects
     /// trailing garbage).
     pub fn parse(text: &str) -> Result<Json, String> {
@@ -87,6 +95,35 @@ impl Json {
         match self {
             Json::Arr(v) => Some(v.as_slice()),
             _ => None,
+        }
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            // Scalars render identically in both modes.
+            scalar => scalar.write(out, 0),
         }
     }
 
@@ -441,6 +478,16 @@ mod tests {
         assert_eq!(j.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(20.0));
         assert_eq!(j.get("b").unwrap().get("c").unwrap().as_str(), Some("hi"));
         assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn compact_is_one_line_and_parses_back() {
+        let mut j = Json::obj();
+        j.set("slot", 3usize).set("ok", true).set("xs", vec![1.0, 2.5]);
+        let s = j.to_string_compact();
+        assert!(!s.contains('\n'));
+        assert_eq!(s, "{\"ok\":true,\"slot\":3,\"xs\":[1,2.5]}");
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 
     #[test]

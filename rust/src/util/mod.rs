@@ -1,10 +1,11 @@
 //! Foundational substrates built in-repo (the offline build environment has
 //! no `rand`/`clap`/`serde`/`criterion`/`proptest`/`tokio`): deterministic
 //! RNG, streaming stats, JSON writer, CLI parser, bench harness, property
-//! testing, and a scoped thread pool.
+//! testing, a scoped thread pool, and a minimal HTTP/1.1 layer.
 
 pub mod bench;
 pub mod cli;
+pub mod http;
 pub mod json;
 pub mod pool;
 pub mod prop;

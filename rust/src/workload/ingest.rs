@@ -1,0 +1,234 @@
+//! External request ingestion: merge live (daemon-submitted) requests
+//! into a base [`WorkloadSource`] deterministically.
+//!
+//! The engine's offer order is `FIFO(backlog sorted by (arrival, id)) ++
+//! slot arrivals` (docs/API.md), so the only thing the control plane must
+//! guarantee for daemon-vs-engine bit parity is that each slot's arrival
+//! batch is itself ordered by `(arrival_secs, id)`. [`IngestSource`] owns
+//! that merge: queued external tasks due in the slot's window are folded
+//! into the base generator's batch and the union is sorted by that key.
+//! External ids live in a disjoint high namespace ([`INGEST_ID_BASE`]) so
+//! the sort never has to break a tie against generator ids, and — because
+//! generator batches are already `(arrival, id)`-ordered (stable
+//! arrival-sort over monotone ids) — a run with an empty queue returns
+//! the base batches untouched, keeping generator-driven serve sessions
+//! bit-identical to driving the engine directly (see `crate::serve`).
+
+use crate::serving::SloClass;
+use crate::workload::{DemandForecast, Task, TaskClass, WorkloadSource, EMBED_DIM};
+
+/// Id namespace floor for externally submitted requests. Generator ids
+/// count up from 0 per source; anything at or above this floor is an
+/// ingested request, and the two ranges cannot collide in any realistic
+/// run (2^48 generated tasks).
+pub const INGEST_ID_BASE: u64 = 1 << 48;
+
+/// Parameters of one externally submitted request (the daemon's submit
+/// JSON, post-validation — docs/DAEMON.md).
+#[derive(Clone, Debug)]
+pub struct IngestSpec {
+    /// Originating region (validated `< n_regions` upstream).
+    pub origin: usize,
+    /// Absolute arrival time in simulation seconds.
+    pub arrival_secs: f64,
+    /// Reference service time; also scales the deadline slack.
+    pub service_secs: f64,
+    /// Tenant SLO class (`None` = scalar, unannotated).
+    pub slo: Option<SloClass>,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+}
+
+/// Materialize an external request as an engine [`Task`]. All derived
+/// fields are deterministic functions of the spec — the daemon path and
+/// a reference engine run build bit-identical tasks from the same
+/// submission order. The task class follows the SLO tier (interactive
+/// traffic is light, batch work is compute-heavy), matching the serving
+/// subsystem's framing of the tenant mix.
+pub fn external_task(id: u64, spec: &IngestSpec, deadline_slack: f64) -> Task {
+    let class = match spec.slo {
+        Some(SloClass::Standard) => TaskClass::MemoryIntensive,
+        Some(SloClass::Batch) => TaskClass::ComputeIntensive,
+        _ => TaskClass::Lightweight,
+    };
+    Task {
+        id,
+        origin: spec.origin,
+        class,
+        model: 0,
+        user: 0,
+        service_secs: spec.service_secs,
+        arrival_secs: spec.arrival_secs,
+        deadline_secs: spec.arrival_secs + deadline_slack * spec.service_secs,
+        compute_demand_tflops: 30.0,
+        memory_demand_gb: 8.0,
+        embed: [0.0; EMBED_DIM],
+        payload_kb: 16.0,
+        prompt_tokens: spec.prompt_tokens,
+        output_tokens: spec.output_tokens,
+        slo: spec.slo,
+    }
+}
+
+/// A [`WorkloadSource`] wrapper that merges externally pushed tasks into
+/// the base source's per-slot batches, deterministically by
+/// `(arrival_secs, id)`.
+///
+/// Pushed tasks wait in an internal queue until the slot whose window
+/// contains their arrival is generated; late pushes (arrival already in
+/// the past when the slot closes) join the next batch generated — they
+/// cannot travel back in time, which is the wall-clock determinism
+/// caveat documented in docs/DAEMON.md. The demand-forecast view
+/// delegates to the base: external traffic is by definition unforecast.
+pub struct IngestSource<S: WorkloadSource> {
+    base: S,
+    queue: Vec<Task>,
+    merged_total: u64,
+}
+
+impl<S: WorkloadSource> IngestSource<S> {
+    pub fn new(base: S) -> IngestSource<S> {
+        IngestSource { base, queue: Vec::new(), merged_total: 0 }
+    }
+
+    /// Queue one external task for delivery with the slot covering (or
+    /// first generated after) its arrival time.
+    pub fn push(&mut self, task: Task) {
+        self.queue.push(task);
+    }
+
+    /// External tasks queued but not yet delivered to the engine.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// External tasks merged into batches so far.
+    pub fn merged_total(&self) -> u64 {
+        self.merged_total
+    }
+
+    fn merge(&mut self, slot: usize, slot_secs: f64, mut tasks: Vec<Task>) -> Vec<Task> {
+        if self.queue.is_empty() {
+            return tasks; // fast path: bit-identical to the base source
+        }
+        let end = (slot as f64 + 1.0) * slot_secs;
+        let (due, keep): (Vec<Task>, Vec<Task>) =
+            self.queue.drain(..).partition(|t| t.arrival_secs < end);
+        self.queue = keep;
+        if due.is_empty() {
+            return tasks;
+        }
+        self.merged_total += due.len() as u64;
+        tasks.extend(due);
+        // Same key the engine sorts its backlog by (docs/API.md).
+        tasks.sort_by(|a, b| {
+            a.arrival_secs
+                .partial_cmp(&b.arrival_secs)
+                .expect("task arrival must not be NaN")
+                .then(a.id.cmp(&b.id))
+        });
+        tasks
+    }
+}
+
+impl<S: WorkloadSource> DemandForecast for IngestSource<S> {
+    fn n_regions(&self) -> usize {
+        self.base.n_regions()
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        self.base.rate_at(slot)
+    }
+
+    fn rate_horizon(&self, slot: usize, horizon: usize) -> Vec<Vec<f64>> {
+        self.base.rate_horizon(slot, horizon)
+    }
+}
+
+impl<S: WorkloadSource> WorkloadSource for IngestSource<S> {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        let tasks = self.base.slot_tasks(slot, slot_secs);
+        self.merge(slot, slot_secs, tasks)
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        let tasks = self.base.gen_at_rates(slot, slot_secs, rates);
+        self.merge(slot, slot_secs, tasks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::Diurnal;
+
+    fn spec(origin: usize, arrival: f64) -> IngestSpec {
+        IngestSpec {
+            origin,
+            arrival_secs: arrival,
+            service_secs: 10.0,
+            slo: Some(SloClass::Interactive),
+            prompt_tokens: 128,
+            output_tokens: 64,
+        }
+    }
+
+    #[test]
+    fn empty_queue_is_bit_identical_to_base() {
+        let wl = WorkloadConfig::default();
+        let mut base = Diurnal::new(wl.clone(), 4, 7);
+        let mut wrapped = IngestSource::new(Diurnal::new(wl, 4, 7));
+        for slot in 0..3 {
+            let a = base.slot_tasks(slot, 45.0);
+            let b = wrapped.slot_tasks(slot, 45.0);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn merges_in_arrival_id_order_and_holds_future_tasks() {
+        let wl = WorkloadConfig::default();
+        let mut src = IngestSource::new(Diurnal::new(wl, 4, 7));
+        // Two due in slot 0, one (arrival 50) held for slot 1; push out of
+        // arrival order to exercise the sort.
+        src.push(external_task(INGEST_ID_BASE + 1, &spec(1, 30.0), 12.0));
+        src.push(external_task(INGEST_ID_BASE, &spec(0, 30.0), 12.0));
+        src.push(external_task(INGEST_ID_BASE + 2, &spec(2, 50.0), 12.0));
+        let batch = src.slot_tasks(0, 45.0);
+        assert_eq!(src.pending(), 1);
+        assert_eq!(src.merged_total(), 2);
+        let ext: Vec<u64> = batch.iter().filter(|t| t.id >= INGEST_ID_BASE).map(|t| t.id).collect();
+        // Equal arrivals break ties by id.
+        assert_eq!(ext, vec![INGEST_ID_BASE, INGEST_ID_BASE + 1]);
+        for w in batch.windows(2) {
+            assert!(
+                (w[0].arrival_secs, w[0].id) <= (w[1].arrival_secs, w[1].id),
+                "batch must be (arrival, id)-sorted"
+            );
+        }
+        let batch1 = src.slot_tasks(1, 45.0);
+        assert_eq!(src.pending(), 0);
+        assert!(batch1.iter().any(|t| t.id == INGEST_ID_BASE + 2));
+    }
+
+    #[test]
+    fn external_task_fields_are_deterministic() {
+        let t = external_task(INGEST_ID_BASE + 9, &spec(3, 100.0), 12.0);
+        assert_eq!(t.id, INGEST_ID_BASE + 9);
+        assert_eq!(t.origin, 3);
+        assert_eq!(t.class, TaskClass::Lightweight);
+        assert_eq!(t.deadline_secs, 100.0 + 12.0 * 10.0);
+        assert_eq!(t.slo, Some(SloClass::Interactive));
+        let b = external_task(
+            INGEST_ID_BASE,
+            &IngestSpec { slo: Some(SloClass::Batch), ..spec(0, 0.0) },
+            12.0,
+        );
+        assert_eq!(b.class, TaskClass::ComputeIntensive);
+    }
+}

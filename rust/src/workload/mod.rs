@@ -24,12 +24,14 @@
 //! scheduler runs.
 
 pub mod combinators;
+pub mod ingest;
 pub mod trace;
 
 pub use combinators::{
     FlashCrowd, Mix, Modulated, RateScale, RateShape, RegionalDrift, Surge, SurgeWindow,
     TokenDrift, WeeklySeasonal,
 };
+pub use ingest::{external_task, IngestSource, IngestSpec, INGEST_ID_BASE};
 pub use trace::TraceReplay;
 
 use crate::config::WorkloadConfig;
@@ -168,6 +170,34 @@ impl<T: DemandForecast + ?Sized> DemandForecast for Box<T> {
 }
 
 impl<T: WorkloadSource + ?Sized> WorkloadSource for Box<T> {
+    fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
+        (**self).slot_tasks(slot, slot_secs)
+    }
+
+    fn gen_at_rates(&mut self, slot: usize, slot_secs: f64, rates: &[f64]) -> Vec<Task> {
+        (**self).gen_at_rates(slot, slot_secs, rates)
+    }
+}
+
+// Forwarding impls for mutable borrows, so wrappers like
+// [`ingest::IngestSource`] can take either an owned boxed source or a
+// borrowed one (the serve facade wraps its `&mut dyn WorkloadSource`
+// argument without taking ownership).
+impl<T: DemandForecast + ?Sized> DemandForecast for &mut T {
+    fn n_regions(&self) -> usize {
+        (**self).n_regions()
+    }
+
+    fn rate_at(&self, slot: usize) -> Vec<f64> {
+        (**self).rate_at(slot)
+    }
+
+    fn rate_horizon(&self, slot: usize, horizon: usize) -> Vec<Vec<f64>> {
+        (**self).rate_horizon(slot, horizon)
+    }
+}
+
+impl<T: WorkloadSource + ?Sized> WorkloadSource for &mut T {
     fn slot_tasks(&mut self, slot: usize, slot_secs: f64) -> Vec<Task> {
         (**self).slot_tasks(slot, slot_secs)
     }

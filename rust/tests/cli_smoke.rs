@@ -11,7 +11,7 @@ fn help_lists_commands() {
     let out = torta().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["simulate", "suite", "train", "milp", "trace", "serve"] {
+    for cmd in ["simulate", "suite", "train", "milp", "trace", "serve", "daemon"] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
 }

@@ -1,0 +1,292 @@
+//! Control-plane daemon integration tests (docs/DAEMON.md): a real
+//! daemon on an ephemeral loopback port, driven over HTTP.
+//!
+//! The headline assertion is the determinism acceptance criterion: a
+//! scripted request set submitted over the wire, then drained, must
+//! produce the exact `run_to_json` document — bit-for-bit — of a
+//! virtual-time engine run over the equivalent merged workload. The
+//! tests pin the daemon in slot 0's event phase with a tiny time scale
+//! (45 s slots stretched to ~12.5 wall hours), so every scripted
+//! request is queued before any slot steps and the drain then runs the
+//! whole horizon back-to-back — no wall-clock nondeterminism anywhere.
+
+use torta::config::ExperimentConfig;
+use torta::daemon::{Daemon, DaemonOpts};
+use torta::report;
+use torta::serving::SloClass;
+use torta::sim::{run_setup, Simulation};
+use torta::util::http::http_call;
+use torta::util::json::Json;
+use torta::workload::{external_task, IngestSource, IngestSpec, INGEST_ID_BASE};
+
+fn test_cfg(slots: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology = "synthetic-4".into();
+    cfg.scheduler = "rr".into();
+    cfg.slots = slots;
+    cfg.workload.base_rate = 4.0;
+    cfg.torta.use_pjrt = false;
+    cfg
+}
+
+/// Pin the serve loop in the event phase: one 45 s slot per 45000 wall
+/// seconds, so nothing steps until the drain request.
+fn paused_opts(queue_cap: usize) -> DaemonOpts {
+    DaemonOpts { time_scale: 0.001, queue_cap }
+}
+
+/// Reference run: the virtual-time engine over the same base workload
+/// with the scripted requests pushed up front, exactly as the daemon's
+/// ingest path builds them (same ids, same deadline slack).
+fn reference_json(cfg: &ExperimentConfig, specs: &[IngestSpec]) -> String {
+    let mut sim = Simulation::new(cfg.clone()).unwrap();
+    let setup = run_setup(cfg).unwrap();
+    let workload = setup.workload(cfg).unwrap();
+    let mut sched = setup.scheduler(cfg).unwrap();
+    let mut ingest = IngestSource::new(workload);
+    for (i, spec) in specs.iter().enumerate() {
+        ingest.push(external_task(
+            INGEST_ID_BASE + i as u64,
+            spec,
+            cfg.workload.deadline_slack,
+        ));
+    }
+    let mut m = sim.run(&mut ingest, sched.as_mut());
+    report::run_to_json(&mut m).to_string_pretty()
+}
+
+fn spec(
+    origin: usize,
+    arrival: f64,
+    service: f64,
+    slo: Option<SloClass>,
+    prompt: u32,
+    output: u32,
+) -> IngestSpec {
+    IngestSpec {
+        origin,
+        arrival_secs: arrival,
+        service_secs: service,
+        slo,
+        prompt_tokens: prompt,
+        output_tokens: output,
+    }
+}
+
+fn submit_body(s: &IngestSpec) -> String {
+    let mut j = Json::obj();
+    j.set("origin", s.origin)
+        .set("arrival_s", s.arrival_secs)
+        .set("service_secs", s.service_secs)
+        .set("prompt_tokens", s.prompt_tokens as u64)
+        .set("output_tokens", s.output_tokens as u64);
+    if let Some(c) = s.slo {
+        j.set("slo", c.name());
+    }
+    j.to_string_pretty()
+}
+
+#[test]
+fn daemon_end_to_end_matches_engine_bitwise() {
+    let cfg = test_cfg(4);
+    let daemon = Daemon::spawn(cfg.clone(), paused_opts(1024), "127.0.0.1:0").unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    // Scripted request set: mixed origins, SLO classes and token counts,
+    // explicit arrivals spread over the 4-slot horizon (0..180 s). The
+    // first four go through the single endpoint, the last two as one
+    // batch — ids are assigned in submission order either way.
+    let specs = [
+        spec(0, 10.0, 12.0, Some(SloClass::Interactive), 128, 64),
+        spec(1, 40.0, 8.0, Some(SloClass::Standard), 256, 128),
+        spec(2, 95.0, 20.0, Some(SloClass::Batch), 512, 512),
+        spec(3, 50.0, 10.0, None, 0, 0),
+        spec(0, 100.0, 6.0, Some(SloClass::Interactive), 64, 32),
+        spec(1, 130.0, 15.0, Some(SloClass::Standard), 128, 256),
+    ];
+    for (i, s) in specs[..4].iter().enumerate() {
+        let (status, body) =
+            http_call(&addr, "POST", "/v1/requests", Some(&submit_body(s))).unwrap();
+        assert_eq!(status, 202, "submit {i}: {body}");
+        let j = Json::parse(&body).unwrap();
+        let id = j.get("id").and_then(Json::as_f64).unwrap() as u64;
+        assert_eq!(id, INGEST_ID_BASE + i as u64);
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("queued"));
+    }
+    let mut batch = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for s in &specs[4..] {
+        arr.push(Json::parse(&submit_body(s)).unwrap());
+    }
+    batch.set("requests", arr);
+    let (status, body) =
+        http_call(&addr, "POST", "/v1/requests/batch", Some(&batch.to_string_pretty())).unwrap();
+    assert_eq!(status, 202, "batch: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("accepted").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(j.get("shed").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(j.get("ids").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+
+    // State surface while paused in slot 0: nothing stepped yet, all six
+    // requests queued in the ingest source.
+    let (status, body) = http_call(&addr, "GET", "/v1/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let h = Json::parse(&body).unwrap();
+    assert_eq!(h.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(h.get("slot").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(h.get("ingest_pending").and_then(Json::as_f64), Some(6.0));
+    assert_eq!(h.get("tasks_total").and_then(Json::as_f64), Some(0.0));
+
+    let (status, body) = http_call(&addr, "GET", "/v1/fleet", None).unwrap();
+    assert_eq!(status, 200);
+    let f = Json::parse(&body).unwrap();
+    assert_eq!(f.get("topology").and_then(Json::as_str), Some("synthetic-4"));
+    assert_eq!(f.get("regions").and_then(Json::as_arr).map(<[Json]>::len), Some(4));
+
+    let (status, body) = http_call(&addr, "GET", "/v1/regions/0", None).unwrap();
+    assert_eq!(status, 200);
+    let r = Json::parse(&body).unwrap();
+    assert!(!r.get("servers").and_then(Json::as_arr).unwrap().is_empty());
+
+    let (status, body) = http_call(&addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let m = Json::parse(&body).unwrap();
+    assert_eq!(m.get("tasks_total").and_then(Json::as_f64), Some(0.0));
+
+    // Drain: the remaining horizon runs back-to-back and the response is
+    // the final results JSON — bit-for-bit what the virtual-time engine
+    // produces over the same merged workload.
+    let (status, drained) = http_call(&addr, "POST", "/v1/drain", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(drained, reference_json(&cfg, &specs), "daemon vs engine results JSON");
+
+    let metrics = daemon.join().unwrap();
+    let final_tasks =
+        Json::parse(&drained).unwrap().get("tasks_total").and_then(Json::as_f64).unwrap();
+    assert_eq!(metrics.tasks_total as f64, final_tasks);
+}
+
+#[test]
+fn daemon_rejects_malformed_requests() {
+    let cfg = test_cfg(2);
+    let daemon = Daemon::spawn(cfg, paused_opts(16), "127.0.0.1:0").unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    // Invalid JSON body.
+    let (status, body) = http_call(&addr, "POST", "/v1/requests", Some("{nope")).unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(Json::parse(&body).unwrap().get("error").is_some());
+    // Unknown SLO class.
+    let (status, _) =
+        http_call(&addr, "POST", "/v1/requests", Some(r#"{"slo": "platinum"}"#)).unwrap();
+    assert_eq!(status, 400);
+    // Origin out of range for the 4-region fleet.
+    let (status, body) =
+        http_call(&addr, "POST", "/v1/requests", Some(r#"{"origin": 99}"#)).unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("origin"), "{body}");
+    // Negative service time.
+    let (status, _) =
+        http_call(&addr, "POST", "/v1/requests", Some(r#"{"service_secs": -1}"#)).unwrap();
+    assert_eq!(status, 400);
+    // A batch with one bad entry admits nothing.
+    let bad_batch = r#"{"requests": [{"origin": 0}, {"origin": 99}]}"#;
+    let (status, body) =
+        http_call(&addr, "POST", "/v1/requests/batch", Some(bad_batch)).unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("requests[1]"), "{body}");
+    // Unknown endpoint and wrong method on a known one.
+    let (status, _) = http_call(&addr, "GET", "/v1/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http_call(&addr, "GET", "/v1/requests", None).unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = http_call(&addr, "GET", "/v1/regions/zero", None).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = http_call(&addr, "GET", "/v1/regions/99", None).unwrap();
+    assert_eq!(status, 404);
+
+    // Nothing was admitted: the health endpoint still sees zero queued.
+    let (_, body) = http_call(&addr, "GET", "/v1/healthz", None).unwrap();
+    assert_eq!(
+        Json::parse(&body).unwrap().get("ingest_pending").and_then(Json::as_f64),
+        Some(0.0)
+    );
+    let (status, _) = http_call(&addr, "POST", "/v1/drain", None).unwrap();
+    assert_eq!(status, 200);
+    daemon.join().unwrap();
+}
+
+#[test]
+fn overflow_sheds_to_batch_deterministically() {
+    // queue_cap 0 forces every submission through the shed lane: the
+    // request is still admitted, demoted to the batch SLO class. The
+    // drained run must equal an engine run over batch-class tasks.
+    let cfg = test_cfg(2);
+    let daemon = Daemon::spawn(cfg.clone(), paused_opts(0), "127.0.0.1:0").unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    let requested = [
+        spec(0, 10.0, 12.0, Some(SloClass::Interactive), 128, 64),
+        spec(1, 20.0, 8.0, None, 32, 16),
+    ];
+    for (i, s) in requested.iter().enumerate() {
+        let (status, body) =
+            http_call(&addr, "POST", "/v1/requests", Some(&submit_body(s))).unwrap();
+        assert_eq!(status, 202, "shed submit {i}: {body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("shed-to-batch"));
+    }
+    let (status, drained) = http_call(&addr, "POST", "/v1/drain", None).unwrap();
+    assert_eq!(status, 200);
+
+    // What actually entered the run: the same specs with slo = batch.
+    let effective: Vec<IngestSpec> = requested
+        .iter()
+        .map(|s| IngestSpec { slo: Some(SloClass::Batch), ..s.clone() })
+        .collect();
+    assert_eq!(drained, reference_json(&cfg, &effective));
+    daemon.join().unwrap();
+}
+
+#[test]
+fn metrics_stream_emits_slot_frames_and_done() {
+    use std::io::{Read, Write};
+
+    let cfg = test_cfg(2);
+    let daemon = Daemon::spawn(cfg, paused_opts(16), "127.0.0.1:0").unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    // Raw socket: http_call reads Content-Length responses only, and the
+    // stream endpoint is chunked NDJSON held open across slots.
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    write!(
+        stream,
+        "GET /v1/metrics/stream HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )
+    .unwrap();
+    // Read the response head first: once it arrives, the subscription is
+    // registered with the serve loop (the handler subscribes before
+    // writing the head), so the drain below cannot race past it.
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        assert_eq!(stream.read(&mut byte).unwrap(), 1, "EOF before header end");
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8(head).unwrap();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+
+    let (status, _) = http_call(&addr, "POST", "/v1/drain", None).unwrap();
+    assert_eq!(status, 200);
+
+    // Drain ran both slots; the stream got one frame per slot plus the
+    // closing document, then the connection closed.
+    let mut rest = String::new();
+    stream.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("\"slot\":0"), "{rest}");
+    assert!(rest.contains("\"slot\":1"), "{rest}");
+    assert!(rest.contains("\"done\":true"), "{rest}");
+    assert!(rest.ends_with("0\r\n\r\n"), "unterminated chunks: {rest}");
+    daemon.join().unwrap();
+}

@@ -101,6 +101,34 @@ fn torta_switching_cost_below_reactive_long_horizon() {
     );
 }
 
+/// Fleet-scale suite target: the `fleet-256` registry scenario on the
+/// synthetic-256 topology drives the R=256 shard pipeline in tier-1, so
+/// fleet-width regressions (panics, nondeterminism across worker counts)
+/// fail fast instead of only in the perf bench.
+#[test]
+fn fleet_256_scenario_runs_and_is_thread_invariant() {
+    let mut cfg = short_cfg("synthetic-256", "torta-native");
+    cfg.slots = 2; // two slots keep tier-1 quick; width is the point
+    cfg.seed = 7;
+    cfg.workload.base_rate = 4.0; // x4 rate-scale layer => 16/slot/region
+    cfg.scenario = torta::scenario::Scenario::by_name("fleet-256").unwrap();
+    cfg.torta.threads = 1;
+    let a = run_experiment(&cfg).unwrap();
+    assert!(a.tasks_total > 0, "fleet-256: no tasks");
+    assert_eq!(a.scenario, "fleet-256");
+    assert_eq!(a.lb_per_slot.len(), 2);
+    // Determinism contract at full width: the sharded slot pipeline must
+    // produce bit-identical metrics for any worker count (docs/PERF.md).
+    cfg.torta.threads = 4;
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.tasks_total, b.tasks_total);
+    assert_eq!(a.tasks_dropped, b.tasks_dropped);
+    assert_eq!(a.mean_response().to_bits(), b.mean_response().to_bits());
+    assert_eq!(a.power_cost_dollars.to_bits(), b.power_cost_dollars.to_bits());
+    assert_eq!(a.switching_cost_frob.to_bits(), b.switching_cost_frob.to_bits());
+    assert_eq!(a.mean_lb().to_bits(), b.mean_lb().to_bits());
+}
+
 #[test]
 fn identical_seeds_are_bitwise_reproducible() {
     let a = run_experiment(&short_cfg("polska", "torta-native")).unwrap();
