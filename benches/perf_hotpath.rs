@@ -412,5 +412,49 @@ fn main() {
             "",
         );
     }
+
+    // ---- RL: PPO parallel-rollout scaling --------------------------------
+    // The PPO trainer fans each update's rollout batch over the worker
+    // pool (docs/RL.md, "Parallel rollouts"); results are bit-identical at
+    // every thread count, so the same training run is timed at 1 and 4
+    // workers and the ratio is pure collection speedup. One update of 8
+    // rollouts keeps the sequential portion (greedy evals + the update
+    // math) small relative to collection.
+    {
+        let mut cfg = ExperimentConfig::default();
+        cfg.slots = 40;
+        cfg.scheduler = "torta".into();
+        cfg.torta.use_pjrt = false;
+        cfg.scenario = torta::scenario::Scenario::by_name("surge").unwrap();
+        let mut tc = torta::rl::TrainConfig {
+            algo: torta::rl::Algo::Ppo,
+            episodes: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        tc.ppo.rollouts_per_update = 8;
+        let t0 = Instant::now();
+        let (p1, _) = torta::rl::train(&cfg, &tc).unwrap();
+        let secs_1t = t0.elapsed().as_secs_f64();
+        tc.threads = 4;
+        let t0 = Instant::now();
+        let (p4, _) = torta::rl::train(&cfg, &tc).unwrap();
+        let secs_4t = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            p1.w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            p4.w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "PPO training must be bit-identical across thread counts"
+        );
+        suite.metric(
+            "rl ppo throughput (surge, R=12, 40 slots, 4 threads)",
+            tc.episodes as f64 / secs_4t.max(1e-12),
+            "episodes/s",
+        );
+        suite.metric(
+            "rl ppo parallel rollout speedup (4 threads over 1)",
+            secs_1t / secs_4t.max(1e-12),
+            "x",
+        );
+    }
     suite.save("perf_hotpath");
 }

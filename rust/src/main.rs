@@ -141,14 +141,23 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let cli = Cli::new("torta train", "train the native macro RL policy against the simulator")
         .opt("topology", "abilene", "abilene|polska|gabriel|cost2|synthetic-<n>")
         .opt("scenario", "", "registry scenario or trace:<path> (default: surge / config's)")
+        .opt("algo", "reinforce", "training algorithm: reinforce|ppo")
         .opt("slots", "48", "slots per training episode")
         .opt("episodes", "40", "training episodes")
         .opt("lr", "0.05", "learning rate")
         .opt("gamma", "0.9", "per-slot reward discount")
         .opt("seed", "42", "workload/fleet/init/exploration seed")
+        .opt("threads", "0", "PPO rollout workers (0 = TORTA_THREADS / all cores)")
+        .opt("window", "5", "learning-curve moving-average window")
+        .opt("rollouts", "4", "[ppo] episodes per update (collected in parallel)")
+        .opt("epochs", "4", "[ppo] optimization epochs per update")
+        .opt("minibatch", "64", "[ppo] steps per minibatch (0 = full batch)")
+        .opt("clip", "0.2", "[ppo] surrogate ratio clip")
+        .opt("lam", "0.9", "[ppo] GAE lambda")
         .opt("out", "artifacts", "output directory for the policy artifact")
         .opt("config", "", "optional TOML config file")
         .flag("vary-workload", "reseed the episode env (arrivals, fleet, prices) each episode")
+        .flag("no-constraints", "[ppo] disable the L_eps/L_s constraint terms")
         .flag("no-eval", "skip the post-training trained-vs-fallback comparison")
         .parse(args)?;
     let mut cfg = {
@@ -179,16 +188,34 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     let tc = torta::rl::TrainConfig {
+        algo: torta::rl::Algo::parse(&cli.str("algo"))?,
         episodes: cli.usize("episodes")?,
         lr: cli.f64("lr")?,
         gamma: cli.f64("gamma")?,
         seed: cfg.seed,
         vary_workload: cli.has_flag("vary-workload"),
+        threads: cli.usize("threads")?,
+        report_window: cli.usize("window")?,
+        ppo: torta::rl::PpoConfig {
+            rollouts_per_update: cli.usize("rollouts")?,
+            epochs: cli.usize("epochs")?,
+            minibatch: cli.usize("minibatch")?,
+            clip: cli.f64("clip")?,
+            lam: cli.f64("lam")?,
+            constraints: !cli.has_flag("no-constraints"),
+            ..Default::default()
+        },
         ..Default::default()
     };
     println!(
-        "training native policy: {} x {} scenario, {} episodes x {} slots, lr {} gamma {}",
-        cfg.topology, cfg.scenario.name, tc.episodes, cfg.slots, tc.lr, tc.gamma
+        "training native policy ({}): {} x {} scenario, {} episodes x {} slots, lr {} gamma {}",
+        tc.algo.name(),
+        cfg.topology,
+        cfg.scenario.name,
+        tc.episodes,
+        cfg.slots,
+        tc.lr,
+        tc.gamma
     );
     let t0 = std::time::Instant::now();
     let (policy, report) = torta::rl::train(&cfg, &tc)?;
@@ -199,11 +226,32 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         println!("{i:>8} {ret:>14.2} {sm:>14.2}");
     }
     println!(
-        "learning curve: first smoothed {:.2} -> last smoothed {:.2} ({} episodes in {wall:?})",
+        "learning curve: first smoothed {:.2} -> last smoothed {:.2} \
+         ({} episodes, window {}, in {wall:?})",
         smoothed.first().copied().unwrap_or(0.0),
         smoothed.last().copied().unwrap_or(0.0),
-        tc.episodes
+        tc.episodes,
+        report.window
     );
+    if !report.ppo_updates.is_empty() {
+        println!(
+            "{:>7} {:>12} {:>10} {:>8} {:>9} {:>9} {:>9} {:>12}",
+            "update", "mean_ret", "eval_ret", "dev", "s_cur", "gamma_c", "delta_c", "clip_frac"
+        );
+        for u in &report.ppo_updates {
+            println!(
+                "{:>7} {:>12.2} {:>10.2} {:>8.3} {:>9.3} {:>9.3} {:>9.3} {:>12.3}",
+                u.update,
+                u.mean_return,
+                u.eval_return,
+                u.dev,
+                u.s_current,
+                u.gamma_c,
+                u.delta_c,
+                u.clip_frac
+            );
+        }
+    }
     let out = torta::rl::NativePolicy::default_path(
         std::path::Path::new(&cli.str("out")),
         policy.r,

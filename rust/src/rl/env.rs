@@ -24,7 +24,7 @@ use crate::scheduler::{ActionResult, Ctx, Scheduler, SlotOutcome};
 use crate::topology::Topology;
 
 /// Reward term weights (per slot; see module docs for the formula).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RewardWeights {
     /// Per second of mean slot response time.
     pub w_response: f64,

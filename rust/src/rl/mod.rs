@@ -16,10 +16,12 @@
 //!   workloads and reads the paper's reward (response time + realized
 //!   switching cost + operational cost) off each slot's
 //!   [`SlotOutcome`](crate::scheduler::SlotOutcome).
-//! * [`train`] — REINFORCE with a per-episode baseline over the exact
-//!   production path (state featurization from
-//!   `scheduler/torta/features.rs`, allocation through the
-//!   `MacroAllocator` trust-region projection).
+//! * [`train`] — the trainers: REINFORCE with a per-episode baseline
+//!   (`--algo reinforce`) and PPO with GAE, clipped surrogate, minibatch
+//!   epochs and the paper's constraint terms (`--algo ppo`, Eq. 4/5 /
+//!   Appendix B Algorithm 2, see [`ppo`]). PPO rollouts fan out over the
+//!   scoped worker pool with per-episode seeds, so training stays
+//!   bit-reproducible at any thread count.
 //!
 //! CLI: `torta train` produces a policy artifact; `torta simulate
 //! --policy <path>` (also `suite` / `serve`) evaluates it. See
@@ -28,13 +30,29 @@
 
 pub mod env;
 pub mod policy;
+pub mod ppo;
 pub mod train;
 
 pub use env::{run_episode, scheduler_ctx, EpisodeTrace, RewardWeights};
 pub use policy::NativePolicy;
-pub use train::{eval, smoothed, train, TrainConfig, TrainReport};
+pub use ppo::{PpoConfig, PpoUpdateStat};
+pub use train::{eval, smoothed, train, Algo, TrainConfig, TrainReport};
 
 use crate::runtime::TortaArtifacts;
+
+/// Per-decision context the scheduler hands the provider alongside the
+/// featurized state. `slot` lets trajectory recorders credit each step's
+/// reward to the exact engine slot it came from (the scheduler calls the
+/// provider at most once per slot, in slot order); `ot` is the slot's
+/// row-stochastic OT anchor, which the PPO constraint term `L_eps`
+/// penalizes deviation from.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocQuery<'a> {
+    /// Engine slot index of this decision.
+    pub slot: usize,
+    /// Row-major `r*r` OT anchor probabilities for this slot.
+    pub ot: &'a [f64],
+}
 
 /// A macro-policy backend: featurized state in, row-stochastic R x R
 /// allocation matrix out. `None` means "no usable output this slot" and
@@ -44,8 +62,9 @@ pub trait PolicyProvider {
     fn name(&self) -> &'static str;
 
     /// Map the featurized state (`features::state_dim(r)` f32 entries) to
-    /// a row-major, row-stochastic `r*r` allocation matrix.
-    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>>;
+    /// a row-major, row-stochastic `r*r` allocation matrix. `q` carries
+    /// the slot index and OT anchor of the decision being made.
+    fn alloc(&self, state: &[f32], q: &AllocQuery) -> Option<Vec<f64>>;
 }
 
 /// The PJRT artifact bundle doubles as a policy provider: identical math
@@ -56,7 +75,7 @@ impl PolicyProvider for TortaArtifacts {
         "pjrt"
     }
 
-    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>> {
+    fn alloc(&self, state: &[f32], _q: &AllocQuery) -> Option<Vec<f64>> {
         self.policy_alloc(state)
             .ok()
             .map(|v| v.iter().map(|&x| x as f64).collect())

@@ -16,6 +16,8 @@ use crate::scheduler::torta::features;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::env::RewardWeights;
+
 /// Artifact format tag (bumped on breaking layout changes).
 pub const FORMAT: &str = "torta-native-policy";
 pub const FORMAT_VERSION: u64 = 1;
@@ -31,10 +33,18 @@ pub struct NativePolicy {
     /// Seed the weights were initialized (and trained) under.
     pub seed: u64,
     /// Training provenance: episodes applied, scenario name, learning
-    /// rate. Zero / empty for a freshly initialized policy.
+    /// rate, reward discount, algorithm and reward weights. Zero / empty
+    /// for a freshly initialized policy (and for the numeric/text fields
+    /// of pre-provenance artifacts, which carry only `lr`).
     pub episodes: u64,
     pub scenario: String,
     pub lr: f64,
+    pub gamma: f64,
+    /// Training algorithm ("reinforce" | "ppo"); empty when untrained or
+    /// loaded from an artifact that predates the field.
+    pub algo: String,
+    /// Reward weights the returns were computed under.
+    pub weights: RewardWeights,
     /// Row-major `(R*R) x D` weight matrix.
     pub w: Vec<f64>,
     /// Per-logit bias, length `R*R`.
@@ -56,6 +66,9 @@ impl NativePolicy {
             episodes: 0,
             scenario: String::new(),
             lr: 0.0,
+            gamma: 0.0,
+            algo: String::new(),
+            weights: RewardWeights::default(),
             w,
             b: vec![0.0; r * r],
         }
@@ -104,6 +117,13 @@ impl NativePolicy {
             .set("episodes", self.episodes)
             .set("scenario", self.scenario.as_str())
             .set("lr", self.lr)
+            .set("gamma", self.gamma)
+            .set("algo", self.algo.as_str())
+            .set("w_response", self.weights.w_response)
+            .set("w_switch", self.weights.w_switch)
+            .set("w_cost", self.weights.w_cost)
+            .set("w_migration", self.weights.w_migration)
+            .set("drop_penalty", self.weights.drop_penalty)
             .set("w", self.w.as_slice())
             .set("b", self.b.as_slice());
         j
@@ -150,6 +170,25 @@ impl NativePolicy {
                 .unwrap_or("")
                 .to_string(),
             lr: j.get("lr").and_then(Json::as_f64).unwrap_or(0.0),
+            // Provenance fields newer than some artifacts on disk: the
+            // loader defaults them (version stays 1, old loaders ignore
+            // the unknown keys), so both directions stay compatible.
+            // Missing gamma/algo read as the init-state "unknown" markers;
+            // missing weights read as the defaults every pre-provenance
+            // CLI run actually trained under.
+            gamma: j.get("gamma").and_then(Json::as_f64).unwrap_or(0.0),
+            algo: j.get("algo").and_then(Json::as_str).unwrap_or("").to_string(),
+            weights: {
+                let dflt = RewardWeights::default();
+                let f = |key: &str, d: f64| j.get(key).and_then(Json::as_f64).unwrap_or(d);
+                RewardWeights {
+                    w_response: f("w_response", dflt.w_response),
+                    w_switch: f("w_switch", dflt.w_switch),
+                    w_cost: f("w_cost", dflt.w_cost),
+                    w_migration: f("w_migration", dflt.w_migration),
+                    drop_penalty: f("drop_penalty", dflt.drop_penalty),
+                }
+            },
             w: nums("w", r * r * d)?,
             b: nums("b", r * r)?,
         })
@@ -177,7 +216,7 @@ impl super::PolicyProvider for NativePolicy {
         "native"
     }
 
-    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>> {
+    fn alloc(&self, state: &[f32], _q: &super::AllocQuery) -> Option<Vec<f64>> {
         if state.len() != self.d {
             return None;
         }
@@ -219,8 +258,9 @@ mod tests {
         let p = NativePolicy::init(4, 1);
         let short = vec![0.1f32; 3];
         let full = vec![0.1f32; p.d];
-        assert!(p.alloc(&short).is_none());
-        assert!(p.alloc(&full).is_some());
+        let q = crate::rl::AllocQuery { slot: 0, ot: &[] };
+        assert!(p.alloc(&short, &q).is_none());
+        assert!(p.alloc(&full, &q).is_some());
     }
 
     #[test]
@@ -229,17 +269,49 @@ mod tests {
         p.episodes = 12;
         p.scenario = "surge".into();
         p.lr = 0.05;
+        p.gamma = 0.95;
+        p.algo = "ppo".into();
+        p.weights.w_switch = 17.5;
         let back = NativePolicy::from_json(&p.to_json()).unwrap();
         assert_eq!(back.r, 3);
         assert_eq!(back.seed, 77);
         assert_eq!(back.episodes, 12);
         assert_eq!(back.scenario, "surge");
+        assert_eq!(back.gamma.to_bits(), p.gamma.to_bits());
+        assert_eq!(back.algo, "ppo");
+        assert_eq!(back.weights, p.weights);
         for (x, y) in p.w.iter().zip(&back.w) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         for (x, y) in p.b.iter().zip(&back.b) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn from_json_defaults_missing_provenance_fields() {
+        // A pre-provenance artifact (no gamma/algo/weight keys — the
+        // exact key set to_json wrote before those fields existed) must
+        // load with the unknown markers and the historical default
+        // weights — old artifacts stay usable after the format grew.
+        let p = NativePolicy::init(3, 5);
+        let mut j = Json::obj();
+        j.set("format", FORMAT)
+            .set("version", FORMAT_VERSION)
+            .set("r", p.r)
+            .set("state_dim", p.d)
+            .set("seed", "5")
+            .set("episodes", 2u64)
+            .set("scenario", "surge")
+            .set("lr", 0.05)
+            .set("w", p.w.as_slice())
+            .set("b", p.b.as_slice());
+        let back = NativePolicy::from_json(&j).unwrap();
+        assert_eq!(back.gamma, 0.0);
+        assert_eq!(back.algo, "");
+        assert_eq!(back.weights, RewardWeights::default());
+        assert_eq!(back.episodes, 2);
+        assert_eq!(back.lr, 0.05);
     }
 
     #[test]

@@ -1,0 +1,707 @@
+//! PPO math for the native trainer (paper Eq. 4/5, Appendix B
+//! Algorithm 2; ported from the reference recipe in
+//! `python/compile/ppo.py`).
+//!
+//! This module holds the pure, state-free pieces — GAE over slot-aligned
+//! trajectories, the per-row clipped-surrogate gradient, the linear value
+//! baseline, and the OT-deviation (`L_eps`) / switching-improvement
+//! (`L_s`) constraint terms with their analytic softmax-chain gradients —
+//! so each can be checked against finite differences in isolation. The
+//! training loop that drives them (parallel rollout collection, minibatch
+//! epochs, Algorithm 2's multiplicative constraint-weight adaptation)
+//! lives in [`super::train`].
+//!
+//! Differences from the Python recipe, on purpose:
+//!
+//! * The action space here is factored (one categorical destination per
+//!   origin row), so the importance ratio is per (step, row) rather than
+//!   one Gaussian log-prob per step — the standard choice for factored
+//!   categoricals, and much better conditioned than a product of R row
+//!   ratios.
+//! * The value baseline is a linear head trained with normalized-LMS
+//!   steps on the GAE returns (stable at any feature scale without an
+//!   Adam state), not a two-layer MLP.
+//! * Plain minibatch SGD instead of Adam: the repo's determinism
+//!   contract wants the fewest moving parts in the update rule.
+
+use super::NativePolicy;
+
+/// PPO-specific hyper-parameters (`TrainConfig::ppo`). Defaults follow
+/// `python/compile/ppo.py` where the knob exists there.
+#[derive(Clone, Debug)]
+pub struct PpoConfig {
+    /// Episodes collected per update with a frozen policy snapshot; these
+    /// are independent and fan out over the worker pool.
+    pub rollouts_per_update: usize,
+    /// Optimization epochs over each update's batch.
+    pub epochs: usize,
+    /// Steps per minibatch (0 = full batch).
+    pub minibatch: usize,
+    /// Clipped-surrogate ratio bound (`1 ± clip`).
+    pub clip: f64,
+    /// GAE lambda.
+    pub lam: f64,
+    /// Normalized-LMS step size for the value baseline, in (0, 2).
+    pub value_lr: f64,
+    /// Entropy-bonus coefficient.
+    pub entropy_coef: f64,
+    /// Enable the `L_eps` / `L_s` constraint terms + Algorithm 2 weight
+    /// adaptation.
+    pub constraints: bool,
+    /// Target bound on the raw policy's OT deviation `||A - OT||_F`.
+    pub eps_target: f64,
+    /// Target switching-cost improvement factor `s = K0 / E[Delta^RL]`.
+    pub s_target: f64,
+    /// Switching-cost weight in the advantage condition (Algorithm 2).
+    pub alpha: f64,
+    /// Power-cost weight in the advantage condition.
+    pub beta: f64,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig {
+            rollouts_per_update: 4,
+            epochs: 4,
+            minibatch: 64,
+            clip: 0.2,
+            lam: 0.9,
+            value_lr: 0.5,
+            entropy_coef: 1e-3,
+            constraints: true,
+            eps_target: 0.15,
+            s_target: 2.5,
+            alpha: 1.0,
+            beta: 0.1,
+        }
+    }
+}
+
+/// Per-update diagnostics, one entry per PPO update in
+/// [`TrainReport::ppo_updates`](super::TrainReport::ppo_updates) —
+/// the Rust analogue of the Python trainer's `history` rows.
+#[derive(Clone, Debug)]
+pub struct PpoUpdateStat {
+    pub update: usize,
+    /// Mean sampled episode return in this update's batch.
+    pub mean_return: f64,
+    /// Mean raw-policy OT deviation `||A - OT||_F` at the last epoch.
+    pub dev: f64,
+    /// Switching-improvement factor `K0 / E[Delta^RL]` at the last epoch.
+    pub s_current: f64,
+    /// Algorithm 2's performance-advantage condition held (no weight
+    /// escalation this update).
+    pub condition_ok: bool,
+    /// Constraint weights after this update's adaptation.
+    pub gamma_c: f64,
+    pub delta_c: f64,
+    /// Fraction of (step, row) surrogate terms whose gradient the clip
+    /// zeroed during the last epoch.
+    pub clip_frac: f64,
+    /// Deterministic greedy eval return of the post-update snapshot.
+    pub eval_return: f64,
+}
+
+/// One flattened trajectory step of an update batch, in (episode, slot)
+/// order. `probs_old` are the frozen snapshot's row softmaxes recorded at
+/// rollout time; `ot` is the slot's OT anchor from the scheduler.
+pub(crate) struct PpoStep {
+    pub episode: usize,
+    pub slot: usize,
+    pub state: Vec<f64>,
+    pub probs_old: Vec<f64>,
+    pub dests: Vec<usize>,
+    pub ot: Vec<f64>,
+    pub adv: f64,
+    pub ret: f64,
+}
+
+/// Linear value baseline `V(s) = w . s + b`, fitted online to the GAE
+/// returns with normalized-LMS steps (`w += mu * err * s / (1 + |s|^2)`,
+/// stable for any feature scale when `0 < mu < 2`).
+pub(crate) struct ValueHead {
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+impl ValueHead {
+    pub fn new(d: usize) -> ValueHead {
+        ValueHead { w: vec![0.0; d], b: 0.0 }
+    }
+
+    pub fn predict(&self, state: &[f64]) -> f64 {
+        debug_assert_eq!(state.len(), self.w.len());
+        self.b + self.w.iter().zip(state).map(|(w, s)| w * s).sum::<f64>()
+    }
+
+    /// One averaged NLMS step over a minibatch of (state, target) pairs.
+    pub fn fit_minibatch<'a>(
+        &mut self,
+        batch: impl Iterator<Item = (&'a [f64], f64)> + Clone,
+        mu: f64,
+    ) {
+        let n = batch.clone().count();
+        if n == 0 {
+            return;
+        }
+        let mut gw = vec![0.0; self.w.len()];
+        let mut gb = 0.0;
+        for (state, target) in batch {
+            let err = target - self.predict(state);
+            // +1.0 folds the bias "feature" into the normalizer.
+            let norm = 1.0 + state.iter().map(|s| s * s).sum::<f64>();
+            let step = mu * err / norm;
+            for (g, s) in gw.iter_mut().zip(state) {
+                *g += step * s;
+            }
+            gb += step;
+        }
+        for (w, g) in self.w.iter_mut().zip(&gw) {
+            *w += g / n as f64;
+        }
+        self.b += gb / n as f64;
+    }
+}
+
+/// GAE over one slot-aligned episode. `slots[k]` is the engine slot of
+/// sample `k` (strictly increasing — validated by the trainer's
+/// alignment check), `values[k] = V(s_k)`, and `rewards` is the full
+/// per-slot reward sequence. Rewards on slots without a recorded sample
+/// (the provider declined and the fallback ran) are lumped, discounted,
+/// into the preceding step — the semi-MDP view of a skipped decision —
+/// so no reward is ever credited to the wrong state. Episodes terminate
+/// at the horizon, so the bootstrap value past the last sample is 0.
+///
+/// Returns `(advantage, return)` per sample.
+pub(crate) fn gae_episode(
+    slots: &[usize],
+    values: &[f64],
+    rewards: &[f64],
+    gamma: f64,
+    lam: f64,
+) -> Vec<(f64, f64)> {
+    debug_assert_eq!(slots.len(), values.len());
+    let n = slots.len();
+    let mut out = vec![(0.0, 0.0); n];
+    let mut last_adv = 0.0;
+    for k in (0..n).rev() {
+        let end = if k + 1 < n { slots[k + 1] } else { rewards.len() };
+        let mut lump = 0.0;
+        let mut gpow = 1.0;
+        for t in slots[k]..end {
+            lump += gpow * rewards[t];
+            gpow *= gamma;
+        }
+        // gpow is now gamma^(end - slots[k]) — the effective discount to
+        // the next decision point.
+        let v_next = if k + 1 < n { values[k + 1] } else { 0.0 };
+        let delta = lump + gpow * v_next - values[k];
+        last_adv = delta + gpow * lam * last_adv;
+        out[k] = (last_adv, last_adv + values[k]);
+    }
+    out
+}
+
+/// Batch-normalized advantages: `(a - mean) / (std + 1e-8)`.
+pub(crate) fn normalize_advantages(advs: &[f64]) -> Vec<f64> {
+    if advs.is_empty() {
+        return Vec::new();
+    }
+    let n = advs.len() as f64;
+    let mean = advs.iter().sum::<f64>() / n;
+    let var = advs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / n;
+    let std = var.sqrt();
+    advs.iter().map(|a| (a - mean) / (std + 1e-8)).collect()
+}
+
+/// Accumulate the gradient-*ascent* direction of one step's per-row
+/// clipped surrogate plus entropy bonus into `gw`/`gb` (same layout as
+/// `NativePolicy::{w, b}`), evaluated at the current `policy`:
+///
+/// ```text
+/// J_row = min(rho * A, clip(rho, 1 +- clip) * A) + c_H * H(pi_row)
+/// rho   = pi_new(a | s) / pi_old(a | s)
+/// ```
+///
+/// Where the clip is the active branch the surrogate gradient is zero —
+/// only the entropy term flows. Returns `(clipped_rows, total_rows)` for
+/// the clip-fraction diagnostic.
+pub(crate) fn accumulate_policy_grad(
+    policy: &NativePolicy,
+    step: &PpoStep,
+    adv_n: f64,
+    clip: f64,
+    entropy_coef: f64,
+    gw: &mut [f64],
+    gb: &mut [f64],
+) -> (usize, usize) {
+    let (r, d) = (policy.r, policy.d);
+    let probs = policy.alloc_probs(&step.state);
+    let mut clipped = 0;
+    for i in 0..r {
+        let row = &probs[i * r..(i + 1) * r];
+        let a = step.dests[i];
+        let ratio = row[a] / step.probs_old[i * r + a].max(1e-12);
+        let clipped_out =
+            (adv_n > 0.0 && ratio > 1.0 + clip) || (adv_n < 0.0 && ratio < 1.0 - clip);
+        if clipped_out {
+            clipped += 1;
+        }
+        let entropy: f64 = -row.iter().map(|&p| p * p.max(1e-300).ln()).sum::<f64>();
+        for j in 0..r {
+            let mut g = 0.0;
+            if !clipped_out {
+                let onehot = if j == a { 1.0 } else { 0.0 };
+                g += adv_n * ratio * (onehot - row[j]);
+            }
+            // d H / d z_j = -p_j (ln p_j + H).
+            g -= entropy_coef * row[j] * (row[j].max(1e-300).ln() + entropy);
+            let k = i * r + j;
+            gb[k] += g;
+            for (gk, sk) in gw[k * d..(k + 1) * d].iter_mut().zip(&step.state) {
+                *gk += g * sk;
+            }
+        }
+    }
+    (clipped, r)
+}
+
+/// The scalar objective [`accumulate_policy_grad`] ascends, for the
+/// finite-difference tests: per-row clipped surrogate + entropy bonus.
+#[cfg(test)]
+fn policy_objective(
+    policy: &NativePolicy,
+    step: &PpoStep,
+    adv_n: f64,
+    clip: f64,
+    entropy_coef: f64,
+) -> f64 {
+    let r = policy.r;
+    let probs = policy.alloc_probs(&step.state);
+    let mut total = 0.0;
+    for i in 0..r {
+        let row = &probs[i * r..(i + 1) * r];
+        let a = step.dests[i];
+        let ratio = row[a] / step.probs_old[i * r + a].max(1e-12);
+        let unclipped = ratio * adv_n;
+        let clipped = ratio.clamp(1.0 - clip, 1.0 + clip) * adv_n;
+        let entropy: f64 = -row.iter().map(|&p| p * p.max(1e-300).ln()).sum::<f64>();
+        total += unclipped.min(clipped) + entropy_coef * entropy;
+    }
+    total
+}
+
+/// Per-step OT deviation of the current policy's raw softmax output:
+/// `||pi(s) - OT||_F` (the quantity `L_eps` bounds).
+fn ot_deviation(probs: &[f64], ot: &[f64]) -> f64 {
+    probs
+        .iter()
+        .zip(ot)
+        .map(|(p, o)| (p - o) * (p - o))
+        .sum::<f64>()
+        .sqrt()
+        .max(1e-6)
+}
+
+/// Constraint metrics of `policy` over `batch` at the current parameters:
+/// `(mean_dev, s_current)` where `mean_dev` is the batch-mean OT
+/// deviation and `s_current = K0 / (mean ||p_k - p_{k-1}||^2 + 1e-6)`
+/// over consecutive same-episode steps.
+pub(crate) fn constraint_metrics(
+    policy: &NativePolicy,
+    batch: &[PpoStep],
+    k0: f64,
+) -> (f64, f64) {
+    let mut dev_sum = 0.0;
+    let mut delta_sum = 0.0;
+    let mut pairs = 0usize;
+    let mut prev: Option<(usize, Vec<f64>)> = None;
+    for step in batch {
+        let probs = policy.alloc_probs(&step.state);
+        dev_sum += ot_deviation(&probs, &step.ot);
+        if let Some((ep, pp)) = &prev {
+            if *ep == step.episode {
+                delta_sum +=
+                    probs.iter().zip(pp).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+                pairs += 1;
+            }
+        }
+        prev = Some((step.episode, probs));
+    }
+    let mean_dev = if batch.is_empty() { 0.0 } else { dev_sum / batch.len() as f64 };
+    let dbar = if pairs == 0 { 0.0 } else { delta_sum / pairs as f64 };
+    (mean_dev, k0 / (dbar + 1e-6))
+}
+
+/// The scalar constraint loss `gamma_c * L_eps + delta_c * L_s`
+/// (Eq. 5 terms) at the current parameters, for the gradient tests.
+#[cfg(test)]
+fn constraint_loss(
+    policy: &NativePolicy,
+    batch: &[PpoStep],
+    cfg: &PpoConfig,
+    gamma_c: f64,
+    delta_c: f64,
+    k0: f64,
+) -> f64 {
+    let n = batch.len().max(1) as f64;
+    let mut l_eps = 0.0;
+    let mut prev: Option<(usize, Vec<f64>)> = None;
+    let mut delta_sum = 0.0;
+    let mut pairs = 0usize;
+    for step in batch {
+        let probs = policy.alloc_probs(&step.state);
+        l_eps += ((ot_deviation(&probs, &step.ot) - cfg.eps_target) / 0.1).max(0.0);
+        if let Some((ep, pp)) = &prev {
+            if *ep == step.episode {
+                delta_sum +=
+                    probs.iter().zip(pp).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+                pairs += 1;
+            }
+        }
+        prev = Some((step.episode, probs));
+    }
+    let dbar = if pairs == 0 { 0.0 } else { delta_sum / pairs as f64 };
+    let s_cur = k0 / (dbar + 1e-6);
+    let l_s = ((cfg.s_target - s_cur) / cfg.s_target).max(0.0);
+    gamma_c * (l_eps / n) + delta_c * l_s
+}
+
+/// One full-batch gradient-descent step on the constraint terms
+/// `gamma_c * L_eps + delta_c * L_s` (the Eq. 5 additions to the PPO
+/// loss), chained analytically through each row's softmax. Applied once
+/// per epoch after the minibatch sweep — the Python recipe folds these
+/// into a full-batch loss per epoch too, it just gets the gradient from
+/// autodiff. Returns `(mean_dev, s_current)` measured at the pre-step
+/// parameters (the metrics Algorithm 2's adaptation reads).
+pub(crate) fn constraint_step(
+    policy: &mut NativePolicy,
+    batch: &[PpoStep],
+    cfg: &PpoConfig,
+    gamma_c: f64,
+    delta_c: f64,
+    k0: f64,
+    lr: f64,
+) -> (f64, f64) {
+    let (r, d) = (policy.r, policy.d);
+    if batch.is_empty() {
+        return (0.0, k0 / 1e-6);
+    }
+    let n = batch.len() as f64;
+    // Forward pass at the current parameters.
+    let probs: Vec<Vec<f64>> =
+        batch.iter().map(|s| policy.alloc_probs(&s.state)).collect();
+    let devs: Vec<f64> =
+        batch.iter().zip(&probs).map(|(s, p)| ot_deviation(p, &s.ot)).collect();
+    let mean_dev = devs.iter().sum::<f64>() / n;
+    // Same-episode adjacency for the switching term.
+    let paired_prev: Vec<Option<usize>> = (0..batch.len())
+        .map(|k| (k > 0 && batch[k - 1].episode == batch[k].episode).then_some(k - 1))
+        .collect();
+    let mut delta_sum = 0.0;
+    let mut pairs = 0usize;
+    for (k, prev) in paired_prev.iter().enumerate() {
+        if let Some(p) = prev {
+            delta_sum += probs[k]
+                .iter()
+                .zip(&probs[*p])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>();
+            pairs += 1;
+        }
+    }
+    let dbar = if pairs == 0 { 0.0 } else { delta_sum / pairs as f64 };
+    let s_cur = k0 / (dbar + 1e-6);
+    // d L_s / d dbar when the target is violated (L_s kink), scaled by
+    // the pair count so per-step contributions sum to the mean's grad.
+    let ls_coef = if s_cur < cfg.s_target && pairs > 0 {
+        delta_c * k0 / (cfg.s_target * (dbar + 1e-6) * (dbar + 1e-6)) / pairs as f64
+    } else {
+        0.0
+    };
+    // d L / d p_k for every step, then chain through the row softmaxes.
+    let mut gw = vec![0.0; r * r * d];
+    let mut gb = vec![0.0; r * r];
+    for (k, step) in batch.iter().enumerate() {
+        let p = &probs[k];
+        let mut gp = vec![0.0; r * r];
+        if devs[k] > cfg.eps_target {
+            let coef = gamma_c / (0.1 * n * devs[k]);
+            for (g, (pv, ov)) in gp.iter_mut().zip(p.iter().zip(&step.ot)) {
+                *g += coef * (pv - ov);
+            }
+        }
+        if ls_coef > 0.0 {
+            if let Some(prev) = paired_prev[k] {
+                for (g, (a, b)) in gp.iter_mut().zip(p.iter().zip(&probs[prev])) {
+                    *g += ls_coef * 2.0 * (a - b);
+                }
+            }
+            if k + 1 < batch.len() && paired_prev[k + 1] == Some(k) {
+                for (g, (a, b)) in gp.iter_mut().zip(p.iter().zip(&probs[k + 1])) {
+                    *g += ls_coef * 2.0 * (a - b);
+                }
+            }
+        }
+        // Softmax chain per row: dz_ij = p_ij (g_ij - sum_j' g_ij' p_ij').
+        for i in 0..r {
+            let row_p = &p[i * r..(i + 1) * r];
+            let row_g = &gp[i * r..(i + 1) * r];
+            let dot: f64 = row_g.iter().zip(row_p).map(|(g, pv)| g * pv).sum();
+            for j in 0..r {
+                let gz = row_p[j] * (row_g[j] - dot);
+                let kk = i * r + j;
+                gb[kk] += gz;
+                for (gwk, sk) in gw[kk * d..(kk + 1) * d].iter_mut().zip(&step.state) {
+                    *gwk += gz * sk;
+                }
+            }
+        }
+    }
+    for (w, g) in policy.w.iter_mut().zip(&gw) {
+        *w -= lr * g;
+    }
+    for (b, g) in policy.b.iter_mut().zip(&gb) {
+        *b -= lr * g;
+    }
+    (mean_dev, s_cur)
+}
+
+/// Baseline switching cost `K0 = E ||OT_t - OT_{t-1}||_F^2` of the
+/// memoryless OT method (Algorithm 2 line 3), estimated from the OT
+/// anchors the scheduler recorded during the first update's rollouts —
+/// consecutive same-episode pairs only. Clamped away from zero so the
+/// improvement factor stays finite.
+pub(crate) fn estimate_k0(batch: &[PpoStep]) -> f64 {
+    let mut total = 0.0;
+    let mut pairs = 0usize;
+    for k in 1..batch.len() {
+        if batch[k - 1].episode == batch[k].episode {
+            total += batch[k]
+                .ot
+                .iter()
+                .zip(&batch[k - 1].ot)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>();
+            pairs += 1;
+        }
+    }
+    (total / pairs.max(1) as f64).max(1e-3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mk_step(policy: &NativePolicy, episode: usize, slot: usize, seed: u64) -> PpoStep {
+        let mut rng = Rng::new(seed, 0x11);
+        let state: Vec<f64> = (0..policy.d).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let probs_old = policy.alloc_probs(&state);
+        let r = policy.r;
+        let dests: Vec<usize> = (0..r)
+            .map(|i| {
+                // Deterministic arbitrary in-range destination per row.
+                (i + slot) % r
+            })
+            .collect();
+        let ot: Vec<f64> = {
+            let raw: Vec<f64> = (0..r * r).map(|_| rng.uniform(0.1, 1.0)).collect();
+            let mut out = raw;
+            for i in 0..r {
+                let s: f64 = out[i * r..(i + 1) * r].iter().sum();
+                for x in &mut out[i * r..(i + 1) * r] {
+                    *x /= s;
+                }
+            }
+            out
+        };
+        PpoStep { episode, slot, state, probs_old, dests, ot, adv: 0.0, ret: 0.0 }
+    }
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        // Contiguous slots: standard GAE recursion.
+        let out = gae_episode(&[0, 1], &[0.5, 0.25], &[1.0, 2.0], 0.5, 0.5);
+        let (a1, r1) = out[1];
+        assert!((a1 - 1.75).abs() < 1e-12, "{a1}");
+        assert!((r1 - 2.0).abs() < 1e-12, "{r1}");
+        let (a0, r0) = out[0];
+        assert!((a0 - 1.0625).abs() < 1e-12, "{a0}");
+        assert!((r0 - 1.5625).abs() < 1e-12, "{r0}");
+    }
+
+    #[test]
+    fn gae_lumps_rewards_of_skipped_slots() {
+        // Sample slots {0, 2} over 3 reward slots: slot 1's reward
+        // discounts into step 0's lump, never into step 1 (which the old
+        // truncating REINFORCE update would have done).
+        let out = gae_episode(&[0, 2], &[0.0, 0.0], &[1.0, 4.0, 2.0], 0.5, 1.0);
+        let (a1, _) = out[1];
+        assert!((a1 - 2.0).abs() < 1e-12, "{a1}");
+        let (a0, _) = out[0];
+        // lump = 1 + 0.5*4 = 3, discount to next decision 0.25,
+        // adv = 3 + 0.25 * 2 = 3.5.
+        assert!((a0 - 3.5).abs() < 1e-12, "{a0}");
+    }
+
+    #[test]
+    fn normalized_advantages_are_zero_mean_unit_std() {
+        let n = normalize_advantages(&[1.0, 3.0, 5.0, 7.0]);
+        let mean: f64 = n.iter().sum::<f64>() / 4.0;
+        let var: f64 = n.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-9);
+        assert!((var.sqrt() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn policy_grad_matches_finite_differences() {
+        let policy = NativePolicy::init(2, 9);
+        let step = mk_step(&policy, 0, 0, 3);
+        // probs_old from the same policy: ratios sit at 1.0, far from the
+        // clip kinks at 1 +- 0.2, so the objective is smooth here.
+        let (adv_n, clip, ent) = (0.7, 0.2, 1e-2);
+        let mut gw = vec![0.0; policy.w.len()];
+        let mut gb = vec![0.0; policy.b.len()];
+        let (clipped, rows) =
+            accumulate_policy_grad(&policy, &step, adv_n, clip, ent, &mut gw, &mut gb);
+        assert_eq!(clipped, 0);
+        assert_eq!(rows, 2);
+        let h = 1e-6;
+        for idx in [0usize, 5, 17, 40] {
+            let mut lo = policy.clone();
+            let mut hi = policy.clone();
+            lo.w[idx] -= h;
+            hi.w[idx] += h;
+            let num = (policy_objective(&hi, &step, adv_n, clip, ent)
+                - policy_objective(&lo, &step, adv_n, clip, ent))
+                / (2.0 * h);
+            assert!(
+                (num - gw[idx]).abs() < 1e-5 * (1.0 + num.abs()),
+                "w[{idx}]: numeric {num} vs analytic {}",
+                gw[idx]
+            );
+        }
+        for idx in [0usize, 3] {
+            let mut lo = policy.clone();
+            let mut hi = policy.clone();
+            lo.b[idx] -= h;
+            hi.b[idx] += h;
+            let num = (policy_objective(&hi, &step, adv_n, clip, ent)
+                - policy_objective(&lo, &step, adv_n, clip, ent))
+                / (2.0 * h);
+            assert!(
+                (num - gb[idx]).abs() < 1e-5 * (1.0 + num.abs()),
+                "b[{idx}]: numeric {num} vs analytic {}",
+                gb[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn clipped_rows_contribute_no_surrogate_gradient() {
+        // Inflate the current policy's preference for the sampled action
+        // far past 1 + clip: with positive advantage the row must clip and
+        // (entropy off) contribute an exactly-zero gradient.
+        let mut policy = NativePolicy::init(2, 9);
+        let step = mk_step(&policy, 0, 0, 3);
+        for i in 0..policy.r {
+            policy.b[i * policy.r + step.dests[i]] += 5.0;
+        }
+        let mut gw = vec![0.0; policy.w.len()];
+        let mut gb = vec![0.0; policy.b.len()];
+        let (clipped, rows) =
+            accumulate_policy_grad(&policy, &step, 1.0, 0.2, 0.0, &mut gw, &mut gb);
+        assert_eq!(clipped, rows, "all rows should clip");
+        assert!(gw.iter().all(|&g| g == 0.0));
+        assert!(gb.iter().all(|&g| g == 0.0));
+        // Negative advantage flips the condition: ratio >> 1 stays
+        // unclipped and the gradient flows.
+        let (clipped, _) =
+            accumulate_policy_grad(&policy, &step, -1.0, 0.2, 0.0, &mut gw, &mut gb);
+        assert_eq!(clipped, 0);
+        assert!(gb.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn constraint_grad_matches_finite_differences() {
+        let mut policy = NativePolicy::init(2, 4);
+        let batch: Vec<PpoStep> =
+            (0..3).map(|k| mk_step(&policy, 0, k, 20 + k as u64)).collect();
+        // Both terms active: near-uniform softmax rows sit well away from
+        // the random OT anchors (dev > eps_target), and k0 is chosen so
+        // s_current < s_target.
+        let cfg = PpoConfig { eps_target: 0.05, s_target: 4.0, ..Default::default() };
+        let (_, s0) = constraint_metrics(&policy, &batch, 1e-4);
+        assert!(s0 < cfg.s_target, "switching term inactive: s={s0}");
+        let (gamma_c, delta_c, k0) = (1.3, 0.9, 1e-4);
+        let before = policy.clone();
+        let lr = 1e-3;
+        constraint_step(&mut policy, &batch, &cfg, gamma_c, delta_c, k0, lr);
+        // Recover the analytic gradient from the applied step and compare
+        // against central differences of the scalar loss.
+        let h = 1e-6;
+        for idx in [0usize, 7, 21, 44] {
+            let analytic = (before.w[idx] - policy.w[idx]) / lr;
+            let mut lo = before.clone();
+            let mut hi = before.clone();
+            lo.w[idx] -= h;
+            hi.w[idx] += h;
+            let num = (constraint_loss(&hi, &batch, &cfg, gamma_c, delta_c, k0)
+                - constraint_loss(&lo, &batch, &cfg, gamma_c, delta_c, k0))
+                / (2.0 * h);
+            assert!(
+                (num - analytic).abs() < 1e-4 * (1.0 + num.abs()),
+                "w[{idx}]: numeric {num} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn value_head_fits_a_linear_target() {
+        let mut rng = Rng::seeded(4);
+        let d = 6;
+        let true_w: Vec<f64> = (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let data: Vec<(Vec<f64>, f64)> = (0..200)
+            .map(|_| {
+                let s: Vec<f64> = (0..d).map(|_| rng.uniform(0.0, 1.0)).collect();
+                let y = 0.5 + s.iter().zip(&true_w).map(|(a, b)| a * b).sum::<f64>();
+                (s, y)
+            })
+            .collect();
+        let mut head = ValueHead::new(d);
+        for _ in 0..40 {
+            for chunk in data.chunks(20) {
+                head.fit_minibatch(chunk.iter().map(|(s, y)| (s.as_slice(), *y)), 0.8);
+            }
+        }
+        let mse: f64 = data
+            .iter()
+            .map(|(s, y)| {
+                let e = head.predict(s) - y;
+                e * e
+            })
+            .sum::<f64>()
+            / data.len() as f64;
+        assert!(mse < 1e-2, "value head failed to fit: mse {mse}");
+    }
+
+    #[test]
+    fn k0_estimate_uses_same_episode_pairs_and_clamps() {
+        let policy = NativePolicy::init(2, 1);
+        let mut a = mk_step(&policy, 0, 0, 1);
+        let mut b = mk_step(&policy, 0, 1, 2);
+        // Identical plans -> zero movement -> clamped floor.
+        b.ot = a.ot.clone();
+        assert_eq!(estimate_k0(&[a.clone(), b.clone()]), 1e-3);
+        // A genuine difference in the same episode is measured...
+        b.ot[0] += 0.5;
+        b.ot[1] -= 0.5;
+        let k = estimate_k0(&[a.clone(), b.clone()]);
+        assert!((k - 0.5).abs() < 1e-12, "{k}");
+        // ...but an episode boundary between them is not a pair.
+        a.episode = 0;
+        b.episode = 1;
+        assert_eq!(estimate_k0(&[a, b]), 1e-3);
+    }
+}

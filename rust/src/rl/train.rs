@@ -1,27 +1,53 @@
 //! In-process policy-gradient training for the native macro policy.
 //!
-//! REINFORCE with a per-episode baseline over the production scheduling
-//! path: every episode builds a fresh [`TortaScheduler`] (native mode)
-//! whose [`PolicyProvider`] is a sampling wrapper around the
-//! [`NativePolicy`] being trained, and runs it through the real
+//! Two trainers share one rollout machinery ([`rollout`]): every episode
+//! builds a fresh [`TortaScheduler`] (native mode) whose
+//! [`PolicyProvider`] is a sampling wrapper around the [`NativePolicy`]
+//! being trained, and runs it through the real
 //! [`ExecutionEngine`](crate::engine::ExecutionEngine) via
 //! [`run_episode`]. During training each state's row distributions are
 //! *sampled* (one destination per origin row, recorded with its
-//! probabilities), so the executed allocation feeds through the exact
-//! trust-region projection and temporal smoothing the deployed policy
-//! sees; at eval time the softmax mean is used unperturbed.
+//! probabilities, slot index and OT anchor), so the executed allocation
+//! feeds through the exact trust-region projection and temporal smoothing
+//! the deployed policy sees; at eval time the softmax mean is used
+//! unperturbed.
 //!
-//! Update rule per episode (gradient *ascent* on expected return):
+//! **Credit assignment is slot-aligned.** The scheduler consults the
+//! provider at most once per engine slot, but it may *skip* slots (a
+//! dimension mismatch sends that slot down the OT fallback), so the
+//! trajectory is generally a subsequence of the reward sequence. Each
+//! [`StepSample`] therefore records the engine slot it decided
+//! ([`AllocQuery::slot`]) and the updates index rewards by that slot;
+//! [`check_alignment`] turns any genuine desync — duplicate, decreasing
+//! or out-of-range slots — into a hard error instead of silently
+//! mis-crediting rewards (the pre-PPO trainer truncated both sequences to
+//! the shorter length, pairing step `k` with reward `k` even when the
+//! step actually decided a later slot).
 //!
-//! ```text
-//! G_t  = sum_{k>=t} gamma^{k-t} r_k          (discounted return)
-//! A_t  = (G_t - mean(G)) / std(G)            (normalized advantage)
-//! dlogits_i = onehot(a_i) - softmax_i        (per origin row i)
-//! W += lr/T * sum_t A_t * dlogits ⊗ s_t ;  b += lr/T * sum_t A_t * dlogits
-//! ```
+//! * `--algo reinforce` — REINFORCE with a per-episode baseline,
+//!   sequential (the policy updates after every episode):
 //!
-//! Everything is seeded (init, exploration, workload, scheduler), so a
-//! training run is bit-reproducible: same seed, same weights (tested in
+//!   ```text
+//!   G_t  = sum_{k>=t} gamma^{k-t} r_k          (discounted return)
+//!   A_t  = (G_t - mean(G)) / std(G)            (normalized advantage)
+//!   dlogits_i = onehot(a_i) - softmax_i        (per origin row i)
+//!   W += lr/T * sum_t A_t * dlogits (x) s_t ;  b += lr/T * sum_t A_t * dlogits
+//!   ```
+//!
+//! * `--algo ppo` — the paper's PPO recipe (Eq. 4/5, Appendix B
+//!   Algorithm 2; math in [`super::ppo`]): per update, a batch of
+//!   episodes is rolled out against a frozen snapshot **in parallel**
+//!   over [`parallel_map`], then GAE advantages feed minibatch epochs of
+//!   the clipped surrogate, a full-batch constraint-descent step per
+//!   epoch (`L_eps` OT deviation, `L_s` switching improvement) and the
+//!   multiplicative constraint-weight adaptation. The trainer returns the
+//!   best post-update snapshot by deterministic greedy eval, so a longer
+//!   run never ships a worse artifact than a shorter one.
+//!
+//! Everything is seeded (init, exploration, workload, scheduler) and
+//! exploration streams derive from the *global episode index*, so
+//! training is bit-reproducible at any worker count: same seed, same
+//! weights, whether rollouts run on 1 thread or 8 (tested in
 //! `rust/tests/rl.rs`).
 
 use std::cell::RefCell;
@@ -30,14 +56,47 @@ use std::rc::Rc;
 use crate::config::ExperimentConfig;
 use crate::scheduler::torta::{TortaMode, TortaScheduler};
 use crate::topology::Topology;
+use crate::util::pool::{parallel_map, resolve_threads};
 use crate::util::rng::Rng;
 
 use super::env::{run_episode, scheduler_ctx, EpisodeTrace, RewardWeights};
-use super::{NativePolicy, PolicyProvider};
+use super::ppo::{self, PpoConfig, PpoStep, PpoUpdateStat, ValueHead};
+use super::{AllocQuery, NativePolicy, PolicyProvider};
+
+/// Weyl-style odd multiplier for deriving per-episode RNG streams from
+/// the global episode index (golden-ratio constant; any odd mixer works,
+/// it only needs to be injective).
+const EP_STREAM_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Training algorithm selector (`torta train --algo ...`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Reinforce,
+    Ppo,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> anyhow::Result<Algo> {
+        match s {
+            "reinforce" => Ok(Algo::Reinforce),
+            "ppo" => Ok(Algo::Ppo),
+            other => anyhow::bail!("unknown algo {other:?} (expected \"reinforce\" or \"ppo\")"),
+        }
+    }
+
+    /// Canonical name, as stamped into artifact provenance.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Reinforce => "reinforce",
+            Algo::Ppo => "ppo",
+        }
+    }
+}
 
 /// Training hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    pub algo: Algo,
     pub episodes: usize,
     pub lr: f64,
     /// Per-slot reward discount.
@@ -50,20 +109,32 @@ pub struct TrainConfig {
     /// layout, prices, failure draws — by shifting the run seed every
     /// episode (domain-randomization style; returns are then not directly
     /// comparable across episodes). Default off: a fixed, deterministic
-    /// environment is the lowest-variance REINFORCE setup and what the
+    /// environment is the lowest-variance setup and what the
     /// learning-curve tests pin down.
     pub vary_workload: bool,
+    /// Rollout worker count for PPO batch collection: positive pins it,
+    /// 0 defers to `TORTA_THREADS` / available cores
+    /// ([`resolve_threads`]). Results are bit-identical at every count.
+    pub threads: usize,
+    /// Moving-average window of the reported learning curve.
+    pub report_window: usize,
+    /// PPO-specific knobs (ignored by REINFORCE).
+    pub ppo: PpoConfig,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
+            algo: Algo::Reinforce,
             episodes: 40,
             lr: 0.05,
             gamma: 0.9,
             seed: 42,
             weights: RewardWeights::default(),
             vary_workload: false,
+            threads: 0,
+            report_window: 5,
+            ppo: PpoConfig::default(),
         }
     }
 }
@@ -73,8 +144,11 @@ impl Default for TrainConfig {
 pub struct TrainReport {
     /// Undiscounted episode returns, in training order.
     pub episode_returns: Vec<f64>,
-    /// Moving-average window used by [`TrainReport::smoothed`].
+    /// Moving-average window used by [`TrainReport::smoothed`]
+    /// (`TrainConfig::report_window`).
     pub window: usize,
+    /// Per-update PPO diagnostics; empty for REINFORCE runs.
+    pub ppo_updates: Vec<PpoUpdateStat>,
 }
 
 impl TrainReport {
@@ -97,27 +171,35 @@ pub fn smoothed(xs: &[f64], w: usize) -> Vec<f64> {
         .collect()
 }
 
-/// One recorded policy invocation: the state it saw, the row softmax it
-/// computed, and the destination sampled per origin row.
+/// One recorded policy invocation: the engine slot it decided, the state
+/// it saw, the row softmax it computed, the destination sampled per
+/// origin row, and the slot's OT anchor (consumed by PPO's `L_eps`
+/// constraint).
 struct StepSample {
+    slot: usize,
     state: Vec<f64>,
     probs: Vec<f64>,
     dests: Vec<usize>,
+    ot: Vec<f64>,
 }
 
-struct TrainCell {
+/// Per-rollout mutable state: the policy snapshot sampling runs against,
+/// the exploration stream, and the trajectory being recorded.
+struct RolloutCell {
     policy: NativePolicy,
     rng: Rng,
     traj: Vec<StepSample>,
 }
 
-/// Shared sampling handle: the scheduler owns one clone as its
-/// [`PolicyProvider`], the trainer keeps the other to read trajectories
-/// and apply updates between episodes. Single-threaded by construction
-/// (training drives one engine at a time), hence `Rc<RefCell>`.
+/// Sampling handle installed as the scheduler's [`PolicyProvider`] for
+/// one rollout. Each rollout owns a private cell — created, driven and
+/// drained entirely inside [`rollout`] on whichever worker thread runs
+/// that episode — so parallel episode collection shares nothing;
+/// `Rc<RefCell>` is only the seam between the boxed provider and the
+/// trajectory read-back.
 #[derive(Clone)]
-pub struct SamplingPolicy {
-    cell: Rc<RefCell<TrainCell>>,
+struct SamplingPolicy {
+    cell: Rc<RefCell<RolloutCell>>,
 }
 
 impl PolicyProvider for SamplingPolicy {
@@ -125,7 +207,7 @@ impl PolicyProvider for SamplingPolicy {
         "native-sampling"
     }
 
-    fn alloc(&self, state: &[f32]) -> Option<Vec<f64>> {
+    fn alloc(&self, state: &[f32], q: &AllocQuery) -> Option<Vec<f64>> {
         let mut cell = self.cell.borrow_mut();
         let cell = &mut *cell;
         if state.len() != cell.policy.d {
@@ -141,31 +223,103 @@ impl PolicyProvider for SamplingPolicy {
             a[i * r + j] = 1.0;
             dests.push(j);
         }
-        cell.traj.push(StepSample { state: s, probs, dests });
+        cell.traj.push(StepSample { slot: q.slot, state: s, probs, dests, ot: q.ot.to_vec() });
         Some(a)
     }
 }
 
-/// REINFORCE update from one episode's trajectory + rewards.
-fn apply_update(cell: &mut TrainCell, rewards: &[f64], tc: &TrainConfig) {
-    let traj = std::mem::take(&mut cell.traj);
-    let n = traj.len().min(rewards.len());
-    if n == 0 {
+/// Hard desync check: recorded slots must be strictly increasing and
+/// inside the episode horizon. Gaps are legitimate (the provider declined
+/// a slot and the OT fallback decided it); anything else means the
+/// trajectory no longer lines up with the reward sequence and *must not*
+/// be trained on.
+fn check_alignment(traj: &[StepSample], slots: usize) -> anyhow::Result<()> {
+    let mut prev: Option<usize> = None;
+    for s in traj {
+        anyhow::ensure!(
+            s.slot < slots,
+            "trajectory desync: recorded slot {} outside episode horizon {slots}",
+            s.slot
+        );
+        if let Some(p) = prev {
+            anyhow::ensure!(
+                s.slot > p,
+                "trajectory desync: slot {} recorded after slot {p} \
+                 (duplicate or out-of-order provider call)",
+                s.slot
+            );
+        }
+        prev = Some(s.slot);
+    }
+    Ok(())
+}
+
+/// Run one training episode against a frozen `policy` snapshot and return
+/// the recorded (alignment-checked) trajectory plus the episode trace.
+///
+/// Deterministic in `(cfg, tc, policy, ep)` alone: the exploration stream
+/// derives from the *global* episode index, never from which worker ran
+/// the episode or in what order — this is the whole parallel-rollout
+/// determinism contract (docs/RL.md). The episode's shard pipeline is
+/// pinned to one thread; rollouts themselves are the parallel unit.
+fn rollout(
+    cfg: &ExperimentConfig,
+    tc: &TrainConfig,
+    policy: &NativePolicy,
+    ep: usize,
+) -> anyhow::Result<(Vec<StepSample>, EpisodeTrace)> {
+    let mut ecfg = cfg.clone();
+    ecfg.torta.use_pjrt = false;
+    // The provider is installed explicitly below; a configured
+    // policy_path must not shadow the policy being trained.
+    ecfg.torta.policy_path = String::new();
+    ecfg.torta.threads = 1;
+    if tc.vary_workload {
+        ecfg.seed = cfg.seed.wrapping_add(0x9E37 * ep as u64);
+    }
+    let cell = Rc::new(RefCell::new(RolloutCell {
+        policy: policy.clone(),
+        rng: Rng::new(tc.seed, 0x5A3F ^ (ep as u64).wrapping_mul(EP_STREAM_MIX)),
+        traj: Vec::new(),
+    }));
+    let ctx = scheduler_ctx(&ecfg)?;
+    let mut sched = TortaScheduler::new(&ctx, &ecfg.torta, TortaMode::Native, ecfg.seed)
+        .with_policy(Box::new(SamplingPolicy { cell: cell.clone() }));
+    let trace = run_episode(&ecfg, &mut sched, &tc.weights)?;
+    drop(sched);
+    let traj = std::mem::take(&mut cell.borrow_mut().traj);
+    check_alignment(&traj, cfg.slots)?;
+    Ok((traj, trace))
+}
+
+/// REINFORCE update from one episode's slot-aligned trajectory + the full
+/// per-slot reward sequence. Discounted returns are computed over *all*
+/// slots and each sample is credited `G[its own slot]` — identical
+/// arithmetic to the historical update when the provider decided every
+/// slot, correct (instead of silently shifted) when it declined some.
+fn reinforce_update(
+    policy: &mut NativePolicy,
+    traj: &[StepSample],
+    rewards: &[f64],
+    tc: &TrainConfig,
+) {
+    if traj.is_empty() || rewards.is_empty() {
         return;
     }
-    let mut g = vec![0.0; n];
+    let mut g = vec![0.0; rewards.len()];
     let mut acc = 0.0;
-    for t in (0..n).rev() {
+    for t in (0..rewards.len()).rev() {
         acc = rewards[t] + tc.gamma * acc;
         g[t] = acc;
     }
-    let mean = g.iter().sum::<f64>() / n as f64;
-    let var = g.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let gs: Vec<f64> = traj.iter().map(|s| g[s.slot]).collect();
+    let n = gs.len();
+    let mean = gs.iter().sum::<f64>() / n as f64;
+    let var = gs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
     let std = var.sqrt().max(1e-6);
-    let policy = &mut cell.policy;
     let (r, d) = (policy.r, policy.d);
-    for (t, samp) in traj.iter().take(n).enumerate() {
-        let scale = tc.lr * (g[t] - mean) / std / n as f64;
+    for (samp, gt) in traj.iter().zip(&gs) {
+        let scale = tc.lr * (gt - mean) / std / n as f64;
         for i in 0..r {
             let row = &samp.probs[i * r..(i + 1) * r];
             for j in 0..r {
@@ -181,6 +335,190 @@ fn apply_update(cell: &mut TrainCell, rewards: &[f64], tc: &TrainConfig) {
     }
 }
 
+/// Sequential REINFORCE loop: rollout, update, repeat.
+fn train_reinforce(
+    cfg: &ExperimentConfig,
+    tc: &TrainConfig,
+    r: usize,
+) -> anyhow::Result<(NativePolicy, TrainReport)> {
+    let mut policy = NativePolicy::init(r, tc.seed);
+    let mut episode_returns = Vec::with_capacity(tc.episodes);
+    for ep in 0..tc.episodes {
+        let (traj, trace) = rollout(cfg, tc, &policy, ep)?;
+        episode_returns.push(trace.total_reward);
+        reinforce_update(&mut policy, &traj, &trace.rewards, tc);
+    }
+    let report = TrainReport {
+        episode_returns,
+        window: tc.report_window.max(1),
+        ppo_updates: Vec::new(),
+    };
+    Ok((policy, report))
+}
+
+/// PPO loop: per update, fan a batch of rollouts over the worker pool
+/// against a frozen snapshot, then GAE + minibatch clipped-surrogate
+/// epochs + constraint descent + Algorithm 2 weight adaptation. Returns
+/// the best snapshot by deterministic greedy eval (the initial policy
+/// included, so a pathological run can never ship worse than init).
+fn train_ppo(
+    cfg: &ExperimentConfig,
+    tc: &TrainConfig,
+    r: usize,
+) -> anyhow::Result<(NativePolicy, TrainReport)> {
+    let pc = &tc.ppo;
+    anyhow::ensure!(pc.rollouts_per_update > 0, "train: ppo rollouts_per_update must be > 0");
+    anyhow::ensure!(pc.epochs > 0, "train: ppo epochs must be > 0");
+    anyhow::ensure!(pc.clip > 0.0, "train: ppo clip must be > 0");
+    anyhow::ensure!((0.0..=1.0).contains(&pc.lam), "train: ppo lam must lie in [0,1]");
+    anyhow::ensure!(
+        pc.value_lr > 0.0 && pc.value_lr < 2.0,
+        "train: ppo value_lr must lie in (0,2) for NLMS stability"
+    );
+    let mut policy = NativePolicy::init(r, tc.seed);
+    let mut value = ValueHead::new(policy.d);
+    let workers = resolve_threads(tc.threads);
+    let mut episode_returns = Vec::with_capacity(tc.episodes);
+    let mut ppo_updates = Vec::new();
+    let (mut gamma_c, mut delta_c) = (1.0, 1.0);
+    let mut k0: Option<f64> = None;
+    let mut best = (eval(cfg, &policy, &tc.weights)?.total_reward, policy.clone());
+    let mut gw = vec![0.0; policy.w.len()];
+    let mut gb = vec![0.0; policy.b.len()];
+    let mut next_ep = 0usize;
+    let mut update = 0usize;
+    while next_ep < tc.episodes {
+        let batch_eps: Vec<usize> =
+            (next_ep..(next_ep + pc.rollouts_per_update).min(tc.episodes)).collect();
+        next_ep += batch_eps.len();
+        // Fan rollouts out against a frozen snapshot; order-preserving
+        // fan-in + per-episode streams keep this bit-reproducible at any
+        // worker count.
+        let snapshot = policy.clone();
+        let results =
+            parallel_map(batch_eps.clone(), workers, |ep| rollout(cfg, tc, &snapshot, ep));
+        let mut batch: Vec<PpoStep> = Vec::new();
+        let mut batch_return_sum = 0.0;
+        for (ep, res) in batch_eps.iter().zip(results) {
+            let (traj, trace) = res?;
+            episode_returns.push(trace.total_reward);
+            batch_return_sum += trace.total_reward;
+            let slots: Vec<usize> = traj.iter().map(|s| s.slot).collect();
+            let values: Vec<f64> = traj.iter().map(|s| value.predict(&s.state)).collect();
+            let adv_ret = ppo::gae_episode(&slots, &values, &trace.rewards, tc.gamma, pc.lam);
+            for (s, (adv, ret)) in traj.into_iter().zip(adv_ret) {
+                batch.push(PpoStep {
+                    episode: *ep,
+                    slot: s.slot,
+                    state: s.state,
+                    probs_old: s.probs,
+                    dests: s.dests,
+                    ot: s.ot,
+                    adv,
+                    ret,
+                });
+            }
+        }
+        let mean_return = batch_return_sum / batch_eps.len() as f64;
+        if batch.is_empty() {
+            // Every provider call declined (cannot happen with a
+            // freshly-initialized policy, but stay total): nothing to
+            // learn from this batch.
+            update += 1;
+            continue;
+        }
+        // Baseline switching cost of the memoryless OT method, estimated
+        // once from the first batch's recorded anchors and then frozen
+        // (Algorithm 2 line 3).
+        let k0 = *k0.get_or_insert_with(|| ppo::estimate_k0(&batch));
+        let adv_n = ppo::normalize_advantages(&batch.iter().map(|s| s.adv).collect::<Vec<_>>());
+        let mb = if pc.minibatch == 0 { batch.len() } else { pc.minibatch.max(1) };
+        let mut order: Vec<usize> = (0..batch.len()).collect();
+        let mut shuffle_rng =
+            Rng::new(tc.seed, 0x7E90 ^ (update as u64).wrapping_mul(EP_STREAM_MIX));
+        let (mut dev, mut s_cur) = (0.0, f64::MAX);
+        let (mut clipped, mut rows) = (0usize, 0usize);
+        for epoch in 0..pc.epochs {
+            shuffle_rng.shuffle(&mut order);
+            if epoch + 1 == pc.epochs {
+                // clip_frac diagnostics read the final epoch only.
+                clipped = 0;
+                rows = 0;
+            }
+            for chunk in order.chunks(mb) {
+                gw.fill(0.0);
+                gb.fill(0.0);
+                for &k in chunk {
+                    let (c, t) = ppo::accumulate_policy_grad(
+                        &policy,
+                        &batch[k],
+                        adv_n[k],
+                        pc.clip,
+                        pc.entropy_coef,
+                        &mut gw,
+                        &mut gb,
+                    );
+                    clipped += c;
+                    rows += t;
+                }
+                let scale = tc.lr / chunk.len() as f64;
+                for (w, g) in policy.w.iter_mut().zip(&gw) {
+                    *w += scale * g;
+                }
+                for (b, g) in policy.b.iter_mut().zip(&gb) {
+                    *b += scale * g;
+                }
+                value.fit_minibatch(
+                    chunk.iter().map(|&k| (batch[k].state.as_slice(), batch[k].ret)),
+                    pc.value_lr,
+                );
+            }
+            if pc.constraints {
+                let (d, s) =
+                    ppo::constraint_step(&mut policy, &batch, pc, gamma_c, delta_c, k0, tc.lr);
+                dev = d;
+                s_cur = s;
+            } else {
+                let (d, s) = ppo::constraint_metrics(&policy, &batch, k0);
+                dev = d;
+                s_cur = s;
+            }
+        }
+        // Appendix B Algorithm 2: escalate both constraint weights
+        // multiplicatively while the performance-advantage condition
+        // fails.
+        let lhs = (1.0 - 1.0 / s_cur.max(1.0 + 1e-6)) / dev.max(1e-6);
+        let rhs = (1.0 + pc.beta) / (pc.alpha * k0);
+        let condition_ok = lhs > rhs;
+        if pc.constraints && !condition_ok {
+            gamma_c *= 1.5;
+            delta_c *= 1.5;
+        }
+        let eval_return = eval(cfg, &policy, &tc.weights)?.total_reward;
+        if eval_return > best.0 {
+            best = (eval_return, policy.clone());
+        }
+        ppo_updates.push(PpoUpdateStat {
+            update,
+            mean_return,
+            dev,
+            s_current: s_cur,
+            condition_ok,
+            gamma_c,
+            delta_c,
+            clip_frac: if rows == 0 { 0.0 } else { clipped as f64 / rows as f64 },
+            eval_return,
+        });
+        update += 1;
+    }
+    let report = TrainReport {
+        episode_returns,
+        window: tc.report_window.max(1),
+        ppo_updates,
+    };
+    Ok((best.1, report))
+}
+
 /// Train a [`NativePolicy`] for `cfg`'s topology against `cfg`'s scenario.
 /// Returns the trained policy (provenance fields stamped) and the
 /// learning curve.
@@ -193,34 +531,17 @@ pub fn train(
     anyhow::ensure!((0.0..=1.0).contains(&tc.gamma), "train: gamma must lie in [0,1]");
     let topo = Topology::by_name(&cfg.topology)?;
     let r = topo.n;
-    let cell = Rc::new(RefCell::new(TrainCell {
-        policy: NativePolicy::init(r, tc.seed),
-        rng: Rng::new(tc.seed, 0x5A3F),
-        traj: Vec::new(),
-    }));
-    let mut episode_returns = Vec::with_capacity(tc.episodes);
-    for ep in 0..tc.episodes {
-        cell.borrow_mut().traj.clear();
-        let mut ecfg = cfg.clone();
-        ecfg.torta.use_pjrt = false;
-        // The provider is installed explicitly below; a configured
-        // policy_path must not shadow the policy being trained.
-        ecfg.torta.policy_path = String::new();
-        if tc.vary_workload {
-            ecfg.seed = cfg.seed.wrapping_add(0x9E37 * ep as u64);
-        }
-        let ctx = scheduler_ctx(&ecfg)?;
-        let mut sched = TortaScheduler::new(&ctx, &ecfg.torta, TortaMode::Native, ecfg.seed)
-            .with_policy(Box::new(SamplingPolicy { cell: cell.clone() }));
-        let trace = run_episode(&ecfg, &mut sched, &tc.weights)?;
-        episode_returns.push(trace.total_reward);
-        apply_update(&mut cell.borrow_mut(), &trace.rewards, tc);
-    }
-    let mut policy = cell.borrow().policy.clone();
+    let (mut policy, report) = match tc.algo {
+        Algo::Reinforce => train_reinforce(cfg, tc, r)?,
+        Algo::Ppo => train_ppo(cfg, tc, r)?,
+    };
     policy.episodes = tc.episodes as u64;
     policy.scenario = cfg.scenario.name.clone();
     policy.lr = tc.lr;
-    Ok((policy, TrainReport { episode_returns, window: 5 }))
+    policy.gamma = tc.gamma;
+    policy.algo = tc.algo.name().to_string();
+    policy.weights = tc.weights;
+    Ok((policy, report))
 }
 
 /// Deterministic (softmax-mean) evaluation of a policy on `cfg`: builds a
@@ -260,6 +581,14 @@ mod tests {
     }
 
     #[test]
+    fn algo_parses_and_rejects() {
+        assert_eq!(Algo::parse("reinforce").unwrap(), Algo::Reinforce);
+        assert_eq!(Algo::parse("ppo").unwrap(), Algo::Ppo);
+        assert_eq!(Algo::parse("ppo").unwrap().name(), "ppo");
+        assert!(Algo::parse("dqn").is_err());
+    }
+
+    #[test]
     fn train_rejects_bad_hyperparameters() {
         let cfg = ExperimentConfig::default();
         let mut tc = TrainConfig { episodes: 0, ..Default::default() };
@@ -270,6 +599,84 @@ mod tests {
         tc.lr = 0.1;
         tc.gamma = 1.5;
         assert!(train(&cfg, &tc).is_err());
+        // PPO-specific knobs are validated before any rollout runs.
+        tc.gamma = 0.9;
+        tc.algo = Algo::Ppo;
+        tc.ppo.rollouts_per_update = 0;
+        assert!(train(&cfg, &tc).is_err());
+        tc.ppo.rollouts_per_update = 2;
+        tc.ppo.clip = 0.0;
+        assert!(train(&cfg, &tc).is_err());
+        tc.ppo.clip = 0.2;
+        tc.ppo.value_lr = 2.5;
+        assert!(train(&cfg, &tc).is_err());
+    }
+
+    #[test]
+    fn alignment_rejects_duplicates_and_out_of_range_slots() {
+        let samp = |slot: usize| StepSample {
+            slot,
+            state: Vec::new(),
+            probs: Vec::new(),
+            dests: Vec::new(),
+            ot: Vec::new(),
+        };
+        // Gaps are fine: the provider may decline slots.
+        assert!(check_alignment(&[samp(0), samp(2), samp(5)], 6).is_ok());
+        assert!(check_alignment(&[], 6).is_ok());
+        // Duplicate, decreasing, and out-of-horizon slots are desyncs.
+        assert!(check_alignment(&[samp(1), samp(1)], 6).is_err());
+        assert!(check_alignment(&[samp(3), samp(2)], 6).is_err());
+        assert!(check_alignment(&[samp(0), samp(6)], 6).is_err());
+    }
+
+    #[test]
+    fn reinforce_credits_rewards_by_slot_across_gaps() {
+        // Samples at slots {0, 2} of a 3-slot episode, gamma 0.5:
+        // G = [1 + 0.5*(-1) + 0.25*2, -1 + 0.5*2, 2] = [1, 0, 2], so the
+        // sampled returns are [G[0], G[2]] = [1, 2] -> normalized
+        // advantages [-1, +1]. The old truncating update would have paired
+        // sample 1 with G[1] = 0 computed over a *2-slot* horizon.
+        let r = 2;
+        let mut policy = NativePolicy::init(r, 7);
+        let mut rng = Rng::seeded(9);
+        let mk = |slot: usize, rng: &mut Rng, p: &NativePolicy| {
+            let state: Vec<f64> = (0..p.d).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let probs = p.alloc_probs(&state);
+            StepSample { slot, state, probs, dests: vec![1, 0], ot: Vec::new() }
+        };
+        let traj = vec![mk(0, &mut rng, &policy), mk(2, &mut rng, &policy)];
+        let rewards = [1.0, -1.0, 2.0];
+        let tc = TrainConfig { lr: 0.1, gamma: 0.5, ..Default::default() };
+        let before = policy.clone();
+        reinforce_update(&mut policy, &traj, &rewards, &tc);
+        // Replay the expected arithmetic with the hand-computed
+        // advantages.
+        let mut want = before.clone();
+        for (samp, adv) in traj.iter().zip([-1.0, 1.0]) {
+            let scale = tc.lr * adv / 2.0;
+            for i in 0..r {
+                let row = &samp.probs[i * r..(i + 1) * r];
+                for j in 0..r {
+                    let grad = (if samp.dests[i] == j { 1.0 } else { 0.0 }) - row[j];
+                    let k = i * r + j;
+                    want.b[k] += scale * grad;
+                    for (wk, sk) in
+                        want.w[k * want.d..(k + 1) * want.d].iter_mut().zip(&samp.state)
+                    {
+                        *wk += scale * grad * sk;
+                    }
+                }
+            }
+        }
+        for (a, b) in policy.w.iter().zip(&want.w) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        for (a, b) in policy.b.iter().zip(&want.b) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        // And the update is not a no-op.
+        assert!(policy.w.iter().zip(&before.w).any(|(a, b)| a != b));
     }
 
     #[test]
@@ -284,6 +691,9 @@ mod tests {
         assert_eq!(report.episode_returns.len(), 1);
         assert_eq!(policy.episodes, 1);
         assert_eq!(policy.scenario, "diurnal");
+        assert_eq!(policy.algo, "reinforce");
+        assert_eq!(policy.gamma.to_bits(), tc.gamma.to_bits());
+        assert_eq!(policy.weights, tc.weights);
         // Weights moved off the seeded init.
         let init = NativePolicy::init(4, tc.seed);
         assert!(policy.w.iter().zip(&init.w).any(|(a, b)| a != b));

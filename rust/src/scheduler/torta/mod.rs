@@ -26,7 +26,7 @@ use super::{
 use crate::cluster::Fleet;
 use crate::config::TortaConfig;
 use crate::ot;
-use crate::rl::{NativePolicy, PolicyProvider};
+use crate::rl::{AllocQuery, NativePolicy, PolicyProvider};
 use crate::runtime::TortaArtifacts;
 use crate::util::rng::Rng;
 use crate::workload::{DemandForecast, Task};
@@ -430,7 +430,7 @@ impl Scheduler for TortaScheduler {
                 &self.macro_alloc.prev_alloc,
                 now,
             );
-            p.alloc(&state)
+            p.alloc(&state, &AllocQuery { slot, ot: &ot_prob })
         });
         let alloc = self.macro_alloc.allocate(&ot_prob, policy_out);
 

@@ -7,7 +7,9 @@
 use std::path::PathBuf;
 
 use torta::config::ExperimentConfig;
-use torta::rl::{self, NativePolicy, PolicyProvider, RewardWeights, TrainConfig};
+use torta::rl::{
+    self, Algo, AllocQuery, NativePolicy, PolicyProvider, PpoConfig, RewardWeights, TrainConfig,
+};
 use torta::scheduler::torta::{TortaMode, TortaScheduler};
 use torta::scheduler::Scheduler;
 use torta::sim::run_experiment;
@@ -76,8 +78,9 @@ fn trained_policy_save_load_alloc_roundtrips_bitwise() {
     for (i, x) in state.iter_mut().enumerate() {
         *x = ((i * 37 + 11) % 97) as f32 / 97.0;
     }
-    let a = policy.alloc(&state).unwrap();
-    let b = back.alloc(&state).unwrap();
+    let q = AllocQuery { slot: 0, ot: &[] };
+    let a = policy.alloc(&state, &q).unwrap();
+    let b = back.alloc(&state, &q).unwrap();
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.to_bits(), y.to_bits());
     }
@@ -196,6 +199,156 @@ fn policy_dimension_mismatch_falls_back_gracefully() {
     cfg.torta.policy_path = String::new();
     let clean = run_experiment(&cfg).unwrap();
     assert_eq!(with_bad_policy.mean_response().to_bits(), clean.mean_response().to_bits());
+    std::fs::remove_file(&path).ok();
+}
+
+/// The slot-alignment contract the trainer's credit assignment rests on:
+/// the scheduler consults the provider at most once per engine slot, in
+/// strictly increasing slot order, with the slot's OT anchor attached —
+/// even when the provider declines some slots (which must only route
+/// those slots to the fallback, not shift later calls). This is the
+/// regression test for the historical bug where declined slots silently
+/// shifted reward credit onto the wrong steps.
+#[test]
+fn declining_provider_calls_stay_slot_aligned() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    struct Declining {
+        inner: NativePolicy,
+        decline: Vec<usize>,
+        seen: Rc<RefCell<Vec<(usize, usize)>>>,
+    }
+    impl PolicyProvider for Declining {
+        fn name(&self) -> &'static str {
+            "declining"
+        }
+        fn alloc(&self, state: &[f32], q: &AllocQuery) -> Option<Vec<f64>> {
+            self.seen.borrow_mut().push((q.slot, q.ot.len()));
+            if self.decline.contains(&q.slot) {
+                return None;
+            }
+            self.inner.alloc(state, q)
+        }
+    }
+
+    let cfg = tiny_cfg("synthetic-5", "diurnal", 8);
+    let seen = Rc::new(RefCell::new(Vec::new()));
+    let provider = Declining {
+        inner: NativePolicy::init(5, 3),
+        decline: vec![1, 4, 5],
+        seen: seen.clone(),
+    };
+    let ctx = rl::scheduler_ctx(&cfg).unwrap();
+    let mut sched = TortaScheduler::new(&ctx, &cfg.torta, TortaMode::Native, cfg.seed)
+        .with_policy(Box::new(provider));
+    let trace = rl::run_episode(&cfg, &mut sched, &RewardWeights::default()).unwrap();
+    assert_eq!(trace.rewards.len(), cfg.slots);
+
+    let seen = seen.borrow();
+    assert!(!seen.is_empty());
+    let mut prev: Option<usize> = None;
+    for &(slot, ot_len) in seen.iter() {
+        assert!(slot < cfg.slots, "slot {slot} outside horizon");
+        assert_eq!(ot_len, 25, "OT anchor must be the full R x R plan");
+        if let Some(p) = prev {
+            assert!(slot > p, "provider called out of order: {slot} after {p}");
+        }
+        prev = Some(slot);
+    }
+}
+
+fn small_ppo(episodes: usize, threads: usize) -> TrainConfig {
+    TrainConfig {
+        algo: Algo::Ppo,
+        episodes,
+        seed: 11,
+        threads,
+        ppo: PpoConfig { rollouts_per_update: 4, minibatch: 16, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn ppo_training_is_seed_deterministic() {
+    let cfg = tiny_cfg("synthetic-4", "diurnal", 6);
+    let tc = small_ppo(4, 1);
+    let (pa, ra) = rl::train(&cfg, &tc).unwrap();
+    let (pb, rb) = rl::train(&cfg, &tc).unwrap();
+    for (x, y) in pa.w.iter().zip(&pb.w) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in pa.b.iter().zip(&pb.b) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in ra.episode_returns.iter().zip(&rb.episode_returns) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(pa.algo, "ppo");
+    let mut tc2 = tc.clone();
+    tc2.seed = 12;
+    let (pc, _) = rl::train(&cfg, &tc2).unwrap();
+    assert!(pa.w.iter().zip(&pc.w).any(|(x, y)| x != y));
+}
+
+/// The parallel-rollout determinism contract (docs/RL.md): PPO training
+/// is bit-identical at every worker count, because exploration streams
+/// derive from the global episode index and the fan-in preserves episode
+/// order. Style of `shard_equivalence.rs`: sequential run as the oracle.
+#[test]
+fn ppo_rollouts_are_bitwise_equivalent_across_thread_counts() {
+    let cfg = tiny_cfg("synthetic-4", "diurnal", 6);
+    let (oracle_p, oracle_r) = rl::train(&cfg, &small_ppo(8, 1)).unwrap();
+    // Non-vacuous: the oracle actually learned something off-init.
+    let init = NativePolicy::init(4, 11);
+    assert!(oracle_p.w.iter().zip(&init.w).any(|(a, b)| a != b));
+    assert_eq!(oracle_r.episode_returns.len(), 8);
+    for threads in [2, 4] {
+        let (p, r) = rl::train(&cfg, &small_ppo(8, threads)).unwrap();
+        for (x, y) in p.w.iter().zip(&oracle_p.w) {
+            assert_eq!(x.to_bits(), y.to_bits(), "weights diverged at {threads} threads");
+        }
+        for (x, y) in p.b.iter().zip(&oracle_p.b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "bias diverged at {threads} threads");
+        }
+        for (x, y) in r.episode_returns.iter().zip(&oracle_r.episode_returns) {
+            assert_eq!(x.to_bits(), y.to_bits(), "returns diverged at {threads} threads");
+        }
+    }
+}
+
+/// Clipped-update invariants on the per-update diagnostics: the clip
+/// fraction is a fraction, the deviation metric is non-negative, the
+/// constraint weights only escalate (multiplicatively, from 1), and a
+/// truncated final batch still accounts for every episode.
+#[test]
+fn ppo_report_satisfies_clipped_update_invariants() {
+    let cfg = tiny_cfg("synthetic-4", "diurnal", 6);
+    let mut tc = small_ppo(6, 2);
+    tc.ppo.rollouts_per_update = 4; // batches of 4 + 2
+    let (policy, report) = rl::train(&cfg, &tc).unwrap();
+    assert_eq!(report.episode_returns.len(), 6);
+    assert_eq!(report.ppo_updates.len(), 2);
+    let (mut gamma_prev, mut delta_prev) = (1.0, 1.0);
+    for u in &report.ppo_updates {
+        assert!((0.0..=1.0).contains(&u.clip_frac), "clip_frac {}", u.clip_frac);
+        assert!(u.dev >= 0.0);
+        assert!(u.s_current >= 0.0);
+        assert!(u.eval_return.is_finite());
+        assert!(u.mean_return.is_finite());
+        assert!(u.gamma_c >= gamma_prev, "gamma_c shrank: {}", u.gamma_c);
+        assert!(u.delta_c >= delta_prev, "delta_c shrank: {}", u.delta_c);
+        gamma_prev = u.gamma_c;
+        delta_prev = u.delta_c;
+    }
+    // Provenance is stamped for the artifact round trip.
+    assert_eq!(policy.algo, "ppo");
+    assert_eq!(policy.gamma.to_bits(), tc.gamma.to_bits());
+    let path = tmp_dir("ppo_provenance").join("policy.json");
+    policy.save(&path).unwrap();
+    let back = NativePolicy::load(&path).unwrap();
+    assert_eq!(back.algo, "ppo");
+    assert_eq!(back.weights, policy.weights);
     std::fs::remove_file(&path).ok();
 }
 
