@@ -6,7 +6,9 @@
 //! Table I fleet under the high-rate workload preset), and the shard
 //! pipeline's threads x R speedup rows (parallel engine + matching vs the
 //! sequential legacy path at R=32/64/128/256 — docs/PERF.md, "Shard
-//! pipeline").
+//! pipeline"), the persistent-pool map microbench (warm pool vs per-call
+//! scoped spawns at the same R points), and the baseline-scheduler
+//! (rr/sdib/skylb) 4T-over-1T rows.
 //!
 //! `suite.save("perf_hotpath")` maintains `BENCH_perf_hotpath.json` in the
 //! working directory: re-running prints a delta column against the
@@ -33,13 +35,15 @@ use torta::scheduler::{Ctx, Scheduler};
 use torta::sim::Simulation;
 use torta::topology::Topology;
 use torta::util::bench::{BenchSuite, Bencher};
+use torta::util::pool::{scoped_map, WorkerPool};
 use torta::util::rng::Rng;
 use torta::workload::{DiurnalWorkload, WorkloadSource};
 
 /// One full engine run for the shard-pipeline rows: scaled synthetic
-/// fleet, high-rate workload, torta-native, worker count pinned. Returns
+/// fleet, high-rate workload, scheduler + worker count pinned. Returns
 /// (wall seconds, server count, tasks recorded).
 fn shard_pipeline_run(
+    sched_name: &str,
     r: usize,
     fleet_scale: f64,
     slots: usize,
@@ -47,7 +51,7 @@ fn shard_pipeline_run(
 ) -> (f64, usize, u64) {
     let mut cfg = ExperimentConfig::default();
     cfg.topology = format!("synthetic-{r}");
-    cfg.scheduler = "torta-native".into();
+    cfg.scheduler = sched_name.into();
     cfg.slots = slots;
     cfg.seed = 7;
     cfg.torta.use_pjrt = false;
@@ -60,7 +64,7 @@ fn shard_pipeline_run(
     engine.fleet = Fleet::build_scaled(&engine.ctx.topo, &engine.ctx.prices, seed, fleet_scale);
     let n_servers = engine.fleet.total_servers();
     let mut wl = DiurnalWorkload::new(cfg.workload.clone(), r, 11);
-    let mut sched = torta::scheduler::build("torta-native", &engine.ctx, &cfg).unwrap();
+    let mut sched = torta::scheduler::build(sched_name, &engine.ctx, &cfg).unwrap();
     let t0 = Instant::now();
     let m = engine.run(&mut wl, sched.as_mut());
     (t0.elapsed().as_secs_f64(), n_servers, m.tasks_total)
@@ -117,7 +121,7 @@ fn main() {
             128 => (8.0, 6),
             _ => (12.0, 4),
         };
-        let (secs, n_servers, tasks) = shard_pipeline_run(r, fleet_scale, slots, 4);
+        let (secs, n_servers, tasks) = shard_pipeline_run("torta-native", r, fleet_scale, slots, 4);
         let slot_ms = secs / slots as f64 * 1e3;
         let tasks_per_sec = tasks as f64 / secs.max(1e-12);
         println!(
@@ -319,8 +323,9 @@ fn main() {
             suite.note(&format!("shard pipeline R={r} skipped (--max-r {max_r})"));
             continue;
         }
-        let (seq_secs, n_servers, seq_tasks) = shard_pipeline_run(r, fleet_scale, slots, 1);
-        let par = shard_pipeline_run(r, fleet_scale, slots, pipeline_threads);
+        let (seq_secs, n_servers, seq_tasks) =
+            shard_pipeline_run("torta-native", r, fleet_scale, slots, 1);
+        let par = shard_pipeline_run("torta-native", r, fleet_scale, slots, pipeline_threads);
         let (par_secs, _, par_tasks) = par;
         assert_eq!(seq_tasks, par_tasks, "shard pipeline changed task accounting at R={r}");
         suite.metric(
@@ -338,6 +343,81 @@ fn main() {
             par_tasks as f64 / par_secs.max(1e-12),
             "tasks/s",
         );
+    }
+
+    // ---- Worker pool: persistent workers vs per-call scoped spawns ------
+    // The regime the engine actually lives in: many small fan-outs (one
+    // per phase per slot), each over R shard-sized items of a few
+    // microseconds of work. The retained `scoped_map` reference pays
+    // (workers - 1) thread spawns per batch; the persistent pool feeds
+    // warm workers over bounded channels (docs/PERF.md, "When spawn
+    // overhead matters"). CI's bench-smoke asserts the R=32 row lands
+    // at >= 1.0x — the pool must never be slower than spawning.
+    let map_pool = WorkerPool::new(4);
+    let pool_batches = 64usize;
+    for r in [32usize, 64, 128, 256] {
+        if r > max_r {
+            suite.note(&format!("pool map R={r} skipped (--max-r {max_r})"));
+            continue;
+        }
+        let work = |i: usize| {
+            let mut acc = i as f64 + 1.0;
+            for k in 0..400 {
+                acc = (acc * 1.000_1 + k as f64).sqrt() + 1.0;
+            }
+            acc
+        };
+        let items: Vec<usize> = (0..r).collect();
+        // Warm both paths once so first-touch costs (pool spawn, page
+        // faults) stay out of the timed loops.
+        std::hint::black_box(map_pool.map(items.clone(), work));
+        std::hint::black_box(scoped_map(items.clone(), 4, work));
+        let t0 = Instant::now();
+        for _ in 0..pool_batches {
+            std::hint::black_box(scoped_map(items.clone(), 4, work));
+        }
+        let scoped_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for _ in 0..pool_batches {
+            std::hint::black_box(map_pool.map(items.clone(), work));
+        }
+        let pool_secs = t0.elapsed().as_secs_f64();
+        suite.metric(
+            &format!("pool map speedup R={r} (pool over scoped, {pool_batches} batches)"),
+            scoped_secs / pool_secs.max(1e-12),
+            "x",
+        );
+        suite.metric(
+            &format!("pool map batch latency R={r}"),
+            pool_secs / pool_batches as f64 * 1e6,
+            "us/batch",
+        );
+    }
+
+    // ---- Baseline schedulers: shard-parallel inner loops ----------------
+    // rr/sdib/skylb fan their per-region autoscale + stats snapshot over
+    // the pool (scheduler/mod.rs `autoscale_all` / `snapshot_stats`); the
+    // 1T and 4T runs are bit-identical by the shard_equivalence baseline
+    // cell, so the ratio is pure wall-clock. bench-smoke asserts these
+    // rows land in BENCH_perf_hotpath.json (they survive --max-r 32).
+    if 32 <= max_r {
+        for sched in ["rr", "sdib", "skylb"] {
+            let (s1, n_servers, t1) = shard_pipeline_run(sched, 32, 2.0, 8, 1);
+            let (s4, _, t4) = shard_pipeline_run(sched, 32, 2.0, 8, 4);
+            assert_eq!(t1, t4, "baseline {sched} changed task accounting across thread counts");
+            suite.metric(
+                &format!("baseline scheduler speedup R=32 ({sched}, 4T over 1T)"),
+                s1 / s4.max(1e-12),
+                "x",
+            );
+            suite.metric(
+                &format!("baseline scheduler slot latency R=32 ({sched}, {n_servers} servers)"),
+                s4 / 8.0 * 1e3,
+                "ms/slot",
+            );
+        }
+    } else {
+        suite.note(&format!("baseline scheduler rows skipped (--max-r {max_r})"));
     }
 
     // ---- End-to-end slot stepping ---------------------------------------

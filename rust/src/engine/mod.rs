@@ -28,6 +28,13 @@
 //! determinism contract is documented in `docs/PERF.md` ("Shard
 //! pipeline") and enforced by `rust/tests/shard_equivalence.rs`.
 //!
+//! Since the persistent-pool PR the fan-outs run on a long-lived
+//! [`pool::WorkerPool`]: the workers spawn once in
+//! [`ExecutionEngine::new`] (never on a hot path) and the per-shard
+//! staging/effect/metering buffers are engine-owned scratch, drained and
+//! recycled slot to slot — a warm slot spawns no threads and performs no
+//! fan-out allocation (docs/PERF.md, "Shard pipeline" / "Scratch reuse").
+//!
 //! The chaos layer (docs/FAULTS.md) rides the same contract: a scenario
 //! carrying a [`FaultProfile`](crate::faults::FaultProfile) resolves into
 //! a precomputed [`FaultSchedule`](crate::faults::FaultSchedule) in
@@ -368,6 +375,21 @@ pub struct ExecutionEngine {
     /// `util::pool::resolve_threads`; `1` = the exact sequential legacy
     /// path — same results, one code path fewer).
     threads: usize,
+    /// Persistent worker-pool handle for the per-slot fan-outs: the
+    /// workers spawn once (at engine construction, not per phase) and
+    /// every slot's batches reuse them — see docs/PERF.md, "Shard
+    /// pipeline".
+    pool: pool::WorkerPool,
+    /// Slot-to-slot scratch, cleared and reused instead of reallocated
+    /// (docs/PERF.md, "Scratch reuse"): per-region segment staging for
+    /// `exec_actions_parallel` (capacity persists across slots)...
+    seg_stage: Vec<Vec<(usize, Task, usize)>>,
+    /// ...recycled per-shard effect buffers for `flush_segment` workers...
+    effect_spare: Vec<Vec<(usize, AssignEffect)>>,
+    /// ...the fan-in merge buffer (re-sorted by stream index each flush)...
+    merge_scratch: Vec<(usize, MergeItem)>,
+    /// ...and per-shard metering buffers (dollar + LB-snapshot columns).
+    meter_spare: Vec<(Vec<f64>, Vec<f64>)>,
     last_outcome: Option<SlotOutcome>,
     /// Operational counters snapshot (for per-slot overhead deltas).
     prev_switches: u64,
@@ -420,6 +442,10 @@ impl ExecutionEngine {
         }
         let migration_enabled = cfg.torta.migrate_backlog_secs > 0.0;
         let threads = pool::resolve_threads(cfg.torta.threads);
+        // The one spawn point for this run's shard pipeline: the handle
+        // ensures the persistent workers exist up front, so no slot ever
+        // pays a thread spawn (docs/PERF.md, "Shard pipeline").
+        let worker_pool = pool::WorkerPool::new(threads);
         // Scenario-declared failure events resolve here against the same
         // salted seed the fleet/demand profile uses, so `regional-failure`
         // runs are reproducible from the config alone.
@@ -441,6 +467,11 @@ impl ExecutionEngine {
             pending: Vec::new(),
             migration_enabled,
             threads,
+            pool: worker_pool,
+            seg_stage: Vec::new(),
+            effect_spare: Vec::new(),
+            merge_scratch: Vec::new(),
+            meter_spare: Vec::new(),
             last_outcome: None,
             prev_switches: 0,
             prev_activations: 0,
@@ -902,16 +933,22 @@ impl ExecutionEngine {
                 dollars: Vec<f64>,
                 snapshot: Vec<f64>,
             }
-            let shards: Vec<&mut RegionShard> = self.fleet.regions.iter_mut().collect();
-            let outs = pool::parallel_map(shards, self.threads, |shard| {
+            // Each shard is paired with a recycled buffer set: the fan-in
+            // drains and returns the Vecs, so steady-state metering on the
+            // persistent pool allocates nothing (docs/PERF.md, "Scratch
+            // reuse").
+            let worker_pool = self.pool;
+            let mut spares = std::mem::take(&mut self.meter_spare);
+            let jobs: Vec<(&mut RegionShard, (Vec<f64>, Vec<f64>))> = self
+                .fleet
+                .regions
+                .iter_mut()
+                .map(|shard| (shard, spares.pop().unwrap_or_default()))
+                .collect();
+            let outs = worker_pool.map(jobs, |(shard, (dollars_buf, snap_buf))| {
                 let failed = shard.failed;
                 let price = shard.price_per_kwh;
-                let mut out = MeterOut {
-                    sw: 0,
-                    act: 0,
-                    dollars: Vec::with_capacity(shard.servers.len()),
-                    snapshot: Vec::new(),
-                };
+                let mut out = MeterOut { sw: 0, act: 0, dollars: dollars_buf, snapshot: snap_buf };
                 for s in &mut shard.servers {
                     out.sw += s.model_switches;
                     out.act += s.activations;
@@ -923,14 +960,16 @@ impl ExecutionEngine {
                 }
                 out
             });
-            for o in outs {
+            for mut o in outs {
                 sw += o.sw;
                 act += o.act;
-                for d in o.dollars {
+                for d in o.dollars.drain(..) {
                     dollars += d;
                 }
-                snapshot.extend(o.snapshot);
+                snapshot.extend(o.snapshot.drain(..));
+                spares.push((o.dollars, o.snapshot));
             }
+            self.meter_spare = spares;
         } else {
             for region in &mut self.fleet.regions {
                 let failed = region.failed;
@@ -1015,8 +1054,11 @@ impl ExecutionEngine {
         results: &mut Vec<ActionResult>,
     ) -> f64 {
         let n_regions = self.fleet.regions.len();
-        let mut per_region: Vec<Vec<(usize, Task, usize)>> =
-            (0..n_regions).map(|_| Vec::new()).collect();
+        // Recycled per-region staging: every inner Vec comes back empty
+        // from `flush_segment` with its capacity intact, so slot-to-slot
+        // staging allocates nothing once warm.
+        let mut per_region = std::mem::take(&mut self.seg_stage);
+        per_region.resize_with(n_regions, Vec::new);
         let mut residue: Vec<(usize, Residue)> = Vec::new();
         let mut seg_len = 0usize;
         let mut migration_secs = 0.0;
@@ -1053,6 +1095,7 @@ impl ExecutionEngine {
             }
         }
         self.flush_segment(&mut per_region, &mut residue, &mut seg_len, now, metrics, results);
+        self.seg_stage = per_region;
         migration_secs
     }
 
@@ -1074,11 +1117,22 @@ impl ExecutionEngine {
         *seg_len = 0;
         let migration_enabled = self.migration_enabled;
         let chaos = self.faults.is_some();
-        let threads = self.threads;
+        let worker_pool = self.pool;
         let topo = &self.ctx.topo;
         let links: &[f64] = &self.link_now;
         let serving = &self.serving;
-        let jobs: Vec<(usize, &mut RegionShard, Vec<(usize, Task, usize)>)> = self
+        // Each job carries a recycled effect buffer, and the worker drains
+        // its item list in place so both Vecs return with their capacity —
+        // a warm segment flush on the persistent pool allocates nothing
+        // (docs/PERF.md, "Scratch reuse").
+        let mut out_spares = std::mem::take(&mut self.effect_spare);
+        #[allow(clippy::type_complexity)]
+        let jobs: Vec<(
+            usize,
+            &mut RegionShard,
+            Vec<(usize, Task, usize)>,
+            Vec<(usize, AssignEffect)>,
+        )> = self
             .fleet
             .regions
             .iter_mut()
@@ -1088,13 +1142,12 @@ impl ExecutionEngine {
                 if items.is_empty() {
                     None
                 } else {
-                    Some((r, shard, items))
+                    Some((r, shard, items, out_spares.pop().unwrap_or_default()))
                 }
             })
             .collect();
-        let effects = pool::parallel_map(jobs, threads, |(region, shard, items)| {
-            let mut out = Vec::with_capacity(items.len());
-            for (idx, task, server_idx) in items {
+        let effects = worker_pool.map(jobs, |(region, shard, mut items, mut out)| {
+            for (idx, task, server_idx) in items.drain(..) {
                 out.push((
                     idx,
                     exec_assign_shard(
@@ -1111,19 +1164,23 @@ impl ExecutionEngine {
                     ),
                 ));
             }
-            out
+            (region, items, out)
         });
-        let mut merged: Vec<(usize, MergeItem)> = Vec::new();
-        for shard_out in effects {
-            for (idx, eff) in shard_out {
+        let mut merged = std::mem::take(&mut self.merge_scratch);
+        for (region, items, mut out) in effects {
+            for (idx, eff) in out.drain(..) {
                 merged.push((idx, MergeItem::Assign(eff)));
             }
+            // Hand the drained buffers back for the next segment/slot.
+            per_region[region] = items;
+            out_spares.push(out);
         }
+        self.effect_spare = out_spares;
         for (idx, res) in residue.drain(..) {
             merged.push((idx, MergeItem::Residue(res)));
         }
         merged.sort_unstable_by_key(|&(idx, _)| idx);
-        for (_, item) in merged {
+        for (_, item) in merged.drain(..) {
             match item {
                 MergeItem::Assign(AssignEffect::Done {
                     result,
@@ -1178,6 +1235,7 @@ impl ExecutionEngine {
                 }
             }
         }
+        self.merge_scratch = merged;
     }
 
     /// Execute one `Assign` action: admission control, the lane

@@ -3,11 +3,15 @@
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
 use crate::util::json::Json;
-use crate::util::pool::parallel_map;
+use crate::util::pool::{default_workers, WorkerPool};
 
-/// Run the (topology x scheduler) experiment matrix in parallel — the
-/// shared engine behind the Fig 8/9/10/11 benches. Each worker thread
-/// owns its own PJRT engines (they are thread-local).
+/// Run the (topology x scheduler) experiment matrix on the persistent
+/// worker pool — the shared engine behind the Fig 8/9/10/11 benches.
+/// The suite runner owns a [`WorkerPool`] handle (docs/PERF.md, "Shard
+/// pipeline"), so repeated matrix invocations reuse the same long-lived
+/// workers instead of paying a per-suite spawn burst; clamping to the
+/// job count happens inside the pool. Each worker thread owns its own
+/// PJRT engines (they are thread-local).
 pub fn run_matrix(
     topologies: &[&str],
     schedulers: &[&str],
@@ -25,8 +29,8 @@ pub fn run_matrix(
             jobs.push(cfg);
         }
     }
-    let workers = crate::util::pool::default_workers().min(jobs.len());
-    parallel_map(jobs, workers, |cfg| {
+    let suite_pool = WorkerPool::new(default_workers());
+    suite_pool.map(jobs, |cfg| {
         crate::sim::run_experiment(&cfg).expect("experiment run failed")
     })
 }

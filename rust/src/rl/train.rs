@@ -37,7 +37,7 @@
 //! * `--algo ppo` — the paper's PPO recipe (Eq. 4/5, Appendix B
 //!   Algorithm 2; math in [`super::ppo`]): per update, a batch of
 //!   episodes is rolled out against a frozen snapshot **in parallel**
-//!   over [`parallel_map`], then GAE advantages feed minibatch epochs of
+//!   on a persistent [`WorkerPool`], then GAE advantages feed minibatch epochs of
 //!   the clipped surrogate, a full-batch constraint-descent step per
 //!   epoch (`L_eps` OT deviation, `L_s` switching improvement) and the
 //!   multiplicative constraint-weight adaptation. The trainer returns the
@@ -56,7 +56,7 @@ use std::rc::Rc;
 use crate::config::ExperimentConfig;
 use crate::scheduler::torta::{TortaMode, TortaScheduler};
 use crate::topology::Topology;
-use crate::util::pool::{parallel_map, resolve_threads};
+use crate::util::pool::{resolve_threads, WorkerPool};
 use crate::util::rng::Rng;
 
 use super::env::{run_episode, scheduler_ctx, EpisodeTrace, RewardWeights};
@@ -377,7 +377,9 @@ fn train_ppo(
     );
     let mut policy = NativePolicy::init(r, tc.seed);
     let mut value = ValueHead::new(policy.d);
-    let workers = resolve_threads(tc.threads);
+    // One persistent-pool handle for the whole run: rollout workers spawn
+    // here (docs/PERF.md, "Shard pipeline"), never inside the update loop.
+    let rollout_pool = WorkerPool::new(resolve_threads(tc.threads));
     let mut episode_returns = Vec::with_capacity(tc.episodes);
     let mut ppo_updates = Vec::new();
     let (mut gamma_c, mut delta_c) = (1.0, 1.0);
@@ -396,7 +398,7 @@ fn train_ppo(
         // worker count.
         let snapshot = policy.clone();
         let results =
-            parallel_map(batch_eps.clone(), workers, |ep| rollout(cfg, tc, &snapshot, ep));
+            rollout_pool.map(batch_eps.clone(), |ep| rollout(cfg, tc, &snapshot, ep));
         let mut batch: Vec<PpoStep> = Vec::new();
         let mut batch_return_sum = 0.0;
         for (ep, res) in batch_eps.iter().zip(results) {

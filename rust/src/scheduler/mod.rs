@@ -23,7 +23,7 @@ pub mod sdib;
 pub mod skylb;
 pub mod torta;
 
-use crate::cluster::Fleet;
+use crate::cluster::{Fleet, RegionShard};
 use crate::power::PriceTable;
 use crate::topology::Topology;
 use crate::workload::Task;
@@ -324,6 +324,76 @@ pub fn earliest_server(
 /// Names: `torta` (PJRT artifacts when present), `torta-native` (native
 /// fallback ablation), `reactive` (per-slot OT upper-bound method),
 /// `skylb`, `sdib`, `rr`.
+/// Point-in-time scheduling stats for one server, shared by the baseline
+/// schedulers (rr/sdib/skylb). The baselines never mutate the fleet
+/// inside their assignment loops — only `reactive_autoscale` mutates,
+/// and it runs *before* the snapshot — so for a fixed `now` these values
+/// are loop-invariant: reading them once up front is bit-identical to
+/// the old per-task inline reads, while skipping the O(tasks x servers)
+/// recomputation (skylb's dominant cost at R=256).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerStat {
+    pub accepting: bool,
+    pub util: f64,
+    pub backlog: f64,
+    pub idle: f64,
+    pub lanes: usize,
+}
+
+/// One region's snapshot: the failed flag plus per-server stats in
+/// server order (so downstream float folds see identical values in the
+/// identical order the sequential sweep produced).
+#[derive(Clone, Debug)]
+pub struct RegionStats {
+    pub failed: bool,
+    pub servers: Vec<ServerStat>,
+}
+
+/// Snapshot every server's scheduling stats, fanned out per
+/// [`RegionShard`] on the persistent pool with ascending-region fan-in —
+/// mirroring `MicroAllocator::match_regions` (docs/PERF.md, "Shard
+/// pipeline"). Reads are pure, so any worker count returns identical
+/// bits; `threads <= 1` runs inline.
+pub fn snapshot_stats(fleet: &Fleet, now: f64, threads: usize) -> Vec<RegionStats> {
+    let jobs: Vec<&RegionShard> = fleet.regions.iter().collect();
+    crate::util::pool::parallel_map(jobs, threads, |reg| RegionStats {
+        failed: reg.failed,
+        servers: reg
+            .servers
+            .iter()
+            .map(|s| ServerStat {
+                accepting: s.accepting(now),
+                util: s.utilization(now),
+                backlog: s.backlog_secs(now),
+                idle: s.idle_since(now),
+                lanes: s.lanes(),
+            })
+            .collect(),
+    })
+}
+
+/// Run the shared reactive autoscaling rule (`rr::autoscale_shard`) for
+/// every region concurrently and merge the `Action::Power` records in
+/// ascending region order — exactly the order the old sequential
+/// per-region loop emitted. Each job mutates only its own shard, so the
+/// fan-out is data-race-free and bit-identical at any worker count.
+pub fn autoscale_all(
+    fleet: &mut Fleet,
+    pending: &[usize],
+    now: f64,
+    threads: usize,
+) -> Vec<Action> {
+    let jobs: Vec<(usize, &mut RegionShard)> = fleet.regions.iter_mut().enumerate().collect();
+    let logs = crate::util::pool::parallel_map(jobs, threads, |(region, reg)| {
+        rr::autoscale_shard(reg, region, pending[region], now)
+    });
+    let mut out = Vec::new();
+    for log in logs {
+        out.extend(log);
+    }
+    out
+}
+
 pub fn build(
     name: &str,
     ctx: &Ctx,
@@ -341,9 +411,12 @@ pub fn build(
         "reactive" => {
             Box::new(TortaScheduler::new(ctx, &cfg.torta, TortaMode::Reactive, cfg.seed))
         }
-        "skylb" => Box::new(skylb::SkyLb::new(r)),
-        "sdib" => Box::new(sdib::Sdib::new(r)),
-        "rr" => Box::new(rr::RoundRobin::new(r)),
+        // Baselines inherit the shard-pipeline worker count so their
+        // per-region inner loops ride the same persistent pool (and the
+        // same `--threads 1` sequential-oracle convention) as the engine.
+        "skylb" => Box::new(skylb::SkyLb::new(r).with_threads(cfg.torta.threads)),
+        "sdib" => Box::new(sdib::Sdib::new(r).with_threads(cfg.torta.threads)),
+        "rr" => Box::new(rr::RoundRobin::new(r).with_threads(cfg.torta.threads)),
         other => anyhow::bail!(
             "unknown scheduler {other:?}; expected torta|torta-native|reactive|skylb|sdib|rr"
         ),

@@ -4,10 +4,11 @@
 //! only — the paper's performance lower bound.
 
 use super::{
-    empirical_alloc, push_plan_actions, Action, Ctx, PendingView, PowerState, Scheduler,
-    SlotDecision,
+    empirical_alloc, push_plan_actions, snapshot_stats, Action, Ctx, PendingView, PowerState,
+    RegionStats, Scheduler, SlotDecision,
 };
-use crate::cluster::Fleet;
+use crate::cluster::{Fleet, RegionShard};
+use crate::util::pool::resolve_threads;
 use crate::workload::Task;
 
 /// Shared reactive autoscaling rule used by all baseline schedulers: power
@@ -21,8 +22,20 @@ pub fn reactive_autoscale(
     pending: usize,
     now: f64,
 ) -> Vec<Action> {
+    autoscale_shard(&mut fleet.regions[region], region, pending, now)
+}
+
+/// Shard form of [`reactive_autoscale`]: the rule only ever touches its
+/// own region, so `scheduler::autoscale_all` fans it out per
+/// [`RegionShard`] on the persistent pool (ascending-region fan-in keeps
+/// the `Action::Power` record order identical to the sequential loop).
+pub fn autoscale_shard(
+    reg: &mut RegionShard,
+    region: usize,
+    pending: usize,
+    now: f64,
+) -> Vec<Action> {
     let mut log = Vec::new();
-    let reg = &mut fleet.regions[region];
     if reg.failed {
         return log;
     }
@@ -79,23 +92,35 @@ pub struct RoundRobin {
     r: usize,
     next_region: usize,
     next_server: Vec<usize>,
+    /// Shard-pipeline worker count for the per-region inner loops
+    /// (autoscale fan-out + stats snapshot); `1` = the sequential legacy
+    /// path. Set from `torta.threads` by `scheduler::build`.
+    threads: usize,
 }
 
 impl RoundRobin {
     pub fn new(r: usize) -> RoundRobin {
-        RoundRobin { r, next_region: 0, next_server: vec![0; r] }
+        RoundRobin { r, next_region: 0, next_server: vec![0; r], threads: 1 }
     }
 
-    /// Next accepting server in `region` in cyclic order.
-    fn pick_server(&mut self, fleet: &Fleet, region: usize, now: f64) -> Option<usize> {
-        let reg = &fleet.regions[region];
+    /// Resolve the inner-loop worker count through the same
+    /// `resolve_threads` chain as the engine (`0` = auto).
+    pub fn with_threads(mut self, configured: usize) -> RoundRobin {
+        self.threads = resolve_threads(configured);
+        self
+    }
+
+    /// Next accepting server in `region` in cyclic order, read from the
+    /// slot's stats snapshot.
+    fn pick_server(&mut self, stats: &[RegionStats], region: usize) -> Option<usize> {
+        let reg = &stats[region];
         if reg.failed || reg.servers.is_empty() {
             return None;
         }
         let n = reg.servers.len();
         for k in 0..n {
             let idx = (self.next_server[region] + k) % n;
-            if reg.servers[idx].accepting(now) {
+            if reg.servers[idx].accepting {
                 self.next_server[region] = (idx + 1) % n;
                 return Some(idx);
             }
@@ -118,16 +143,19 @@ impl Scheduler for RoundRobin {
         _slot: usize,
         now: f64,
     ) -> SlotDecision {
-        // Reactive scaling: one decision per region per slot.
+        // Reactive scaling: one decision per region per slot, fanned out
+        // per shard (each region's rule touches only its own servers).
         let mut per_region_pending = vec![0usize; self.r];
         for t in &tasks {
             per_region_pending[t.origin] += 1;
         }
         let mut actions: Vec<Action> = Vec::with_capacity(tasks.len());
-        for region in 0..self.r {
-            actions.extend(reactive_autoscale(fleet, region, per_region_pending[region], now));
-        }
+        actions.extend(super::autoscale_all(fleet, &per_region_pending, now, self.threads));
 
+        // Post-autoscale stats snapshot: the assignment loop reads only
+        // loop-invariant server state, so one parallel sweep replaces the
+        // per-task fleet walks bit-for-bit (see `scheduler::ServerStat`).
+        let stats = snapshot_stats(fleet, now, self.threads);
         let mut assignments = Vec::with_capacity(tasks.len());
         let mut buffered = Vec::new();
         for task in tasks {
@@ -135,7 +163,7 @@ impl Scheduler for RoundRobin {
             let mut placed = false;
             for k in 0..self.r {
                 let region = (self.next_region + k) % self.r;
-                if let Some(server) = self.pick_server(fleet, region, now) {
+                if let Some(server) = self.pick_server(&stats, region) {
                     self.next_region = (region + 1) % self.r;
                     assignments.push((task.clone(), region, server));
                     placed = true;

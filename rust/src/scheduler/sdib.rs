@@ -12,22 +12,33 @@
 //! with O(1) incremental variance updates. Reactive scaling only, no
 //! cost- or locality-awareness.
 
-use super::rr::reactive_autoscale;
 use super::{
-    empirical_alloc, push_plan_actions, Action, Ctx, PendingView, Scheduler, SlotDecision,
+    empirical_alloc, push_plan_actions, snapshot_stats, Action, Ctx, PendingView, Scheduler,
+    SlotDecision,
 };
 use crate::cluster::Fleet;
+use crate::util::pool::resolve_threads;
 use crate::workload::Task;
 
 const W_IDLE: f64 = 0.02;
 
 pub struct Sdib {
     r: usize,
+    /// Shard-pipeline worker count for the per-region inner loops; `1`
+    /// = the sequential legacy path (see `scheduler::build`).
+    threads: usize,
 }
 
 impl Sdib {
     pub fn new(r: usize) -> Sdib {
-        Sdib { r }
+        Sdib { r, threads: 1 }
+    }
+
+    /// Resolve the inner-loop worker count through the same
+    /// `resolve_threads` chain as the engine (`0` = auto).
+    pub fn with_threads(mut self, configured: usize) -> Sdib {
+        self.threads = resolve_threads(configured);
+        self
     }
 }
 
@@ -60,26 +71,28 @@ impl Scheduler for Sdib {
             pending[t.origin] += 1;
         }
         let mut actions: Vec<Action> = Vec::with_capacity(tasks.len());
-        for region in 0..self.r {
-            actions.extend(reactive_autoscale(fleet, region, pending[region], now));
-        }
+        actions.extend(super::autoscale_all(fleet, &pending, now, self.threads));
 
-        // Snapshot candidates once; maintain utilization estimates as we
-        // assign (the engine applies the real effects afterwards).
+        // Snapshot candidates once (shard-parallel sweep; ascending
+        // (region, server) order is preserved, so the running sums below
+        // fold identical floats in the identical order); maintain
+        // utilization estimates as we assign (the engine applies the real
+        // effects afterwards).
+        let stats = snapshot_stats(fleet, now, self.threads);
         let mut cands: Vec<Cand> = Vec::new();
-        for (ri, reg) in fleet.regions.iter().enumerate() {
+        for (ri, reg) in stats.iter().enumerate() {
             if reg.failed {
                 continue;
             }
             for (si, s) in reg.servers.iter().enumerate() {
-                if s.accepting(now) {
+                if s.accepting {
                     cands.push(Cand {
                         region: ri,
                         server: si,
-                        util: s.utilization(now),
-                        lanes: s.lanes() as f64,
-                        idle: s.idle_since(now),
-                        backlog: s.backlog_secs(now),
+                        util: s.util,
+                        lanes: s.lanes as f64,
+                        idle: s.idle,
+                        backlog: s.backlog,
                     });
                 }
             }

@@ -10,11 +10,12 @@
 
 use std::collections::HashMap;
 
-use super::rr::reactive_autoscale;
 use super::{
-    empirical_alloc, push_plan_actions, Action, Ctx, PendingView, Scheduler, SlotDecision,
+    empirical_alloc, push_plan_actions, snapshot_stats, Action, Ctx, PendingView, RegionStats,
+    Scheduler, SlotDecision,
 };
 use crate::cluster::Fleet;
+use crate::util::pool::resolve_threads;
 use crate::workload::Task;
 
 /// Local backlog (queue seconds) beyond which a region spills over.
@@ -26,38 +27,49 @@ pub struct SkyLb {
     r: usize,
     /// user -> (region, server, last_used) session affinity.
     affinity: HashMap<u32, (usize, usize, f64)>,
+    /// Shard-pipeline worker count for the per-region inner loops; `1`
+    /// = the sequential legacy path (see `scheduler::build`).
+    threads: usize,
 }
 
 impl SkyLb {
     pub fn new(r: usize) -> SkyLb {
-        SkyLb { r, affinity: HashMap::new() }
+        SkyLb { r, affinity: HashMap::new(), threads: 1 }
     }
 
-    /// Least-backlogged accepting server in `region`.
-    fn best_local(&self, fleet: &Fleet, region: usize, now: f64) -> Option<(usize, f64)> {
-        let reg = &fleet.regions[region];
+    /// Resolve the inner-loop worker count through the same
+    /// `resolve_threads` chain as the engine (`0` = auto).
+    pub fn with_threads(mut self, configured: usize) -> SkyLb {
+        self.threads = resolve_threads(configured);
+        self
+    }
+
+    /// Least-backlogged accepting server in `region`, from the slot's
+    /// stats snapshot. Pre-snapshot this recomputed `backlog_secs` per
+    /// (task, server) pair — SkyLb's dominant cost at fleet scale.
+    fn best_local(&self, stats: &[RegionStats], region: usize) -> Option<(usize, f64)> {
+        let reg = &stats[region];
         if reg.failed {
             return None;
         }
         reg.servers
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.accepting(now))
-            .map(|(i, s)| (i, s.backlog_secs(now)))
+            .filter(|(_, s)| s.accepting)
+            .map(|(i, s)| (i, s.backlog))
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     }
 
     /// Spill target: region with the most free active lanes.
-    fn spill_region(&self, fleet: &Fleet, exclude: usize, now: f64) -> Option<usize> {
+    fn spill_region(&self, stats: &[RegionStats], exclude: usize) -> Option<usize> {
         (0..self.r)
-            .filter(|&j| j != exclude && !fleet.regions[j].failed)
+            .filter(|&j| j != exclude && !stats[j].failed)
             .map(|j| {
-                let reg = &fleet.regions[j];
-                let free: f64 = reg
+                let free: f64 = stats[j]
                     .servers
                     .iter()
-                    .filter(|s| s.accepting(now))
-                    .map(|s| s.lanes() as f64 * (1.0 - s.utilization(now)))
+                    .filter(|s| s.accepting)
+                    .map(|s| s.lanes as f64 * (1.0 - s.util))
                     .sum();
                 (j, free)
             })
@@ -86,21 +98,24 @@ impl Scheduler for SkyLb {
             pending[t.origin] += 1;
         }
         let mut actions: Vec<Action> = Vec::with_capacity(tasks.len());
-        for region in 0..self.r {
-            actions.extend(reactive_autoscale(fleet, region, pending[region], now));
-        }
+        actions.extend(super::autoscale_all(fleet, &pending, now, self.threads));
         self.affinity.retain(|_, &mut (_, _, last)| now - last < AFFINITY_TTL_SECS);
 
+        // Post-autoscale stats snapshot: nothing below mutates the fleet,
+        // so every affinity/local/spill read is loop-invariant and one
+        // shard-parallel sweep replaces the per-task `backlog_secs`/
+        // `utilization` recomputation bit-for-bit.
+        let stats = snapshot_stats(fleet, now, self.threads);
         let mut assignments = Vec::with_capacity(tasks.len());
         let mut buffered = Vec::new();
         for task in tasks {
             // 1) Session affinity: same user -> same replica when healthy.
             if let Some(&(region, server, _)) = self.affinity.get(&task.user) {
-                let reg = &fleet.regions[region];
+                let reg = &stats[region];
                 if !reg.failed
                     && server < reg.servers.len()
-                    && reg.servers[server].accepting(now)
-                    && reg.servers[server].backlog_secs(now) < SPILL_BACKLOG_SECS
+                    && reg.servers[server].accepting
+                    && reg.servers[server].backlog < SPILL_BACKLOG_SECS
                 {
                     self.affinity.insert(task.user, (region, server, now));
                     assignments.push((task, region, server));
@@ -109,14 +124,14 @@ impl Scheduler for SkyLb {
             }
             // 2) Local-first.
             let origin = task.origin;
-            let local = self.best_local(fleet, origin, now);
+            let local = self.best_local(&stats, origin);
             let choice = match local {
                 Some((server, backlog)) if backlog < SPILL_BACKLOG_SECS => Some((origin, server)),
                 _ => {
                     // 3) Spillover to the freest remote region.
-                    match self.spill_region(fleet, origin, now) {
+                    match self.spill_region(&stats, origin) {
                         Some(remote) => {
-                            self.best_local(fleet, remote, now).map(|(srv, _)| (remote, srv))
+                            self.best_local(&stats, remote).map(|(srv, _)| (remote, srv))
                         }
                         // Saturated everywhere: worst local option if any.
                         None => local.map(|(srv, _)| (origin, srv)),

@@ -9,6 +9,7 @@
 //!   w3*Comp_locality, tasks processed in deadline-urgency order, running
 //!   load estimates updated after every assignment.
 
+use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -207,27 +208,51 @@ impl MicroAllocator {
         now: f64,
     ) -> (Vec<(Task, usize, usize)>, Vec<Task>) {
         let reg = &fleet.regions[region];
-        let mut assignments = Vec::with_capacity(tasks.len());
-        let mut overflow = Vec::new();
         if reg.failed {
-            return (assignments, tasks);
+            return (Vec::new(), tasks);
         }
         // Urgency order: deadline first, heavy tasks first on ties (§V-C2).
         tasks.sort_by(|a, b| a.urgency_key().partial_cmp(&b.urgency_key()).unwrap());
-        let mut cands = snapshot_candidates(reg, now);
+        // The candidate list, version table, bound heap and pop buffer
+        // live in a per-worker arena: the pool workers are persistent
+        // (docs/PERF.md, "Shard pipeline"), so the thread-local scratch
+        // survives slot to slot and the warm path clears buffers instead
+        // of reallocating them. Nothing result-bearing persists between
+        // calls — every buffer is reset before use.
+        SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            self.match_with_scratch(scratch, reg, region, tasks, now)
+        })
+    }
+
+    /// [`match_region`](Self::match_region)'s matching body, run against a
+    /// borrowed per-worker scratch arena (see [`MatchScratch`]).
+    fn match_with_scratch(
+        &self,
+        scratch: &mut MatchScratch,
+        reg: &RegionShard,
+        region: usize,
+        tasks: Vec<Task>,
+        now: f64,
+    ) -> (Vec<(Task, usize, usize)>, Vec<Task>) {
+        let mut assignments = Vec::with_capacity(tasks.len());
+        let mut overflow = Vec::new();
+        let MatchScratch { cands, versions, heap, popped } = scratch;
+        snapshot_candidates_into(cands, reg, now);
         if cands.is_empty() {
             return (assignments, tasks);
         }
         let slot_secs = 45.0;
 
-        let mut versions: Vec<u64> = vec![0; cands.len()];
-        let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::with_capacity(cands.len());
+        versions.clear();
+        versions.resize(cands.len(), 0);
+        heap.clear();
         for (ci, cand) in cands.iter().enumerate() {
             if cand.backlog <= SATURATION_BACKLOG {
                 heap.push(HeapEntry { bound: self.score_bound(cand), version: 0, ci });
             }
         }
-        let mut popped: Vec<HeapEntry> = Vec::with_capacity(cands.len());
+        popped.clear();
         for task in tasks {
             let tv = TaskView::new(&task);
             let mut best: Option<(usize, f64)> = None;
@@ -386,7 +411,35 @@ struct Cand {
     centroid_norm: f64,
 }
 
+/// Per-worker matching arena (docs/PERF.md, "Scratch reuse"): the shard
+/// pipeline's workers are persistent ([`crate::util::pool::WorkerPool`]),
+/// so a thread-local set of buffers amortizes across every slot a worker
+/// ever matches. Every buffer is cleared before use — results never leak
+/// between calls, so the output is bit-identical to fresh allocation.
+#[derive(Default)]
+struct MatchScratch {
+    cands: Vec<Cand>,
+    versions: Vec<u64>,
+    heap: BinaryHeap<HeapEntry>,
+    popped: Vec<HeapEntry>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<MatchScratch> = RefCell::new(MatchScratch::default());
+}
+
+/// Rebuild the candidate snapshot into `out` (cleared first), reusing its
+/// capacity — the arena-backed form of [`snapshot_candidates`].
+fn snapshot_candidates_into(out: &mut Vec<Cand>, reg: &RegionShard, now: f64) {
+    out.clear();
+    out.extend(snapshot_iter(reg, now));
+}
+
 fn snapshot_candidates(reg: &RegionShard, now: f64) -> Vec<Cand> {
+    snapshot_iter(reg, now).collect()
+}
+
+fn snapshot_iter(reg: &RegionShard, now: f64) -> impl Iterator<Item = Cand> + '_ {
     reg.servers
         .iter()
         .enumerate()
@@ -435,7 +488,6 @@ fn snapshot_candidates(reg: &RegionShard, now: f64) -> Vec<Cand> {
                 centroid_norm,
             }
         })
-        .collect()
 }
 
 /// Per-task precomputation hoisted out of the candidate loop: Eq. 8

@@ -7,9 +7,11 @@
 //!
 //! [`BenchSuite::save`] additionally maintains a `BENCH_<stem>.json`
 //! baseline in the working directory: when one exists from a previous run,
-//! a delta column (old -> new mean, speedup factor) is printed for every
-//! matching case before the baseline is overwritten — the before/after
-//! record for perf work.
+//! a delta column is printed before the baseline is overwritten — old ->
+//! new mean with a speedup factor for every matching timing case, and old
+//! -> new value with the relative change for every matching metric row
+//! (the pool/shard-pipeline speedups land here) — the before/after record
+//! for perf work.
 
 use std::time::{Duration, Instant};
 
@@ -168,11 +170,13 @@ impl BenchSuite {
     }
 
     /// Delta column vs a prior run: old mean -> new mean and the speedup
-    /// factor, per case whose name matches the baseline.
-    fn print_deltas(&self, base: &[(String, f64)], path: &std::path::Path) {
+    /// factor per timing case, plus old value -> new value with the
+    /// relative change per metric row, for every name/label present in
+    /// the baseline.
+    fn print_deltas(&self, base: &Baseline, path: &std::path::Path) {
         let mut any = false;
         for r in &self.results {
-            let Some((_, old_mean)) = base.iter().find(|(n, _)| *n == r.name) else {
+            let Some((_, old_mean)) = base.timings.iter().find(|(n, _)| *n == r.name) else {
                 continue;
             };
             if !any {
@@ -193,26 +197,62 @@ impl BenchSuite {
                 Duration::from_secs_f64(new_mean),
             );
         }
+        for (label, value, unit) in &self.metrics {
+            let Some((_, old)) = base.metrics.iter().find(|(l, _)| l == label) else {
+                continue;
+            };
+            if !any {
+                println!("  -- delta vs {}:", path.display());
+                any = true;
+            }
+            // Metrics have no universal "better" direction (a speedup row
+            // wants up, a latency row wants down), so the delta stays
+            // neutral: old -> new plus the signed relative change.
+            let change = if old.abs() > 1e-12 {
+                format!("{:+.1}%", (value - old) / old.abs() * 100.0)
+            } else {
+                "n/a".to_string()
+            };
+            println!("     {label:<41} {old:>11.4} -> {value:>11.4} {unit}  ({change})");
+        }
         if !any {
             println!("  -- baseline {} has no matching cases", path.display());
         }
     }
 }
 
-/// Read `(name, mean_s)` rows from a previously saved suite JSON; `None`
-/// when the file is absent or unparseable (first run, corrupt file).
-fn load_baseline(path: &std::path::Path) -> Option<Vec<(String, f64)>> {
+/// Rows recovered from a previously saved suite JSON: `(name, mean_s)`
+/// timings plus `(label, value)` metric rows.
+struct Baseline {
+    timings: Vec<(String, f64)>,
+    metrics: Vec<(String, f64)>,
+}
+
+/// Read timing and metric rows from a previously saved suite JSON; `None`
+/// when the file is absent or unparseable (first run, corrupt file). A
+/// missing `metrics` array (pre-metric-delta baselines) degrades to an
+/// empty list rather than discarding the timings.
+fn load_baseline(path: &std::path::Path) -> Option<Baseline> {
     let text = std::fs::read_to_string(path).ok()?;
     let json = Json::parse(&text).ok()?;
-    let timings = json.get("timings")?.as_arr()?;
-    Some(
-        timings
-            .iter()
-            .filter_map(|t| {
-                Some((t.get("name")?.as_str()?.to_string(), t.get("mean_s")?.as_f64()?))
-            })
-            .collect(),
-    )
+    let timings = json
+        .get("timings")?
+        .as_arr()?
+        .iter()
+        .filter_map(|t| Some((t.get("name")?.as_str()?.to_string(), t.get("mean_s")?.as_f64()?)))
+        .collect();
+    let metrics = json
+        .get("metrics")
+        .and_then(|m| m.as_arr())
+        .map(|rows| {
+            rows.iter()
+                .filter_map(|m| {
+                    Some((m.get("label")?.as_str()?.to_string(), m.get("value")?.as_f64()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    Some(Baseline { timings, metrics })
 }
 
 #[cfg(test)]
@@ -234,14 +274,22 @@ mod tests {
         let mut s = BenchSuite::new("baseline-shape");
         s.time("case-a", &Bencher::new(0, 2), || {});
         s.time("case-b", &Bencher::new(0, 2), || {});
+        s.metric("pool map speedup R=32", 3.5, "x");
         let dir = std::env::temp_dir().join("torta_bench_baseline");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("BENCH_test.json");
         std::fs::write(&path, s.to_json().to_string_pretty()).unwrap();
         let base = load_baseline(&path).unwrap();
-        assert_eq!(base.len(), 2);
-        assert_eq!(base[0].0, "case-a");
-        assert!(base[0].1 >= 0.0);
+        assert_eq!(base.timings.len(), 2);
+        assert_eq!(base.timings[0].0, "case-a");
+        assert!(base.timings[0].1 >= 0.0);
+        assert_eq!(base.metrics, vec![("pool map speedup R=32".to_string(), 3.5)]);
+        // A pre-metric-delta baseline (no metrics array) still loads.
+        let legacy = r#"{"title": "t", "timings": [{"name": "case-a", "mean_s": 0.5}]}"#;
+        std::fs::write(&path, legacy).unwrap();
+        let base = load_baseline(&path).unwrap();
+        assert_eq!(base.timings.len(), 1);
+        assert!(base.metrics.is_empty());
         // Absent / corrupt files degrade to None, not a panic.
         assert!(load_baseline(&dir.join("nope.json")).is_none());
         std::fs::write(&path, "{not json").unwrap();

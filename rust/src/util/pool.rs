@@ -1,11 +1,39 @@
-//! Scoped worker pool over std threads (offline build: no `tokio`/`rayon`).
+//! Persistent worker pool over std threads (offline build: no
+//! `tokio`/`rayon`).
 //!
-//! The coordinator's leader/worker topology and the bench sweeps use
-//! [`parallel_map`]; the real-time serving driver in `serve/` builds its own
-//! long-lived channel workers on top of std::sync::mpsc.
+//! The per-slot hot paths fan out every engine slot (micro matching,
+//! action execution, metering — see docs/PERF.md, "Shard pipeline"), so
+//! the pre-pool scoped implementation paid up to three spawn/join
+//! barriers per slot: tens of thousands of short-lived OS threads per
+//! fleet-256 run. Since the persistent-pool PR the workers are
+//! long-lived: [`WorkerPool::new`] (or the first wide [`parallel_map`]
+//! call) spawns them once per process, and every subsequent batch is
+//! published as a heap [`Ticket`] over bounded channels — no thread is
+//! ever spawned on a hot path again. [`scoped_map`] keeps the old
+//! spawn-per-call implementation as the in-process bench reference
+//! (`benches/perf_hotpath.rs`, "pool map speedup" rows) and as a second
+//! oracle for `rust/tests/pool.rs`.
+//!
+//! Execution contract (unchanged from the scoped implementation, and
+//! what the determinism proof in docs/PERF.md leans on):
+//! * fan-in is **index-ordered** — outputs land in input order no matter
+//!   which thread computed them;
+//! * a worker panic is captured and re-raised on the submitting caller
+//!   after the batch completes;
+//! * the **caller helps drain** its own batch, so a batch always makes
+//!   progress even when every pool worker is busy — which also makes
+//!   nested use (a pooled job submitting its own sub-batch, e.g. PPO
+//!   rollouts each running an engine) deadlock-free by construction.
+//!
+//! The coordinator's owners hold [`WorkerPool`] handles sized by the
+//! [`resolve_threads`] chain: the `ExecutionEngine`, the RL trainer and
+//! the report suite runner. [`parallel_map`] is the thin compat wrapper
+//! over the same pool, so legacy call sites migrate by construction.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of workers: respects TORTA_THREADS, defaults to available cores.
 pub fn default_workers() -> usize {
@@ -32,8 +60,273 @@ pub fn resolve_threads(configured: usize) -> usize {
     }
 }
 
-/// Apply `f` to every item on a scoped thread pool, preserving input order.
+/// Queued-ticket capacity per worker channel. Stale tickets are O(1)
+/// no-ops (one exhausted-cursor load), so the bound only limits wake-up
+/// buffering; a full queue means the worker is saturated and the offer
+/// is skipped (the caller drains whatever nobody helps with).
+const TICKET_QUEUE: usize = 64;
+
+/// Per-batch state, held on the submitting caller's stack and reached by
+/// workers through the type-erased [`Ticket::state`] pointer. Inputs and
+/// outputs are per-index `Mutex<Option<_>>` slots: the atomic cursor
+/// hands each index to exactly one thread, and the index-keyed output
+/// slots make the fan-in order-preserving by construction.
+struct BatchState<T, U, F> {
+    inputs: Vec<Mutex<Option<T>>>,
+    outputs: Vec<Mutex<Option<U>>>,
+    /// First captured worker panic, re-raised on the caller after the
+    /// completion barrier (matching `thread::scope`'s propagation).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    f: F,
+}
+
+/// Heap handle for one batch, shared with workers via `Arc`. Everything
+/// a thread can touch *after* the batch completes (cursor, `n`, the
+/// `done` barrier) lives here — plain `'static` data — while the
+/// non-`'static` item/closure state stays on the caller's stack behind
+/// the erased pointer.
+struct Ticket {
+    /// Next unclaimed item index; claims past `n` are harmless no-ops.
+    cursor: AtomicUsize,
+    n: usize,
+    /// Type-erased `*const BatchState<T, U, F>` on the caller's stack.
+    state: *const (),
+    /// Monomorphized runner for one claimed index.
+    run: unsafe fn(*const (), usize),
+    /// Completed-item count: incremented only after an item's output (or
+    /// panic payload) is fully stored, so `done == n` proves no thread
+    /// will ever dereference `state` again.
+    done: Mutex<usize>,
+    cv: Condvar,
+}
+
+// SAFETY: `state` is dereferenced only by `run`, only for a claimed
+// index `i < n`, and the submitting caller blocks until `done == n`.
+// `done` counts *completed* items (output stored), so every dereference
+// happens while the caller's frame — and therefore the `BatchState` —
+// is still alive. A stale ticket drained after completion reads only
+// `cursor`/`n` (heap fields) and returns without touching `state`.
+unsafe impl Send for Ticket {}
+unsafe impl Sync for Ticket {}
+
+/// Run one claimed item: take the input, apply `f` under `catch_unwind`,
+/// store the output (or the first panic payload) into its index slot.
+unsafe fn run_one<T, U, F>(state: *const (), i: usize)
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let state = unsafe { &*(state as *const BatchState<T, U, F>) };
+    let item = state.inputs[i].lock().unwrap().take().expect("item claimed twice");
+    match catch_unwind(AssertUnwindSafe(|| (state.f)(item))) {
+        Ok(out) => *state.outputs[i].lock().unwrap() = Some(out),
+        Err(payload) => {
+            let mut slot = state.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+}
+
+/// Claim-and-run items off `ticket` until the cursor is exhausted.
+/// Shared by pool workers and the submitting caller (caller-helps-drain).
+fn drain_ticket(ticket: &Ticket) {
+    loop {
+        let i = ticket.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= ticket.n {
+            return;
+        }
+        // SAFETY: index claimed and `< n`, so the batch is incomplete and
+        // the caller is still parked on the `done` barrier (see Ticket).
+        unsafe { (ticket.run)(ticket.state, i) };
+        let mut done = ticket.done.lock().unwrap();
+        *done += 1;
+        if *done == ticket.n {
+            ticket.cv.notify_all();
+        }
+    }
+}
+
+/// Pool worker threads ever spawned by this process — the test hook
+/// behind `rust/tests/pool.rs`'s no-thread-growth cell. Monotone; the
+/// pool never retires workers.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+pub fn spawned_workers() -> usize {
+    SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Process-wide worker registry: one bounded ticket channel per
+/// long-lived worker. Grown on demand up to the widest
+/// [`WorkerPool`]/[`parallel_map`] request seen, never shrunk — handles
+/// share the same workers, so an engine + a trainer in one process pool
+/// their threads instead of stacking two spawns.
+struct Registry {
+    senders: Mutex<Vec<SyncSender<Arc<Ticket>>>>,
+    /// Round-robin offer start, so repeated small batches spread over
+    /// the worker set instead of always waking worker 0.
+    rr: AtomicUsize,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry { senders: Mutex::new(Vec::new()), rr: AtomicUsize::new(0) })
+}
+
+impl Registry {
+    /// Spawn workers until at least `helpers` exist. The only place the
+    /// pool ever creates threads — hot-path batches just publish tickets.
+    fn ensure(&self, helpers: usize) {
+        if helpers == 0 {
+            return;
+        }
+        let mut senders = self.senders.lock().unwrap();
+        while senders.len() < helpers {
+            let (tx, rx) = sync_channel::<Arc<Ticket>>(TICKET_QUEUE);
+            let id = senders.len();
+            std::thread::Builder::new()
+                .name(format!("torta-pool-{id}"))
+                .spawn(move || worker_loop(rx))
+                .expect("failed to spawn pool worker");
+            SPAWNED.fetch_add(1, Ordering::SeqCst);
+            senders.push(tx);
+        }
+    }
+
+    /// Best-effort wake of up to `helpers` workers on `ticket`. A full
+    /// queue skips that worker (it is saturated); offering never blocks,
+    /// which is what keeps nested batches deadlock-free.
+    fn offer(&self, ticket: &Arc<Ticket>, helpers: usize) {
+        if helpers == 0 {
+            return;
+        }
+        self.ensure(helpers);
+        let senders = self.senders.lock().unwrap();
+        if senders.is_empty() {
+            return;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut sent = 0usize;
+        for k in 0..senders.len() {
+            if sent >= helpers {
+                break;
+            }
+            if senders[(start + k) % senders.len()].try_send(Arc::clone(ticket)).is_ok() {
+                sent += 1;
+            }
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Arc<Ticket>>) {
+    while let Ok(ticket) = rx.recv() {
+        drain_ticket(&ticket);
+    }
+}
+
+/// Handle over the process-wide persistent worker set, sized by the
+/// [`resolve_threads`] chain. Owners create one per run
+/// (`ExecutionEngine`, the RL trainer, the report suite runner):
+/// construction ensures the workers exist — the only spawn point — and
+/// [`map`](Self::map) then reuses them for every batch. Handles are
+/// plain `Copy` values; all handles share the same workers.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// `threads` is a *resolved* worker count (see [`resolve_threads`]).
+    /// The submitting caller drains too, so `threads - 1` helper threads
+    /// are ensured; `threads <= 1` is the exact sequential legacy path.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        registry().ensure(threads - 1);
+        WorkerPool { threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item on the persistent pool, preserving input
+    /// order (index-ordered fan-in). Worker panics re-raise here.
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send,
+        U: Send,
+        F: Fn(T) -> U + Sync,
+    {
+        pool_map(items, self.threads, f)
+    }
+}
+
+/// Apply `f` to every item on the persistent pool, preserving input
+/// order — the compat wrapper legacy call sites migrate through.
+/// Worker-count policy lives HERE, in one place: `0` resolves through
+/// [`resolve_threads`], and the count is clamped to the item count so
+/// more workers than items never spawns (or wakes) idle threads.
 pub fn parallel_map<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    pool_map(items, resolve_threads(workers), f)
+}
+
+fn pool_map<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let state = BatchState {
+        inputs: items.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+        outputs: (0..n).map(|_| Mutex::new(None)).collect(),
+        panic: Mutex::new(None),
+        f,
+    };
+    let ticket = Arc::new(Ticket {
+        cursor: AtomicUsize::new(0),
+        n,
+        state: &state as *const BatchState<T, U, F> as *const (),
+        run: run_one::<T, U, F>,
+        done: Mutex::new(0),
+        cv: Condvar::new(),
+    });
+    registry().offer(&ticket, workers - 1);
+    // Caller helps drain: progress is guaranteed even if every offer was
+    // skipped, and a nested batch can never wait on its own ancestor.
+    drain_ticket(&ticket);
+    let mut done = ticket.done.lock().unwrap();
+    while *done < n {
+        done = ticket.cv.wait(done).unwrap();
+    }
+    drop(done);
+    if let Some(payload) = state.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+    state
+        .outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped an item"))
+        .collect()
+}
+
+/// Pre-pool reference implementation: a scoped pool that spawns
+/// `workers` threads per call and joins them before returning. Retained
+/// as the in-process "before" for the bench's `pool map speedup` rows
+/// (the same role `match_region_scan` plays for the lazy matcher) and as
+/// a second oracle in `rust/tests/pool.rs`. Not used on any hot path.
+pub fn scoped_map<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Vec<U>
 where
     T: Send,
     U: Send,
@@ -100,5 +393,35 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(30))
         });
         assert!(t0.elapsed() < std::time::Duration::from_millis(100));
+    }
+
+    #[test]
+    fn pool_matches_scoped_reference() {
+        let xs: Vec<i64> = (0..257).collect();
+        let pool = parallel_map(xs.clone(), 4, |x| x * x - 3);
+        let scoped = scoped_map(xs.clone(), 4, |x| x * x - 3);
+        let seq: Vec<i64> = xs.into_iter().map(|x| x * x - 3).collect();
+        assert_eq!(pool, scoped);
+        assert_eq!(pool, seq);
+    }
+
+    #[test]
+    fn handle_reports_resolved_width() {
+        let p = WorkerPool::new(3);
+        assert_eq!(p.threads(), 3);
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+        let ys = p.map(vec![5, 6, 7], |x| x - 5);
+        assert_eq!(ys, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nested_batches_complete() {
+        // A pooled job submitting its own sub-batch must not deadlock
+        // even when the outer batch occupies every worker
+        // (caller-helps-drain: each submitter can finish its batch alone).
+        let outer = parallel_map(vec![10usize, 20, 30, 40], 4, |base| {
+            parallel_map((0..4usize).collect(), 4, |k| base + k).iter().sum::<usize>()
+        });
+        assert_eq!(outer, vec![46, 86, 126, 166]);
     }
 }

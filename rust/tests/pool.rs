@@ -1,0 +1,119 @@
+//! Persistent worker-pool contract tests (docs/PERF.md, "Shard
+//! pipeline"): index-ordered fan-in under adversarial per-item delays,
+//! panic propagation with pool survival, batch reuse without thread
+//! growth (via the `spawned_workers` hook), equivalence against the
+//! retained `scoped_map` reference, and nested-batch deadlock freedom.
+//!
+//! The spawn counter is process-global and monotone, so every test in
+//! this binary keeps its width within `MAX_WIDTH` and the growth test
+//! pre-warms to that width before snapshotting — concurrent test
+//! threads then cannot trigger additional spawns.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use torta::util::pool::{parallel_map, scoped_map, spawned_workers, WorkerPool};
+
+/// Widest pool any test in this binary engages. The growth test warms to
+/// this width first, so no other test can spawn past its snapshot.
+const MAX_WIDTH: usize = 8;
+
+#[test]
+fn ordered_fanin_under_adversarial_delays() {
+    // Later items finish FIRST (reverse-proportional sleeps), so any
+    // completion-order fan-in would return them scrambled; the pool must
+    // still return input order.
+    let n = 24usize;
+    let out = parallel_map((0..n).collect::<Vec<_>>(), 4, |i| {
+        std::thread::sleep(Duration::from_millis(2 * (n - i) as u64));
+        i * 10
+    });
+    assert_eq!(out, (0..n).map(|i| i * 10).collect::<Vec<_>>());
+}
+
+#[test]
+fn panic_propagates_and_pool_survives() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        parallel_map(vec![0usize, 1, 2, 3, 4, 5], 4, |i| {
+            if i == 3 {
+                panic!("boom from item {i}");
+            }
+            i
+        })
+    }));
+    let payload = result.expect_err("worker panic must reach the caller");
+    let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+    assert!(msg.contains("boom from item 3"), "unexpected payload: {msg:?}");
+    // The panic was caught per-item, so no pool worker died: the very
+    // next batch completes normally on the same workers.
+    let out = parallel_map(vec![1, 2, 3], 4, |x| x * 2);
+    assert_eq!(out, vec![2, 4, 6]);
+}
+
+#[test]
+fn sequential_batches_reuse_workers_without_thread_growth() {
+    // Warm the pool to the widest width this binary ever uses, then
+    // snapshot the monotone spawn counter: three more batches (plus a
+    // handle re-creation) must not spawn a single extra thread.
+    let pool = WorkerPool::new(MAX_WIDTH);
+    pool.map((0..32usize).collect::<Vec<_>>(), |i| i + 1);
+    let spawned_before = spawned_workers();
+    assert!(spawned_before >= MAX_WIDTH - 1, "warm-up must have spawned helpers");
+    for batch in 0..3usize {
+        let out = pool.map((0..64usize).collect::<Vec<_>>(), move |i| i * (batch + 1));
+        assert_eq!(out, (0..64).map(|i| i * (batch + 1)).collect::<Vec<_>>());
+    }
+    let again = WorkerPool::new(MAX_WIDTH);
+    again.map(vec![1usize, 2, 3], |x| x);
+    assert_eq!(
+        spawned_workers(),
+        spawned_before,
+        "batches on a warm pool must reuse workers, not spawn new ones"
+    );
+}
+
+#[test]
+fn pool_matches_scoped_reference_and_sequential() {
+    let xs: Vec<i64> = (0..513).collect();
+    let f = |x: i64| x.wrapping_mul(x) - 7 * x + 1;
+    let pool_out = parallel_map(xs.clone(), 4, f);
+    let scoped_out = scoped_map(xs.clone(), 4, f);
+    let seq_out: Vec<i64> = xs.into_iter().map(f).collect();
+    assert_eq!(pool_out, scoped_out);
+    assert_eq!(pool_out, seq_out);
+}
+
+#[test]
+fn zero_workers_resolves_and_overwide_requests_clamp() {
+    // workers == 0 resolves through the resolve_threads chain (one
+    // place), and a width far beyond the item count must still return
+    // every item exactly once in order.
+    let out = parallel_map(vec![10, 20, 30], 0, |x| x + 1);
+    assert_eq!(out, vec![11, 21, 31]);
+    let out = parallel_map(vec![1, 2], MAX_WIDTH, |x| x * 5);
+    assert_eq!(out, vec![5, 10]);
+}
+
+#[test]
+fn nested_batches_progress_when_all_workers_busy() {
+    // Caller-helps-drain: even with the outer batch occupying the pool,
+    // each inner batch completes (its submitter drains it alone if need
+    // be). A missed wake-up or submit-and-wait design would deadlock
+    // here; bound the whole thing with a wall-clock assert.
+    let t0 = Instant::now();
+    let hits = AtomicUsize::new(0);
+    let outer = parallel_map(vec![0usize, 1, 2, 3, 4, 5], MAX_WIDTH, |base| {
+        let inner = parallel_map((0..8usize).collect::<Vec<_>>(), 4, |k| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            base * 100 + k
+        });
+        inner.iter().sum::<usize>()
+    });
+    assert_eq!(outer.len(), 6);
+    assert_eq!(hits.load(Ordering::Relaxed), 48);
+    for (base, total) in outer.into_iter().enumerate() {
+        assert_eq!(total, (0..8).map(|k| base * 100 + k).sum::<usize>());
+    }
+    assert!(t0.elapsed() < Duration::from_secs(30), "nested batches stalled");
+}

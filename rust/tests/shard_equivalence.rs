@@ -5,7 +5,10 @@
 //! 1` (the exact sequential legacy path) vs 2 vs 4 — for all four suite
 //! schedulers on registry scenarios, including cross-shard migration
 //! routing and a scripted stream that interleaves `Migrate` barriers
-//! between `Assign` segments.
+//! between `Assign` segments. Since the persistent-pool PR the fan-outs
+//! run on long-lived `util::pool` workers, and the baseline schedulers
+//! (rr/sdib/skylb) parallelize their autoscale + stats inner loops — the
+//! dedicated cell below extends the sweep to 8 workers for them.
 //!
 //! Style follows `perf_equivalence.rs` / `action_equivalence.rs`: the
 //! sequential path is the oracle, float comparisons are on `to_bits`.
@@ -161,6 +164,26 @@ fn bit_identical_across_thread_counts_regional_failure() {
 fn bit_identical_across_thread_counts_flash_crowd() {
     for scheduler in SCHEDULERS {
         assert_cell_equivalent(scheduler, "flash-crowd", 26);
+    }
+}
+
+/// Acceptance (persistent-pool PR): the baseline schedulers'
+/// shard-parallel inner loops — the `autoscale_all` fan-out and the
+/// `snapshot_stats` sweep — stay bit-identical across `--threads
+/// 1/2/4/8`, including 8 workers on a 12-region topology (more workers
+/// than shards; the pool clamps to the job count instead of engaging
+/// idle threads).
+#[test]
+fn baseline_scheduler_inner_loops_bit_identical_threads_1_2_4_8() {
+    for scheduler in ["rr", "sdib", "skylb"] {
+        let (m1, f1) = run_cell(scheduler, "flash-crowd", 14, 1);
+        assert!(m1.tasks_total > 0, "{scheduler}@flash-crowd: empty run proves nothing");
+        for threads in [2usize, 4, 8] {
+            let (mt, ft) = run_cell(scheduler, "flash-crowd", 14, threads);
+            let label = format!("{scheduler}@flash-crowd threads={threads}");
+            assert_metrics_bits(&m1, &mt, &label);
+            assert_eq!(f1, ft, "{label}: fleet end state diverged");
+        }
     }
 }
 
